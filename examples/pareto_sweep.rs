@@ -1,0 +1,70 @@
+//! Pareto sweep example: enumerate the per-layer bitwidth design space of a
+//! small net, evaluate every assignment against a WaveQ-trained state, and
+//! print the compute/accuracy frontier with the learned solution located on
+//! it (the Figure-4 analysis, as a library-API walkthrough).
+//!
+//!   make artifacts && cargo run --release --example pareto_sweep
+
+use anyhow::Result;
+use waveq::config::{Algo, RunConfig};
+use waveq::coordinator::{evaluate, test_batcher, BitAssignment, Trainer};
+use waveq::energy::Stripes;
+use waveq::pareto::{enumerate_assignments, pareto_frontier, DesignPoint};
+use waveq::runtime::Runtime;
+
+fn main() -> Result<()> {
+    waveq::util::logging::init();
+    let rt = Runtime::open(&waveq::artifacts_dir())?;
+
+    // Train once with learned WaveQ.
+    let mut cfg = RunConfig {
+        model: "simplenet5".into(),
+        algo: Algo::WaveqLearned,
+        steps: 350,
+        act_bits: 4,
+        train_examples: 4096,
+        test_examples: 512,
+        ..Default::default()
+    };
+    cfg.schedule.total_steps = cfg.steps;
+    let outcome = Trainer::new(&rt, cfg.clone()).run()?;
+    let meta = rt.manifest.model(&outcome.model_key)?.clone();
+
+    // Enumerate {2..8}^Q and evaluate each assignment.
+    let stripes = Stripes::default();
+    let test = test_batcher(&meta, 256, cfg.seed);
+    let space = enumerate_assignments(meta.num_qlayers, 2, 8);
+    println!("evaluating {} assignments over {} qlayers...", space.len(), meta.num_qlayers);
+    let mut points = Vec::new();
+    for bits in space {
+        let assign = BitAssignment { bits: bits.clone(), alpha: vec![1.0; bits.len()] };
+        let (_, acc) = evaluate(
+            &rt,
+            "eval_quant_simplenet5",
+            &meta,
+            &outcome.state.params,
+            Some(&assign.kw()),
+            cfg.ka(),
+            &test,
+        )?;
+        points.push(DesignPoint {
+            bits,
+            compute: stripes.relative_compute(&meta, &assign.bits),
+            accuracy: acc as f64,
+        });
+    }
+
+    let frontier = pareto_frontier(&points);
+    println!("\ncompute  accuracy  bits        (Pareto frontier)");
+    for &i in &frontier {
+        let p = &points[i];
+        println!("{:.3}    {:.4}    {:?}", p.compute, p.accuracy, p.bits);
+    }
+    println!(
+        "\nWaveQ learned solution: bits {:?}  compute {:.3}  accuracy {:.4}",
+        outcome.assignment.bits,
+        stripes.relative_compute(&meta, &outcome.assignment.bits),
+        outcome.test_acc
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: train a small MLP with WaveQ's learned per-layer bitwidths
+//! and compare against the fp32 and plain-DoReFa baselines.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Walks through the public API in ~60 lines: open the runtime, build a
+//! config, run the trainer, inspect the learned assignment and energy.
+
+use anyhow::Result;
+use waveq::config::{Algo, RunConfig};
+use waveq::coordinator::Trainer;
+use waveq::energy::Stripes;
+use waveq::runtime::Runtime;
+
+fn main() -> Result<()> {
+    waveq::util::logging::init();
+
+    // 1. Open the AOT artifacts (HLO text + manifest) through PJRT.
+    let rt = Runtime::open(&waveq::artifacts_dir())?;
+    println!("platform: {}", rt.platform());
+
+    // 2. One config per algorithm; everything else (data, schedule) defaults.
+    let base = RunConfig {
+        model: "mlp".into(),
+        steps: 300,
+        train_examples: 4096,
+        test_examples: 1024,
+        lr: 0.05,
+        ..Default::default()
+    };
+
+    for algo in [Algo::Fp32, Algo::Dorefa, Algo::WaveqLearned] {
+        let mut cfg = RunConfig { algo, weight_bits: 3, ..base.clone() };
+        cfg.schedule.total_steps = cfg.steps;
+
+        // 3. Run the coordinator: schedule, phase control, freeze, eval.
+        let outcome = Trainer::new(&rt, cfg).run()?;
+
+        // 4. Inspect what WaveQ learned.
+        let meta = rt.manifest.model(&outcome.model_key)?;
+        let saving = Stripes::default().saving_vs_baseline(
+            meta,
+            &outcome.assignment.bits,
+            8,
+        );
+        println!(
+            "{:<14} test_acc={:.4}  bits={:?} (avg {:.2})  energy saving {:.2}x{}",
+            outcome.cfg.algo.name(),
+            outcome.test_acc,
+            outcome.assignment.bits,
+            outcome.assignment.average_bits(),
+            saving,
+            outcome
+                .freeze_step
+                .map(|s| format!("  (beta frozen @ step {s})"))
+                .unwrap_or_default(),
+        );
+    }
+    Ok(())
+}

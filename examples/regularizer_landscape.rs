@@ -1,0 +1,77 @@
+//! Regularizer landscape example: evaluate the lowered `reg_profile`
+//! program (the same closed forms the training loss uses) and print ASCII
+//! profiles of R_1(w; beta) — the paper's Figure 2 — plus the
+//! vanishing/exploding-gradient comparison of the three normalization
+//! variants (Figure 3).
+//!
+//!   make artifacts && cargo run --release --example regularizer_landscape
+
+use anyhow::Result;
+use waveq::runtime::{literal_f32, to_vec_f32, Runtime};
+
+const N_W: usize = 512;
+const N_B: usize = 256;
+
+fn main() -> Result<()> {
+    waveq::util::logging::init();
+    let rt = Runtime::open(&waveq::artifacts_dir())?;
+
+    let w: Vec<f32> = (0..N_W).map(|i| -1.25 + 2.5 * i as f32 / (N_W - 1) as f32).collect();
+    let b: Vec<f32> = (0..N_B).map(|i| 1.0 + 7.0 * i as f32 / (N_B - 1) as f32).collect();
+    let outs = rt.execute(
+        "reg_profile",
+        &[literal_f32(&w, &[N_W])?, literal_f32(&b, &[N_B])?],
+    )?;
+    let r1 = to_vec_f32(&outs[3])?; // (N_W, N_B), norm = 1
+
+    // ASCII profile of R1 vs w at a few bitwidths.
+    for target in [2.0f32, 3.0] {
+        let bi = b
+            .iter()
+            .enumerate()
+            .min_by(|(_, x), (_, y)| (*x - target).abs().partial_cmp(&(*y - target).abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let k = 2f32.powf(b[bi]) - 1.0;
+        println!("\nR1(w; beta={:.2})  —  minima every 1/k = {:.3}", b[bi], 1.0 / k);
+        let rows = 12usize;
+        let cols = 96usize;
+        let max_r: f32 = (0..N_W).map(|wi| r1[wi * N_B + bi]).fold(0.0, f32::max);
+        for row in 0..rows {
+            let thresh = max_r * (rows - row) as f32 / rows as f32;
+            let mut line = String::new();
+            for col in 0..cols {
+                let wi = col * (N_W - 1) / (cols - 1);
+                line.push(if r1[wi * N_B + bi] >= thresh { '#' } else { ' ' });
+            }
+            println!("|{line}");
+        }
+        println!("+{}", "-".repeat(96));
+        println!(" w from {:.2} to {:.2}", w[0], w[N_W - 1]);
+    }
+
+    // Figure-3 gradient-range comparison.
+    println!("\nmax |dR/dbeta| over w, at low vs high beta:");
+    for norm in 0..3usize {
+        let d1 = to_vec_f32(&outs[norm * 3 + 1])?;
+        let max_at = |lo: f32, hi: f32| -> f32 {
+            let mut m = 0f32;
+            for wi in 0..N_W {
+                for bi in 0..N_B {
+                    if b[bi] >= lo && b[bi] <= hi {
+                        m = m.max(d1[wi * N_B + bi].abs());
+                    }
+                }
+            }
+            m
+        };
+        println!(
+            "  R{}: beta in [1, 2.5] -> {:.3e}   beta in [6.5, 8] -> {:.3e}",
+            norm,
+            max_at(1.0, 2.5),
+            max_at(6.5, 8.0)
+        );
+    }
+    println!("\n(R0 explodes, R1 stays bounded — the paper's production choice, R2 vanishes)");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! End-to-end validation driver (DESIGN.md §4 headline): train simplenet5
+//! on cifar-lite from scratch with learned-beta WaveQ for several hundred
+//! steps, logging the loss curve, the beta trajectory, the phase-2 -> 3
+//! freeze, the learned heterogeneous bitwidths, and the final comparison
+//! against fp32 and plain DoReFa — plus the Stripes energy saving.
+//!
+//!   make artifacts && cargo run --release --example waveq_e2e
+//!
+//! The numbers this prints are the ones recorded in EXPERIMENTS.md §E2E.
+
+use anyhow::Result;
+use waveq::config::{Algo, RunConfig};
+use waveq::coordinator::Trainer;
+use waveq::energy::Stripes;
+use waveq::runtime::Runtime;
+
+fn main() -> Result<()> {
+    waveq::util::logging::init();
+    let rt = Runtime::open(&waveq::artifacts_dir())?;
+
+    let steps = 500;
+    let mk = |algo: Algo, bits: u32| {
+        let mut cfg = RunConfig {
+            model: "simplenet5".into(),
+            algo,
+            weight_bits: bits,
+            act_bits: 4,
+            steps,
+            train_examples: 6144,
+            test_examples: 1024,
+            lr: 0.06,
+            lr_beta: 0.05,
+            beta_init: 6.0,
+            seed: 42,
+            ..Default::default()
+        };
+        cfg.schedule.total_steps = steps;
+        cfg
+    };
+
+    // --- the headline run: learned heterogeneous WaveQ --------------------
+    let mut trainer = Trainer::new(&rt, mk(Algo::WaveqLearned, 4));
+    let waveq = trainer.run()?;
+
+    println!("\n=== loss curve (every 25 steps) ===");
+    for (step, loss) in waveq.metrics.get("loss").iter().step_by(25) {
+        let beta = waveq
+            .metrics
+            .get("beta_mean")
+            .iter()
+            .find(|(s, _)| s == step)
+            .map(|&(_, b)| format!("  beta_mean={b:.3}"))
+            .unwrap_or_default();
+        println!("step {step:>4}  loss {loss:.4}{beta}");
+    }
+    println!(
+        "\nbeta froze at step {:?} -> per-layer bits {:?} (avg {:.2})",
+        waveq.freeze_step,
+        waveq.assignment.bits,
+        waveq.assignment.average_bits()
+    );
+
+    // --- baselines ----------------------------------------------------------
+    let fp32 = Trainer::new(&rt, mk(Algo::Fp32, 8)).run()?;
+    let dorefa = Trainer::new(&rt, mk(Algo::Dorefa, 4)).run()?;
+
+    let meta = rt.manifest.model(&waveq.model_key)?;
+    let stripes = Stripes::default();
+    let saving = stripes.saving_vs_baseline(meta, &waveq.assignment.bits, 4);
+    let saving_w4 = stripes.saving_vs_baseline(meta, &vec![4; meta.num_qlayers], 4);
+
+    println!("\n=== end-to-end summary (simplenet5 on cifar-lite) ===");
+    println!("fp32            : test_acc {:.4}", fp32.test_acc);
+    println!("DoReFa W4/A4    : test_acc {:.4}  energy saving {saving_w4:.2}x", dorefa.test_acc);
+    println!(
+        "WaveQ learned/A4: test_acc {:.4}  avg bits {:.2}  energy saving {saving:.2}x",
+        waveq.test_acc,
+        waveq.assignment.average_bits()
+    );
+    println!(
+        "WaveQ vs DoReFa: {:+.2}%  |  WaveQ vs fp32: {:+.2}%",
+        100.0 * (waveq.test_acc - dorefa.test_acc),
+        100.0 * (waveq.test_acc - fp32.test_acc)
+    );
+    let st = rt.stats();
+    println!(
+        "runtime: {} XLA compiles ({:.1}s), {} step executions, {:.1} steps/s train throughput",
+        st.compiles,
+        st.compile_secs,
+        st.executions,
+        steps as f64 / waveq.train_secs
+    );
+    Ok(())
+}

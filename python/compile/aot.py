@@ -1,0 +1,147 @@
+"""AOT pipeline: lower every program to HLO *text* + write the manifest.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_hlo_text()`` on new jax, and
+NOT serialized protos — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version behind
+the published ``xla`` rust crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run from python/:  python -m compile.aot --out ../artifacts [--models mlp,...]
+
+Emits:
+  artifacts/<program>.hlo.txt     one per program
+  artifacts/manifest.json         signatures, param layouts, MACs, batch sizes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import models as zoo
+from . import train_step as ts
+
+# Per-model batch sizes (train == eval so one batch shape serves both).
+BATCH = {
+    "mlp": 128,
+    "simplenet5": 64, "resnet20l": 64, "vgg11l": 64, "svhn8": 64,
+    "alexnetl": 32, "resnet18l": 32, "mobilenetl": 32,
+}
+
+# WRPN width multiplier (the paper's WRPN-2x configuration).
+WRPN_WIDTH = 2
+
+# Models that get WRPN programs (Table 1 + Table 2 comparisons).
+WRPN_MODELS = zoo.TABLE2_MODELS + zoo.TABLE1_MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def model_json(model: zoo.Model, batch: int, width_mult: int) -> dict:
+    return {
+        "name": model.name,
+        "input_shape": list(model.input_shape),
+        "num_classes": model.num_classes,
+        "batch": batch,
+        "width_mult": width_mult,
+        "num_qlayers": model.num_qlayers,
+        "params": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "kind": s.kind,
+                "init": s.init,
+                "qidx": s.qidx,
+                "macs": s.macs,
+                "count": model.weight_count(s),
+            }
+            for s in model.specs
+        ],
+    }
+
+
+def lower_program(prog: ts.Program, out_dir: str, manifest: dict, model_key: str | None):
+    t0 = time.time()
+    lowered = jax.jit(prog.fn).lower(*prog.arg_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{prog.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    manifest["programs"][prog.name] = {
+        "file": fname,
+        "model": model_key,
+        "inputs": [
+            {"name": n, **spec_json(s)} for n, s in zip(prog.in_names, prog.arg_specs)
+        ],
+        "outputs": prog.out_names,
+    }
+    print(f"  {prog.name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s")
+
+
+def programs_for_model(name: str) -> list[tuple[ts.Program, str]]:
+    """All programs for one base model; returns (program, model_key) pairs."""
+    batch = BATCH[name]
+    base = zoo.get_model(name)
+    out: list[tuple[ts.Program, str]] = [
+        (ts.make_train_fp32(base, batch), name),
+        (ts.make_train_quant(base, batch, "dorefa"), name),
+        (ts.make_train_waveq(base, batch), name),
+        (ts.make_eval(base, batch, None), name),
+        (ts.make_eval(base, batch, "dorefa"), name),
+    ]
+    if name in WRPN_MODELS or name == "mlp":
+        wide = zoo.get_model(name, width_mult=WRPN_WIDTH)
+        wide.name = f"{name}_w{WRPN_WIDTH}"
+        out.append((ts.make_train_quant(wide, batch, "wrpn"), wide.name))
+        out.append((ts.make_eval(wide, batch, "wrpn"), wide.name))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(zoo.ZOO.keys()),
+                    help="comma-separated subset of the zoo")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: dict = {"programs": {}, "models": {}}
+    names = [n for n in args.models.split(",") if n]
+    t0 = time.time()
+    for name in names:
+        print(f"[aot] {name}")
+        batch = BATCH[name]
+        base = zoo.get_model(name)
+        manifest["models"][name] = model_json(base, batch, 1)
+        if name in WRPN_MODELS or name == "mlp":
+            wide = zoo.get_model(name, width_mult=WRPN_WIDTH)
+            wide.name = f"{name}_w{WRPN_WIDTH}"
+            manifest["models"][wide.name] = model_json(wide, batch, WRPN_WIDTH)
+        for prog, model_key in programs_for_model(name):
+            lower_program(prog, args.out, manifest, model_key)
+
+    print("[aot] reg_profile")
+    lower_program(ts.make_reg_profile(), args.out, manifest, None)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done: {len(manifest['programs'])} programs in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

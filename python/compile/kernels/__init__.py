@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for WaveQ.
+
+Public surface:
+  * :func:`waveq_reg.waveq_reg`      — sinusoidal regularizer, d/dw and d/dbeta
+  * :func:`dorefa.dorefa_weight`     — DoReFa weight fake-quantizer (STE)
+  * :func:`dorefa.dorefa_act`        — DoReFa activation fake-quantizer (STE)
+  * :func:`wrpn.wrpn_weight`         — WRPN weight fake-quantizer (STE)
+  * :func:`quant_matmul.quant_matmul`— fused fake-quant matmul (MXU-tiled)
+  * :mod:`ref`                        — pure-jnp oracles for all of the above
+
+Everything here is build-time only: kernels lower (interpret=True) into the
+HLO emitted by ``compile/aot.py`` and never run as Python at serving time.
+"""
+
+from .dorefa import dorefa_act, dorefa_weight, max_abs_tanh  # noqa: F401
+from .quant_matmul import fp_matmul, quant_matmul  # noqa: F401
+from .waveq_reg import waveq_reg  # noqa: F401
+from .wrpn import wrpn_weight  # noqa: F401

@@ -1,0 +1,163 @@
+"""DoReFa-Net quantizers (Zhou et al., 2016) as Pallas kernels with STE.
+
+Weight path (paper Eq. 2.3 plus the per-layer scale c of §2.2 "Quantizer"):
+    t    = tanh(w),  m = max|tanh(W)|
+    w_qo = 2 * quantize_k( t / (2 m) + 1/2 ) - 1                  in [-1, 1]
+    w_q  = c * w_qo,   c = m
+    quantize_k(x) = round(x * k) / k,   k = 2**b - 1
+
+The paper's Quantizer paragraph is explicit that "a scaling factor c is
+determined per layer to map the final quantized weight w_q into the range
+[-c, +c]"; we take c = m so quantization is a pure snap-to-grid at the
+latent weight scale. (Without c — mapping onto the full [-1, 1] — every
+layer's forward gain is multiplied by 1/m, which compounds across depth and
+collapses training when the normalization layers are affine-only; Distiller
+relies on full BatchNorm to absorb that gain.)
+
+The full-tensor ``m`` is a cheap XLA reduction computed outside the kernel
+and passed in as a scalar, so the kernel itself is a single elementwise pass
+(one VMEM round-trip on TPU).
+
+Backward (straight-through estimator, the standard DoReFa rule): the round()
+is treated as identity and ``m`` as a constant, giving
+
+    dw_q/dw = (1 - tanh(w)^2)       [the m's cancel: m * (1/m) * tanh']
+    dw_q/dk = 0   (STE erases the quantizer-step dependence; in WaveQ the
+                   bitwidth gradient flows through the sinusoidal regularizer
+                   instead — that is the point of the paper)
+
+Activation path: a_q = quantize_k(clip(x, 0, 1)), STE masked to [0, 1].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, pad_to_tiles, rows_per_block, unpad_from_tiles
+
+
+def _wq_kernel(k_ref, m_ref, w_ref, out_ref):
+    k = k_ref[0]
+    m = m_ref[0]
+    x = jnp.tanh(w_ref[...]) * (0.5 / m) + 0.5
+    out_ref[...] = m * (2.0 * (jnp.round(x * k) / k) - 1.0)
+
+
+def _wq_bwd_kernel(m_ref, g_ref, w_ref, dw_ref):
+    t = jnp.tanh(w_ref[...])
+    # c = m cancels the 1/m of the normalization under STE.
+    dw_ref[...] = g_ref[...] * (1.0 - t * t)
+
+
+def _aq_kernel(k_ref, x_ref, out_ref):
+    k = k_ref[0]
+    x = jnp.clip(x_ref[...], 0.0, 1.0)
+    out_ref[...] = jnp.round(x * k) / k
+
+
+def _aq_bwd_kernel(g_ref, x_ref, dx_ref):
+    x = x_ref[...]
+    mask = jnp.logical_and(x >= 0.0, x <= 1.0).astype(jnp.float32)
+    dx_ref[...] = g_ref[...] * mask
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _tile_spec(rows: int):
+    return pl.BlockSpec((rows_per_block(rows), TILE), lambda i: (i, 0))
+
+
+def _elementwise_call(kernel, scalars, x2d):
+    """Run an elementwise kernel over (n_rows, TILE) with scalar operands."""
+    rows = x2d.shape[0]
+    grid = rows // rows_per_block(rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[_scalar_spec() for _ in scalars] + [_tile_spec(rows)],
+        out_specs=_tile_spec(rows),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.float32),
+        interpret=True,
+    )(*[s.reshape(1) for s in scalars], x2d)
+
+
+def max_abs_tanh(w: jnp.ndarray) -> jnp.ndarray:
+    """max|tanh(W)| with a floor to avoid division blow-up at init."""
+    return jnp.maximum(jnp.max(jnp.abs(jnp.tanh(w))), 1e-8)
+
+
+@jax.custom_vjp
+def _dorefa_weight(w, k, m):
+    w2d, n = pad_to_tiles(w)
+    q2d = _elementwise_call(_wq_kernel, [k, m], w2d)
+    return unpad_from_tiles(q2d, n, w.shape)
+
+
+def _dorefa_weight_fwd(w, k, m):
+    return _dorefa_weight(w, k, m), (w, m)
+
+
+def _dorefa_weight_bwd(res, g):
+    w, m = res
+    w2d, n = pad_to_tiles(w)
+    g2d, _ = pad_to_tiles(g)
+    rows = w2d.shape[0]
+    dw2d = pl.pallas_call(
+        _wq_bwd_kernel,
+        grid=(rows // rows_per_block(rows),),
+        in_specs=[_scalar_spec(), _tile_spec(rows), _tile_spec(rows)],
+        out_specs=_tile_spec(rows),
+        out_shape=jax.ShapeDtypeStruct(w2d.shape, jnp.float32),
+        interpret=True,
+    )(m.reshape(1), g2d, w2d)
+    return unpad_from_tiles(dw2d, n, w.shape), None, None
+
+
+_dorefa_weight.defvjp(_dorefa_weight_fwd, _dorefa_weight_bwd)
+
+
+def dorefa_weight(w: jnp.ndarray, k) -> jnp.ndarray:
+    """Fake-quantize a weight tensor with k = 2**b - 1 levels (STE backward)."""
+    w = w.astype(jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    m = jax.lax.stop_gradient(max_abs_tanh(w))
+    return _dorefa_weight(w, k, m)
+
+
+@jax.custom_vjp
+def _dorefa_act(x, k):
+    x2d, n = pad_to_tiles(x)
+    q2d = _elementwise_call(_aq_kernel, [k], x2d)
+    return unpad_from_tiles(q2d, n, x.shape)
+
+
+def _dorefa_act_fwd(x, k):
+    return _dorefa_act(x, k), (x,)
+
+
+def _dorefa_act_bwd(res, g):
+    (x,) = res
+    x2d, n = pad_to_tiles(x)
+    g2d, _ = pad_to_tiles(g)
+    rows = x2d.shape[0]
+    dx2d = pl.pallas_call(
+        _aq_bwd_kernel,
+        grid=(rows // rows_per_block(rows),),
+        in_specs=[_tile_spec(rows), _tile_spec(rows)],
+        out_specs=_tile_spec(rows),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.float32),
+        interpret=True,
+    )(g2d, x2d)
+    return unpad_from_tiles(dx2d, n, x.shape), None
+
+
+_dorefa_act.defvjp(_dorefa_act_fwd, _dorefa_act_bwd)
+
+
+def dorefa_act(x: jnp.ndarray, k) -> jnp.ndarray:
+    """Fake-quantize activations to k = 2**a - 1 levels over [0, 1] (STE)."""
+    return _dorefa_act(x.astype(jnp.float32), jnp.asarray(k, jnp.float32))

@@ -1,0 +1,112 @@
+"""Fused fake-quant matmul: x @ dorefa_weight(w) as one MXU-tiled kernel.
+
+This is the TPU adaptation of the paper's bit-serial compute story
+(DESIGN.md §8): on Stripes the win from small bitwidths is serial cycles;
+on TPU it is HBM->VMEM weight traffic. So the kernel streams *latent*
+weights tile-by-tile into VMEM, fake-quantizes the tile in-register
+(dequant fused into the matmul prologue — in a real int-packed deployment
+only the compressed tile would cross HBM), and feeds the MXU-aligned
+(bm, bk) x (bk, bn) product into an output accumulator.
+
+Grid = (M/bm, N/bn, K/bk) with K innermost so each (i, j) output block stays
+resident while K is reduced. Blocks default to 128x128 (MXU native);
+smaller operands clamp the block to the operand size.
+
+Backward (custom_vjp, STE through the quantizer — see dorefa.py):
+    dx = g @ w_q^T          (w_q recomputed via the dorefa kernel)
+    dw = (x^T @ g) * (1 - tanh(w)^2) / m
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .common import pad2d
+from .dorefa import dorefa_weight, max_abs_tanh
+
+# Block shape: multiples of the 128x128 MXU tile. 256-wide K blocks halve
+# the grid length (and with it the interpret-mode while-loop overhead) while
+# staying ~1 MiB/operand — within VMEM with double buffering (§Perf L1).
+DEF_BM, DEF_BK, DEF_BN = 128, 256, 128
+
+
+def _mm_kernel(k_ref, m_ref, x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    k = k_ref[0]
+    m = m_ref[0]
+    # Fake-quantize the weight tile in VMEM (Eq. 2.3 + scale c = m),
+    # then hit the MXU.
+    t = jnp.tanh(w_ref[...]) * (0.5 / m) + 0.5
+    wq = m * (2.0 * (jnp.round(t * k) / k) - 1.0)
+    o_ref[...] += jnp.dot(x_ref[...], wq, preferred_element_type=jnp.float32)
+
+
+def _blocks(m: int, kdim: int, n: int) -> tuple[int, int, int]:
+    return min(DEF_BM, m), min(DEF_BK, kdim), min(DEF_BN, n)
+
+
+def _qmm(x: jnp.ndarray, w: jnp.ndarray, k: jnp.ndarray, m: jnp.ndarray):
+    mm, kk = x.shape
+    _, nn = w.shape
+    bm, bk, bn = _blocks(mm, kk, nn)
+    xp, wp = pad2d(x, bm, bk), pad2d(w, bk, bn)
+    grid = (xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, kq: (0,)),
+            pl.BlockSpec((1,), lambda i, j, kq: (0,)),
+            pl.BlockSpec((bm, bk), lambda i, j, kq: (i, kq)),
+            pl.BlockSpec((bk, bn), lambda i, j, kq: (kq, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kq: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=True,
+    )(k.reshape(1), m.reshape(1), xp, wp)
+    return out[:mm, :nn]
+
+
+@jax.custom_vjp
+def _quant_matmul(x, w, k, m):
+    return _qmm(x, w, k, m)
+
+
+def _quant_matmul_fwd(x, w, k, m):
+    return _qmm(x, w, k, m), (x, w, k, m)
+
+
+def _quant_matmul_bwd(res, g):
+    x, w, k, m = res
+    wq = ref.dorefa_weight(w, k, m)  # cheap recompute; fused by XLA
+    dx = g @ wq.T
+    t = jnp.tanh(w)
+    # STE with c = m: the scale cancels the 1/m normalization.
+    dw = (x.T @ g) * (1.0 - t * t)
+    return dx, dw, None, None
+
+
+_quant_matmul.defvjp(_quant_matmul_fwd, _quant_matmul_bwd)
+
+
+def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, k) -> jnp.ndarray:
+    """x @ fake_quant(w) with k = 2**b - 1 levels; STE backward.
+
+    x: (M, K) activations, w: (K, N) latent fp32 weights, k: scalar.
+    """
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    m = jax.lax.stop_gradient(max_abs_tanh(w))
+    return _quant_matmul(x, w, k, m)
+
+
+def fp_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Full-precision counterpart (baseline path), plain XLA dot."""
+    return x @ w

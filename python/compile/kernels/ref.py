@@ -1,0 +1,89 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth for correctness: pytest (and hypothesis sweeps)
+compare each Pallas kernel against the oracle with ``assert_allclose``.
+They are also the "roofline reference" used in the §Perf analysis: the
+kernels must not lose accuracy relative to these definitions.
+
+Conventions (paper, §2.2 "Quantizer", Eq. 2.3):
+  * ``k = 2**b - 1`` quantization levels over [0, 1] (``quantize_k``);
+  * DoReFa weights are tanh-normalized into [0, 1], quantized, then mapped
+    back to [-1, 1];
+  * WaveQ regularizer (Eq. 2.2 / Eq. 2.5):
+        R_norm(w; beta) = mean_j sin^2(pi * w_j * (2**beta - 1)) / 2**(norm*beta)
+    with ``norm`` in {0, 1, 2} selecting the Figure-3 variant (the paper's
+    production choice is norm=1).  We use *mean* over j rather than the
+    paper's sum so that lambda_w is independent of layer size (a per-layer
+    constant absorbed into lambda_w; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LN2 = 0.6931471805599453
+
+
+def quantize_k(x: jnp.ndarray, k) -> jnp.ndarray:
+    """Linear quantizer over [0, 1] with k steps: round(x*k)/k  (Eq. 2.3)."""
+    return jnp.round(x * k) / k
+
+
+def waveq_reg(w: jnp.ndarray, beta, norm: int = 1) -> jnp.ndarray:
+    """WaveQ sinusoidal regularizer for one layer (scalar).
+
+    R = mean_j sin^2(pi * w_j * (2**beta - 1)) / 2**(norm * beta)
+    """
+    k = 2.0**beta - 1.0
+    s = jnp.sin(jnp.pi * w * k)
+    return jnp.mean(s * s) / 2.0 ** (norm * beta)
+
+
+def waveq_reg_grad_w(w, beta, norm: int = 1):
+    """Analytic dR/dw for one layer: sin(2 pi w k) * pi k / (N * 2**(norm b))."""
+    k = 2.0**beta - 1.0
+    n = w.size
+    return jnp.sin(2.0 * jnp.pi * w * k) * (jnp.pi * k) / (n * 2.0 ** (norm * beta))
+
+
+def waveq_reg_grad_beta(w, beta, norm: int = 1):
+    """Analytic dR/dbeta for one layer (scalar).
+
+    d/dbeta [ sin^2(pi w k) 2^{-n beta} ]
+      = sin(2 pi w k) * pi w * ln2 * 2^beta * 2^{-n beta}
+        - n ln2 sin^2(pi w k) 2^{-n beta},   with k = 2^beta - 1
+    """
+    k = 2.0**beta - 1.0
+    two_nb = 2.0 ** (norm * beta)
+    s = jnp.sin(jnp.pi * w * k)
+    term1 = jnp.sin(2.0 * jnp.pi * w * k) * jnp.pi * w * LN2 * 2.0**beta
+    term2 = norm * LN2 * s * s
+    return jnp.mean(term1 - term2) / two_nb
+
+
+def dorefa_weight(w: jnp.ndarray, k, max_abs_tanh=None) -> jnp.ndarray:
+    """DoReFa-Net weight quantizer (Eq. 2.3) with per-layer scale c = m
+    (§2.2 "Quantizer": w_q = c * w_qo maps quantized weights to [-c, +c]).
+
+    w_q = m * (2 * quantize_k( tanh(w) / (2 m) + 1/2 ) - 1),  m = max|tanh(W)|
+    """
+    t = jnp.tanh(w)
+    m = jnp.max(jnp.abs(t)) if max_abs_tanh is None else max_abs_tanh
+    return m * (2.0 * quantize_k(t / (2.0 * m) + 0.5, k) - 1.0)
+
+
+def dorefa_act(x: jnp.ndarray, k) -> jnp.ndarray:
+    """DoReFa activation quantizer: quantize_k(clip(x, 0, 1))."""
+    return quantize_k(jnp.clip(x, 0.0, 1.0), k)
+
+
+def wrpn_weight(w: jnp.ndarray, k, max_abs=None) -> jnp.ndarray:
+    """WRPN weight quantizer with per-layer scale c = max|W| (see wrpn.py):
+    w_q = m * (2 * quantize_k(clip(w, -m, m)/(2m) + 1/2) - 1)."""
+    m = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) if max_abs is None else max_abs
+    return m * (quantize_k(jnp.clip(w, -m, m) / (2.0 * m) + 0.5, k) * 2.0 - 1.0)
+
+
+def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, k, max_abs_tanh) -> jnp.ndarray:
+    """x @ dorefa_weight(w) — the fused fake-quant matmul reference."""
+    return x @ dorefa_weight(w, k, max_abs_tanh)

@@ -1,0 +1,134 @@
+"""WaveQ sinusoidal regularizer as a Pallas kernel (the paper's Eq. 2.2/2.5).
+
+For one layer with flattened weights ``w`` and continuous bitwidth parameter
+``beta`` (the sinusoidal period parameter), the regularizer is
+
+    R_norm(w; beta) = mean_j sin^2(pi * w_j * k) / 2**(norm * beta),
+    k = 2**beta - 1
+
+``norm`` in {0, 1, 2} selects the Figure-3 normalization variant; the paper's
+production choice (free of vanishing/exploding gradients in beta) is norm=1.
+
+The kernel is wrapped in a ``jax.custom_vjp`` with *analytic* gradients —
+this is the heart of the paper: dR/dbeta is what makes the bitwidth a
+learnable, continuous parameter of SGD, and dR/dw is what propels weights
+toward the quantization grid (the sin^2 minima).
+
+TPU shape (see DESIGN.md §8): the hot loop is elementwise + reduction, tiled
+to (1, 8*128) VPU blocks over a (n_tiles, 1024) view; partial sums land in a
+per-tile output accumulated by a final cheap ``jnp.sum``. ``sin`` maps to the
+VPU transcendental unit. ``interpret=True`` everywhere: CPU PJRT cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, pad_to_tiles, rows_per_block, unpad_from_tiles
+
+LN2 = 0.6931471805599453
+PI = 3.141592653589793
+
+
+def _fwd_kernel(beta_ref, w_ref, out_ref):
+    """Partial sum of sin^2(pi * w * k) for one (1, TILE) block."""
+    k = 2.0 ** beta_ref[0] - 1.0
+    s = jnp.sin(PI * w_ref[...] * k)
+    out_ref[0] = jnp.sum(s * s)
+
+
+def _bwd_kernel(norm: int, beta_ref, g_ref, w_ref, dw_ref, dbeta_ref):
+    """Per-block dR/dw and the dR/dbeta partial sum.
+
+    dR/dw_j    = g * sin(2 pi w_j k) * pi k / (N * 2**(norm beta))
+    dR/dbeta  += g * [ sin(2 pi w k) pi w ln2 2**beta
+                       - norm ln2 sin^2(pi w k) ] / (N * 2**(norm beta))
+    (the 1/(N * 2**(norm beta)) factor is folded into ``g`` by the wrapper.)
+    """
+    beta = beta_ref[0]
+    g = g_ref[0]
+    k = 2.0**beta - 1.0
+    w = w_ref[...]
+    s2 = jnp.sin(2.0 * PI * w * k)
+    dw_ref[...] = g * s2 * (PI * k)
+    s = jnp.sin(PI * w * k)
+    t1 = s2 * (PI * LN2) * w * 2.0**beta
+    t2 = (norm * LN2) * s * s
+    dbeta_ref[0] = g * jnp.sum(t1 - t2)
+
+
+def _scalar_spec():
+    # Whole (1,)-array visible to every grid step.
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _reg_sum(w2d: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """sum_j sin^2(pi w_j (2^beta - 1)) over all blocks (un-normalized)."""
+    rows = w2d.shape[0]
+    rb = rows_per_block(rows)
+    grid = rows // rb
+    partials = pl.pallas_call(
+        _fwd_kernel,
+        grid=(grid,),
+        in_specs=[_scalar_spec(), pl.BlockSpec((rb, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid,), jnp.float32),
+        interpret=True,
+    )(beta.reshape(1), w2d)
+    return jnp.sum(partials)
+
+
+@functools.lru_cache(maxsize=None)
+def make_waveq_reg(norm: int):
+    """Build the custom-vjp regularizer function for one normalization variant."""
+
+    @jax.custom_vjp
+    def reg(w, beta):
+        w2d, n = pad_to_tiles(w)
+        return _reg_sum(w2d, beta) / (n * 2.0 ** (norm * beta))
+
+    def reg_fwd(w, beta):
+        return reg(w, beta), (w, beta)
+
+    def reg_bwd(res, g):
+        w, beta = res
+        w2d, n = pad_to_tiles(w)
+        rows = w2d.shape[0]
+        rb = rows_per_block(rows)
+        grid = rows // rb
+        # Fold the shared 1/(N 2^{norm beta}) normalization into the cotangent.
+        gn = (g / (n * 2.0 ** (norm * beta))).reshape(1)
+        dw2d, dbeta_parts = pl.pallas_call(
+            functools.partial(_bwd_kernel, norm),
+            grid=(grid,),
+            in_specs=[
+                _scalar_spec(),
+                _scalar_spec(),
+                pl.BlockSpec((rb, TILE), lambda i: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((rb, TILE), lambda i: (i, 0)),
+                pl.BlockSpec((1,), lambda i: (i,)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct(w2d.shape, jnp.float32),
+                jax.ShapeDtypeStruct((grid,), jnp.float32),
+            ],
+            interpret=True,
+        )(beta.reshape(1), gn, w2d)
+        dw = unpad_from_tiles(dw2d, n, w.shape)
+        return dw, jnp.sum(dbeta_parts).reshape(beta.shape)
+
+    reg.defvjp(reg_fwd, reg_bwd)
+    return reg
+
+
+def waveq_reg(w: jnp.ndarray, beta, norm: int = 1) -> jnp.ndarray:
+    """Per-layer WaveQ regularizer (scalar), differentiable in w AND beta."""
+    beta = jnp.asarray(beta, jnp.float32)
+    return make_waveq_reg(norm)(w.astype(jnp.float32), beta)

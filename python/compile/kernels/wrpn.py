@@ -1,0 +1,81 @@
+"""WRPN quantizer (Mishra et al., 2018) as a Pallas kernel with STE.
+
+WRPN compensates for reduced precision by widening layers (the width
+multiplier lives in the model zoo, ``models.py``) and uses a clip +
+linear-quantize rule for weights. As with DoReFa (see dorefa.py), the
+original formulation maps onto the fixed range [-1, 1] and relies on full
+BatchNorm to absorb the resulting per-layer gain; our affine-only
+normalization cannot, so we apply the same per-layer scale c = max|W|
+(paper §2.2 "Quantizer": w_q = c * w_qo in [-c, +c]):
+
+    m   = max|W|
+    w_q = m * ( 2 * quantize_k( clip(w, -m, m) / (2 m) + 1/2 ) - 1 )
+
+Backward: straight-through (the clip never bites with m = max|W|, so the
+gradient is the identity — WRPN's defining simplicity vs DoReFa's tanh).
+
+Activations reuse the DoReFa activation quantizer (identical definition).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pad_to_tiles, rows_per_block, unpad_from_tiles
+from .dorefa import _elementwise_call, _scalar_spec, _tile_spec  # shared plumbing
+
+
+def _wrpn_kernel(k_ref, m_ref, w_ref, out_ref):
+    k = k_ref[0]
+    m = m_ref[0]
+    x = jnp.clip(w_ref[...], -m, m) * (0.5 / m) + 0.5
+    out_ref[...] = m * ((jnp.round(x * k) / k) * 2.0 - 1.0)
+
+
+def _wrpn_bwd_kernel(m_ref, g_ref, w_ref, dw_ref):
+    w = w_ref[...]
+    mask = (jnp.abs(w) <= m_ref[0]).astype(jnp.float32)
+    dw_ref[...] = g_ref[...] * mask
+
+
+def max_abs(w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+
+
+@jax.custom_vjp
+def _wrpn_weight(w, k, m):
+    w2d, n = pad_to_tiles(w)
+    q2d = _elementwise_call(_wrpn_kernel, [k, m], w2d)
+    return unpad_from_tiles(q2d, n, w.shape)
+
+
+def _wrpn_weight_fwd(w, k, m):
+    return _wrpn_weight(w, k, m), (w, m)
+
+
+def _wrpn_weight_bwd(res, g):
+    w, m = res
+    w2d, n = pad_to_tiles(w)
+    g2d, _ = pad_to_tiles(g)
+    rows = w2d.shape[0]
+    dw2d = pl.pallas_call(
+        _wrpn_bwd_kernel,
+        grid=(rows // rows_per_block(rows),),
+        in_specs=[_scalar_spec(), _tile_spec(rows), _tile_spec(rows)],
+        out_specs=_tile_spec(rows),
+        out_shape=jax.ShapeDtypeStruct(w2d.shape, jnp.float32),
+        interpret=True,
+    )(m.reshape(1), g2d, w2d)
+    return unpad_from_tiles(dw2d, n, w.shape), None, None
+
+
+_wrpn_weight.defvjp(_wrpn_weight_fwd, _wrpn_weight_bwd)
+
+
+def wrpn_weight(w: jnp.ndarray, k) -> jnp.ndarray:
+    """Fake-quantize weights WRPN-style with k = 2**b - 1 levels (STE)."""
+    w = w.astype(jnp.float32)
+    m = jax.lax.stop_gradient(max_abs(w))
+    return _wrpn_weight(w, jnp.asarray(k, jnp.float32), m)

@@ -1,0 +1,308 @@
+"""Layer DSL for the WaveQ model zoo (build-time JAX, never on the run path).
+
+A model is a list of :class:`Op` nodes. Each op knows how to
+  * ``init``  — create its parameters (He/Glorot style),
+  * ``apply`` — run forward given a :class:`QuantCtx`, and
+  * report metadata (param shapes, per-example MACs, whether it is a
+    *quantizable* layer, i.e. owns a per-layer bitwidth slot beta_i).
+
+Quantization policy (paper §4.1): all conv + FC layers are quantized
+*except the first and last* layers of the network, which stay full
+precision. The model builder marks those automatically.
+
+Activations: ReLU followed by the DoReFa activation quantizer (clip to
+[0,1] + linear quantize) when the program quantizes activations. Normal
+layers use "affine" (per-channel scale+bias) instead of full BatchNorm so
+that the AOT train step carries no running-stat state (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import dorefa_act, dorefa_weight, quant_matmul, wrpn_weight
+
+
+@dataclasses.dataclass
+class QuantCtx:
+    """Per-program quantization context threaded through ``apply``.
+
+    kw:   per-quant-layer weight quantization levels (2**b - 1), or None -> fp32
+    ka:   scalar activation levels (2**a - 1), or None -> fp32 activations
+    quantizer: 'dorefa' | 'wrpn' (weight quantizer family)
+    """
+
+    kw: Optional[jnp.ndarray] = None
+    ka: Optional[jnp.ndarray] = None
+    quantizer: str = "dorefa"
+
+    def weight_q(self, w: jnp.ndarray, qidx: Optional[int]) -> jnp.ndarray:
+        if self.kw is None or qidx is None:
+            return w
+        k = self.kw[qidx]
+        if self.quantizer == "wrpn":
+            return wrpn_weight(w, k)
+        return dorefa_weight(w, k)
+
+    def act_q(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.ka is None:
+            return x
+        # DoReFa's activation quantizer assumes activations pre-bounded to
+        # [0, 1] (their nets bound them; Distiller's use BN). Ours are
+        # affine+ReLU outputs, so quantize in units of the batch max — the
+        # same per-layer scale treatment as the weight quantizer (§2.2
+        # "Quantizer"): a_q = m * quantize_k(clip(a/m, 0, 1)).
+        m = jax.lax.stop_gradient(jnp.maximum(jnp.max(x), 1e-6))
+        return m * dorefa_act(x / m, self.ka)
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    init: str  # 'he' | 'ones' | 'zeros'
+    qidx: Optional[int] = None  # slot in the per-layer bitwidth vector, if quantized
+    kind: str = "other"  # conv | dwconv | fc | affine | bias
+    macs: int = 0  # per-example MACs attributable to this parameter
+
+
+class Op:
+    """Base class: stateless ops override ``apply`` only."""
+
+    def param_specs(self, builder) -> list[ParamSpec]:
+        return []
+
+    def apply(self, params: list, x: jnp.ndarray, ctx: QuantCtx) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def init_param(key, spec: ParamSpec) -> jnp.ndarray:
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, jnp.float32)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, jnp.float32)
+    if spec.kind in ("conv", "dwconv"):
+        fan_in = spec.shape[0] * spec.shape[1] * spec.shape[2]
+    else:  # fc
+        fan_in = spec.shape[0]
+    w = _he(key, spec.shape, fan_in)
+    if spec.init == "he_res":  # near-identity residual block at init
+        w = w * 0.1
+    return w
+
+
+class Conv(Op):
+    """3x3/kxk conv, HWIO kernel, no bias (affine follows)."""
+
+    def __init__(self, cout: int, ksize: int = 3, stride: int = 1, quant: bool = True, pad: str = "SAME"):
+        self.cout, self.ksize, self.stride, self.quant, self.pad = cout, ksize, stride, quant, pad
+
+    def param_specs(self, b) -> list[ParamSpec]:
+        cin = b.channels
+        h, w = b.spatial
+        ho = -(-h // self.stride) if self.pad == "SAME" else (h - self.ksize) // self.stride + 1
+        wo = -(-w // self.stride) if self.pad == "SAME" else (w - self.ksize) // self.stride + 1
+        macs = ho * wo * self.ksize * self.ksize * cin * self.cout
+        spec = ParamSpec(
+            name=f"conv{b.next_id('conv')}",
+            shape=(self.ksize, self.ksize, cin, self.cout),
+            init="he",
+            qidx="pending" if self.quant else None,  # resolved by the builder
+            kind="conv",
+            macs=macs,
+        )
+        b.channels = self.cout
+        b.spatial = (ho, wo)
+        return [spec]
+
+    def apply(self, params, x, ctx):
+        (w,) = params
+        wq = ctx.weight_q(w, self._qidx)
+        return lax.conv_general_dilated(
+            x, wq,
+            window_strides=(self.stride, self.stride),
+            padding=self.pad,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+
+
+class DWConv(Op):
+    """Depthwise conv (MobileNet building block)."""
+
+    def __init__(self, ksize: int = 3, stride: int = 1, quant: bool = True):
+        self.ksize, self.stride, self.quant = ksize, stride, quant
+
+    def param_specs(self, b) -> list[ParamSpec]:
+        c = b.channels
+        h, w = b.spatial
+        ho, wo = -(-h // self.stride), -(-w // self.stride)
+        macs = ho * wo * self.ksize * self.ksize * c
+        spec = ParamSpec(
+            name=f"dwconv{b.next_id('dwconv')}",
+            shape=(self.ksize, self.ksize, 1, c),
+            init="he",
+            qidx="pending" if self.quant else None,
+            kind="dwconv",
+            macs=macs,
+        )
+        b.spatial = (ho, wo)
+        return [spec]
+
+    def apply(self, params, x, ctx):
+        (w,) = params
+        wq = ctx.weight_q(w, self._qidx)
+        c = x.shape[-1]
+        return lax.conv_general_dilated(
+            x, wq,
+            window_strides=(self.stride, self.stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c,
+        )
+
+
+class FC(Op):
+    """Fully-connected layer; quantized path uses the fused Pallas quant_matmul."""
+
+    def __init__(self, cout: int, quant: bool = True, bias: bool = True):
+        self.cout, self.quant, self.bias = cout, quant, bias
+
+    def param_specs(self, b) -> list[ParamSpec]:
+        cin = b.flat_dim()
+        specs = [
+            ParamSpec(
+                name=f"fc{b.next_id('fc')}",
+                shape=(cin, self.cout),
+                init="he",
+                qidx="pending" if self.quant else None,
+                kind="fc",
+                macs=cin * self.cout,
+            )
+        ]
+        if self.bias:
+            specs.append(ParamSpec(f"{specs[0].name}_b", (self.cout,), "zeros", None, "bias", 0))
+        b.set_flat(self.cout)
+        return specs
+
+    def apply(self, params, x, ctx):
+        w = params[0]
+        if ctx.kw is not None and self._qidx is not None:
+            if ctx.quantizer == "wrpn":
+                out = x @ wrpn_weight(w, ctx.kw[self._qidx])
+            else:
+                out = quant_matmul(x, w, ctx.kw[self._qidx])
+        else:
+            out = x @ w
+        if self.bias:
+            out = out + params[1]
+        return out
+
+
+class Affine(Op):
+    """Per-channel scale + bias ("BN-lite": no running stats in the AOT state)."""
+
+    def param_specs(self, b) -> list[ParamSpec]:
+        c = b.channels
+        i = b.next_id("affine")
+        return [
+            ParamSpec(f"affine{i}_s", (c,), "ones", None, "affine", 0),
+            ParamSpec(f"affine{i}_b", (c,), "zeros", None, "affine", 0),
+        ]
+
+    def apply(self, params, x, ctx):
+        s, bb = params
+        return x * s + bb
+
+
+class ReLU(Op):
+    """ReLU followed by activation fake-quantization when the program asks."""
+
+    def apply(self, params, x, ctx):
+        return ctx.act_q(jax.nn.relu(x))
+
+
+class MaxPool(Op):
+    def __init__(self, size: int = 2):
+        self.size = size
+
+    def param_specs(self, b):
+        h, w = b.spatial
+        b.spatial = (h // self.size, w // self.size)
+        return []
+
+    def apply(self, params, x, ctx):
+        s = self.size
+        return lax.reduce_window(x, -jnp.inf, lax.max, (1, s, s, 1), (1, s, s, 1), "VALID")
+
+
+class GlobalAvgPool(Op):
+    def param_specs(self, b):
+        b.spatial = (1, 1)
+        return []
+
+    def apply(self, params, x, ctx):
+        return jnp.mean(x, axis=(1, 2), keepdims=True)
+
+
+class Flatten(Op):
+    def param_specs(self, b):
+        b.flatten()
+        return []
+
+    def apply(self, params, x, ctx):
+        return x.reshape(x.shape[0], -1)
+
+
+class Residual(Op):
+    """Pre-built residual block: main branch ops + optional projection shortcut."""
+
+    def __init__(self, body: list[Op], project: Optional[Conv] = None):
+        self.body = body
+        self.project = project
+        self._slices: list[tuple[int, int]] = []
+
+    def param_specs(self, b) -> list[ParamSpec]:
+        specs: list[ParamSpec] = []
+        in_spatial, in_channels = b.spatial, b.channels
+        for op in self.body:
+            s = op.param_specs(b)
+            self._slices.append((len(specs), len(s)))
+            specs.extend(s)
+        # Fixup-style: the last conv of the body initializes near zero so the
+        # block starts as (almost) identity — without real BatchNorm this is
+        # what keeps signal alive through deep residual stacks (resnet18l's
+        # 8-block chain dies at init otherwise).
+        for s in reversed(specs):
+            if s.kind == "conv":
+                s.init = "he_res"
+                break
+        if self.project is not None:
+            save_sp, save_ch = b.spatial, b.channels
+            b.spatial, b.channels = in_spatial, in_channels
+            s = op_specs = self.project.param_specs(b)
+            self._proj_slice = (len(specs), len(op_specs))
+            specs.extend(s)
+            b.spatial, b.channels = save_sp, save_ch
+        return specs
+
+    def apply(self, params, x, ctx):
+        h = x
+        off = 0
+        for op, (start, n) in zip(self.body, self._slices):
+            h = op.apply(params[start : start + n], h, ctx)
+            off = start + n
+        if self.project is not None:
+            start, n = self._proj_slice
+            sc = self.project.apply(params[start : start + n], x, ctx)
+        else:
+            sc = x
+        return ctx.act_q(jax.nn.relu(h + sc))

@@ -1,0 +1,49 @@
+"""Loss assembly: cross-entropy + the WaveQ regularizer (Eq. 2.2).
+
+The total training objective in 'waveq' programs is
+
+    E = CE(logits, y) + lambda_w * sum_i R1(w_i; beta_i) + lambda_beta * sum_i beta_i
+
+where i ranges over the quantizable layers. The two lambda strengths are
+*runtime inputs* fed by the rust coordinator every step — the 3-phase
+schedule (paper Fig. 2e / Fig. 9) lives on the rust side, which is what
+makes the schedule a coordination concern rather than a baked-in constant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import waveq_reg
+
+
+def cross_entropy(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def accuracy(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y_onehot, axis=-1)).astype(jnp.float32)
+    )
+
+
+def waveq_penalty(qweights: list, beta: jnp.ndarray, norm: int = 1) -> jnp.ndarray:
+    """sum_i R_norm(v_i; beta_i) over the quantizable layers (Pallas kernel).
+
+    The sinusoid is applied to the *quantizer-normalized* weight
+    ``v = tanh(w)/(2 max|tanh(W)|) + 1/2`` so that the sin^2 minima
+    (v = j / (2^beta - 1)) coincide exactly with the DoReFa quantization
+    levels of Eq. 2.3 — "matching the period to the quantization step"
+    (§2.2) in the same coordinate system the quantizer rounds in. The
+    normalization is differentiable (tanh chain) with the per-layer max
+    treated as a constant, matching the quantizer's STE convention.
+    """
+    total = jnp.float32(0.0)
+    for i, w in enumerate(qweights):
+        t = jnp.tanh(w)
+        m = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(t)), 1e-8))
+        v = t / (2.0 * m) + 0.5
+        total = total + waveq_reg(v, beta[i], norm=norm)
+    return total

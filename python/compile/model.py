@@ -1,0 +1,7 @@
+"""Facade kept for discoverability: the L2 model definitions live in
+``models.py`` (zoo), ``layers.py`` (DSL), ``train_step.py`` (programs).
+"""
+
+from .models import ZOO, Model, get_model  # noqa: F401
+from .train_step import (make_eval, make_train_fp32, make_train_quant,  # noqa: F401
+                         make_train_waveq)

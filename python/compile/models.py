@@ -1,0 +1,282 @@
+"""The WaveQ model zoo (build-time JAX).
+
+Lite counterparts of the paper's benchmark networks, preserving each
+topology's *heterogeneity* (conv stacks vs FC tails vs residual stages vs
+depthwise-separable blocks) at widths/depths trainable on CPU in minutes —
+see DESIGN.md §2 for the substitution argument.
+
+  Table 2 nets : simplenet5, resnet20l, vgg11l, svhn8       (cifar/svhn-lite)
+  Table 1 nets : alexnetl, resnet18l, mobilenetl            (imagenet-lite)
+  plus         : mlp                                        (tests/quickstart)
+
+Per-layer quantization policy (paper §4.1): first and last parameterized
+layers stay full precision; every other conv/FC weight owns a bitwidth slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (FC, Affine, Conv, DWConv, Flatten, GlobalAvgPool,
+                     MaxPool, Op, ParamSpec, QuantCtx, ReLU, Residual,
+                     init_param)
+
+
+class _ShapeTracker:
+    """Mutable shape state threaded through param_specs during build."""
+
+    def __init__(self, input_shape):
+        self.spatial = (input_shape[0], input_shape[1])
+        self.channels = input_shape[2]
+        self._flat: Optional[int] = None
+        self._ids: dict[str, int] = {}
+
+    def next_id(self, kind: str) -> int:
+        self._ids[kind] = self._ids.get(kind, 0) + 1
+        return self._ids[kind]
+
+    def flatten(self):
+        self._flat = self.spatial[0] * self.spatial[1] * self.channels
+
+    def flat_dim(self) -> int:
+        if self._flat is None:
+            self.flatten()
+        return self._flat
+
+    def set_flat(self, n: int):
+        self._flat = n
+
+
+@dataclasses.dataclass
+class Model:
+    """A fully-built architecture: specs + pure apply function."""
+
+    name: str
+    input_shape: tuple  # (H, W, C)
+    num_classes: int
+    ops: list
+    specs: list  # list[ParamSpec]
+    op_slices: list  # per-op (start, count) into the params list
+
+    @property
+    def num_params(self) -> int:
+        return len(self.specs)
+
+    @property
+    def num_qlayers(self) -> int:
+        return sum(1 for s in self.specs if s.qidx is not None)
+
+    @property
+    def qlayer_param_indices(self) -> list[int]:
+        return [i for i, s in enumerate(self.specs) if s.qidx is not None]
+
+    def init(self, seed: int = 0) -> list[jnp.ndarray]:
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(self.specs))
+        return [init_param(k, s) for k, s in zip(keys, self.specs)]
+
+    def apply(self, params: list, x: jnp.ndarray, ctx: QuantCtx) -> jnp.ndarray:
+        h = x
+        for op, (start, n) in zip(self.ops, self.op_slices):
+            h = op.apply(params[start : start + n], h, ctx)
+        return h
+
+    def weight_count(self, spec: ParamSpec) -> int:
+        n = 1
+        for d in spec.shape:
+            n *= d
+        return n
+
+
+def build(name: str, input_shape, num_classes: int, ops: list) -> Model:
+    """Resolve shapes, assign quantization slots (skip first & last), flatten specs."""
+    tracker = _ShapeTracker(input_shape)
+    specs: list[ParamSpec] = []
+    op_slices = []
+    for op in ops:
+        s = op.param_specs(tracker)
+        op_slices.append((len(specs), len(s)))
+        specs.extend(s)
+
+    # Resolve 'pending' quantization slots: first & last quantizable layers go fp32.
+    pending = [i for i, s in enumerate(specs) if s.qidx == "pending"]
+    if len(pending) >= 3:
+        keep = pending[1:-1]
+    else:
+        keep = pending  # tiny nets: quantize everything that asked
+    drop = set(pending) - set(keep)
+    qi = 0
+    for i, s in enumerate(specs):
+        if s.qidx == "pending":
+            if i in drop:
+                s.qidx = None
+            else:
+                s.qidx = qi
+                qi += 1
+    # Bind resolved slots onto ops (layer objects read self._qidx at apply time).
+    for op, (start, n) in zip(ops, op_slices):
+        _bind_qidx(op, specs[start : start + n])
+    return Model(name, tuple(input_shape), num_classes, ops, specs, op_slices)
+
+
+def _bind_qidx(op, specs):
+    if isinstance(op, Residual):
+        for sub, (start, n) in zip(op.body, op._slices):
+            _bind_qidx(sub, specs[start : start + n])
+        if op.project is not None:
+            start, n = op._proj_slice
+            _bind_qidx(op.project, specs[start : start + n])
+    else:
+        own = [s for s in specs if s.kind in ("conv", "dwconv", "fc")]
+        op._qidx = own[0].qidx if own else None
+
+
+def _res_block(cout: int, stride: int = 1, project: bool = False) -> Residual:
+    body = [Conv(cout, 3, stride), Affine(), ReLU(), Conv(cout, 3, 1), Affine()]
+    proj = Conv(cout, 1, stride) if project else None
+    return Residual(body, proj)
+
+
+def _sep_block(cout: int, stride: int = 1) -> list:
+    """MobileNet-style depthwise-separable block."""
+    return [DWConv(3, stride), Affine(), ReLU(), Conv(cout, 1, 1), Affine(), ReLU()]
+
+
+# --------------------------------------------------------------------------
+# Architectures
+# --------------------------------------------------------------------------
+
+def mlp(width_mult: int = 1) -> Model:
+    w = 128 * width_mult
+    return build("mlp", (8, 8, 3), 10, [
+        Flatten(),
+        FC(w), ReLU(),
+        FC(w), ReLU(),
+        FC(w), ReLU(),
+        FC(10),
+    ])
+
+
+def simplenet5(width_mult: int = 1) -> Model:
+    """The paper's SimpleNet-5 stand-in: 3 convs + 2 FCs on cifar-lite."""
+    m = width_mult
+    return build("simplenet5", (16, 16, 3), 10, [
+        Conv(16 * m), Affine(), ReLU(),
+        Conv(32 * m, stride=2), Affine(), ReLU(),
+        Conv(32 * m, stride=2), Affine(), ReLU(),
+        Flatten(),
+        FC(64 * m), ReLU(),
+        FC(10),
+    ])
+
+
+def resnet20l(width_mult: int = 1) -> Model:
+    """ResNet-20-lite: 3 stages x 2 blocks, widths 8/16/32 (paper: 16/32/64 x3)."""
+    m = width_mult
+    return build("resnet20l", (16, 16, 3), 10, [
+        Conv(8 * m), Affine(), ReLU(),
+        _res_block(8 * m),
+        _res_block(8 * m),
+        _res_block(16 * m, stride=2, project=True),
+        _res_block(16 * m),
+        _res_block(32 * m, stride=2, project=True),
+        _res_block(32 * m),
+        GlobalAvgPool(), Flatten(),
+        FC(10),
+    ])
+
+
+def vgg11l(width_mult: int = 1) -> Model:
+    """VGG-11-lite: conv/pool ladder + 2-layer FC head."""
+    m = width_mult
+    return build("vgg11l", (16, 16, 3), 10, [
+        Conv(16 * m), Affine(), ReLU(), MaxPool(),
+        Conv(32 * m), Affine(), ReLU(), MaxPool(),
+        Conv(64 * m), Affine(), ReLU(),
+        Conv(64 * m), Affine(), ReLU(), MaxPool(),
+        Flatten(),
+        FC(128 * m), ReLU(),
+        FC(10),
+    ])
+
+
+def svhn8(width_mult: int = 1) -> Model:
+    """SVHN-8-lite: 6 convs + 2 FCs."""
+    m = width_mult
+    return build("svhn8", (16, 16, 3), 10, [
+        Conv(16 * m), Affine(), ReLU(),
+        Conv(16 * m), Affine(), ReLU(), MaxPool(),
+        Conv(32 * m), Affine(), ReLU(),
+        Conv(32 * m), Affine(), ReLU(), MaxPool(),
+        Conv(48 * m), Affine(), ReLU(),
+        Conv(48 * m), Affine(), ReLU(),
+        GlobalAvgPool(), Flatten(),
+        FC(64 * m), ReLU(),
+        FC(10),
+    ])
+
+
+def alexnetl(width_mult: int = 1) -> Model:
+    """AlexNet-lite: 5 convs + 3 FCs on imagenet-lite (24x24, 20 classes)."""
+    m = width_mult
+    return build("alexnetl", (24, 24, 3), 20, [
+        Conv(16 * m, ksize=5, stride=2), Affine(), ReLU(),
+        Conv(32 * m), Affine(), ReLU(), MaxPool(),
+        Conv(48 * m), Affine(), ReLU(),
+        Conv(48 * m), Affine(), ReLU(),
+        Conv(32 * m), Affine(), ReLU(), MaxPool(),
+        Flatten(),
+        FC(128 * m), ReLU(),
+        FC(128 * m), ReLU(),
+        FC(20),
+    ])
+
+
+def resnet18l(width_mult: int = 1) -> Model:
+    """ResNet-18-lite: 4 stages x 2 blocks, widths 8/16/32/64."""
+    m = width_mult
+    return build("resnet18l", (24, 24, 3), 20, [
+        Conv(8 * m), Affine(), ReLU(),
+        _res_block(8 * m),
+        _res_block(8 * m),
+        _res_block(16 * m, stride=2, project=True),
+        _res_block(16 * m),
+        _res_block(32 * m, stride=2, project=True),
+        _res_block(32 * m),
+        _res_block(64 * m, stride=2, project=True),
+        _res_block(64 * m),
+        GlobalAvgPool(), Flatten(),
+        FC(20),
+    ])
+
+
+def mobilenetl(width_mult: int = 1) -> Model:
+    """MobileNet-lite: stem conv + 6 depthwise-separable blocks."""
+    m = width_mult
+    ops: list = [Conv(16 * m, stride=2), Affine(), ReLU()]
+    for cout, stride in [(16 * m, 1), (32 * m, 2), (32 * m, 1), (64 * m, 2), (64 * m, 1), (64 * m, 1)]:
+        ops.extend(_sep_block(cout, stride))
+    ops.extend([GlobalAvgPool(), Flatten(), FC(20)])
+    return build("mobilenetl", (24, 24, 3), 20, ops)
+
+
+ZOO: dict[str, Callable[..., Model]] = {
+    "mlp": mlp,
+    "simplenet5": simplenet5,
+    "resnet20l": resnet20l,
+    "vgg11l": vgg11l,
+    "svhn8": svhn8,
+    "alexnetl": alexnetl,
+    "resnet18l": resnet18l,
+    "mobilenetl": mobilenetl,
+}
+
+TABLE1_MODELS = ["alexnetl", "resnet18l", "mobilenetl"]
+TABLE2_MODELS = ["simplenet5", "resnet20l", "vgg11l", "svhn8"]
+
+
+def get_model(name: str, width_mult: int = 1) -> Model:
+    return ZOO[name](width_mult=width_mult)

@@ -1,0 +1,43 @@
+"""SGD with momentum — the paper's training backbone, in flat-list form.
+
+The AOT interchange keeps state as a flat list of arrays (weights then
+velocities) so the rust coordinator can hold it device-resident and feed it
+positionally; see DESIGN.md §5.
+
+Gradients are clipped by global L2 norm before the momentum update: the
+residual/affine-only-normalization models (resnet*l) can produce exploding
+early gradients that a single step turns into NaNs — clipping makes every
+(model, lr) cell of Tables 1/2 train out of the box, the same role BN +
+warmup play in the paper's Distiller setup.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+GRAD_CLIP_NORM = 5.0
+
+
+def clip_by_global_norm(grads, max_norm=GRAD_CLIP_NORM):
+    """Scale the gradient list so its global L2 norm is <= max_norm."""
+    total = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / total)
+    return [g * scale for g in grads]
+
+
+def sgd_momentum(params, vels, grads, lr, momentum, clip=True):
+    """v' = mu*v + clip(g) ; w' = w - lr*v'  (returns (params', vels'))."""
+    if clip:
+        grads = clip_by_global_norm(grads)
+    new_vels = [momentum * v + g for v, g in zip(vels, grads)]
+    new_params = [w - lr * v for w, v in zip(params, new_vels)]
+    return new_params, new_vels
+
+
+def clip_beta(beta: jnp.ndarray, lo: float = 1.0, hi: float = 8.0) -> jnp.ndarray:
+    """Keep the continuous bitwidth parameter in its meaningful range.
+
+    b = ceil(beta) must land in [2, 8] (paper Fig. 5 reports 2..8-bit
+    assignments), so beta lives in (1, 8].
+    """
+    return jnp.clip(beta, lo + 1e-3, hi)

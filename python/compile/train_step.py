@@ -1,0 +1,218 @@
+"""Fused train/eval step builders — the programs that get AOT-lowered.
+
+Every program takes/returns a *flat positional* signature (manifest-described)
+so the rust coordinator can keep the whole train state device-resident and
+re-feed outputs as next-step inputs without host round-trips:
+
+  train_fp32  : [w*P, v*P, x, y, lr, mom]                        -> [w'*P, v'*P, loss, acc]
+  train_dorefa: [w*P, v*P, x, y, lr, mom, kw(Q,), ka]            -> [w'*P, v'*P, loss, acc]
+  train_wrpn  : same as dorefa (on the width-multiplied model)
+  train_waveq : [w*P, v*P, beta(Q,), vbeta(Q,), x, y, lr, mom,
+                 lr_beta, ka, lambda_w, lambda_beta, beta_train] -> [w'*P, v'*P, beta', vbeta',
+                                                                     loss, acc, ce, reg_w]
+  eval_fp32   : [w*P, x, y]                                      -> [loss, acc]
+  eval_quant  : [w*P, x, y, kw(Q,), ka]                          -> [loss, acc]   (dorefa)
+  eval_wrpn   : [w*P, x, y, kw(Q,), ka]                          -> [loss, acc]   (wrpn)
+
+Notes tying back to the paper:
+  * 'waveq' quantizes the forward pass with the *continuous* levels
+    kw_i = 2**beta_i - 1 derived from the live beta vector, so the same HLO
+    serves preset mode (beta frozen, beta_train=0) and learned mode
+    (beta_train=1) — Eq. 2.2's joint optimization.
+  * beta's gradient comes only from the sinusoidal regularizer + lambda_beta
+    (the STE quantizer contributes none) — exactly the mechanism of §2.2.
+  * beta is clipped to (1, 8] after the update (b = ceil(beta) in [2, 8]).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import QuantCtx
+from .losses import accuracy, cross_entropy, waveq_penalty
+from .models import Model
+from .optim import clip_beta, sgd_momentum
+
+SCALAR = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def _vec(n):
+    return jax.ShapeDtypeStruct((n,), jnp.float32)
+
+
+def _param_specs(model: Model):
+    return [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.specs]
+
+
+def _batch_specs(model: Model, batch: int):
+    h, w, c = model.input_shape
+    return (
+        jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32),
+        jax.ShapeDtypeStruct((batch, model.num_classes), jnp.float32),
+    )
+
+
+def _qweights(model: Model, params):
+    return [params[i] for i in model.qlayer_param_indices]
+
+
+class Program:
+    """A lowered-to-be program: fn + arg specs + I/O names for the manifest."""
+
+    def __init__(self, name, fn, arg_specs, in_names, out_names):
+        self.name = name
+        self.fn = fn
+        self.arg_specs = arg_specs
+        self.in_names = in_names
+        self.out_names = out_names
+
+
+def _state_names(model: Model, prefix: str) -> list[str]:
+    return [f"{prefix}:{s.name}" for s in model.specs]
+
+
+def make_train_fp32(model: Model, batch: int) -> Program:
+    P = model.num_params
+
+    def step(*args):
+        params, vels = list(args[:P]), list(args[P : 2 * P])
+        x, y, lr, mom = args[2 * P : 2 * P + 4]
+
+        def loss_fn(ps):
+            logits = model.apply(ps, x, QuantCtx())
+            return cross_entropy(logits, y), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        acc = accuracy(logits, y)
+        new_p, new_v = sgd_momentum(params, vels, grads, lr, mom)
+        return tuple(new_p) + tuple(new_v) + (loss, acc)
+
+    x, y = _batch_specs(model, batch)
+    specs = _param_specs(model) * 2 + [x, y, SCALAR, SCALAR]
+    in_names = _state_names(model, "w") + _state_names(model, "v") + ["x", "y", "lr", "mom"]
+    out_names = _state_names(model, "w") + _state_names(model, "v") + ["loss", "acc"]
+    return Program(f"train_fp32_{model.name}", step, specs, in_names, out_names)
+
+
+def make_train_quant(model: Model, batch: int, quantizer: str) -> Program:
+    """Plain quantized training (DoReFa or WRPN): preset kw vector input."""
+    P, Q = model.num_params, model.num_qlayers
+
+    def step(*args):
+        params, vels = list(args[:P]), list(args[P : 2 * P])
+        x, y, lr, mom, kw, ka = args[2 * P : 2 * P + 6]
+
+        def loss_fn(ps):
+            logits = model.apply(ps, x, QuantCtx(kw=kw, ka=ka, quantizer=quantizer))
+            return cross_entropy(logits, y), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        acc = accuracy(logits, y)
+        new_p, new_v = sgd_momentum(params, vels, grads, lr, mom)
+        return tuple(new_p) + tuple(new_v) + (loss, acc)
+
+    x, y = _batch_specs(model, batch)
+    specs = _param_specs(model) * 2 + [x, y, SCALAR, SCALAR, _vec(Q), SCALAR]
+    in_names = (_state_names(model, "w") + _state_names(model, "v")
+                + ["x", "y", "lr", "mom", "kw", "ka"])
+    out_names = _state_names(model, "w") + _state_names(model, "v") + ["loss", "acc"]
+    return Program(f"train_{quantizer}_{model.name}", step, specs, in_names, out_names)
+
+
+def make_train_waveq(model: Model, batch: int, norm: int = 1) -> Program:
+    """DoReFa backbone + WaveQ sinusoidal regularizer, learned-or-preset beta."""
+    P, Q = model.num_params, model.num_qlayers
+
+    def step(*args):
+        params, vels = list(args[:P]), list(args[P : 2 * P])
+        (beta, vbeta, x, y, lr, mom, lr_beta, ka,
+         lam_w, lam_beta, beta_train) = args[2 * P : 2 * P + 11]
+
+        def loss_fn(ps, b):
+            kw = 2.0**b - 1.0
+            logits = model.apply(ps, x, QuantCtx(kw=kw, ka=ka, quantizer="dorefa"))
+            ce = cross_entropy(logits, y)
+            reg_w = waveq_penalty(_qweights(model, ps), b, norm=norm)
+            loss = ce + lam_w * reg_w + lam_beta * jnp.sum(b)
+            return loss, (ce, reg_w, logits)
+
+        (loss, (ce, reg_w, logits)), (gp, gb) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(params, beta)
+        acc = accuracy(logits, y)
+        new_p, new_v = sgd_momentum(params, vels, gp, lr, mom)
+        # The coordinator's freeze flag gates the bitwidth update (phase 3).
+        gb = gb * beta_train
+        new_vbeta = mom * vbeta + gb
+        new_beta = clip_beta(beta - lr_beta * new_vbeta)
+        return (tuple(new_p) + tuple(new_v)
+                + (new_beta, new_vbeta, loss, acc, ce, reg_w))
+
+    x, y = _batch_specs(model, batch)
+    specs = (_param_specs(model) * 2
+             + [_vec(Q), _vec(Q), x, y] + [SCALAR] * 7)
+    in_names = (_state_names(model, "w") + _state_names(model, "v")
+                + ["beta", "vbeta", "x", "y", "lr", "mom", "lr_beta", "ka",
+                   "lambda_w", "lambda_beta", "beta_train"])
+    out_names = (_state_names(model, "w") + _state_names(model, "v")
+                 + ["beta", "vbeta", "loss", "acc", "ce", "reg_w"])
+    suffix = "" if norm == 1 else f"_n{norm}"
+    return Program(f"train_waveq_{model.name}{suffix}", step, specs, in_names, out_names)
+
+
+def make_eval(model: Model, batch: int, quantizer: str | None) -> Program:
+    """Quantized or fp32 evaluation: [loss, acc] over one batch."""
+    P, Q = model.num_params, model.num_qlayers
+
+    if quantizer is None:
+        def step(*args):
+            params = list(args[:P])
+            x, y = args[P], args[P + 1]
+            logits = model.apply(params, x, QuantCtx())
+            return cross_entropy(logits, y), accuracy(logits, y)
+
+        x, y = _batch_specs(model, batch)
+        specs = _param_specs(model) + [x, y]
+        in_names = _state_names(model, "w") + ["x", "y"]
+        return Program(f"eval_fp32_{model.name}", step, specs, in_names, ["loss", "acc"])
+
+    def step(*args):
+        params = list(args[:P])
+        x, y, kw, ka = args[P : P + 4]
+        logits = model.apply(params, x, QuantCtx(kw=kw, ka=ka, quantizer=quantizer))
+        return cross_entropy(logits, y), accuracy(logits, y)
+
+    x, y = _batch_specs(model, batch)
+    specs = _param_specs(model) + [x, y, _vec(Q), SCALAR]
+    in_names = _state_names(model, "w") + ["x", "y", "kw", "ka"]
+    tag = "quant" if quantizer == "dorefa" else quantizer
+    return Program(f"eval_{tag}_{model.name}", step, specs, in_names, ["loss", "acc"])
+
+
+def make_reg_profile(n_w: int = 512, n_b: int = 256) -> Program:
+    """R_k(w, beta) + d/dbeta + d^2/dbeta^2 grids for Figures 2 & 3.
+
+    Inputs: w grid (n_w,), beta grid (n_b,). Outputs, for k in {0,1,2}:
+    Rk, dRk/dbeta, d2Rk/dbeta2, each (n_w, n_b). Pointwise (no layer mean) —
+    exactly the curves plotted in the paper's Figure 3.
+    """
+
+    def pointwise(w, b, norm):
+        k = 2.0**b - 1.0
+        s = jnp.sin(jnp.pi * w * k)
+        return s * s / 2.0 ** (norm * b)
+
+    def step(wgrid, bgrid):
+        outs = []
+        for norm in (0, 1, 2):
+            f = lambda w, b: pointwise(w, b, norm)
+            d1 = jax.grad(f, argnums=1)
+            d2 = jax.grad(lambda w, b: d1(w, b), argnums=1)
+            mk = lambda g: jax.vmap(lambda w: jax.vmap(lambda b: g(w, b))(bgrid))(wgrid)
+            outs.extend([mk(f), mk(d1), mk(d2)])
+        return tuple(outs)
+
+    specs = [_vec(n_w), _vec(n_b)]
+    out_names = [f"{q}_n{k}" for k in (0, 1, 2) for q in ("r", "d1", "d2")]
+    return Program("reg_profile", step, specs, ["wgrid", "bgrid"], out_names)

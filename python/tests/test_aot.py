@@ -1,0 +1,109 @@
+"""AOT pipeline: HLO-text emission + manifest integrity.
+
+Guards the python->rust contract: HLO must be text (the 0.5.1-compatible
+interchange), entry signatures in the manifest must match the lowered
+programs, and MAC/param metadata must be complete for the energy model.
+"""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import models as zoo
+from compile import train_step as ts
+from compile.aot import model_json, to_hlo_text
+
+
+class TestHloText:
+    def test_emits_parseable_hlo_text(self):
+        m = zoo.get_model("mlp")
+        prog = ts.make_eval(m, 8, None)
+        lowered = jax.jit(prog.fn).lower(*prog.arg_specs)
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "f32" in text
+        # return_tuple=True => root is a tuple
+        assert "tuple(" in text or ") tuple" in text or "(f32" in text
+
+    def test_waveq_program_contains_sine(self):
+        m = zoo.get_model("mlp")
+        prog = ts.make_train_waveq(m, 8)
+        text = to_hlo_text(jax.jit(prog.fn).lower(*prog.arg_specs))
+        assert "sine" in text  # the sinusoidal regularizer survived lowering
+
+    def test_quant_program_contains_round(self):
+        m = zoo.get_model("mlp")
+        prog = ts.make_train_quant(m, 8, "dorefa")
+        text = to_hlo_text(jax.jit(prog.fn).lower(*prog.arg_specs))
+        assert "round-nearest" in text or "round" in text
+
+
+class TestManifestContract:
+    def test_program_signature_lengths(self):
+        m = zoo.get_model("simplenet5")
+        prog = ts.make_train_waveq(m, 16)
+        assert len(prog.in_names) == len(prog.arg_specs)
+        # inputs: 2P + beta,vbeta,x,y + 7 scalars
+        assert len(prog.in_names) == 2 * m.num_params + 4 + 7
+        # outputs: 2P + beta,vbeta + loss,acc,ce,reg_w
+        assert len(prog.out_names) == 2 * m.num_params + 2 + 4
+
+    def test_model_json_complete(self):
+        m = zoo.get_model("resnet20l")
+        j = model_json(m, 64, 1)
+        assert j["num_qlayers"] == m.num_qlayers
+        assert len(j["params"]) == m.num_params
+        qidxs = sorted(p["qidx"] for p in j["params"] if p["qidx"] is not None)
+        assert qidxs == list(range(m.num_qlayers))
+        for p in j["params"]:
+            if p["kind"] in ("conv", "dwconv", "fc"):
+                assert p["macs"] > 0
+            assert p["count"] == int(
+                __import__("numpy").prod(p["shape"]) if p["shape"] else 1
+            )
+
+    def test_state_name_prefixes(self):
+        m = zoo.get_model("mlp")
+        prog = ts.make_train_fp32(m, 8)
+        ws = [n for n in prog.in_names if n.startswith("w:")]
+        vs = [n for n in prog.in_names if n.startswith("v:")]
+        assert len(ws) == len(vs) == m.num_params
+        # outputs echo the same state names so rust can re-feed positionally
+        assert prog.out_names[: m.num_params] == ws
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+class TestBuiltArtifacts:
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        with open(path) as f:
+            return json.load(f), os.path.dirname(path)
+
+    def test_every_program_file_exists_and_is_text(self):
+        man, root = self.manifest()
+        for name, p in man["programs"].items():
+            fp = os.path.join(root, p["file"])
+            assert os.path.exists(fp), f"missing artifact for {name}"
+            head = open(fp, "rb").read(200)
+            assert b"HloModule" in head, f"{name} is not HLO text"
+
+    def test_every_program_model_exists(self):
+        man, _ = self.manifest()
+        for name, p in man["programs"].items():
+            if p["model"] is not None:
+                assert p["model"] in man["models"], name
+
+    def test_kw_inputs_match_model_qlayers(self):
+        man, _ = self.manifest()
+        for name, p in man["programs"].items():
+            if p["model"] is None:
+                continue
+            model = man["models"][p["model"]]
+            for a in p["inputs"]:
+                if a["name"] in ("kw", "beta", "vbeta"):
+                    assert a["shape"] == [model["num_qlayers"]], (name, a)

@@ -1,0 +1,236 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+This is the CORE correctness signal of the compile path: the kernels lower
+(interpret=True) into the AOT HLO that the rust runtime executes, so kernel
+== oracle here implies the served numerics match the paper's definitions.
+
+Hypothesis sweeps shapes / bitwidths / scales; fixed seeds keep CI stable.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (dorefa_act, dorefa_weight, max_abs_tanh,
+                             quant_matmul, waveq_reg, wrpn_weight)
+from compile.kernels import ref
+from compile.kernels.waveq_reg import make_waveq_reg
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def rnd(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype("float32") * scale)
+
+
+# ---------------------------------------------------------------------------
+# waveq_reg
+# ---------------------------------------------------------------------------
+
+class TestWaveqReg:
+    @pytest.mark.parametrize("shape", [(7,), (64,), (33, 5), (8, 8, 3, 4), (1025,)])
+    @pytest.mark.parametrize("beta", [1.5, 3.0, 4.7, 8.0])
+    def test_value_matches_oracle(self, shape, beta):
+        w = rnd(shape, seed=hash((shape, beta)) % 2**31)
+        got = waveq_reg(w, beta)
+        want = ref.waveq_reg(w, beta)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("norm", [0, 1, 2])
+    def test_all_normalization_variants(self, norm):
+        w = rnd((129, 3), seed=norm)
+        beta = jnp.float32(3.3)
+        got = waveq_reg(w, beta, norm=norm)
+        want = ref.waveq_reg(w, beta, norm=norm)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_zero_on_grid(self):
+        # Weights exactly on the sin^2 minima: R must vanish.
+        beta = 3.0
+        k = 2.0**beta - 1.0
+        w = jnp.asarray([i / k for i in range(-int(k), int(k) + 1)], jnp.float32)
+        assert float(waveq_reg(w, beta)) < 1e-10
+
+    def test_maximal_off_grid(self):
+        beta = 3.0
+        k = 2.0**beta - 1.0
+        w = jnp.asarray([0.5 / k], jnp.float32)  # midpoint between levels
+        r = float(waveq_reg(w, beta)) * 2.0**beta
+        np.testing.assert_allclose(r, 1.0, rtol=1e-5)
+
+    @pytest.mark.parametrize("beta", [2.0, 3.5, 6.0])
+    def test_grad_w_matches_analytic_and_autodiff(self, beta):
+        w = rnd((300,), seed=3)
+        b = jnp.float32(beta)
+        gw = jax.grad(lambda w: waveq_reg(w, b))(w)
+        np.testing.assert_allclose(gw, ref.waveq_reg_grad_w(w, b), rtol=1e-3, atol=1e-5)
+        gw_auto = jax.grad(lambda w: ref.waveq_reg(w, b))(w)
+        np.testing.assert_allclose(gw, gw_auto, rtol=1e-3, atol=1e-5)
+
+    @pytest.mark.parametrize("norm", [0, 1, 2])
+    def test_grad_beta_matches_autodiff(self, norm):
+        w = rnd((257,), seed=norm + 10, scale=0.5)
+        f_kernel = make_waveq_reg(norm)
+        for beta in [1.7, 3.0, 4.2]:
+            b = jnp.float32(beta)
+            gb = jax.grad(lambda b: f_kernel(w, b))(b)
+            gb_auto = jax.grad(lambda b: ref.waveq_reg(w, b, norm=norm))(b)
+            np.testing.assert_allclose(gb, gb_auto, rtol=1e-3, atol=1e-5)
+
+    @given(
+        n=st.integers(1, 3000),
+        beta=st.floats(1.1, 8.0),
+        scale=st.floats(0.01, 3.0),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_hypothesis_sweep(self, n, beta, scale, seed):
+        w = rnd((n,), seed=seed, scale=scale)
+        got = waveq_reg(w, beta)
+        want = ref.waveq_reg(w, jnp.float32(beta))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+    def test_under_jit(self):
+        w = rnd((100,))
+        f = jax.jit(lambda w, b: waveq_reg(w, b))
+        np.testing.assert_allclose(f(w, 3.0), ref.waveq_reg(w, 3.0), rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# dorefa
+# ---------------------------------------------------------------------------
+
+class TestDorefa:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 5, 8])
+    @pytest.mark.parametrize("shape", [(11,), (64, 64), (3, 3, 8, 16)])
+    def test_weight_matches_oracle(self, bits, shape):
+        w = rnd(shape, seed=bits)
+        k = float(2**bits - 1)
+        np.testing.assert_allclose(
+            dorefa_weight(w, k), ref.dorefa_weight(w, k), rtol=RTOL, atol=ATOL
+        )
+
+    def test_weight_range_and_levels(self, bits=3):
+        w = rnd((1000,), seed=1, scale=2.0)
+        k = float(2**bits - 1)
+        m = float(max_abs_tanh(w))
+        q = np.asarray(dorefa_weight(w, k))
+        assert q.min() >= -m - 1e-6 and q.max() <= m + 1e-6
+        # Every output must be on the grid m * (2i - k)/k.
+        lev = np.round((q / m + 1.0) * k / 2.0)
+        np.testing.assert_allclose(q, m * (lev * 2.0 / k - 1.0), atol=1e-5)
+
+    def test_weight_ste_gradient(self):
+        w = rnd((200,), seed=2)
+        k = 7.0
+        g = jax.grad(lambda w: jnp.sum(dorefa_weight(w, k) * 3.0))(w)
+        want = 3.0 * (1.0 - jnp.tanh(w) ** 2)
+        np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_act_matches_oracle(self, bits):
+        x = rnd((77, 13), seed=bits, scale=1.5)
+        k = float(2**bits - 1)
+        np.testing.assert_allclose(dorefa_act(x, k), ref.dorefa_act(x, k), rtol=RTOL, atol=ATOL)
+
+    def test_act_ste_masks_out_of_range(self):
+        x = jnp.asarray([-0.5, 0.25, 0.75, 1.5], jnp.float32)
+        g = jax.grad(lambda x: jnp.sum(dorefa_act(x, 15.0)))(x)
+        np.testing.assert_allclose(g, [0.0, 1.0, 1.0, 0.0], atol=1e-6)
+
+    @given(
+        n=st.integers(1, 2000),
+        bits=st.integers(2, 8),
+        scale=st.floats(0.05, 4.0),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_sweep(self, n, bits, scale, seed):
+        w = rnd((n,), seed=seed, scale=scale)
+        k = float(2**bits - 1)
+        np.testing.assert_allclose(
+            dorefa_weight(w, k), ref.dorefa_weight(w, k), rtol=1e-3, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# wrpn
+# ---------------------------------------------------------------------------
+
+class TestWrpn:
+    @pytest.mark.parametrize("bits", [2, 3, 5])
+    def test_matches_oracle(self, bits):
+        w = rnd((501,), seed=bits, scale=1.5)
+        k = float(2**bits - 1)
+        np.testing.assert_allclose(wrpn_weight(w, k), ref.wrpn_weight(w, k), rtol=RTOL, atol=ATOL)
+
+    def test_extremes_map_to_scale(self):
+        w = jnp.asarray([-5.0, 5.0, 0.1], jnp.float32)
+        q = np.asarray(wrpn_weight(w, 7.0))
+        np.testing.assert_allclose(q[:2], [-5.0, 5.0], atol=1e-5)  # c = max|W| = 5
+
+    def test_outputs_on_scaled_grid(self):
+        w = rnd((400,), seed=9)
+        k = 7.0
+        m = float(np.max(np.abs(np.asarray(w))))
+        q = np.asarray(wrpn_weight(w, k))
+        j = np.round((q / m + 1.0) * k / 2.0)
+        np.testing.assert_allclose(q, m * (2.0 * j / k - 1.0), atol=1e-5)
+
+    def test_ste_gradient_is_identity_within_scale(self):
+        w = jnp.asarray([-0.9, -0.5, 0.5, 1.0], jnp.float32)
+        g = jax.grad(lambda w: jnp.sum(wrpn_weight(w, 7.0)))(w)
+        np.testing.assert_allclose(g, [1.0, 1.0, 1.0, 1.0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n", [(4, 8, 4), (32, 64, 16), (128, 128, 128), (65, 200, 33), (1, 7, 1)]
+    )
+    def test_matches_oracle(self, m, k, n):
+        x = rnd((m, k), seed=m * n)
+        w = rnd((k, n), seed=m + n)
+        kq = 15.0
+        mm = max_abs_tanh(w)
+        got = quant_matmul(x, w, kq)
+        want = ref.quant_matmul(x, w, kq, mm)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_gradients_match_manual_ste(self):
+        x = rnd((16, 32), seed=5)
+        w = rnd((32, 8), seed=6)
+        kq = 7.0
+
+        def loss(x, w):
+            return jnp.sum(quant_matmul(x, w, kq) ** 2)
+
+        gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+        mm = max_abs_tanh(w)
+        wq = ref.dorefa_weight(w, kq, mm)
+        g = 2.0 * (x @ wq)
+        np.testing.assert_allclose(gx, g @ wq.T, rtol=1e-3, atol=1e-3)
+        want_gw = (x.T @ g) * (1.0 - jnp.tanh(w) ** 2)
+        np.testing.assert_allclose(gw, want_gw, rtol=1e-3, atol=1e-3)
+
+    @given(
+        m=st.integers(1, 80),
+        k=st.integers(1, 150),
+        n=st.integers(1, 80),
+        bits=st.integers(2, 8),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_shapes(self, m, k, n, bits, seed):
+        x = rnd((m, k), seed=seed)
+        w = rnd((k, n), seed=seed + 1)
+        kq = float(2**bits - 1)
+        got = quant_matmul(x, w, kq)
+        want = ref.quant_matmul(x, w, kq, max_abs_tanh(w))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,97 @@
+"""L2 model zoo: shape correctness, quantization-slot policy, MAC accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as zoo
+from compile.layers import QuantCtx
+
+ALL = list(zoo.ZOO.keys())
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_shapes(name):
+    m = zoo.get_model(name)
+    params = m.init(0)
+    h, w, c = m.input_shape
+    x = jnp.zeros((4, h, w, c), jnp.float32)
+    logits = m.apply(params, x, QuantCtx())
+    assert logits.shape == (4, m.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_quantized_forward_shapes(name):
+    m = zoo.get_model(name)
+    params = m.init(1)
+    h, w, c = m.input_shape
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, h, w, c)).astype("float32"))
+    kw = jnp.full((m.num_qlayers,), 7.0, jnp.float32)
+    ka = jnp.float32(15.0)
+    logits = m.apply(params, x, QuantCtx(kw=kw, ka=ka, quantizer="dorefa"))
+    assert logits.shape == (2, m.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_first_and_last_layers_not_quantized(name):
+    m = zoo.get_model(name)
+    compute = [s for s in m.specs if s.kind in ("conv", "dwconv", "fc")]
+    assert compute[0].qidx is None, "first layer must stay fp32 (paper §4.1)"
+    assert compute[-1].qidx is None, "last layer must stay fp32 (paper §4.1)"
+    # interior layers all quantized, slots contiguous from 0
+    interior = [s.qidx for s in compute[1:-1]]
+    assert all(q is not None for q in interior)
+    assert sorted(interior) == list(range(m.num_qlayers))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_mac_counts_positive_for_compute_layers(name):
+    m = zoo.get_model(name)
+    for s in m.specs:
+        if s.kind in ("conv", "dwconv", "fc"):
+            assert s.macs > 0, f"{s.name} has zero MACs"
+        else:
+            assert s.macs == 0
+
+
+def test_width_multiplier_scales_params():
+    base = zoo.get_model("simplenet5")
+    wide = zoo.get_model("simplenet5", width_mult=2)
+    n_base = sum(int(np.prod(s.shape)) for s in base.specs)
+    n_wide = sum(int(np.prod(s.shape)) for s in wide.specs)
+    assert n_wide > 2.5 * n_base  # conv params scale ~quadratically in width
+
+
+def test_resnet_residual_paths_change_output():
+    m = zoo.get_model("resnet20l")
+    params = m.init(3)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 16, 16, 3)).astype("float32"))
+    y1 = m.apply(params, x, QuantCtx())
+    # Zero a mid-block conv: residual shortcut keeps signal flowing (finite, different)
+    idx = m.qlayer_param_indices[2]
+    params2 = list(params)
+    params2[idx] = jnp.zeros_like(params2[idx])
+    y2 = m.apply(params2, x, QuantCtx())
+    assert bool(jnp.all(jnp.isfinite(y2)))
+    assert not np.allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_grads_flow_to_all_params():
+    m = zoo.get_model("simplenet5")
+    params = m.init(0)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(8, 16, 16, 3)).astype("float32"))
+    y = jax.nn.one_hot(jnp.arange(8) % 10, 10)
+    kw = jnp.full((m.num_qlayers,), 7.0)
+
+    def loss(ps):
+        logits = m.apply(ps, x, QuantCtx(kw=kw, ka=jnp.float32(15.0)))
+        return -jnp.mean(jnp.sum(y * jax.nn.log_softmax(logits), axis=-1))
+
+    grads = jax.grad(loss)(params)
+    for g, s in zip(grads, m.specs):
+        assert bool(jnp.all(jnp.isfinite(g))), f"non-finite grad for {s.name}"
+        if s.kind in ("conv", "fc"):
+            assert float(jnp.max(jnp.abs(g))) > 0, f"zero grad for {s.name}"

@@ -1,0 +1,58 @@
+//! Stripes energy-model bench: throughput of the analytic model itself plus
+//! the §4.2 energy-saving table across homogeneous bitwidths for every
+//! model in the manifest (the E1 experiment's raw data).
+
+use waveq::bench_support::{header, row, BenchRunner};
+use waveq::energy::Stripes;
+use waveq::runtime::Runtime;
+
+fn main() {
+    waveq::util::logging::init();
+    let dir = waveq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_energy: artifacts not built, skipping");
+        return;
+    }
+    let rt = Runtime::open(&dir).unwrap();
+    header("energy (Stripes model)");
+
+    let stripes = Stripes::default();
+    let models: Vec<String> = rt
+        .manifest
+        .models
+        .keys()
+        .filter(|n| !n.ends_with("_w2"))
+        .cloned()
+        .collect();
+
+    // Model-evaluation throughput.
+    let meta = rt.manifest.model(&models[0]).unwrap().clone();
+    let runner = BenchRunner::new(10, 200);
+    let s = runner.bench("stripes evaluate (one model)", || {
+        let _ = stripes.evaluate_homogeneous(&meta, 4, 4);
+    });
+    row(&["stripes_eval", &format!("{:.3?}", s.mean), &format!("{:.0}/s", s.per_sec())]);
+
+    // The energy table (paper §4.2 / Table 1 energy column).
+    println!("\nenergy saving vs 16-bit bit-parallel baseline (homogeneous W/A):");
+    println!("{:<14} {:>8} {:>8} {:>8} {:>8}", "model", "W2/A2", "W3/A3", "W4/A4", "W8/A8");
+    for name in &models {
+        let m = rt.manifest.model(name).unwrap();
+        let save = |b: u32| stripes.saving_vs_baseline(m, &vec![b; m.num_qlayers], b);
+        println!(
+            "{:<14} {:>7.2}x {:>7.2}x {:>7.2}x {:>7.2}x",
+            name,
+            save(2),
+            save(3),
+            save(4),
+            save(8)
+        );
+        row(&[
+            name,
+            &format!("{:.2}", save(2)),
+            &format!("{:.2}", save(3)),
+            &format!("{:.2}", save(4)),
+            &format!("{:.2}", save(8)),
+        ]);
+    }
+}

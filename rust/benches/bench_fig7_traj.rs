@@ -1,0 +1,24 @@
+//! Paper-artifact bench: regenerates fig7 at smoke scale under `cargo bench`
+//! (set WAVEQ_BENCH_SCALE=full for paper scale; `waveq experiment fig7` is
+//! the CLI route). Prints the same rows the paper's fig7 reports.
+
+use waveq::experiments::{self, ExpContext, Scale};
+use waveq::runtime::Runtime;
+
+fn main() {
+    waveq::util::logging::init();
+    let dir = waveq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_fig7_traj: artifacts not built, skipping");
+        return;
+    }
+    let rt = Runtime::open(&dir).unwrap();
+    let scale = match waveq::bench_support::scale() {
+        waveq::bench_support::Scale::Full => Scale::Full,
+        _ => Scale::Smoke,
+    };
+    let t0 = std::time::Instant::now();
+    let ctx = ExpContext::new(&rt, scale, 42);
+    experiments::run("fig7", &ctx).unwrap();
+    println!("\nbench_fig7_traj: regenerated fig7 in {:.1}s", t0.elapsed().as_secs_f64());
+}

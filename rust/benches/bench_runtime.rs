@@ -1,0 +1,101 @@
+//! Runtime microbenches: XLA compile latency, per-step execution latency /
+//! throughput per model family, literal marshalling cost, data pipeline.
+//! The L3 §Perf numbers in EXPERIMENTS.md come from here.
+
+use waveq::bench_support::{header, row, BenchRunner};
+use waveq::config::{Algo, RunConfig};
+use waveq::coordinator::Trainer;
+use waveq::data::{spec, Batcher, Dataset};
+use waveq::runtime::{literal_f32, scalar_f32, to_vec_f32, Runtime};
+
+fn main() {
+    waveq::util::logging::init();
+    let dir = waveq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built, skipping");
+        return;
+    }
+    let rt = Runtime::open(&dir).unwrap();
+    header("runtime");
+
+    // --- literal marshalling ------------------------------------------------
+    let runner = BenchRunner::new(3, 50);
+    let data: Vec<f32> = (0..64 * 16 * 16 * 3).map(|i| i as f32).collect();
+    let s = runner.bench("literal_f32 upload 196KB", || {
+        let _ = literal_f32(&data, &[64, 16, 16, 3]).unwrap();
+    });
+    row(&["literal_upload_196KB", &format!("{:.3?}", s.mean)]);
+    let lit = literal_f32(&data, &[64, 16, 16, 3]).unwrap();
+    let s = runner.bench("literal to_vec download 196KB", || {
+        let _ = to_vec_f32(&lit).unwrap();
+    });
+    row(&["literal_download_196KB", &format!("{:.3?}", s.mean)]);
+
+    // --- data pipeline --------------------------------------------------------
+    let ds = Dataset::generate(spec("cifar-lite"), 4096, 1, 0);
+    let mut batcher = Batcher::new(ds, 64, 1);
+    let s = runner.bench("batcher next_batch (64x16x16x3)", || {
+        let _ = batcher.next_batch();
+    });
+    row(&["batcher_64", &format!("{:.3?}", s.mean), &format!("{:.0}/s", s.per_sec())]);
+    let s = runner.bench("dataset generate 1024 cifar-lite", || {
+        let _ = Dataset::generate(spec("cifar-lite"), 1024, 2, 0);
+    });
+    row(&["datagen_1024", &format!("{:.3?}", s.mean)]);
+
+    // --- per-program step latency ------------------------------------------
+    for prog in ["train_fp32_mlp", "train_waveq_mlp", "train_fp32_simplenet5", "train_waveq_simplenet5"] {
+        if rt.manifest.program(prog).is_err() {
+            continue;
+        }
+        // warm compile outside the timing loop; report compile separately
+        let t0 = std::time::Instant::now();
+        rt.warmup(&[prog]).unwrap();
+        let compile = t0.elapsed();
+        let sig = rt.sig(prog).unwrap().clone();
+        let args: Vec<xla::Literal> = sig
+            .inputs
+            .iter()
+            .map(|a| {
+                if a.shape.is_empty() {
+                    scalar_f32(match a.name.as_str() {
+                        "lr" => 0.01,
+                        "mom" => 0.9,
+                        _ => 0.5,
+                    })
+                } else {
+                    let n = a.elem_count();
+                    let v: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.1).sin() * 0.1).collect();
+                    let v = if a.name == "beta" { vec![4.0; n] } else { v };
+                    literal_f32(&v, &a.shape).unwrap()
+                }
+            })
+            .collect();
+        let s = BenchRunner::new(3, 15).bench(&format!("{prog} step"), || {
+            let _ = rt.execute(prog, &args).unwrap();
+        });
+        row(&[
+            prog,
+            &format!("compile {:.2?}", compile),
+            &format!("step {:.3?}", s.mean),
+            &format!("{:.1} steps/s", s.per_sec()),
+        ]);
+    }
+
+    // --- end-to-end short training throughput --------------------------------
+    let mut cfg = RunConfig {
+        model: "mlp".into(),
+        algo: Algo::WaveqLearned,
+        steps: 50,
+        train_examples: 1024,
+        test_examples: 256,
+        ..Default::default()
+    };
+    cfg.schedule.total_steps = cfg.steps;
+    let out = Trainer::new(&rt, cfg).run().unwrap();
+    row(&[
+        "e2e_mlp_waveq_50steps",
+        &format!("{:.1} steps/s", 50.0 / out.train_secs),
+        &format!("test_acc {:.3}", out.test_acc),
+    ]);
+}

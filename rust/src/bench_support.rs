@@ -1,0 +1,51 @@
+//! Bench harness entry points shared by the `harness = false` bench targets
+//! (criterion is not resolvable offline; `util::timer::BenchRunner` provides
+//! warmup/iters/percentiles).
+//!
+//! Conventions: every bench binary prints rows prefixed with `BENCH` so
+//! `cargo bench` output is grep-able, and honours `WAVEQ_BENCH_SCALE`
+//! (smoke|full) so CI-scale runs stay fast while `waveq experiment <id>`
+//! regenerates paper-scale numbers.
+
+pub use crate::util::timer::{BenchRunner, BenchStats};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Full,
+}
+
+pub fn scale() -> Scale {
+    match std::env::var("WAVEQ_BENCH_SCALE").as_deref() {
+        Ok("full") => Scale::Full,
+        _ => Scale::Smoke,
+    }
+}
+
+/// Steps for a training-driven bench at the current scale.
+pub fn steps(smoke: usize, full: usize) -> usize {
+    match scale() {
+        Scale::Smoke => smoke,
+        Scale::Full => full,
+    }
+}
+
+pub fn header(name: &str) {
+    println!("\n=== bench: {name} (scale={:?}) ===", scale());
+}
+
+pub fn row(cols: &[&str]) {
+    println!("BENCH {}", cols.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scale_is_smoke() {
+        std::env::remove_var("WAVEQ_BENCH_SCALE");
+        assert_eq!(scale(), Scale::Smoke);
+        assert_eq!(steps(5, 500), 5);
+    }
+}

@@ -1,0 +1,347 @@
+//! Experiment/run configuration: JSON file + CLI overrides.
+//!
+//! One `RunConfig` fully determines a training run (model, algorithm,
+//! dataset sizes, optimizer, schedule, seeds), so every experiment driver
+//! and example goes through the same launcher path — the "real config
+//! system" deliverable.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::schedule::ScheduleCfg;
+use crate::util::argparse::Args;
+use crate::util::json::Json;
+
+/// Which training algorithm (i.e. which AOT program family) to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Fp32,
+    /// Plain DoReFa at a preset homogeneous bitwidth.
+    Dorefa,
+    /// WRPN (on the width-multiplied model) at a preset bitwidth.
+    Wrpn,
+    /// DoReFa + WaveQ with beta fixed at a preset bitwidth (lambda_beta = 0).
+    WaveqPreset,
+    /// DoReFa + WaveQ with learned per-layer beta (the headline mode).
+    WaveqLearned,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s {
+            "fp32" => Algo::Fp32,
+            "dorefa" => Algo::Dorefa,
+            "wrpn" => Algo::Wrpn,
+            "waveq-preset" | "waveq_preset" => Algo::WaveqPreset,
+            "waveq" | "waveq-learned" | "waveq_learned" => Algo::WaveqLearned,
+            other => return Err(anyhow!("unknown algo '{other}'")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Fp32 => "fp32",
+            Algo::Dorefa => "dorefa",
+            Algo::Wrpn => "wrpn",
+            Algo::WaveqPreset => "waveq-preset",
+            Algo::WaveqLearned => "waveq-learned",
+        }
+    }
+
+    /// AOT program name for a given base model.
+    pub fn train_program(&self, model: &str) -> String {
+        match self {
+            Algo::Fp32 => format!("train_fp32_{model}"),
+            Algo::Dorefa => format!("train_dorefa_{model}"),
+            Algo::Wrpn => format!("train_wrpn_{model}_w2"),
+            Algo::WaveqPreset | Algo::WaveqLearned => format!("train_waveq_{model}"),
+        }
+    }
+
+    pub fn eval_program(&self, model: &str) -> String {
+        match self {
+            Algo::Fp32 => format!("eval_fp32_{model}"),
+            Algo::Wrpn => format!("eval_wrpn_{model}_w2"),
+            _ => format!("eval_quant_{model}"),
+        }
+    }
+
+    /// Model key in the manifest (WRPN uses the widened variant).
+    pub fn model_key(&self, model: &str) -> String {
+        match self {
+            Algo::Wrpn => format!("{model}_w2"),
+            _ => model.to_string(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub algo: Algo,
+    /// Preset weight bitwidth (Dorefa/Wrpn/WaveqPreset; init value for learned).
+    pub weight_bits: u32,
+    /// Activation bitwidth (32 => effectively fp32 activations).
+    pub act_bits: u32,
+    pub steps: usize,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub lr_beta: f32,
+    pub seed: u64,
+    pub schedule: ScheduleCfg,
+    /// Evaluate every N steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Initial beta for learned mode.
+    pub beta_init: f32,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "simplenet5".into(),
+            algo: Algo::WaveqLearned,
+            weight_bits: 4,
+            act_bits: 32,
+            steps: 600,
+            train_examples: 4096,
+            test_examples: 1024,
+            lr: 0.08,
+            momentum: 0.9,
+            lr_beta: 0.05,
+            seed: 42,
+            schedule: ScheduleCfg::default(),
+            eval_every: 0,
+            beta_init: 6.0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// k = 2^b - 1, the quantizer level count fed to the AOT programs.
+    pub fn kw(&self) -> f32 {
+        levels(self.weight_bits)
+    }
+
+    pub fn ka(&self) -> f32 {
+        levels(self.act_bits)
+    }
+
+    /// Load from a JSON file then apply CLI overrides.
+    pub fn load(path: Option<&str>, args: &Args) -> Result<RunConfig> {
+        let mut cfg = match path {
+            Some(p) => Self::from_json_file(Path::new(p))?,
+            None => RunConfig::default(),
+        };
+        cfg.apply_args(args)?;
+        cfg.schedule.total_steps = cfg.steps;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("config parse: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        if let Some(v) = j.get("model").and_then(|x| x.as_str()) {
+            c.model = v.to_string();
+        }
+        if let Some(v) = j.get("algo").and_then(|x| x.as_str()) {
+            c.algo = Algo::parse(v)?;
+        }
+        if let Some(v) = j.get("weight_bits").and_then(|x| x.as_usize()) {
+            c.weight_bits = v as u32;
+        }
+        if let Some(v) = j.get("act_bits").and_then(|x| x.as_usize()) {
+            c.act_bits = v as u32;
+        }
+        if let Some(v) = j.get("steps").and_then(|x| x.as_usize()) {
+            c.steps = v;
+        }
+        if let Some(v) = j.get("train_examples").and_then(|x| x.as_usize()) {
+            c.train_examples = v;
+        }
+        if let Some(v) = j.get("test_examples").and_then(|x| x.as_usize()) {
+            c.test_examples = v;
+        }
+        if let Some(v) = j.get("lr").and_then(|x| x.as_f64()) {
+            c.lr = v as f32;
+        }
+        if let Some(v) = j.get("momentum").and_then(|x| x.as_f64()) {
+            c.momentum = v as f32;
+        }
+        if let Some(v) = j.get("lr_beta").and_then(|x| x.as_f64()) {
+            c.lr_beta = v as f32;
+        }
+        if let Some(v) = j.get("seed").and_then(|x| x.as_f64()) {
+            c.seed = v as u64;
+        }
+        if let Some(v) = j.get("eval_every").and_then(|x| x.as_usize()) {
+            c.eval_every = v;
+        }
+        if let Some(v) = j.get("beta_init").and_then(|x| x.as_f64()) {
+            c.beta_init = v as f32;
+        }
+        if let Some(s) = j.get("schedule") {
+            if let Some(v) = s.get("explore_frac").and_then(|x| x.as_f64()) {
+                c.schedule.explore_frac = v;
+            }
+            if let Some(v) = s.get("engage_frac").and_then(|x| x.as_f64()) {
+                c.schedule.engage_frac = v;
+            }
+            if let Some(v) = s.get("lambda_w_max").and_then(|x| x.as_f64()) {
+                c.schedule.lambda_w_max = v as f32;
+            }
+            if let Some(v) = s.get("lambda_beta_max").and_then(|x| x.as_f64()) {
+                c.schedule.lambda_beta_max = v as f32;
+            }
+            if let Some(v) = s.get("gamma").and_then(|x| x.as_f64()) {
+                c.schedule.gamma = v;
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("model") {
+            self.model = v.to_string();
+        }
+        if let Some(v) = args.get("algo") {
+            self.algo = Algo::parse(v)?;
+        }
+        self.weight_bits = args.get_usize("bits", self.weight_bits as usize)? as u32;
+        self.act_bits = args.get_usize("act-bits", self.act_bits as usize)? as u32;
+        self.steps = args.get_usize("steps", self.steps)?;
+        self.train_examples = args.get_usize("train-examples", self.train_examples)?;
+        self.test_examples = args.get_usize("test-examples", self.test_examples)?;
+        self.lr = args.get_f32("lr", self.lr)?;
+        self.momentum = args.get_f32("momentum", self.momentum)?;
+        self.lr_beta = args.get_f32("lr-beta", self.lr_beta)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.eval_every = args.get_usize("eval-every", self.eval_every)?;
+        self.beta_init = args.get_f32("beta-init", self.beta_init)?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(2..=32).contains(&self.weight_bits) {
+            return Err(anyhow!("weight_bits must be in [2, 32]"));
+        }
+        if !(2..=32).contains(&self.act_bits) {
+            return Err(anyhow!("act_bits must be in [2, 32]"));
+        }
+        if self.steps == 0 {
+            return Err(anyhow!("steps must be > 0"));
+        }
+        if self.train_examples == 0 || self.test_examples == 0 {
+            return Err(anyhow!("dataset sizes must be > 0"));
+        }
+        if !(self.lr > 0.0 && self.lr.is_finite()) {
+            return Err(anyhow!("lr must be positive"));
+        }
+        Ok(())
+    }
+}
+
+/// Per-model base learning rate (momentum 0.9). The deep residual /
+/// depthwise stacks run close to their stability edge with affine-only
+/// normalization, so they take a lower lr than the shallow nets; values
+/// were swept on the fp32 baselines (EXPERIMENTS.md §Calibration).
+pub fn model_lr(model: &str) -> f32 {
+    match model {
+        "resnet18l" => 0.02,
+        "mobilenetl" => 0.03,
+        "resnet20l" => 0.05,
+        _ => 0.06,
+    }
+}
+
+/// k = 2^b - 1 with the >=24-bit case mapped to "effectively fp32"
+/// (f32 mantissa limit; round(x*k)/k becomes identity-within-eps).
+pub fn levels(bits: u32) -> f32 {
+    if bits >= 24 {
+        16_777_215.0 // 2^24 - 1
+    } else {
+        (2u64.pow(bits) - 1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::argparse::ArgSpec;
+
+    #[test]
+    fn levels_mapping() {
+        assert_eq!(levels(3), 7.0);
+        assert_eq!(levels(4), 15.0);
+        assert_eq!(levels(32), 16_777_215.0);
+    }
+
+    #[test]
+    fn algo_program_names() {
+        assert_eq!(Algo::Dorefa.train_program("vgg11l"), "train_dorefa_vgg11l");
+        assert_eq!(Algo::Wrpn.train_program("vgg11l"), "train_wrpn_vgg11l_w2");
+        assert_eq!(Algo::WaveqLearned.train_program("mlp"), "train_waveq_mlp");
+        assert_eq!(Algo::Wrpn.model_key("mlp"), "mlp_w2");
+        assert_eq!(Algo::Fp32.eval_program("mlp"), "eval_fp32_mlp");
+    }
+
+    #[test]
+    fn json_round_trip_and_overrides() {
+        let j = Json::parse(
+            r#"{"model": "vgg11l", "algo": "dorefa", "weight_bits": 3,
+                "steps": 50, "lr": 0.01, "schedule": {"lambda_w_max": 2.5}}"#,
+        )
+        .unwrap();
+        let mut cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.model, "vgg11l");
+        assert_eq!(cfg.algo, Algo::Dorefa);
+        assert_eq!(cfg.weight_bits, 3);
+        assert_eq!(cfg.schedule.lambda_w_max, 2.5);
+
+        let spec = ArgSpec { value_flags: &["bits", "model"], switch_flags: &[] };
+        let args = Args::parse(
+            &["x".to_string(), "--bits".into(), "5".into()],
+            &spec,
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.weight_bits, 5);
+        assert_eq!(cfg.model, "vgg11l");
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        let mut c = RunConfig::default();
+        c.weight_bits = 1;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.steps = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn algo_parse_all() {
+        for (s, a) in [
+            ("fp32", Algo::Fp32),
+            ("dorefa", Algo::Dorefa),
+            ("wrpn", Algo::Wrpn),
+            ("waveq-preset", Algo::WaveqPreset),
+            ("waveq", Algo::WaveqLearned),
+        ] {
+            assert_eq!(Algo::parse(s).unwrap(), a);
+        }
+        assert!(Algo::parse("xyz").is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Bitwidth manager: the beta -> (b, alpha) mapping of Eq. 2.4 and the
+//! per-layer assignment bookkeeping used at and after the phase-3 freeze.
+//!
+//!   b_i     = ceil(beta_i), clamped to [2, 8]
+//!   alpha_i = b_i / beta_i            (the jointly-learned scale factor)
+//!   k_i     = 2^{b_i} - 1             (quantizer levels fed to eval programs)
+
+#[derive(Debug, Clone)]
+pub struct BitAssignment {
+    pub bits: Vec<u32>,
+    pub alpha: Vec<f32>,
+}
+
+impl BitAssignment {
+    /// Eq. 2.4 applied to a live beta vector.
+    pub fn from_beta(beta: &[f32]) -> BitAssignment {
+        let bits: Vec<u32> = beta.iter().map(|&b| ceil_bits(b)).collect();
+        let alpha = beta
+            .iter()
+            .zip(&bits)
+            .map(|(&be, &bi)| bi as f32 / be.max(1e-6))
+            .collect();
+        BitAssignment { bits, alpha }
+    }
+
+    pub fn homogeneous(bits: u32, layers: usize) -> BitAssignment {
+        BitAssignment { bits: vec![bits.clamp(2, 8); layers], alpha: vec![1.0; layers] }
+    }
+
+    /// Unweighted mean bitwidth (the paper's "W3.85"-style headline number).
+    pub fn average_bits(&self) -> f64 {
+        if self.bits.is_empty() {
+            return 0.0;
+        }
+        self.bits.iter().map(|&b| b as f64).sum::<f64>() / self.bits.len() as f64
+    }
+
+    /// Quantizer level counts k_i = 2^{b_i} - 1.
+    pub fn kw(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| (2u64.pow(b) - 1) as f32).collect()
+    }
+
+    /// The beta vector that pins the quantizer exactly on this assignment
+    /// (used to snap beta at freeze time so kw becomes integral).
+    pub fn snapped_beta(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| b as f32).collect()
+    }
+
+    /// Copy with one layer's bitwidth decremented (Fig. 5 sensitivity).
+    pub fn decrement_layer(&self, layer: usize) -> BitAssignment {
+        let mut out = self.clone();
+        out.bits[layer] = out.bits[layer].saturating_sub(1).max(2);
+        out
+    }
+}
+
+pub fn ceil_bits(beta: f32) -> u32 {
+    (beta.ceil() as i64).clamp(2, 8) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_and_clamp() {
+        assert_eq!(ceil_bits(3.2), 4);
+        assert_eq!(ceil_bits(4.0), 4);
+        assert_eq!(ceil_bits(0.5), 2);
+        assert_eq!(ceil_bits(11.0), 8);
+    }
+
+    #[test]
+    fn from_beta_eq_2_4() {
+        let a = BitAssignment::from_beta(&[3.2, 4.0, 7.9]);
+        assert_eq!(a.bits, vec![4, 4, 8]);
+        assert!((a.alpha[0] - 4.0 / 3.2).abs() < 1e-6);
+        assert!((a.alpha[1] - 1.0).abs() < 1e-6);
+        // alpha >= 1 always (b = ceil(beta) >= beta)
+        assert!(a.alpha.iter().all(|&x| x >= 1.0));
+    }
+
+    #[test]
+    fn average_and_kw() {
+        let a = BitAssignment { bits: vec![3, 4, 5], alpha: vec![1.0; 3] };
+        assert!((a.average_bits() - 4.0).abs() < 1e-12);
+        assert_eq!(a.kw(), vec![7.0, 15.0, 31.0]);
+        assert_eq!(a.snapped_beta(), vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn decrement_saturates_at_two() {
+        let a = BitAssignment::homogeneous(2, 3);
+        let d = a.decrement_layer(1);
+        assert_eq!(d.bits, vec![2, 2, 2]);
+        let b = BitAssignment::homogeneous(5, 2).decrement_layer(0);
+        assert_eq!(b.bits, vec![4, 5]);
+    }
+}

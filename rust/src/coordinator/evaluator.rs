@@ -1,0 +1,69 @@
+//! Evaluation: run an eval program over the held-out stream, batch by
+//! batch, and average loss/accuracy. Shared by the trainer's mid-training
+//! probes, the Pareto enumerator (which evaluates hundreds of bitwidth
+//! assignments against one trained state), and the Fig. 5 sensitivity scan.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::data::{spec_for_input, Batcher, Dataset};
+use crate::runtime::{literal_f32, scalar_f32, to_scalar_f32, ModelMeta, Runtime};
+
+/// Deterministic held-out batcher for a model (stream 1 never overlaps train).
+pub fn test_batcher(model: &ModelMeta, n_examples: usize, seed: u64) -> Batcher {
+    let dspec = spec_for_input(model.input_shape, model.num_classes);
+    let ds = Dataset::generate(dspec, n_examples, seed, 1);
+    Batcher::new(ds, model.batch, seed)
+}
+
+/// Average (loss, acc) of `params` over all full test batches.
+///
+/// `kw = None` selects the fp32 eval signature; otherwise the per-layer
+/// quantizer levels are fed to the quantized eval program.
+pub fn evaluate(
+    rt: &Runtime,
+    eval_prog: &str,
+    model: &ModelMeta,
+    params: &[Literal],
+    kw: Option<&[f32]>,
+    ka: f32,
+    test: &Batcher,
+) -> Result<(f32, f32)> {
+    let sig = rt.sig(eval_prog)?.clone();
+    let batches = test.sequential_batches();
+    if batches.is_empty() {
+        return Err(anyhow!("test set smaller than one batch"));
+    }
+    let out_loss = sig.output_index("loss")?;
+    let out_acc = sig.output_index("acc")?;
+    let (mut loss_sum, mut acc_sum) = (0f64, 0f64);
+    for b in &batches {
+        // Positional: [w..., x, y, (kw, ka)?]
+        let x = literal_f32(
+            &b.x,
+            &[model.batch, model.input_shape[0], model.input_shape[1], model.input_shape[2]],
+        )?;
+        let y = literal_f32(&b.y, &[model.batch, model.num_classes])?;
+        let extra: Vec<Literal> = match kw {
+            Some(kw) => {
+                if kw.len() != model.num_qlayers {
+                    return Err(anyhow!(
+                        "{eval_prog}: kw has {} entries, model wants {}",
+                        kw.len(),
+                        model.num_qlayers
+                    ));
+                }
+                vec![x, y, literal_f32(kw, &[kw.len()])?, scalar_f32(ka)]
+            }
+            None => vec![x, y],
+        };
+        let mut args: Vec<&Literal> = Vec::with_capacity(params.len() + extra.len());
+        args.extend(params.iter());
+        args.extend(extra.iter());
+        let outs = rt.execute(eval_prog, &args)?;
+        loss_sum += to_scalar_f32(&outs[out_loss])? as f64;
+        acc_sum += to_scalar_f32(&outs[out_acc])? as f64;
+    }
+    let n = batches.len() as f64;
+    Ok(((loss_sum / n) as f32, (acc_sum / n) as f32))
+}

@@ -1,0 +1,141 @@
+//! Metric series recorder: every figure in the paper is a dump of one or
+//! more of these series (loss/acc curves, reg loss, lambda profiles, beta
+//! trajectories, weight snapshots). Output formats: CSV (plotting) and JSON
+//! (EXPERIMENTS.md tooling).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRecorder {
+    /// series name -> (step, value) points.
+    pub series: BTreeMap<String, Vec<(usize, f64)>>,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, step: usize, name: &str, value: f64) {
+        self.series.entry(name.to_string()).or_default().push((step, value));
+    }
+
+    pub fn add_f32(&mut self, step: usize, name: &str, value: f32) {
+        self.add(step, name, value as f64);
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.series.get(name).and_then(|v| v.last()).map(|&(_, v)| v)
+    }
+
+    pub fn get(&self, name: &str) -> &[(usize, f64)] {
+        self.series.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Mean of the final `n` values (smoothed end-of-training metric).
+    pub fn tail_mean(&self, name: &str, n: usize) -> Option<f64> {
+        let s = self.series.get(name)?;
+        if s.is_empty() {
+            return None;
+        }
+        let tail = &s[s.len().saturating_sub(n)..];
+        Some(tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Wide CSV: one row per step, one column per series (empty if absent).
+    pub fn to_csv(&self) -> String {
+        let names: Vec<&String> = self.series.keys().collect();
+        let mut steps: Vec<usize> = self
+            .series
+            .values()
+            .flat_map(|v| v.iter().map(|&(s, _)| s))
+            .collect();
+        steps.sort_unstable();
+        steps.dedup();
+        let mut lookup: BTreeMap<&str, BTreeMap<usize, f64>> = BTreeMap::new();
+        for (name, pts) in &self.series {
+            lookup.insert(name, pts.iter().cloned().collect());
+        }
+        let mut out = String::from("step");
+        for n in &names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        for s in steps {
+            out.push_str(&s.to_string());
+            for n in &names {
+                out.push(',');
+                if let Some(v) = lookup[n.as_str()].get(&s) {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, pts) in &self.series {
+            let arr = pts
+                .iter()
+                .map(|&(s, v)| Json::Arr(vec![Json::Num(s as f64), Json::Num(v)]))
+                .collect();
+            obj.insert(name.clone(), Json::Arr(arr));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv()).map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut m = MetricsRecorder::new();
+        m.add(0, "loss", 2.3);
+        m.add(1, "loss", 1.9);
+        m.add(1, "acc", 0.4);
+        assert_eq!(m.last("loss"), Some(1.9));
+        assert_eq!(m.get("acc").len(), 1);
+        assert!((m.tail_mean("loss", 2).unwrap() - 2.1).abs() < 1e-12);
+        assert_eq!(m.last("nope"), None);
+    }
+
+    #[test]
+    fn csv_alignment() {
+        let mut m = MetricsRecorder::new();
+        m.add(0, "a", 1.0);
+        m.add(2, "a", 3.0);
+        m.add(2, "b", 9.0);
+        let csv = m.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,a,b");
+        assert_eq!(lines[1], "0,1,");
+        assert_eq!(lines[2], "2,3,9");
+    }
+
+    #[test]
+    fn json_emission_parses_back() {
+        let mut m = MetricsRecorder::new();
+        m.add(5, "x", 0.25);
+        let j = m.to_json().to_string();
+        let back = Json::parse(&j).unwrap();
+        let pts = back.get("x").unwrap().as_arr().unwrap();
+        assert_eq!(pts[0].as_arr().unwrap()[0].as_usize().unwrap(), 5);
+    }
+}

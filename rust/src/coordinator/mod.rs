@@ -1,0 +1,22 @@
+//! L3 coordinator: training orchestration on top of the AOT runtime.
+//!
+//! * `trainer`    — the per-run event loop (schedule, freeze, metrics)
+//! * `evaluator`  — batched held-out evaluation (shared with pareto/fig5)
+//! * `state`      — device-interchange train state
+//! * `bitwidth`   — Eq. 2.4 beta -> (b, alpha) management
+//! * `metrics`    — series recorder behind every figure
+//! * `checkpoint` — binary snapshots (fine-tune / from-scratch workflows)
+
+pub mod bitwidth;
+pub mod checkpoint;
+pub mod evaluator;
+pub mod metrics;
+pub mod state;
+pub mod trainer;
+
+pub use bitwidth::{ceil_bits, BitAssignment};
+pub use checkpoint::Checkpoint;
+pub use evaluator::{evaluate, test_batcher};
+pub use metrics::MetricsRecorder;
+pub use state::TrainState;
+pub use trainer::{Snapshot, TrackKind, TrackRequest, TrainOptions, TrainOutcome, Trainer};

@@ -1,0 +1,195 @@
+//! Batching + background prefetch pipeline (std::thread + mpsc; tokio is
+//! not resolvable offline, and the coordinator's loop is synchronous anyway).
+//!
+//! The trainer consumes `(x, y_onehot)` host buffers shaped for the AOT
+//! program; generation (epoch shuffling, one-hot encoding) happens on a
+//! producer thread so data prep overlaps XLA execution — the same overlap
+//! a tf.data/DataLoader pipeline provides.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use super::synth::Dataset;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// (B, H, W, C) flattened.
+    pub x: Vec<f32>,
+    /// (B, n_classes) one-hot flattened.
+    pub y: Vec<f32>,
+    pub epoch: usize,
+}
+
+/// Synchronous batcher: deterministic epoch shuffles over a fixed dataset.
+pub struct Batcher {
+    ds: Dataset,
+    batch: usize,
+    order: Vec<u32>,
+    cursor: usize,
+    pub epoch: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(ds: Dataset, batch: usize, seed: u64) -> Batcher {
+        assert!(batch <= ds.n, "batch {} > dataset {}", batch, ds.n);
+        let mut b = Batcher {
+            order: (0..ds.n as u32).collect(),
+            ds,
+            batch,
+            cursor: 0,
+            epoch: 0,
+            rng: Rng::new(seed).split(0xBA7C),
+        };
+        b.rng.shuffle(&mut b.order);
+        b
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.n / self.batch
+    }
+
+    /// Next batch; reshuffles at epoch boundaries (drop-last semantics).
+    pub fn next_batch(&mut self) -> Batch {
+        if self.cursor + self.batch > self.ds.n {
+            self.cursor = 0;
+            self.epoch += 1;
+            self.rng.shuffle(&mut self.order);
+        }
+        let pix = self.ds.pixels();
+        let ncls = self.ds.spec.n_classes;
+        let mut x = vec![0.0f32; self.batch * pix];
+        let mut y = vec![0.0f32; self.batch * ncls];
+        for bi in 0..self.batch {
+            let idx = self.order[self.cursor + bi] as usize;
+            x[bi * pix..(bi + 1) * pix].copy_from_slice(self.ds.image(idx));
+            y[bi * ncls + self.ds.labels[idx] as usize] = 1.0;
+        }
+        self.cursor += self.batch;
+        Batch { x, y, epoch: self.epoch }
+    }
+
+    /// All full batches of the dataset in index order (evaluation).
+    pub fn sequential_batches(&self) -> Vec<Batch> {
+        let pix = self.ds.pixels();
+        let ncls = self.ds.spec.n_classes;
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start + self.batch <= self.ds.n {
+            let mut x = vec![0.0f32; self.batch * pix];
+            let mut y = vec![0.0f32; self.batch * ncls];
+            for bi in 0..self.batch {
+                let idx = start + bi;
+                x[bi * pix..(bi + 1) * pix].copy_from_slice(self.ds.image(idx));
+                y[bi * ncls + self.ds.labels[idx] as usize] = 1.0;
+            }
+            out.push(Batch { x, y, epoch: 0 });
+            start += self.batch;
+        }
+        out
+    }
+}
+
+/// Background prefetcher: producer thread + bounded channel.
+pub struct Prefetcher {
+    rx: Receiver<Batch>,
+    _handle: JoinHandle<()>,
+}
+
+impl Prefetcher {
+    /// `depth` = number of batches buffered ahead of the consumer.
+    pub fn spawn(mut batcher: Batcher, depth: usize, total_batches: usize) -> Prefetcher {
+        let (tx, rx) = sync_channel(depth);
+        let handle = std::thread::spawn(move || {
+            for _ in 0..total_batches {
+                if tx.send(batcher.next_batch()).is_err() {
+                    return; // consumer dropped early
+                }
+            }
+        });
+        Prefetcher { rx, _handle: handle }
+    }
+
+    pub fn next(&self) -> Option<Batch> {
+        self.rx.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::synth::{spec, Dataset};
+    use super::*;
+
+    fn small_ds() -> Dataset {
+        Dataset::generate(spec("mlp-lite"), 64, 1, 0)
+    }
+
+    #[test]
+    fn batches_have_valid_onehots() {
+        let mut b = Batcher::new(small_ds(), 16, 0);
+        for _ in 0..8 {
+            let batch = b.next_batch();
+            assert_eq!(batch.y.len(), 16 * 10);
+            for r in 0..16 {
+                let row = &batch.y[r * 10..(r + 1) * 10];
+                assert_eq!(row.iter().sum::<f32>(), 1.0);
+                assert!(row.iter().all(|&v| v == 0.0 || v == 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_covers_every_sample_once() {
+        let ds = small_ds();
+        let n = ds.n;
+        let mut b = Batcher::new(ds, 16, 0);
+        let mut seen = vec![0usize; n];
+        for _ in 0..b.batches_per_epoch() {
+            let start = b.cursor;
+            let _ = b.next_batch();
+            for i in start..start + 16 {
+                seen[b.order[i] as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a: Vec<f32> = {
+            let mut b = Batcher::new(small_ds(), 16, 9);
+            b.next_batch().x
+        };
+        let c: Vec<f32> = {
+            let mut b = Batcher::new(small_ds(), 16, 9);
+            b.next_batch().x
+        };
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn prefetcher_delivers_all_batches() {
+        let b = Batcher::new(small_ds(), 16, 0);
+        let pf = Prefetcher::spawn(b, 2, 10);
+        let mut count = 0;
+        while let Some(batch) = pf.next() {
+            assert_eq!(batch.x.len(), 16 * 8 * 8 * 3);
+            count += 1;
+        }
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn sequential_batches_cover_in_order() {
+        let ds = small_ds();
+        let labels = ds.labels.clone();
+        let b = Batcher::new(ds, 16, 0);
+        let batches = b.sequential_batches();
+        assert_eq!(batches.len(), 4);
+        // first batch's one-hots match the first 16 labels
+        for (i, &l) in labels[..16].iter().enumerate() {
+            assert_eq!(batches[0].y[i * 10 + l as usize], 1.0);
+        }
+    }
+}

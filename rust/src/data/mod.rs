@@ -1,0 +1,8 @@
+//! Synthetic data substrate: dataset family (`synth`) + batching/prefetch
+//! pipeline (`batcher`). See DESIGN.md §2 for the dataset substitutions.
+
+pub mod batcher;
+pub mod synth;
+
+pub use batcher::{Batch, Batcher, Prefetcher};
+pub use synth::{spec, spec_for_input, Dataset, DatasetSpec, Generator};

@@ -1,0 +1,107 @@
+//! Figure 2 — the WaveQ regularizer landscape and the schedule profiles:
+//! (a-c) R(w; beta) surfaces/profiles over w for several bitwidths,
+//! (d) profile over beta, (e) lambda_w / lambda_beta schedules (Fig. 9).
+//!
+//! Surfaces come from the AOT `reg_profile` program (the same lowered
+//! closed forms the training loss uses); schedules from `schedule::ScheduleCfg`.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::runtime::{literal_f32, to_vec_f32};
+use crate::schedule::ScheduleCfg;
+
+pub const N_W: usize = 512;
+pub const N_B: usize = 256;
+
+/// Grids matching train_step::make_reg_profile.
+pub fn grids() -> (Vec<f32>, Vec<f32>) {
+    let w: Vec<f32> = (0..N_W).map(|i| -1.25 + 2.5 * i as f32 / (N_W - 1) as f32).collect();
+    let b: Vec<f32> = (0..N_B).map(|i| 1.0 + 7.0 * i as f32 / (N_B - 1) as f32).collect();
+    (w, b)
+}
+
+/// Run reg_profile; returns 9 row-major (N_W, N_B) matrices:
+/// [r_n0, d1_n0, d2_n0, r_n1, d1_n1, d2_n1, r_n2, d1_n2, d2_n2].
+pub fn profiles(ctx: &ExpContext) -> Result<Vec<Vec<f32>>> {
+    let (w, b) = grids();
+    let args = vec![literal_f32(&w, &[N_W])?, literal_f32(&b, &[N_B])?];
+    let outs = ctx.rt.execute("reg_profile", &args)?;
+    outs.iter().map(|o| to_vec_f32(o)).collect()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let (w, b) = grids();
+    let outs = profiles(ctx)?;
+    let r1 = &outs[3]; // the production normalization (norm=1)
+
+    // (a)-(c): R1(w) profiles at the paper's bitwidths (2, 3, ternary-ish, 4, 5).
+    let mut csv = String::from("w,beta2,beta3,beta4,beta5\n");
+    let col_of = |target: f32| -> usize {
+        b.iter()
+            .enumerate()
+            .min_by(|(_, x), (_, y)| {
+                (*x - target).abs().partial_cmp(&(*y - target).abs()).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    let cols = [col_of(2.0), col_of(3.0), col_of(4.0), col_of(5.0)];
+    for (wi, &wv) in w.iter().enumerate() {
+        csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            wv,
+            r1[wi * N_B + cols[0]],
+            r1[wi * N_B + cols[1]],
+            r1[wi * N_B + cols[2]],
+            r1[wi * N_B + cols[3]],
+        ));
+    }
+    ctx.write("fig2", "r1_vs_w.csv", &csv)?;
+
+    // Sanity of the landscape: minima at the quantization levels.
+    let k = 3.0f32; // beta = 2 -> k = 3
+    let bcol = col_of(2.0);
+    let at = |wv: f32| -> f32 {
+        let wi = w
+            .iter()
+            .enumerate()
+            .min_by(|(_, x), (_, y)| ((*x - wv).abs()).partial_cmp(&(*y - wv).abs()).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        r1[wi * N_B + bcol]
+    };
+    println!(
+        "fig2: R1 at grid point 1/k={:.3}: {:.5}; at midpoint 1/(2k): {:.5} (must be larger)",
+        1.0 / k,
+        at(1.0 / k),
+        at(0.5 / k)
+    );
+
+    // (d): profile over beta at a fixed off-grid w.
+    let wi_fixed = w
+        .iter()
+        .enumerate()
+        .min_by(|(_, x), (_, y)| ((*x - 0.37).abs()).partial_cmp(&(*y - 0.37).abs()).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let mut csv = String::from("beta,r1\n");
+    for (bi, &bv) in b.iter().enumerate() {
+        csv.push_str(&format!("{},{}\n", bv, r1[wi_fixed * N_B + bi]));
+    }
+    ctx.write("fig2", "r1_vs_beta.csv", &csv)?;
+
+    // (e): the 3-phase schedule profiles.
+    let cfg = ScheduleCfg { total_steps: 1000, ..Default::default() };
+    let freeze = cfg.engage_end();
+    let mut csv = String::from("step,lambda_w,lambda_beta\n");
+    for s in 0..cfg.total_steps {
+        let frozen = s >= freeze;
+        let lw = cfg.lambda_w_at(s, frozen);
+        let lb = cfg.lambda_beta_at(s, frozen.then_some(freeze));
+        csv.push_str(&format!("{s},{lw},{lb}\n"));
+    }
+    ctx.write("fig2", "lambda_profiles.csv", &csv)?;
+    println!("fig2: wrote landscape + schedule profiles");
+    Ok(())
+}

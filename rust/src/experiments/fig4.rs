@@ -1,0 +1,125 @@
+//! Figure 4 — the quantization design space (compute vs accuracy) for
+//! CIFAR-10 (simplenet5), SVHN (svhn8) and VGG-11 (vgg11l):
+//! enumerate/sample per-layer bitwidth assignments, evaluate each against a
+//! WaveQ-trained state, extract the Pareto frontier, and locate the WaveQ
+//! learned solution relative to it.
+//!
+//! Shape to reproduce: the learned assignment sits at (or within noise of)
+//! the knee of the frontier — minimum average compute that still preserves
+//! accuracy.
+
+use anyhow::Result;
+
+use super::{print_table, ExpContext, Scale};
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::{evaluate, test_batcher, BitAssignment, Trainer};
+use crate::energy::Stripes;
+use crate::pareto::{
+    accuracy_gap_to_frontier, enumerate_assignments, pareto_frontier, sample_assignments,
+    save_csv, DesignPoint,
+};
+use crate::util::rng::Rng;
+
+pub const MODELS: &[&str] = &["simplenet5", "svhn8", "vgg11l"];
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let mut rows = Vec::new();
+    for model in MODELS {
+        let row = run_model(ctx, model)?;
+        rows.push(row);
+    }
+    print_table(
+        "Figure 4 — Pareto analysis of the bitwidth design space",
+        &["model", "points", "frontier", "waveq bits", "avg bits", "waveq acc", "gap to frontier"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn run_model(ctx: &ExpContext, model: &str) -> Result<Vec<String>> {
+    // 1) Train with learned WaveQ to get both a quantization-friendly state
+    //    and the learned assignment to locate in the space.
+    let steps = ctx.steps(120, 500);
+    let mut cfg = RunConfig {
+        model: model.into(),
+        algo: Algo::WaveqLearned,
+        lr: crate::config::model_lr(model),
+        steps,
+        act_bits: 4,
+        train_examples: if ctx.scale == Scale::Full { 6144 } else { 2048 },
+        test_examples: if ctx.scale == Scale::Full { 1024 } else { 512 },
+        seed: ctx.seed,
+        ..Default::default()
+    };
+    cfg.schedule.total_steps = steps;
+    let outcome = Trainer::new(ctx.rt, cfg.clone()).run()?;
+
+    let meta = ctx.rt.manifest.model(&outcome.model_key)?.clone();
+    let q = meta.num_qlayers;
+    let stripes = Stripes::default();
+
+    // 2) Enumerate (small spaces) or sample (large) the design space.
+    let max_enum = if ctx.scale == Scale::Full { 800 } else { 120 };
+    let space: Vec<Vec<u32>> = if 7usize.pow(q as u32) <= max_enum {
+        enumerate_assignments(q, 2, 8)
+    } else {
+        let mut rng = Rng::new(ctx.seed).split(0xFA4);
+        let mut v = sample_assignments(q, 2, 8, max_enum, &mut rng);
+        // Always include the homogeneous anchors.
+        for b in 2..=8u32 {
+            v.push(vec![b; q]);
+        }
+        v
+    };
+
+    // 3) Evaluate each assignment against the trained state.
+    let eval_prog = format!("eval_quant_{model}");
+    let test = test_batcher(&meta, if ctx.scale == Scale::Full { 512 } else { 256 }, ctx.seed);
+    let mut points = Vec::with_capacity(space.len());
+    for bits in &space {
+        let assign = BitAssignment { bits: bits.clone(), alpha: vec![1.0; q] };
+        let (_, acc) = evaluate(
+            ctx.rt,
+            &eval_prog,
+            &meta,
+            &outcome.state.params,
+            Some(&assign.kw()),
+            cfg.ka(),
+            &test,
+        )?;
+        points.push(DesignPoint {
+            bits: bits.clone(),
+            compute: stripes.relative_compute(&meta, bits),
+            accuracy: acc as f64,
+        });
+    }
+
+    // 4) Frontier + locate the WaveQ solution.
+    let frontier = pareto_frontier(&points);
+    let waveq_point = DesignPoint {
+        bits: outcome.assignment.bits.clone(),
+        compute: stripes.relative_compute(&meta, &outcome.assignment.bits),
+        accuracy: outcome.test_acc as f64,
+    };
+    let gap = accuracy_gap_to_frontier(&waveq_point, &points);
+
+    save_csv(&points, &frontier, &ctx.out("fig4", &format!("{model}_space.csv")))?;
+    let mut waveq_csv = String::from("compute,accuracy,bits\n");
+    waveq_csv.push_str(&format!(
+        "{},{},{}\n",
+        waveq_point.compute,
+        waveq_point.accuracy,
+        waveq_point.bits.iter().map(|b| b.to_string()).collect::<Vec<_>>().join("-")
+    ));
+    ctx.write("fig4", &format!("{model}_waveq.csv"), &waveq_csv)?;
+
+    Ok(vec![
+        model.to_string(),
+        points.len().to_string(),
+        frontier.len().to_string(),
+        format!("{:?}", outcome.assignment.bits),
+        format!("{:.2}", outcome.assignment.average_bits()),
+        format!("{:.3}", waveq_point.accuracy),
+        format!("{:+.3}", gap),
+    ])
+}

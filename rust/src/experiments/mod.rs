@@ -1,0 +1,120 @@
+//! Experiment registry: one driver per paper table/figure (DESIGN.md §4).
+//!
+//! Every driver prints the paper-shaped rows to stdout and dumps the raw
+//! series/points as CSV+JSON under `results/<id>/` so figures can be
+//! re-plotted. Drivers honour a smoke/full scale so the bench targets can
+//! run them cheaply while `waveq experiment <id>` runs paper scale.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod smoke;
+pub mod table1;
+pub mod table2;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Short runs: exercises every code path, minutes not hours.
+    Smoke,
+    /// Paper scale (the numbers recorded in EXPERIMENTS.md).
+    Full,
+}
+
+pub struct ExpContext<'a> {
+    pub rt: &'a Runtime,
+    pub out_dir: PathBuf,
+    pub scale: Scale,
+    pub seed: u64,
+}
+
+impl<'a> ExpContext<'a> {
+    pub fn new(rt: &'a Runtime, scale: Scale, seed: u64) -> ExpContext<'a> {
+        ExpContext { rt, out_dir: PathBuf::from("results"), scale, seed }
+    }
+
+    pub fn steps(&self, smoke: usize, full: usize) -> usize {
+        match self.scale {
+            Scale::Smoke => smoke,
+            Scale::Full => full,
+        }
+    }
+
+    pub fn out(&self, experiment: &str, file: &str) -> PathBuf {
+        self.out_dir.join(experiment).join(file)
+    }
+
+    pub fn write(&self, experiment: &str, file: &str, contents: &str) -> Result<()> {
+        let path = self.out(experiment, file);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, contents)?;
+        crate::info!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+pub const ALL: &[&str] = &[
+    "smoke", "table1", "table2", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+];
+
+pub fn run(name: &str, ctx: &ExpContext) -> Result<()> {
+    match name {
+        "smoke" => smoke::run(ctx),
+        "table1" => table1::run(ctx),
+        "table2" => table2::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "all" => {
+            for n in ALL {
+                crate::info!("=== experiment {n} ===");
+                run(n, ctx)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown experiment '{other}'; known: {ALL:?} or 'all'")),
+    }
+}
+
+/// Markdown-ish table printer shared by drivers.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let cols: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect();
+        format!("| {} |", cols.join(" | "))
+    };
+    let header_cells: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&header_cells));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    println!("{}", fmt_row(&sep));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}

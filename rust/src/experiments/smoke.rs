@@ -1,0 +1,57 @@
+//! End-to-end smoke: one short WaveQ-learned training run on the MLP,
+//! verifying the full stack composes (artifacts load, train step executes,
+//! schedule advances, beta freezes, eval runs) and that the numbers are
+//! sane. This is the `make smoke` target and the first gate in CI.
+
+use anyhow::{ensure, Result};
+
+use super::ExpContext;
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::Trainer;
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let cfg = RunConfig {
+        model: "mlp".into(),
+        algo: Algo::WaveqLearned,
+        steps: ctx.steps(60, 200),
+        train_examples: 2048,
+        test_examples: 512,
+        lr: 0.05,
+        lr_beta: 0.05,
+        seed: ctx.seed,
+        beta_init: 6.0,
+        ..Default::default()
+    };
+    let mut schedule = cfg.schedule.clone();
+    schedule.total_steps = cfg.steps;
+    let cfg = RunConfig { schedule, ..cfg };
+
+    let mut trainer = Trainer::new(ctx.rt, cfg);
+    let outcome = trainer.run()?;
+
+    let first_loss = outcome.metrics.get("loss").first().map(|&(_, v)| v).unwrap_or(0.0);
+    let last_loss = outcome.metrics.tail_mean("loss", 10).unwrap_or(f64::MAX);
+    println!(
+        "smoke: loss {first_loss:.3} -> {last_loss:.3}, test_acc {:.3}, bits {:?} (avg {:.2}), freeze@{:?}",
+        outcome.test_acc,
+        outcome.assignment.bits,
+        outcome.assignment.average_bits(),
+        outcome.freeze_step,
+    );
+    ensure!(last_loss < first_loss, "loss did not decrease");
+    ensure!(outcome.test_acc > 0.15, "test accuracy at chance level");
+    ensure!(
+        outcome.assignment.bits.iter().all(|&b| (2..=8).contains(&b)),
+        "bit assignment out of range"
+    );
+    let stats = ctx.rt.stats();
+    println!(
+        "smoke: {} compiles ({:.1}s), {} executions ({:.3} ms median-ish mean)",
+        stats.compiles,
+        stats.compile_secs,
+        stats.executions,
+        1e3 * stats.execute_secs / stats.executions.max(1) as f64
+    );
+    println!("SMOKE OK");
+    Ok(())
+}

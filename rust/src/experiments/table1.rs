@@ -1,0 +1,127 @@
+//! Table 1 — comparison on imagenet-lite (AlexNet/ResNet-18/MobileNet lite):
+//! fp32 reference, W3/A3 and W4/A4 preset rows (DoReFa, WRPN at W4,
+//! DoReFa+WaveQ), and the headline learned-heterogeneous row
+//! W(learn)/A4 with average bitwidth + Stripes energy saving.
+//!
+//! Shape to reproduce: WaveQ beats plain DoReFa/WRPN at each preset width;
+//! the learned row matches or beats W4 homogeneous accuracy with a *lower*
+//! average bitwidth, and banks a >1x energy saving.
+
+use anyhow::Result;
+
+use super::table2::algo_label;
+use super::{print_table, ExpContext, Scale};
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::Trainer;
+use crate::energy::Stripes;
+use crate::util::json::Json;
+
+pub const MODELS: &[&str] = &["alexnetl", "resnet18l", "mobilenetl"];
+
+pub fn base_config(ctx: &ExpContext, model: &str, algo: Algo, wbits: u32, abits: u32) -> RunConfig {
+    let steps = ctx.steps(80, 500);
+    let mut cfg = RunConfig {
+        model: model.into(),
+        algo,
+        weight_bits: wbits,
+        act_bits: abits,
+        steps,
+        train_examples: if ctx.scale == Scale::Full { 6144 } else { 1024 },
+        test_examples: if ctx.scale == Scale::Full { 1024 } else { 512 },
+        lr: super::table2::quant_lr(model, algo),
+        lr_beta: 0.05,
+        seed: ctx.seed,
+        beta_init: 6.0,
+        ..Default::default()
+    };
+    cfg.schedule.total_steps = steps;
+    cfg.schedule.lambda_w_max = 1.0;
+    cfg
+}
+
+struct Cell {
+    acc: f32,
+    avg_bits: f64,
+    energy_saving: f64,
+}
+
+fn train_cell(ctx: &ExpContext, model: &str, algo: Algo, wbits: u32, abits: u32) -> Result<Cell> {
+    let cfg = base_config(ctx, model, algo, wbits, abits);
+    let out = Trainer::new(ctx.rt, cfg).run()?;
+    let meta = ctx.rt.manifest.model(&out.model_key)?;
+    let stripes = Stripes::default();
+    let saving = stripes.saving_vs_baseline(meta, &out.assignment.bits, abits.min(8));
+    Ok(Cell { acc: out.test_acc, avg_bits: out.assignment.average_bits(), energy_saving: saving })
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut raw: Vec<Json> = Vec::new();
+    let record = |raw: &mut Vec<Json>, model: &str, wa: &str, method: &str, c: &Cell| {
+        raw.push(Json::obj(vec![
+            ("model", Json::Str(model.into())),
+            ("wa", Json::Str(wa.into())),
+            ("method", Json::Str(method.into())),
+            ("top1", Json::Num(c.acc as f64 * 100.0)),
+            ("avg_bits", Json::Num(c.avg_bits)),
+            ("energy_saving", Json::Num(c.energy_saving)),
+        ]));
+    };
+
+    // fp32 reference.
+    let mut row = vec!["W32/A32".into(), "Full Precision".to_string()];
+    let mut fp32_acc = Vec::new();
+    for model in MODELS {
+        let c = train_cell(ctx, model, Algo::Fp32, 8, 32)?;
+        row.push(format!("{:.2}", 100.0 * c.acc));
+        record(&mut raw, model, "W32/A32", "fp32", &c);
+        fp32_acc.push(c.acc);
+    }
+    rows.push(row);
+
+    // Preset homogeneous sections.
+    for &(wb, ab, algos) in &[
+        (3u32, 3u32, &[Algo::Dorefa, Algo::WaveqPreset][..]),
+        (4, 4, &[Algo::Wrpn, Algo::Dorefa, Algo::WaveqPreset][..]),
+    ] {
+        let mut accs = vec![vec![0f32; MODELS.len()]; algos.len()];
+        for (ai, &algo) in algos.iter().enumerate() {
+            let mut row = vec![format!("W{wb}/A{ab}"), algo_label(algo).to_string()];
+            for (mi, model) in MODELS.iter().enumerate() {
+                let c = train_cell(ctx, model, algo, wb, ab)?;
+                row.push(format!("{:.2}", 100.0 * c.acc));
+                accs[ai][mi] = c.acc;
+                record(&mut raw, model, &format!("W{wb}/A{ab}"), algo_label(algo), &c);
+            }
+            rows.push(row);
+        }
+        let mut imp = vec![String::new(), "improvement".to_string()];
+        for mi in 0..MODELS.len() {
+            let waveq = accs[algos.len() - 1][mi];
+            let best_plain = accs[..algos.len() - 1].iter().map(|r| r[mi]).fold(0f32, f32::max);
+            imp.push(format!("{:+.2}", 100.0 * (waveq - best_plain)));
+        }
+        rows.push(imp);
+    }
+
+    // Learned heterogeneous headline row.
+    let mut acc_row = vec!["W(learn)/A4".into(), "DoReFa+WaveQ".to_string()];
+    let mut bits_row = vec![String::new(), "avg bits".to_string()];
+    let mut energy_row = vec![String::new(), "energy saving".to_string()];
+    for model in MODELS {
+        let c = train_cell(ctx, model, Algo::WaveqLearned, 4, 4)?;
+        acc_row.push(format!("{:.2}", 100.0 * c.acc));
+        bits_row.push(format!("W{:.2}", c.avg_bits));
+        energy_row.push(format!("{:.2}x", c.energy_saving));
+        record(&mut raw, model, "W(learn)/A4", "DoReFa+WaveQ learned", &c);
+    }
+    rows.push(acc_row);
+    rows.push(bits_row);
+    rows.push(energy_row);
+
+    let mut headers = vec!["W/A", "method"];
+    headers.extend(MODELS.iter().copied());
+    print_table("Table 1 — imagenet-lite comparison (top-1 %)", &headers, &rows);
+    ctx.write("table1", "table1.json", &Json::Arr(raw).to_string())?;
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Table 2 — preset homogeneous weight quantization: WRPN vs DoReFa vs
+//! DoReFa+WaveQ at W3/W4/W5 (A32) on SimpleNet/ResNet-20/VGG-11 (cifar-lite)
+//! and SVHN-8 (svhn-lite), plus the fp32 reference row.
+//!
+//! The paper's shape to reproduce: DoReFa+WaveQ > plain DoReFa > WRPN at
+//! every bitwidth, with the gap largest at 3 bits and shrinking toward 5
+//! bits (where everything approaches fp32).
+
+use anyhow::Result;
+
+use super::{print_table, ExpContext, Scale};
+use crate::config::{Algo, RunConfig};
+use crate::coordinator::Trainer;
+use crate::util::json::Json;
+
+pub const MODELS: &[&str] = &["simplenet5", "resnet20l", "vgg11l", "svhn8"];
+pub const BITS: &[u32] = &[3, 4, 5];
+pub const ALGOS: &[Algo] = &[Algo::Wrpn, Algo::Dorefa, Algo::WaveqPreset];
+
+pub fn base_config(ctx: &ExpContext, model: &str, algo: Algo, bits: u32) -> RunConfig {
+    let steps = ctx.steps(120, 500);
+    let mut cfg = RunConfig {
+        model: model.into(),
+        algo,
+        weight_bits: bits,
+        act_bits: 32,
+        steps,
+        train_examples: if ctx.scale == Scale::Full { 6144 } else { 2048 },
+        test_examples: 1024,
+        lr: quant_lr(model, algo),
+        lr_beta: 0.05,
+        seed: ctx.seed,
+        ..Default::default()
+    };
+    cfg.schedule.total_steps = steps;
+    // Preset mode ramps lambda_w only; keep magnitudes matched to CE loss.
+    cfg.schedule.lambda_w_max = 1.0;
+    cfg
+}
+
+/// Quantized from-scratch training sits closer to the stability edge than
+/// fp32 on the deeper stacks; swept per model (EXPERIMENTS.md §Calibration).
+pub fn quant_lr(model: &str, algo: Algo) -> f32 {
+    let base = crate::config::model_lr(model);
+    if algo == Algo::Fp32 || model == "simplenet5" {
+        base
+    } else {
+        base * 0.3
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut raw = Vec::new();
+
+    // Full-precision reference row.
+    let mut fp_row = vec!["W32/A32".to_string(), "fp32".to_string()];
+    for model in MODELS {
+        let cfg = base_config(ctx, model, Algo::Fp32, 8);
+        let out = Trainer::new(ctx.rt, cfg).run()?;
+        fp_row.push(format!("{:.2}", 100.0 * out.test_acc));
+        raw.push((model.to_string(), "fp32".to_string(), 32u32, out.test_acc));
+    }
+    rows.push(fp_row);
+
+    for &bits in BITS {
+        let mut cells: Vec<Vec<String>> = ALGOS
+            .iter()
+            .map(|a| vec![format!("W{bits}/A32"), algo_label(*a).to_string()])
+            .collect();
+        let mut accs = vec![vec![0f32; MODELS.len()]; ALGOS.len()];
+        for (mi, model) in MODELS.iter().enumerate() {
+            for (ai, &algo) in ALGOS.iter().enumerate() {
+                let cfg = base_config(ctx, model, algo, bits);
+                let out = Trainer::new(ctx.rt, cfg).run()?;
+                cells[ai].push(format!("{:.2}", 100.0 * out.test_acc));
+                accs[ai][mi] = out.test_acc;
+                raw.push((model.to_string(), algo_label(algo).to_string(), bits, out.test_acc));
+            }
+        }
+        for c in cells {
+            rows.push(c);
+        }
+        // Improvement row: WaveQ over the best plain baseline.
+        let mut imp = vec![String::new(), "improvement".to_string()];
+        for mi in 0..MODELS.len() {
+            let best_plain = accs[0][mi].max(accs[1][mi]);
+            imp.push(format!("{:+.2}", 100.0 * (accs[2][mi] - best_plain)));
+        }
+        rows.push(imp);
+    }
+
+    let mut headers = vec!["W/A", "method"];
+    headers.extend(MODELS.iter().copied());
+    print_table("Table 2 — preset homogeneous weight quantization (top-1 %)", &headers, &rows);
+
+    let json = Json::Arr(
+        raw.iter()
+            .map(|(m, a, b, acc)| {
+                Json::obj(vec![
+                    ("model", Json::Str(m.clone())),
+                    ("method", Json::Str(a.clone())),
+                    ("weight_bits", Json::Num(*b as f64)),
+                    ("top1", Json::Num(*acc as f64 * 100.0)),
+                ])
+            })
+            .collect(),
+    );
+    ctx.write("table2", "table2.json", &json.to_string())?;
+    Ok(())
+}
+
+pub fn algo_label(a: Algo) -> &'static str {
+    match a {
+        Algo::Wrpn => "WRPN",
+        Algo::Dorefa => "DoReFa",
+        Algo::WaveqPreset => "DoReFa+WaveQ",
+        Algo::WaveqLearned => "DoReFa+WaveQ(learned)",
+        Algo::Fp32 => "fp32",
+    }
+}

@@ -1,0 +1,32 @@
+//! WaveQ — gradient-based deep quantization through sinusoidal adaptive
+//! regularization (Elthakeb et al., 2020), as a three-layer rust+JAX+Pallas
+//! system. This crate is Layer 3: the coordinator that owns training
+//! orchestration, the 3-phase regularization-strength schedule, bitwidth
+//! management, data pipelines, the Stripes energy model, Pareto analysis,
+//! and the experiment drivers that regenerate every table/figure.
+//!
+//! Python (L2 JAX model zoo + L1 Pallas kernels) runs only at build time:
+//! `make artifacts` lowers every program to HLO text which this crate loads
+//! through PJRT (`runtime`). See DESIGN.md for the full inventory.
+
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod experiments;
+pub mod pareto;
+pub mod runtime;
+pub mod schedule;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$WAVEQ_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("WAVEQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

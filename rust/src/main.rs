@@ -1,0 +1,186 @@
+//! `waveq` — the WaveQ coordinator CLI (Layer 3 entrypoint).
+//!
+//! Subcommands:
+//!   smoke                      end-to-end stack check (short WaveQ run)
+//!   train       [flags]        one training run (any model/algo/bits)
+//!   experiment  <id|all>       regenerate a paper table/figure (results/)
+//!   energy      [flags]        Stripes energy report for an assignment
+//!   info                       list artifacts, models, programs
+//!
+//! Common flags: --artifacts DIR --config FILE --seed N --scale smoke|full
+//! Train flags:  --model M --algo A --bits B --act-bits A --steps N --lr F
+//!               --lr-beta F --eval-every N --save CKPT
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use waveq::config::RunConfig;
+use waveq::coordinator::{Checkpoint, Trainer};
+use waveq::energy::Stripes;
+use waveq::experiments::{self, ExpContext, Scale};
+use waveq::runtime::Runtime;
+use waveq::util::argparse::{ArgSpec, Args};
+
+const VALUE_FLAGS: &[&str] = &[
+    "artifacts", "config", "seed", "scale", "model", "algo", "bits", "act-bits",
+    "steps", "lr", "momentum", "lr-beta", "eval-every", "save", "train-examples",
+    "test-examples", "beta-init", "out", "init",
+];
+const SWITCH_FLAGS: &[&str] = &["quiet", "help"];
+
+fn main() {
+    waveq::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let spec = ArgSpec { value_flags: VALUE_FLAGS, switch_flags: SWITCH_FLAGS };
+    let args = Args::parse(argv, &spec)?;
+    if args.has("help") || args.subcommand.is_none() {
+        print_help();
+        return Ok(());
+    }
+    let artifacts = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(waveq::artifacts_dir);
+
+    match args.subcommand.as_deref().unwrap() {
+        "info" => {
+            let rt = Runtime::open(&artifacts)?;
+            println!("platform: {}", rt.platform());
+            println!("programs ({}):", rt.manifest.programs.len());
+            for (name, p) in &rt.manifest.programs {
+                println!("  {name:<32} inputs={:<3} outputs={}", p.inputs.len(), p.outputs.len());
+            }
+            println!("models ({}):", rt.manifest.models.len());
+            for (name, m) in &rt.manifest.models {
+                println!(
+                    "  {name:<20} input={:?} classes={} params={} qlayers={} macs={}",
+                    m.input_shape,
+                    m.num_classes,
+                    m.num_params(),
+                    m.num_qlayers,
+                    m.total_macs()
+                );
+            }
+            Ok(())
+        }
+        "smoke" => {
+            let rt = Runtime::open(&artifacts)?;
+            let ctx = exp_context(&rt, &args)?;
+            experiments::run("smoke", &ctx)
+        }
+        "experiment" => {
+            let name = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: waveq experiment <id|all>"))?
+                .clone();
+            let rt = Runtime::open(&artifacts)?;
+            let ctx = exp_context(&rt, &args)?;
+            experiments::run(&name, &ctx)
+        }
+        "train" => {
+            let rt = Runtime::open(&artifacts)?;
+            let cfg = RunConfig::load(args.get("config"), &args)?;
+            let mut trainer = Trainer::new(&rt, cfg);
+            trainer.opts.quiet = args.has("quiet");
+            if let Some(ckpt) = args.get("init") {
+                trainer.opts.init_from = Some(ckpt.to_string());
+            }
+            let outcome = trainer.run()?;
+            println!(
+                "model={} algo={} steps={} -> test_acc={:.4} test_loss={:.4} bits={:?} (avg {:.2})",
+                outcome.cfg.model,
+                outcome.cfg.algo.name(),
+                outcome.cfg.steps,
+                outcome.test_acc,
+                outcome.test_loss,
+                outcome.assignment.bits,
+                outcome.assignment.average_bits()
+            );
+            if let Some(path) = args.get("save") {
+                let model = rt.manifest.model(&outcome.model_key)?;
+                let tensors = outcome
+                    .state
+                    .all_params(model)?
+                    .into_iter()
+                    .zip(&model.params)
+                    .map(|(t, p)| (p.name.clone(), t))
+                    .collect();
+                Checkpoint {
+                    tensors,
+                    beta: outcome.state.beta.clone(),
+                    vbeta: outcome.state.vbeta.clone(),
+                }
+                .save(std::path::Path::new(path))?;
+                println!("saved checkpoint to {path}");
+            }
+            if let Some(out) = args.get("out") {
+                outcome.metrics.save_csv(std::path::Path::new(out))?;
+                println!("saved metrics to {out}");
+            }
+            Ok(())
+        }
+        "energy" => {
+            let rt = Runtime::open(&artifacts)?;
+            let model_name = args.get_or("model", "simplenet5").to_string();
+            let bits = args.get_usize("bits", 4)? as u32;
+            let act = args.get_usize("act-bits", 4)? as u32;
+            let model = rt.manifest.model(&model_name)?;
+            let stripes = Stripes::default();
+            let report = stripes.evaluate_homogeneous(model, bits, act);
+            println!("Stripes energy report: {model_name} W{bits}/A{act}");
+            for l in &report.layers {
+                println!(
+                    "  {:<12} bits={} macs={:>10} cycles={:>12.0} energy={:>14.0}",
+                    l.name, l.bits, l.macs, l.cycles, l.energy
+                );
+            }
+            println!("  total: cycles={:.0} energy={:.0}", report.total_cycles, report.total_energy);
+            let saving = stripes.saving_vs_baseline(model, &vec![bits; model.num_qlayers], act);
+            println!("  energy saving vs 16-bit bit-parallel baseline: {saving:.2}x");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}' (try --help)")),
+    }
+}
+
+fn exp_context<'a>(rt: &'a Runtime, args: &Args) -> Result<ExpContext<'a>> {
+    let scale = match args.get_or("scale", "full") {
+        "smoke" => Scale::Smoke,
+        "full" => Scale::Full,
+        other => return Err(anyhow!("--scale must be smoke|full, got '{other}'")),
+    };
+    let mut ctx = ExpContext::new(rt, scale, args.get_u64("seed", 42)?);
+    if let Some(out) = args.get("out") {
+        ctx.out_dir = PathBuf::from(out);
+    }
+    Ok(ctx)
+}
+
+fn print_help() {
+    println!(
+        "waveq — WaveQ quantized-training coordinator
+
+USAGE: waveq <subcommand> [flags]
+
+SUBCOMMANDS:
+  smoke                 end-to-end stack check (~1 min)
+  train                 one run: --model M --algo fp32|dorefa|wrpn|waveq-preset|waveq
+                        --bits B --act-bits A --steps N --lr F --lr-beta F
+                        [--config FILE] [--save ckpt.bin] [--out metrics.csv]
+  experiment <id|all>   regenerate a paper artifact: {}
+  energy                Stripes report: --model M --bits B --act-bits A
+  info                  list artifacts/models/programs
+
+COMMON FLAGS: --artifacts DIR (default ./artifacts)  --seed N  --scale smoke|full",
+        experiments::ALL.join(", ")
+    );
+}

@@ -1,0 +1,189 @@
+//! Design-space enumeration + Pareto analysis (paper Figure 4).
+//!
+//! For moderate nets the per-layer bitwidth space {b_lo..b_hi}^L is small
+//! enough to enumerate: each assignment is evaluated (accuracy via the
+//! quantized eval program against a trained state; compute via the Stripes
+//! relative-compute metric) and the non-dominated frontier is extracted.
+//! The WaveQ solution is then located relative to that frontier — the
+//! paper's quality argument for the learned assignments.
+
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub bits: Vec<u32>,
+    /// Relative compute (lower is better), e.g. Stripes MAC*bit vs 8-bit.
+    pub compute: f64,
+    /// Test accuracy (higher is better).
+    pub accuracy: f64,
+}
+
+/// All assignments of {lo..=hi}^layers, in lexicographic order.
+pub fn enumerate_assignments(layers: usize, lo: u32, hi: u32) -> Vec<Vec<u32>> {
+    assert!(hi >= lo);
+    let base = (hi - lo + 1) as usize;
+    let total = base.pow(layers as u32);
+    let mut out = Vec::with_capacity(total);
+    for mut idx in 0..total {
+        let mut v = vec![lo; layers];
+        for slot in (0..layers).rev() {
+            v[slot] = lo + (idx % base) as u32;
+            idx /= base;
+        }
+        out.push(v);
+    }
+    out
+}
+
+/// Subsample a space too big to enumerate (stratified by average bits).
+pub fn sample_assignments(
+    layers: usize,
+    lo: u32,
+    hi: u32,
+    n: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<Vec<u32>> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let v: Vec<u32> = (0..layers).map(|_| lo + rng.below((hi - lo + 1) as u64) as u32).collect();
+        out.push(v);
+    }
+    out
+}
+
+/// Non-dominated frontier: minimize compute, maximize accuracy.
+/// Returns indices into `points`, sorted by compute ascending.
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // Sort by compute asc, accuracy desc as tiebreak.
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .compute
+            .partial_cmp(&points[b].compute)
+            .unwrap()
+            .then(points[b].accuracy.partial_cmp(&points[a].accuracy).unwrap())
+    });
+    let mut frontier = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for &i in &idx {
+        if points[i].accuracy > best_acc {
+            frontier.push(i);
+            best_acc = points[i].accuracy;
+        }
+    }
+    frontier
+}
+
+/// Is `p` dominated by any point in `points` (strictly better on one axis,
+/// at least as good on the other)?
+pub fn is_dominated(p: &DesignPoint, points: &[DesignPoint]) -> bool {
+    points.iter().any(|q| {
+        (q.compute < p.compute && q.accuracy >= p.accuracy)
+            || (q.compute <= p.compute && q.accuracy > p.accuracy)
+    })
+}
+
+/// Distance (in accuracy) from point `p` to the frontier at p's compute
+/// budget: how much accuracy the frontier achieves with <= p.compute,
+/// minus p's accuracy. ~0 (or negative) means p sits on the frontier.
+pub fn accuracy_gap_to_frontier(p: &DesignPoint, points: &[DesignPoint]) -> f64 {
+    let best_at_budget = points
+        .iter()
+        .filter(|q| q.compute <= p.compute + 1e-12)
+        .map(|q| q.accuracy)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if best_at_budget.is_finite() {
+        best_at_budget - p.accuracy
+    } else {
+        0.0
+    }
+}
+
+/// Serialize the space + frontier as CSV (compute, accuracy, on_frontier, bits).
+pub fn to_csv(points: &[DesignPoint], frontier: &[usize]) -> String {
+    let on: std::collections::HashSet<usize> = frontier.iter().copied().collect();
+    let mut s = String::from("compute,accuracy,on_frontier,bits\n");
+    for (i, p) in points.iter().enumerate() {
+        let bits: Vec<String> = p.bits.iter().map(|b| b.to_string()).collect();
+        s.push_str(&format!(
+            "{},{},{},{}\n",
+            p.compute,
+            p.accuracy,
+            if on.contains(&i) { 1 } else { 0 },
+            bits.join("-")
+        ));
+    }
+    s
+}
+
+pub fn save_csv(points: &[DesignPoint], frontier: &[usize], path: &std::path::Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, to_csv(points, frontier))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(c: f64, a: f64) -> DesignPoint {
+        DesignPoint { bits: vec![], compute: c, accuracy: a }
+    }
+
+    #[test]
+    fn enumeration_counts_and_bounds() {
+        let v = enumerate_assignments(3, 2, 4);
+        assert_eq!(v.len(), 27);
+        assert!(v.iter().all(|a| a.iter().all(|&b| (2..=4).contains(&b))));
+        assert_eq!(v[0], vec![2, 2, 2]);
+        assert_eq!(v[26], vec![4, 4, 4]);
+        // all distinct
+        let set: std::collections::HashSet<Vec<u32>> = v.iter().cloned().collect();
+        assert_eq!(set.len(), 27);
+    }
+
+    #[test]
+    fn frontier_is_non_dominated_and_monotone() {
+        let pts = vec![pt(1.0, 0.5), pt(2.0, 0.7), pt(3.0, 0.6), pt(4.0, 0.9), pt(2.5, 0.7)];
+        let f = pareto_frontier(&pts);
+        // expected: (1.0,0.5), (2.0,0.7), (4.0,0.9)
+        assert_eq!(f, vec![0, 1, 3]);
+        for &i in &f {
+            assert!(!is_dominated(&pts[i], &pts), "frontier point {i} dominated");
+        }
+        // accuracy strictly increases along the frontier
+        for w in f.windows(2) {
+            assert!(pts[w[1]].accuracy > pts[w[0]].accuracy);
+            assert!(pts[w[1]].compute > pts[w[0]].compute);
+        }
+    }
+
+    #[test]
+    fn dominated_point_has_positive_gap() {
+        let pts = vec![pt(1.0, 0.8), pt(1.5, 0.5)];
+        assert!(is_dominated(&pts[1], &pts));
+        assert!(accuracy_gap_to_frontier(&pts[1], &pts) > 0.29);
+        assert!(accuracy_gap_to_frontier(&pts[0], &pts).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_assignments_in_bounds() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let v = sample_assignments(5, 2, 6, 100, &mut rng);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|a| a.len() == 5 && a.iter().all(|&b| (2..=6).contains(&b))));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let pts = vec![
+            DesignPoint { bits: vec![3, 4], compute: 0.5, accuracy: 0.9 },
+        ];
+        let csv = to_csv(&pts, &[0]);
+        assert!(csv.starts_with("compute,accuracy"));
+        assert!(csv.contains("3-4"));
+        assert!(csv.contains(",1,"));
+    }
+}

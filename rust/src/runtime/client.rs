@@ -1,0 +1,167 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily and cached per program name, so the
+//! coordinator's hot loop never recompiles.
+//!
+//! All programs return a single tuple (lowered with `return_tuple=True`);
+//! [`Runtime::execute`] decomposes it into one `Literal` per named output.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{Manifest, ProgramSig};
+
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// Cumulative (compiles, executions) — surfaced by `waveq smoke`/metrics.
+    stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn sig(&self, program: &str) -> Result<&ProgramSig> {
+        self.manifest.program(program)
+    }
+
+    /// Compile (or fetch cached) executable for a program.
+    pub fn executable(&self, program: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(program) {
+            return Ok(exe.clone());
+        }
+        let sig = self.manifest.program(program)?;
+        let path = self.dir.join(&sig.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {program}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(program.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a program on host literals; returns one literal per output.
+    /// Accepts owned or borrowed literals (`&[Literal]` or `&[&Literal]`).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        program: &str,
+        args: &[L],
+    ) -> Result<Vec<Literal>> {
+        let sig = self.manifest.program(program)?;
+        if args.len() != sig.inputs.len() {
+            return Err(anyhow!(
+                "{program}: got {} args, signature has {}",
+                args.len(),
+                sig.inputs.len()
+            ));
+        }
+        let exe = self.executable(program)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<L>(args)
+            .map_err(|e| anyhow!("executing {program}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {program} result: {e:?}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {program} result: {e:?}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        if outs.len() != sig.outputs.len() {
+            return Err(anyhow!(
+                "{program}: got {} outputs, manifest says {}",
+                outs.len(),
+                sig.outputs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Pre-compile a set of programs (amortize XLA compile outside the loop).
+    pub fn warmup(&self, programs: &[&str]) -> Result<()> {
+        for p in programs {
+            self.executable(p)
+                .with_context(|| format!("warming up {p}"))?;
+        }
+        Ok(())
+    }
+}
+
+// ---- Literal helpers --------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("literal_f32: {} elems for shape {:?}", data.len(), shape));
+    }
+    let lit = Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar: {e:?}"))
+}

@@ -1,0 +1,300 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (writer)
+//! and the rust coordinator (reader).
+//!
+//! The manifest describes, for every AOT program, the exact positional input
+//! signature and output names, plus per-model parameter layout and MAC
+//! counts (consumed by the Stripes energy model and the bitwidth manager).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramSig {
+    pub name: String,
+    pub file: String,
+    pub model: Option<String>,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ProgramSig {
+    /// Index of the input named `name` (errors with program context).
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|a| a.name == name)
+            .ok_or_else(|| anyhow!("program {} has no input '{name}'", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .ok_or_else(|| anyhow!("program {} has no output '{name}'", self.name))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: String,
+    /// Initialization kind: he | he_res (fixup-scaled) | ones | zeros.
+    pub init: String,
+    /// Slot in the per-layer bitwidth vector, if this weight is quantized.
+    pub qidx: Option<usize>,
+    /// Per-example MACs attributable to this parameter.
+    pub macs: u64,
+    pub count: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    pub batch: usize,
+    pub width_mult: usize,
+    pub num_qlayers: usize,
+    pub params: Vec<ParamMeta>,
+}
+
+impl ModelMeta {
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.params.iter().map(|p| p.macs).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.params.iter().map(|p| p.count).sum()
+    }
+
+    /// (macs, weight count) for each quantizable layer, indexed by qidx.
+    pub fn qlayer_stats(&self) -> Vec<(u64, u64)> {
+        let mut v = vec![(0u64, 0u64); self.num_qlayers];
+        for p in &self.params {
+            if let Some(q) = p.qidx {
+                v[q] = (p.macs, p.count);
+            }
+        }
+        v
+    }
+
+    /// Param indices of quantizable layers in qidx order.
+    pub fn qlayer_param_indices(&self) -> Vec<usize> {
+        let mut pairs: Vec<(usize, usize)> = self
+            .params
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.qidx.map(|q| (q, i)))
+            .collect();
+        pairs.sort_unstable();
+        pairs.into_iter().map(|(_, i)| i).collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub programs: BTreeMap<String, ProgramSig>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        Self::from_json(&json)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Manifest> {
+        let mut programs = BTreeMap::new();
+        for (name, p) in json
+            .req("programs")
+            .map_err(|e| anyhow!(e))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("programs must be an object"))?
+        {
+            programs.insert(name.clone(), parse_program(name, p)?);
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in json
+            .req("models")
+            .map_err(|e| anyhow!(e))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models must be an object"))?
+        {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        Ok(Manifest { programs, models })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSig> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no program '{name}'"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model '{name}'"))
+    }
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("shape must be an array"))?
+        .iter()
+        .filter_map(|d| d.as_usize())
+        .collect())
+}
+
+fn parse_program(name: &str, p: &Json) -> Result<ProgramSig> {
+    let inputs = p
+        .req("inputs")
+        .map_err(|e| anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("inputs must be an array"))?
+        .iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                name: a.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap_or("").to_string(),
+                shape: shape_of(a.req("shape").map_err(|e| anyhow!(e))?)?,
+                dtype: a
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("float32")
+                    .to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = p
+        .req("outputs")
+        .map_err(|e| anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("outputs must be an array"))?
+        .iter()
+        .filter_map(|o| o.as_str().map(String::from))
+        .collect();
+    Ok(ProgramSig {
+        name: name.to_string(),
+        file: p
+            .req("file")
+            .map_err(|e| anyhow!(e))?
+            .as_str()
+            .ok_or_else(|| anyhow!("file must be a string"))?
+            .to_string(),
+        model: p.get("model").and_then(|m| m.as_str()).map(String::from),
+        inputs,
+        outputs,
+    })
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelMeta> {
+    let ishape = shape_of(m.req("input_shape").map_err(|e| anyhow!(e))?)?;
+    if ishape.len() != 3 {
+        return Err(anyhow!("model {name}: input_shape must have 3 dims"));
+    }
+    let params = m
+        .req("params")
+        .map_err(|e| anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("params must be an array"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p.req("name").map_err(|e| anyhow!(e))?.as_str().unwrap_or("").to_string(),
+                shape: shape_of(p.req("shape").map_err(|e| anyhow!(e))?)?,
+                kind: p.get("kind").and_then(|k| k.as_str()).unwrap_or("other").to_string(),
+                init: p.get("init").and_then(|k| k.as_str()).unwrap_or("he").to_string(),
+                qidx: p.get("qidx").and_then(|q| q.as_usize()),
+                macs: p.get("macs").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+                count: p.get("count").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelMeta {
+        name: name.to_string(),
+        input_shape: [ishape[0], ishape[1], ishape[2]],
+        num_classes: m.get("num_classes").and_then(|x| x.as_usize()).unwrap_or(10),
+        batch: m.get("batch").and_then(|x| x.as_usize()).unwrap_or(64),
+        width_mult: m.get("width_mult").and_then(|x| x.as_usize()).unwrap_or(1),
+        num_qlayers: m.get("num_qlayers").and_then(|x| x.as_usize()).unwrap_or(0),
+        params,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "programs": {
+        "train_fp32_mlp": {
+          "file": "train_fp32_mlp.hlo.txt",
+          "model": "mlp",
+          "inputs": [
+            {"name": "w:fc1", "shape": [192, 128], "dtype": "float32"},
+            {"name": "x", "shape": [128, 8, 8, 3], "dtype": "float32"}
+          ],
+          "outputs": ["w:fc1", "loss", "acc"]
+        }
+      },
+      "models": {
+        "mlp": {
+          "name": "mlp", "input_shape": [8, 8, 3], "num_classes": 10,
+          "batch": 128, "width_mult": 1, "num_qlayers": 2,
+          "params": [
+            {"name": "fc1", "shape": [192, 128], "kind": "fc", "qidx": null,
+             "macs": 24576, "count": 24576},
+            {"name": "fc2", "shape": [128, 128], "kind": "fc", "qidx": 0,
+             "macs": 16384, "count": 16384}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        let p = m.program("train_fp32_mlp").unwrap();
+        assert_eq!(p.inputs.len(), 2);
+        assert_eq!(p.inputs[0].elem_count(), 192 * 128);
+        assert_eq!(p.input_index("x").unwrap(), 1);
+        assert_eq!(p.output_index("loss").unwrap(), 1);
+        let model = m.model("mlp").unwrap();
+        assert_eq!(model.num_params(), 2);
+        assert_eq!(model.num_qlayers, 2);
+        assert_eq!(model.qlayer_param_indices(), vec![1]);
+        assert_eq!(model.total_macs(), 24576 + 16384);
+    }
+
+    #[test]
+    fn missing_program_errors() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert!(m.program("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+}

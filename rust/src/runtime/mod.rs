@@ -1,0 +1,10 @@
+//! L3 runtime: the bridge from AOT artifacts to executable programs.
+//!
+//! `manifest` — the python→rust contract (signatures, layouts, MACs).
+//! `client`   — PJRT load/compile/execute with caching + literal helpers.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{literal_f32, scalar_f32, to_scalar_f32, to_vec_f32, Runtime, RuntimeStats};
+pub use manifest::{ArgSpec, Manifest, ModelMeta, ParamMeta, ProgramSig};

@@ -1,0 +1,270 @@
+//! The 3-phase regularization-strength schedule (paper Fig. 2e / Fig. 9)
+//! and the phase controller that drives it.
+//!
+//! Phase 1 (explore):   lambda_w ~ 0, lambda_beta ~ 0 — SGD roams freely.
+//! Phase 2 (engage):    both strengths rise along an exponential ramp
+//!                      `lambda(t) = lam_max * (exp(g u) - 1)/(exp(g) - 1)`,
+//!                      u = progress in [0, 1] (the Fig. 9 curve);
+//!                      lambda_w is kept >> lambda_beta so per-layer
+//!                      bitwidths can be evaluated while weights settle.
+//! Phase 3 (freeze):    the coordinator detects beta convergence
+//!                      (max |delta beta| below tol over a window), fixes
+//!                      b_i = ceil(beta_i), zeroes the beta updates via the
+//!                      `beta_train` flag, decays lambda_beta to 0 and holds
+//!                      lambda_w high so weights lock onto the final grid.
+//!
+//! The discussion section's from-scratch finding (Fig. 7) — constant
+//! lambda_w traps weights near init; an exponential ramp lets them hop
+//! between waves — is exactly this module's `lambda_w_at`.
+
+/// Closed-form schedule parameters.
+#[derive(Debug, Clone)]
+pub struct ScheduleCfg {
+    pub total_steps: usize,
+    /// Fraction of steps in phase 1 (pure task loss).
+    pub explore_frac: f64,
+    /// Fraction of steps in phase 2 (ramping); the rest is phase 3.
+    pub engage_frac: f64,
+    /// Peak strengths. Chosen "such that the original loss and the penalty
+    /// terms have approximately the same magnitude" (paper §2.2).
+    pub lambda_w_max: f32,
+    pub lambda_beta_max: f32,
+    /// Exponential ramp sharpness (gamma in Fig. 9).
+    pub gamma: f64,
+    /// Phase-3 exponential decay rate for lambda_beta.
+    pub beta_decay: f64,
+}
+
+impl Default for ScheduleCfg {
+    fn default() -> Self {
+        ScheduleCfg {
+            total_steps: 1000,
+            explore_frac: 0.15,
+            engage_frac: 0.55,
+            lambda_w_max: 1.0,
+            lambda_beta_max: 0.02,
+            gamma: 4.0,
+            beta_decay: 20.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Explore = 1,
+    Engage = 2,
+    Freeze = 3,
+}
+
+impl ScheduleCfg {
+    pub fn explore_end(&self) -> usize {
+        (self.total_steps as f64 * self.explore_frac) as usize
+    }
+
+    pub fn engage_end(&self) -> usize {
+        (self.total_steps as f64 * (self.explore_frac + self.engage_frac)) as usize
+    }
+
+    /// Exponential ramp in [0,1] -> [0,1]: (e^{g u} - 1)/(e^g - 1)  (Fig. 9).
+    fn ramp(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        ((self.gamma * u).exp() - 1.0) / (self.gamma.exp() - 1.0)
+    }
+
+    /// lambda_w at a step, given whether beta has been frozen yet.
+    pub fn lambda_w_at(&self, step: usize, frozen: bool) -> f32 {
+        let (e1, e2) = (self.explore_end(), self.engage_end());
+        if step < e1 {
+            0.0
+        } else if step < e2 && !frozen {
+            let u = (step - e1) as f64 / (e2 - e1).max(1) as f64;
+            (self.lambda_w_max as f64 * self.ramp(u)) as f32
+        } else {
+            self.lambda_w_max // phase 3: hold high
+        }
+    }
+
+    /// lambda_beta at a step. `freeze_step` is Some(s) once phase 3 started.
+    pub fn lambda_beta_at(&self, step: usize, freeze_step: Option<usize>) -> f32 {
+        if let Some(fs) = freeze_step {
+            // Phase 3: exponential decay to zero.
+            let dt = (step.saturating_sub(fs)) as f64 / self.total_steps.max(1) as f64;
+            return (self.lambda_beta_max as f64 * (-self.beta_decay * dt).exp()) as f32;
+        }
+        let (e1, e2) = (self.explore_end(), self.engage_end());
+        if step < e1 {
+            0.0
+        } else {
+            let u = (step - e1) as f64 / (e2 - e1).max(1) as f64;
+            (self.lambda_beta_max as f64 * self.ramp(u)) as f32
+        }
+    }
+}
+
+/// Watches the live beta vector and decides the phase-2 -> phase-3 flip.
+#[derive(Debug, Clone)]
+pub struct PhaseController {
+    pub cfg: ScheduleCfg,
+    prev_beta: Option<Vec<f32>>,
+    stable_steps: usize,
+    /// Step at which beta was frozen (phase 3 entry), if any.
+    pub freeze_step: Option<usize>,
+    /// beta must move less than this (max over layers) to count as stable.
+    pub tol: f32,
+    /// ... for this many consecutive steps.
+    pub window: usize,
+}
+
+impl PhaseController {
+    pub fn new(cfg: ScheduleCfg) -> Self {
+        PhaseController {
+            cfg,
+            prev_beta: None,
+            stable_steps: 0,
+            freeze_step: None,
+            tol: 2e-4,
+            window: 30,
+        }
+    }
+
+    pub fn phase(&self, step: usize) -> Phase {
+        if self.freeze_step.is_some() {
+            Phase::Freeze
+        } else if step < self.cfg.explore_end() {
+            Phase::Explore
+        } else {
+            Phase::Engage
+        }
+    }
+
+    /// Per-step strengths + the beta_train flag fed into the AOT program.
+    /// Call *before* the step; then report the post-step beta via
+    /// [`PhaseController::observe_beta`].
+    pub fn knobs(&self, step: usize) -> (f32, f32, f32) {
+        let frozen = self.freeze_step.is_some();
+        let lw = self.cfg.lambda_w_at(step, frozen);
+        let lb = self.cfg.lambda_beta_at(step, self.freeze_step);
+        let flag = if frozen || self.phase(step) == Phase::Explore { 0.0 } else { 1.0 };
+        (lw, lb, flag)
+    }
+
+    /// Feed the post-step beta; may flip into phase 3. Returns true on flip.
+    pub fn observe_beta(&mut self, step: usize, beta: &[f32]) -> bool {
+        if self.freeze_step.is_some() || self.phase(step) != Phase::Engage {
+            self.prev_beta = Some(beta.to_vec());
+            return false;
+        }
+        if let Some(prev) = &self.prev_beta {
+            let max_delta = prev
+                .iter()
+                .zip(beta)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if max_delta < self.tol {
+                self.stable_steps += 1;
+            } else {
+                self.stable_steps = 0;
+            }
+        }
+        self.prev_beta = Some(beta.to_vec());
+        // Flip on stability, or unconditionally at the end of phase 2.
+        if self.stable_steps >= self.window || step >= self.cfg.engage_end() {
+            self.freeze_step = Some(step);
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ScheduleCfg {
+        ScheduleCfg { total_steps: 1000, ..Default::default() }
+    }
+
+    #[test]
+    fn phase1_is_pure_task_loss() {
+        let c = cfg();
+        assert_eq!(c.lambda_w_at(0, false), 0.0);
+        assert_eq!(c.lambda_beta_at(0, None), 0.0);
+        assert_eq!(c.lambda_w_at(c.explore_end() - 1, false), 0.0);
+    }
+
+    #[test]
+    fn ramp_is_monotone_and_bounded() {
+        let c = cfg();
+        let mut prev = -1.0f32;
+        for s in c.explore_end()..c.engage_end() {
+            let lw = c.lambda_w_at(s, false);
+            assert!(lw >= prev, "not monotone at {s}");
+            assert!(lw <= c.lambda_w_max);
+            prev = lw;
+        }
+        // lambda_w dominates lambda_beta throughout phase 2 (paper §2.2).
+        for s in c.explore_end()..c.engage_end() {
+            assert!(c.lambda_w_at(s, false) >= c.lambda_beta_at(s, None));
+        }
+    }
+
+    #[test]
+    fn phase3_decays_beta_strength_and_holds_w() {
+        let c = cfg();
+        let fs = 700;
+        assert_eq!(c.lambda_w_at(800, true), c.lambda_w_max);
+        let l0 = c.lambda_beta_at(fs, Some(fs));
+        let l1 = c.lambda_beta_at(fs + 100, Some(fs));
+        let l2 = c.lambda_beta_at(fs + 300, Some(fs));
+        assert!(l0 > l1 && l1 > l2);
+        assert!(l2 < 0.01 * c.lambda_beta_max + 1e-9);
+    }
+
+    #[test]
+    fn controller_freezes_on_stable_beta() {
+        let mut pc = PhaseController::new(cfg());
+        pc.window = 5;
+        let start = pc.cfg.explore_end() + 1;
+        let beta = vec![3.2f32, 4.7];
+        let mut flipped_at = None;
+        for s in start..start + 50 {
+            if pc.observe_beta(s, &beta) {
+                flipped_at = Some(s);
+                break;
+            }
+        }
+        // First observe has no prev; then 5 stable steps.
+        assert_eq!(flipped_at, Some(start + 5));
+        assert_eq!(pc.phase(start + 6), Phase::Freeze);
+        let (_, _, flag) = pc.knobs(start + 6);
+        assert_eq!(flag, 0.0);
+    }
+
+    #[test]
+    fn controller_freezes_at_engage_end_regardless() {
+        let mut pc = PhaseController::new(cfg());
+        let end = pc.cfg.engage_end();
+        // Wildly moving beta: no stability-based freeze.
+        let mut s = pc.cfg.explore_end();
+        let mut flipped = false;
+        let mut i = 0.0f32;
+        while s <= end {
+            i += 1.0;
+            if pc.observe_beta(s, &[i, -i]) {
+                flipped = true;
+                break;
+            }
+            s += 1;
+        }
+        assert!(flipped && s == end);
+    }
+
+    #[test]
+    fn knobs_gate_beta_training_in_explore() {
+        let pc = PhaseController::new(cfg());
+        let (lw, lb, flag) = pc.knobs(0);
+        assert_eq!((lw, lb, flag), (0.0, 0.0, 0.0));
+        let (_, _, flag2) = pc.knobs(pc.cfg.explore_end() + 1);
+        assert_eq!(flag2, 1.0);
+    }
+}

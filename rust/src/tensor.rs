@@ -1,0 +1,268 @@
+//! Host-side tensor + histogram substrate.
+//!
+//! The heavy math runs inside the AOT XLA programs; this module covers what
+//! the coordinator does on the host: state bookkeeping, statistics for the
+//! figure drivers (weight-distribution evolution, trajectories), and small
+//! reference computations for tests.
+
+use anyhow::{anyhow, Result};
+
+/// A dense f32 tensor with row-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} wants {} elems, got {}", shape, n, data.len()));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn std(&self) -> f32 {
+        if self.data.len() < 2 {
+            return 0.0;
+        }
+        let mu = self.mean();
+        let var = self.data.iter().map(|&x| (x - mu) * (x - mu)).sum::<f32>()
+            / self.data.len() as f32;
+        var.sqrt()
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// L2 distance to another tensor (tests, convergence tracking).
+    pub fn l2_dist(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    /// Mean distance of each element to its nearest quantization level
+    /// (the direct measure of what the WaveQ regularizer optimizes —
+    /// used to verify that training actually moves weights onto the grid).
+    pub fn mean_quantization_error(&self, bits: u32) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let k = (2u64.pow(bits) - 1) as f32;
+        let m = self.abs_max().max(1e-8);
+        self.data
+            .iter()
+            .map(|&x| {
+                let t = x / m; // normalize to [-1, 1]
+                let q = ((t * 0.5 + 0.5) * k).round() / k * 2.0 - 1.0;
+                (t - q).abs()
+            })
+            .sum::<f32>()
+            / self.data.len() as f32
+    }
+}
+
+/// Fixed-range histogram (weight-distribution figures).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub total: u64,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0, underflow: 0, overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f32) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        if x >= self.hi {
+            self.overflow += 1;
+            return;
+        }
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        let idx = ((x - self.lo) / w) as usize;
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn add_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn bin_center(&self, i: usize) -> f32 {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        self.lo + (i as f32 + 0.5) * w
+    }
+
+    /// Fraction of in-range mass within `tol` of any of the `levels`.
+    /// Used by the Figure-6 driver to quantify clustering around centroids.
+    pub fn mass_near_levels(&self, levels: &[f32], tol: f32) -> f64 {
+        let in_range: u64 = self.counts.iter().sum();
+        if in_range == 0 {
+            return 0.0;
+        }
+        let mut near = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let x = self.bin_center(i);
+            if levels.iter().any(|&l| (x - l).abs() <= tol) {
+                near += c;
+            }
+        }
+        near as f64 / in_range as f64
+    }
+
+    /// CSV dump: bin_center,count per line (figure data).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("bin_center,count\n");
+        for (i, c) in self.counts.iter().enumerate() {
+            s.push_str(&format!("{},{}\n", self.bin_center(i), c));
+        }
+        s
+    }
+}
+
+/// The symmetric quantization grid {-1, ..., -1/k, 0, 1/k, ..., 1} (§2.2),
+/// with k = 2^(b-1) - 1 levels per half (b includes the sign bit).
+pub fn quant_levels(bits: u32) -> Vec<f32> {
+    let k = (2u64.pow(bits.saturating_sub(1)) - 1).max(1) as i64;
+    let mut v = Vec::with_capacity((2 * k + 1) as usize);
+    for i in -k..=k {
+        v.push(i as f32 / k as f32);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_stats() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        assert_eq!(t.mean(), -0.5);
+        assert_eq!(t.min(), -4.0);
+        assert_eq!(t.max(), 3.0);
+        assert_eq!(t.abs_max(), 4.0);
+        assert!(t.all_finite());
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        assert!(Tensor::new(vec![3], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn quantization_error_is_zero_on_grid() {
+        // The representable levels for bits=3 are (2j-k)/k, j=0..=k, k=7.
+        let k = 7i64;
+        let grid: Vec<f32> = (0..=k).map(|j| (2 * j - k) as f32 / k as f32).collect();
+        let t = Tensor::new(vec![grid.len()], grid).unwrap();
+        assert!(t.mean_quantization_error(3) < 1e-6);
+    }
+
+    #[test]
+    fn quantization_error_decreases_with_bits() {
+        let data: Vec<f32> = (0..1000).map(|i| ((i * 37) % 997) as f32 / 997.0 - 0.5).collect();
+        let t = Tensor::new(vec![1000], data).unwrap();
+        let e3 = t.mean_quantization_error(3);
+        let e5 = t.mean_quantization_error(5);
+        let e8 = t.mean_quantization_error(8);
+        assert!(e3 > e5 && e5 > e8, "{e3} {e5} {e8}");
+    }
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        h.add_slice(&[-2.0, -0.9, -0.1, 0.1, 0.9, 2.0]);
+        assert_eq!(h.total, 6);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts, vec![1, 1, 1, 1]);
+        assert!((h.bin_center(0) - (-0.75)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mass_near_levels_detects_clusters() {
+        let mut h = Histogram::new(-1.0, 1.0, 200);
+        for &l in &quant_levels(3) {
+            for d in -2..=2 {
+                h.add(l * 0.999 + d as f32 * 0.001);
+            }
+        }
+        assert!(h.mass_near_levels(&quant_levels(3), 0.05) > 0.95);
+        let mut u = Histogram::new(-1.0, 1.0, 200);
+        for i in 0..1000 {
+            u.add(i as f32 / 500.0 - 1.0);
+        }
+        assert!(u.mass_near_levels(&quant_levels(3), 0.02) < 0.5);
+    }
+
+    #[test]
+    fn quant_levels_structure() {
+        let l = quant_levels(3);
+        assert_eq!(l.len(), 7);
+        assert_eq!(l[0], -1.0);
+        assert_eq!(*l.last().unwrap(), 1.0);
+        assert!(l.contains(&0.0));
+    }
+}

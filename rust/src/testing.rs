@@ -1,0 +1,97 @@
+//! Property-testing mini-framework (proptest is not resolvable offline).
+//!
+//! Seeded case generation on top of `util::rng::Rng`: run a property over N
+//! random cases; on failure report the case index + seed so the exact case
+//! reproduces with `WAVEQ_PROP_SEED`. No shrinking — cases are kept small
+//! by construction instead.
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let seed = std::env::var("WAVEQ_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        PropConfig { cases: 64, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. `gen` builds a case from an Rng.
+/// Panics with the seed + case index on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: &PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).split(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {}):\n  input: {input:?}\n  {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+// ---- common generators -------------------------------------------------------
+
+pub fn gen_f32_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+    let n = 1 + rng.below_usize(max_len);
+    (0..n).map(|_| rng.normal_f32() * scale).collect()
+}
+
+pub fn gen_bits(rng: &mut Rng) -> u32 {
+    2 + rng.below(7) as u32 // [2, 8]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "abs is non-negative",
+            &PropConfig { cases: 32, ..Default::default() },
+            |r| r.normal_f32(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check(
+            "always fails",
+            &PropConfig { cases: 4, ..Default::default() },
+            |r| r.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let b = gen_bits(&mut rng);
+            assert!((2..=8).contains(&b));
+            let v = gen_f32_vec(&mut rng, 50, 1.0);
+            assert!(!v.is_empty() && v.len() <= 50);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser (clap is not resolvable offline).
+//!
+//! Model: `waveq <subcommand> [--flag value]... [--switch]... [positional]...`
+//! Flags may repeat the `--key=value` form. Unknown flags are an error so
+//! typos fail fast.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Declarative spec: which `--flags` take values and which are bare switches.
+pub struct ArgSpec<'a> {
+    pub value_flags: &'a [&'a str],
+    pub switch_flags: &'a [&'a str],
+}
+
+impl Args {
+    pub fn parse(argv: &[String], spec: &ArgSpec) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if spec.switch_flags.contains(&key.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(anyhow!("--{key} takes no value"));
+                    }
+                    out.switches.push(key);
+                } else if spec.value_flags.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("--{key} requires a value"))?
+                            .clone(),
+                    };
+                    out.flags.insert(key, val);
+                } else {
+                    return Err(anyhow!("unknown flag --{key}"));
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad float '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad integer '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec<'static> {
+        ArgSpec {
+            value_flags: &["model", "steps", "lr"],
+            switch_flags: &["verbose", "from-scratch"],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &argv(&["train", "--model", "mlp", "--steps=200", "--verbose", "extra"]),
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 200);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&argv(&["x", "--nope"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv(&["x", "--model"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv(&["x", "--lr", "abc"]), &spec()).unwrap();
+        assert!(a.get_f32("lr", 0.1).is_err());
+        assert_eq!(a.get_f32("steps", 0.5).unwrap(), 0.5);
+    }
+}

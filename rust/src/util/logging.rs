@@ -1,0 +1,82 @@
+//! Minimal leveled logger with wall-clock-since-start prefixes.
+//!
+//! Level comes from `WAVEQ_LOG` (error|warn|info|debug, default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn init() {
+    START.get_or_init(Instant::now);
+    if let Ok(v) = std::env::var("WAVEQ_LOG") {
+        set_level(match v.as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            _ => Level::Info,
+        });
+    }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    eprintln!("[{t:9.3}s {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        init();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,8 @@
+//! Substrate utilities implemented in-crate (the offline environment vendors
+//! only the `xla` closure — no serde/clap/rand/criterion).
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,122 @@
+//! Timing + micro-benchmark support (criterion is not resolvable offline).
+//!
+//! [`BenchRunner`] mirrors the criterion workflow: warmup, timed iterations,
+//! and a summary with mean / p50 / p95 / p99 / throughput. `cargo bench`
+//! targets are `harness = false` binaries built on this.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn from_samples(name: &str, mut samples: Vec<Duration>) -> BenchStats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+        BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean: total / n as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} iters={:<5} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} p99={:>10.3?} min={:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.p99, self.min
+        )
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+pub struct BenchRunner {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup_iters: 3, measure_iters: 20 }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        BenchRunner { warmup_iters: warmup, measure_iters: iters }
+    }
+
+    /// Time `f` (which should do one unit of work); prints and returns stats.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        let stats = BenchStats::from_samples(name, samples);
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+/// Simple scope timer for coarse phase accounting.
+pub struct ScopeTimer {
+    start: Instant,
+}
+
+impl ScopeTimer {
+    pub fn start() -> Self {
+        ScopeTimer { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let samples = (1..=100).map(|i| Duration::from_micros(i)).collect();
+        let s = BenchStats::from_samples("t", samples);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.max, Duration::from_micros(100));
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert_eq!(s.iters, 100);
+    }
+
+    #[test]
+    fn runner_runs() {
+        let mut count = 0;
+        let r = BenchRunner::new(1, 5);
+        let s = r.bench("noop", || count += 1);
+        assert_eq!(count, 6);
+        assert_eq!(s.iters, 5);
+    }
+}

@@ -1,0 +1,187 @@
+//! Coordinator-level integration that doesn't need the XLA runtime:
+//! schedule/phase-controller dynamics, bitwidth management, pareto over
+//! the energy model, metrics plumbing.
+
+use waveq::coordinator::{BitAssignment, MetricsRecorder};
+use waveq::energy::{Stripes, StripesCfg};
+use waveq::pareto::{enumerate_assignments, is_dominated, pareto_frontier, DesignPoint};
+use waveq::runtime::{Manifest, ModelMeta};
+use waveq::schedule::{Phase, PhaseController, ScheduleCfg};
+use waveq::util::json::Json;
+
+fn toy_model() -> ModelMeta {
+    ModelMeta {
+        name: "toy".into(),
+        input_shape: [8, 8, 3],
+        num_classes: 10,
+        batch: 16,
+        width_mult: 1,
+        num_qlayers: 3,
+        params: vec![
+            waveq::runtime::ParamMeta {
+                name: "c1".into(), shape: vec![3, 3, 3, 8], kind: "conv".into(), init: "he".into(),
+                qidx: None, macs: 110_592, count: 216,
+            },
+            waveq::runtime::ParamMeta {
+                name: "c2".into(), shape: vec![3, 3, 8, 16], kind: "conv".into(), init: "he".into(),
+                qidx: Some(0), macs: 294_912, count: 1_152,
+            },
+            waveq::runtime::ParamMeta {
+                name: "c3".into(), shape: vec![3, 3, 16, 16], kind: "conv".into(), init: "he".into(),
+                qidx: Some(1), macs: 147_456, count: 2_304,
+            },
+            waveq::runtime::ParamMeta {
+                name: "f1".into(), shape: vec![256, 64], kind: "fc".into(), init: "he".into(),
+                qidx: Some(2), macs: 16_384, count: 16_384,
+            },
+        ],
+    }
+}
+
+#[test]
+fn full_phase_lifecycle() {
+    let cfg = ScheduleCfg { total_steps: 400, ..Default::default() };
+    let mut pc = PhaseController::new(cfg);
+    pc.window = 10;
+    let mut phases_seen = Vec::new();
+    let mut beta = vec![6.0f32, 5.5];
+    for step in 0..400 {
+        let phase = pc.phase(step);
+        if phases_seen.last() != Some(&phase) {
+            phases_seen.push(phase);
+        }
+        let (lw, lb, flag) = pc.knobs(step);
+        match phase {
+            Phase::Explore => {
+                assert_eq!((lw, lb, flag), (0.0, 0.0, 0.0));
+            }
+            Phase::Engage => {
+                assert_eq!(flag, 1.0);
+                // Simulate beta converging toward 4 bits.
+                for b in beta.iter_mut() {
+                    *b += (4.0 - *b) * 0.2;
+                }
+            }
+            Phase::Freeze => {
+                assert_eq!(flag, 0.0);
+                assert_eq!(lw, pc.cfg.lambda_w_max);
+            }
+        }
+        pc.observe_beta(step, &beta);
+    }
+    assert_eq!(phases_seen, vec![Phase::Explore, Phase::Engage, Phase::Freeze]);
+    // Freeze must have happened via stability, well before engage_end.
+    assert!(pc.freeze_step.unwrap() < pc.cfg.engage_end());
+}
+
+#[test]
+fn bit_assignment_lifecycle_matches_controller() {
+    // As used by the trainer at freeze time.
+    let beta = vec![3.4f32, 6.9, 2.0];
+    let a = BitAssignment::from_beta(&beta);
+    assert_eq!(a.bits, vec![4, 7, 2]);
+    let snapped = a.snapped_beta();
+    let b = BitAssignment::from_beta(&snapped);
+    assert_eq!(b.bits, a.bits, "snapping must be idempotent w.r.t. bits");
+    assert!(b.alpha.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+}
+
+#[test]
+fn energy_pareto_composition() {
+    // Enumerate a 3-layer space, score compute with Stripes, accuracy with a
+    // synthetic monotone model; frontier must contain the all-8 and exclude
+    // dominated interior points.
+    let model = toy_model();
+    let stripes = Stripes::new(StripesCfg::default());
+    let space = enumerate_assignments(3, 2, 8);
+    let points: Vec<DesignPoint> = space
+        .iter()
+        .map(|bits| {
+            let compute = stripes.relative_compute(&model, bits);
+            // Synthetic accuracy: saturating in total bits, noise-free.
+            let tot: u32 = bits.iter().sum();
+            let accuracy = 1.0 - (-(tot as f64) / 8.0).exp();
+            DesignPoint { bits: bits.clone(), compute, accuracy }
+        })
+        .collect();
+    let frontier = pareto_frontier(&points);
+    assert!(!frontier.is_empty());
+    for &i in &frontier {
+        assert!(!is_dominated(&points[i], &points));
+    }
+    // Energy strictly increases along the frontier with accuracy.
+    for w in frontier.windows(2) {
+        assert!(points[w[1]].compute > points[w[0]].compute);
+        assert!(points[w[1]].accuracy > points[w[0]].accuracy);
+    }
+}
+
+#[test]
+fn stripes_saving_reacts_to_heterogeneous_assignments() {
+    let model = toy_model();
+    let stripes = Stripes::default();
+    // Lowering bits on the MAC-heaviest layer (qidx 0) saves more than on fc.
+    let heavy_low = stripes.saving_vs_baseline(&model, &[2, 8, 8], 8);
+    let light_low = stripes.saving_vs_baseline(&model, &[8, 8, 2], 8);
+    assert!(heavy_low > light_low);
+}
+
+#[test]
+fn metrics_csv_and_json_round_trip() {
+    let mut m = MetricsRecorder::new();
+    for step in 0..50 {
+        m.add(step, "loss", 2.0 / (step + 1) as f64);
+        if step % 10 == 0 {
+            m.add(step, "test_acc", step as f64 / 50.0);
+        }
+    }
+    let csv = m.to_csv();
+    assert_eq!(csv.lines().count(), 51);
+    let j = Json::parse(&m.to_json().to_string()).unwrap();
+    assert_eq!(j.get("loss").unwrap().as_arr().unwrap().len(), 50);
+    assert_eq!(j.get("test_acc").unwrap().as_arr().unwrap().len(), 5);
+}
+
+#[test]
+fn manifest_json_round_trip_through_own_writer() {
+    // Build a manifest JSON with our writer, parse with the manifest loader.
+    let j = Json::obj(vec![
+        (
+            "programs",
+            Json::obj(vec![(
+                "p1",
+                Json::obj(vec![
+                    ("file", Json::Str("p1.hlo.txt".into())),
+                    ("model", Json::Str("toy".into())),
+                    (
+                        "inputs",
+                        Json::Arr(vec![Json::obj(vec![
+                            ("name", Json::Str("x".into())),
+                            ("shape", Json::arr_usize(&[4, 4])),
+                            ("dtype", Json::Str("float32".into())),
+                        ])]),
+                    ),
+                    ("outputs", Json::Arr(vec![Json::Str("loss".into())])),
+                ]),
+            )]),
+        ),
+        (
+            "models",
+            Json::obj(vec![(
+                "toy",
+                Json::obj(vec![
+                    ("name", Json::Str("toy".into())),
+                    ("input_shape", Json::arr_usize(&[8, 8, 3])),
+                    ("num_classes", Json::Num(10.0)),
+                    ("batch", Json::Num(16.0)),
+                    ("width_mult", Json::Num(1.0)),
+                    ("num_qlayers", Json::Num(0.0)),
+                    ("params", Json::Arr(vec![])),
+                ]),
+            )]),
+        ),
+    ]);
+    let man = Manifest::from_json(&j).unwrap();
+    assert_eq!(man.program("p1").unwrap().inputs[0].shape, vec![4, 4]);
+    assert_eq!(man.model("toy").unwrap().input_shape, [8, 8, 3]);
+}

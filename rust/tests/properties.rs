@@ -1,0 +1,316 @@
+//! Property-based tests over the coordinator's invariants (DESIGN.md §7),
+//! using the in-crate prop framework (proptest is not resolvable offline).
+
+use waveq::coordinator::{ceil_bits, BitAssignment};
+use waveq::data::{Batcher, Dataset, DatasetSpec};
+use waveq::energy::Stripes;
+use waveq::pareto::{accuracy_gap_to_frontier, is_dominated, pareto_frontier, DesignPoint};
+use waveq::runtime::{ModelMeta, ParamMeta};
+use waveq::schedule::{PhaseController, ScheduleCfg};
+use waveq::testing::{check, gen_bits, PropConfig};
+use waveq::util::json::Json;
+use waveq::util::rng::Rng;
+
+fn cfg() -> PropConfig {
+    PropConfig { cases: 64, ..Default::default() }
+}
+
+#[test]
+fn prop_bit_assignment_invariants() {
+    check(
+        "beta -> (b, alpha) invariants (Eq. 2.4)",
+        &cfg(),
+        |r| {
+            let n = 1 + r.below_usize(20);
+            (0..n).map(|_| 1.0 + 7.0 * r.uniform_f32()).collect::<Vec<f32>>()
+        },
+        |beta| {
+            let a = BitAssignment::from_beta(beta);
+            for (i, (&be, &b)) in beta.iter().zip(&a.bits).enumerate() {
+                if !(2..=8).contains(&b) {
+                    return Err(format!("bits[{i}]={b} out of range"));
+                }
+                if be > 2.0 && be <= 8.0 && b != be.ceil() as u32 {
+                    return Err(format!("bits[{i}]={b} != ceil({be})"));
+                }
+                let alpha = a.alpha[i];
+                if !(alpha >= 0.99 && alpha.is_finite()) && be >= 2.0 {
+                    return Err(format!("alpha[{i}]={alpha} < 1"));
+                }
+            }
+            let avg = a.average_bits();
+            if !(2.0..=8.0).contains(&avg) {
+                return Err(format!("avg {avg}"));
+            }
+            // kw = 2^b - 1 exactly
+            for (&b, &k) in a.bits.iter().zip(&a.kw()) {
+                if k != (2u64.pow(b) - 1) as f32 {
+                    return Err(format!("kw mismatch for b={b}: {k}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ceil_bits_total() {
+    check(
+        "ceil_bits clamps to [2,8] for any finite input",
+        &cfg(),
+        |r| (r.normal_f32() * 10.0, gen_bits(r)),
+        |&(x, _)| {
+            let b = ceil_bits(x);
+            if (2..=8).contains(&b) {
+                Ok(())
+            } else {
+                Err(format!("ceil_bits({x}) = {b}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_pareto_frontier_sound_and_complete() {
+    check(
+        "frontier = exactly the non-dominated set",
+        &cfg(),
+        |r| {
+            let n = 2 + r.below_usize(60);
+            (0..n)
+                .map(|_| DesignPoint {
+                    bits: vec![],
+                    compute: r.uniform(),
+                    accuracy: r.uniform(),
+                })
+                .collect::<Vec<_>>()
+        },
+        |points| {
+            let frontier = pareto_frontier(points);
+            let fset: std::collections::HashSet<usize> = frontier.iter().copied().collect();
+            for (i, p) in points.iter().enumerate() {
+                let dominated = is_dominated(p, points);
+                // Non-dominated points must be on the frontier, except exact
+                // duplicates (frontier keeps one representative).
+                let dup_on_frontier = frontier.iter().any(|&f| {
+                    f != i
+                        && points[f].compute == p.compute
+                        && points[f].accuracy == p.accuracy
+                });
+                if !dominated && !fset.contains(&i) && !dup_on_frontier {
+                    return Err(format!("non-dominated point {i} missing from frontier"));
+                }
+                if dominated && fset.contains(&i) {
+                    return Err(format!("dominated point {i} on frontier"));
+                }
+            }
+            // Frontier points have non-positive gap to the frontier.
+            for &i in &frontier {
+                if accuracy_gap_to_frontier(&points[i], points) > 1e-9 {
+                    return Err(format!("frontier point {i} has positive gap"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn random_model(r: &mut Rng) -> ModelMeta {
+    let q = 1 + r.below_usize(8);
+    let mut params = Vec::new();
+    for i in 0..q + 2 {
+        let qidx = if i == 0 || i == q + 1 { None } else { Some(i - 1) };
+        params.push(ParamMeta {
+            name: format!("l{i}"),
+            shape: vec![3, 3, 4, 4],
+            kind: "conv".into(), init: "he".into(),
+            qidx,
+            macs: 1000 + r.below(1_000_000),
+            count: 100 + r.below(10_000),
+        });
+    }
+    ModelMeta {
+        name: "rand".into(),
+        input_shape: [8, 8, 3],
+        num_classes: 10,
+        batch: 8,
+        width_mult: 1,
+        num_qlayers: q,
+        params,
+    }
+}
+
+#[test]
+fn prop_energy_monotone_in_every_layer() {
+    check(
+        "raising any layer's bits never lowers energy or cycles",
+        &cfg(),
+        |r| {
+            let m = random_model(r);
+            let bits: Vec<u32> = (0..m.num_qlayers).map(|_| 2 + r.below(6) as u32).collect();
+            let layer = r.below_usize(m.num_qlayers);
+            (m, bits, layer)
+        },
+        |(m, bits, layer)| {
+            let s = Stripes::default();
+            let base = s.evaluate(m, bits, 8, 8);
+            let mut up = bits.clone();
+            up[*layer] += 1;
+            let more = s.evaluate(m, &up, 8, 8);
+            if more.total_energy < base.total_energy {
+                return Err("energy decreased".into());
+            }
+            if more.total_cycles < base.total_cycles {
+                return Err("cycles decreased".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_bounds_and_transition() {
+    check(
+        "lambda profiles bounded; phase flip is permanent",
+        &cfg(),
+        |r| {
+            let steps = 50 + r.below_usize(500);
+            let explore = 0.05 + 0.3 * r.uniform();
+            let engage = 0.2 + 0.5 * r.uniform();
+            (steps, explore, engage.min(0.95 - explore), r.next_u64())
+        },
+        |&(steps, explore_frac, engage_frac, seed)| {
+            let cfg = ScheduleCfg {
+                total_steps: steps,
+                explore_frac,
+                engage_frac,
+                ..Default::default()
+            };
+            let mut pc = PhaseController::new(cfg.clone());
+            pc.window = 5;
+            let mut r = Rng::new(seed);
+            let mut frozen_at: Option<usize> = None;
+            for step in 0..steps {
+                let (lw, lb, flag) = pc.knobs(step);
+                if !(0.0..=cfg.lambda_w_max).contains(&lw) {
+                    return Err(format!("lambda_w {lw} out of bounds at {step}"));
+                }
+                if !(0.0..=cfg.lambda_beta_max).contains(&lb) {
+                    return Err(format!("lambda_beta {lb} out of bounds at {step}"));
+                }
+                if frozen_at.is_some() && flag != 0.0 {
+                    return Err(format!("beta_train reactivated after freeze at {step}"));
+                }
+                let beta = vec![4.0 + 0.5 * r.normal_f32() * if frozen_at.is_some() { 0.0 } else { 1.0 }];
+                if pc.observe_beta(step, &beta) {
+                    frozen_at = Some(step);
+                }
+            }
+            // By the end of the run the controller must have frozen.
+            if pc.freeze_step.is_none() && steps > cfg.engage_end() {
+                return Err("never froze despite passing engage_end".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_one_hot_validity_any_size() {
+    check(
+        "batcher emits valid one-hots for any batch/dataset combo",
+        &PropConfig { cases: 24, ..Default::default() },
+        |r| {
+            let n = 32 + r.below_usize(96);
+            let batch = 1 + r.below_usize(n.min(32));
+            (n, batch, r.next_u64())
+        },
+        |&(n, batch, seed)| {
+            let spec = DatasetSpec {
+                name: "prop".into(),
+                h: 4, w: 4, c: 2, n_classes: 5,
+                noise: 0.5, jitter: 1.0, gratings: 2, blobs: 1, class_sep: 0.5,
+            };
+            let ds = Dataset::generate(spec, n, seed, 0);
+            let mut b = Batcher::new(ds, batch, seed);
+            for _ in 0..4 {
+                let bt = b.next_batch();
+                if bt.x.len() != batch * 4 * 4 * 2 {
+                    return Err("x size".into());
+                }
+                for row in 0..batch {
+                    let s: f32 = bt.y[row * 5..(row + 1) * 5].iter().sum();
+                    if (s - 1.0).abs() > 1e-6 {
+                        return Err(format!("one-hot row sum {s}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_round_trip_fuzz() {
+    fn gen_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.uniform() < 0.5),
+            2 => Json::Num((r.normal() * 1e3).round() / 8.0),
+            3 => {
+                let n = r.below_usize(12);
+                Json::Str((0..n).map(|_| char::from(32 + r.below(90) as u8)).collect())
+            }
+            4 => {
+                let n = r.below_usize(5);
+                Json::Arr((0..n).map(|_| gen_json(r, depth - 1)).collect())
+            }
+            _ => {
+                let n = r.below_usize(5);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), gen_json(r, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    check(
+        "parse(to_string(v)) == v",
+        &cfg(),
+        |r| gen_json(r, 3),
+        |v| {
+            let s = v.to_string();
+            match Json::parse(&s) {
+                Ok(back) if back == *v => Ok(()),
+                Ok(back) => Err(format!("mismatch: {s} -> {back:?}")),
+                Err(e) => Err(format!("reparse failed: {e} on {s}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_decrement_layer_never_increases_energy() {
+    check(
+        "fig5 sensitivity move reduces (or keeps) Stripes energy",
+        &cfg(),
+        |r| {
+            let m = random_model(r);
+            let bits: Vec<u32> = (0..m.num_qlayers).map(|_| 2 + r.below(7) as u32).collect();
+            let layer = r.below_usize(m.num_qlayers);
+            (m, bits, layer)
+        },
+        |(m, bits, layer)| {
+            let a = BitAssignment { bits: bits.clone(), alpha: vec![1.0; bits.len()] };
+            let d = a.decrement_layer(*layer);
+            let s = Stripes::default();
+            let e0 = s.evaluate(m, &a.bits, 8, 8).total_energy;
+            let e1 = s.evaluate(m, &d.bits, 8, 8).total_energy;
+            if e1 > e0 {
+                return Err("decrement increased energy".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,140 @@
+//! Runtime integration: every artifact in the manifest loads, compiles and
+//! executes with correctly-shaped inputs; literal plumbing round-trips.
+//!
+//! Requires `make artifacts` (skips cleanly if absent, like the pytest gate).
+
+use waveq::runtime::{literal_f32, scalar_f32, to_scalar_f32, to_vec_f32, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = waveq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open runtime"))
+}
+
+fn dummy_args(rt: &Runtime, prog: &str) -> Vec<xla::Literal> {
+    let sig = rt.sig(prog).unwrap();
+    sig.inputs
+        .iter()
+        .map(|a| {
+            if a.shape.is_empty() {
+                return scalar_f32(match a.name.as_str() {
+                    "lr" => 0.01,
+                    "mom" => 0.9,
+                    "lr_beta" => 0.01,
+                    "ka" => 15.0,
+                    "lambda_w" => 0.1,
+                    "lambda_beta" => 0.01,
+                    "beta_train" => 1.0,
+                    _ => 0.5,
+                });
+            }
+            let n = a.elem_count();
+            let data: Vec<f32> = match a.name.as_str() {
+                "beta" => vec![4.0; n],
+                "kw" => vec![7.0; n],
+                "y" => {
+                    // valid one-hots
+                    let classes = *a.shape.last().unwrap();
+                    let mut v = vec![0.0; n];
+                    for r in 0..a.shape[0] {
+                        v[r * classes + r % classes] = 1.0;
+                    }
+                    v
+                }
+                name if name.starts_with("w:") => {
+                    (0..n).map(|i| ((i as f32 * 0.37).sin()) * 0.1).collect()
+                }
+                "x" | "wgrid" => (0..n).map(|i| (i as f32 * 0.11).sin()).collect(),
+                "bgrid" => (0..n).map(|i| 1.0 + 7.0 * i as f32 / n as f32).collect(),
+                _ => vec![0.0; n],
+            };
+            literal_f32(&data, &a.shape).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_models_are_consistent() {
+    let Some(rt) = runtime() else { return };
+    for (name, m) in &rt.manifest.models {
+        assert!(m.num_params() > 0, "{name} has no params");
+        assert!(m.total_macs() > 0, "{name} has no MACs");
+        let qidx = m.qlayer_param_indices();
+        assert_eq!(qidx.len(), m.num_qlayers, "{name} qlayer count mismatch");
+        // first/last compute layers are full precision (paper §4.1)
+        let compute: Vec<_> = m
+            .params
+            .iter()
+            .filter(|p| matches!(p.kind.as_str(), "conv" | "dwconv" | "fc"))
+            .collect();
+        assert!(compute.first().unwrap().qidx.is_none(), "{name} first layer quantized");
+        assert!(compute.last().unwrap().qidx.is_none(), "{name} last layer quantized");
+    }
+}
+
+#[test]
+fn every_program_loads_and_executes() {
+    let Some(rt) = runtime() else { return };
+    // Keep runtime bounded: the mlp family + one per big-model family + reg_profile.
+    let mut picked: Vec<String> = rt
+        .manifest
+        .programs
+        .keys()
+        .filter(|n| n.contains("mlp") || n.as_str() == "reg_profile")
+        .cloned()
+        .collect();
+    picked.push("eval_quant_simplenet5".into());
+    picked.push("train_waveq_vgg11l".into());
+    for prog in picked {
+        if rt.manifest.program(&prog).is_err() {
+            continue;
+        }
+        let args = dummy_args(&rt, &prog);
+        let outs = rt.execute(&prog, &args).unwrap_or_else(|e| panic!("{prog}: {e:#}"));
+        let sig = rt.sig(&prog).unwrap();
+        assert_eq!(outs.len(), sig.outputs.len(), "{prog} output arity");
+        if let Ok(i) = sig.output_index("loss") {
+            let loss = to_scalar_f32(&outs[i]).unwrap();
+            assert!(loss.is_finite(), "{prog} loss not finite");
+        }
+    }
+}
+
+#[test]
+fn wrong_arg_count_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let args = vec![scalar_f32(0.0)];
+    assert!(rt.execute("train_fp32_mlp", &args).is_err());
+}
+
+#[test]
+fn literal_round_trip_preserves_data_and_shape() {
+    let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5 - 3.0).collect();
+    let lit = literal_f32(&data, &[2, 3, 4]).unwrap();
+    assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    assert!(literal_f32(&data, &[5, 5]).is_err());
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let args = dummy_args(&rt, "eval_fp32_mlp");
+    rt.execute("eval_fp32_mlp", &args).unwrap();
+    let c1 = rt.stats().compiles;
+    rt.execute("eval_fp32_mlp", &args).unwrap();
+    assert_eq!(rt.stats().compiles, c1, "recompiled a cached executable");
+}
+
+#[test]
+fn train_step_determinism() {
+    let Some(rt) = runtime() else { return };
+    let args = dummy_args(&rt, "train_fp32_mlp");
+    let sig = rt.sig("train_fp32_mlp").unwrap();
+    let li = sig.output_index("loss").unwrap();
+    let a = to_scalar_f32(&rt.execute("train_fp32_mlp", &args).unwrap()[li]).unwrap();
+    let b = to_scalar_f32(&rt.execute("train_fp32_mlp", &args).unwrap()[li]).unwrap();
+    assert_eq!(a, b, "same inputs must give bit-identical loss");
+}

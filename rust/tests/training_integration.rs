@@ -1,0 +1,186 @@
+//! Training integration: short end-to-end runs through the full coordinator
+//! for every algorithm family, checking learning actually happens and the
+//! orchestration invariants hold.
+
+use waveq::config::{Algo, RunConfig};
+use waveq::coordinator::{Checkpoint, TrainOptions, Trainer};
+use waveq::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = waveq::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("open runtime"))
+}
+
+fn quick_cfg(algo: Algo, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        model: "mlp".into(),
+        algo,
+        weight_bits: 4,
+        act_bits: 32,
+        steps,
+        train_examples: 1024,
+        test_examples: 256,
+        lr: 0.05,
+        lr_beta: 0.05,
+        seed: 7,
+        ..Default::default()
+    };
+    cfg.schedule.total_steps = steps;
+    cfg
+}
+
+fn loss_decreased(out: &waveq::coordinator::TrainOutcome) -> bool {
+    let first = out.metrics.get("loss").first().map(|&(_, v)| v).unwrap();
+    let last = out.metrics.tail_mean("loss", 5).unwrap();
+    last < first
+}
+
+#[test]
+fn fp32_learns() {
+    let Some(rt) = runtime() else { return };
+    let out = Trainer::new(&rt, quick_cfg(Algo::Fp32, 40)).run().unwrap();
+    assert!(loss_decreased(&out));
+    assert!(out.test_acc > 0.3, "acc {}", out.test_acc);
+}
+
+#[test]
+fn dorefa_learns_and_uses_preset_bits() {
+    let Some(rt) = runtime() else { return };
+    let out = Trainer::new(&rt, quick_cfg(Algo::Dorefa, 40)).run().unwrap();
+    assert!(loss_decreased(&out));
+    assert!(out.assignment.bits.iter().all(|&b| b == 4));
+}
+
+#[test]
+fn wrpn_learns_on_widened_model() {
+    let Some(rt) = runtime() else { return };
+    let out = Trainer::new(&rt, quick_cfg(Algo::Wrpn, 40)).run().unwrap();
+    assert_eq!(out.model_key, "mlp_w2");
+    assert!(loss_decreased(&out));
+}
+
+#[test]
+fn waveq_preset_keeps_beta_fixed() {
+    let Some(rt) = runtime() else { return };
+    let out = Trainer::new(&rt, quick_cfg(Algo::WaveqPreset, 40)).run().unwrap();
+    assert!(out.state.beta.iter().all(|&b| (b - 4.0).abs() < 1e-5));
+    assert!(out.freeze_step.is_none());
+    // lambda_beta must never engage in preset mode
+    assert!(out.metrics.get("lambda_beta").iter().all(|&(_, v)| v == 0.0));
+}
+
+#[test]
+fn waveq_learned_freezes_and_snaps_beta() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick_cfg(Algo::WaveqLearned, 80);
+    cfg.beta_init = 6.0;
+    let out = Trainer::new(&rt, cfg).run().unwrap();
+    assert!(out.freeze_step.is_some(), "beta never froze");
+    // After freeze, beta is snapped to integers in [2, 8].
+    for &b in &out.state.beta {
+        assert!((b - b.round()).abs() < 1e-6, "beta {b} not snapped");
+        assert!((2.0..=8.0).contains(&b));
+    }
+    assert_eq!(
+        out.assignment.bits,
+        out.state.beta.iter().map(|&b| b as u32).collect::<Vec<_>>()
+    );
+    // beta_mean series must exist and eventually stabilize.
+    assert!(!out.metrics.get("beta_mean").is_empty());
+}
+
+#[test]
+fn schedule_phases_recorded_in_metrics() {
+    let Some(rt) = runtime() else { return };
+    let out = Trainer::new(&rt, quick_cfg(Algo::WaveqLearned, 60)).run().unwrap();
+    let lw = out.metrics.get("lambda_w");
+    // Phase 1: zeros at the start.
+    assert_eq!(lw.first().unwrap().1, 0.0);
+    // Engaged later.
+    assert!(lw.iter().any(|&(_, v)| v > 0.0));
+}
+
+#[test]
+fn tracking_produces_snapshots() {
+    let Some(rt) = runtime() else { return };
+    let opts = TrainOptions {
+        track: vec![
+            waveq::coordinator::TrackRequest {
+                param: 2,
+                every: 10,
+                kind: waveq::coordinator::TrackKind::Weights { count: 5 },
+            },
+            waveq::coordinator::TrackRequest {
+                param: 2,
+                every: 20,
+                kind: waveq::coordinator::TrackKind::Histogram { bins: 32, lo: -1.0, hi: 1.0 },
+            },
+        ],
+        ..Default::default()
+    };
+    let out = Trainer::with_options(&rt, quick_cfg(Algo::WaveqPreset, 40), opts).run().unwrap();
+    let weights: Vec<_> = out.snapshots.iter().filter(|s| s.weights.is_some()).collect();
+    let hists: Vec<_> = out.snapshots.iter().filter(|s| s.histogram.is_some()).collect();
+    assert_eq!(weights.len(), 4);
+    assert_eq!(hists.len(), 2);
+    assert_eq!(weights[0].weights.as_ref().unwrap().len(), 5);
+}
+
+#[test]
+fn checkpoint_fine_tune_round_trip() {
+    let Some(rt) = runtime() else { return };
+    let out = Trainer::new(&rt, quick_cfg(Algo::Fp32, 30)).run().unwrap();
+    let model = rt.manifest.model(&out.model_key).unwrap();
+    let path = std::env::temp_dir().join("waveq_it_ckpt.bin");
+    Checkpoint {
+        tensors: out
+            .state
+            .all_params(model)
+            .unwrap()
+            .into_iter()
+            .zip(&model.params)
+            .map(|(t, p)| (p.name.clone(), t))
+            .collect(),
+        beta: out.state.beta.clone(),
+        vbeta: out.state.vbeta.clone(),
+    }
+    .save(&path)
+    .unwrap();
+
+    // Fine-tune from the checkpoint: must start well above chance.
+    let opts = TrainOptions {
+        init_from: Some(path.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    let ft = Trainer::with_options(&rt, quick_cfg(Algo::WaveqPreset, 10), opts).run().unwrap();
+    let first_acc = ft.metrics.get("acc").first().unwrap().1;
+    assert!(
+        first_acc > 0.3,
+        "fine-tune should start from pretrained weights, acc {first_acc}"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn determinism_same_seed_same_outcome() {
+    let Some(rt) = runtime() else { return };
+    let a = Trainer::new(&rt, quick_cfg(Algo::Dorefa, 20)).run().unwrap();
+    let b = Trainer::new(&rt, quick_cfg(Algo::Dorefa, 20)).run().unwrap();
+    assert_eq!(a.test_acc, b.test_acc);
+    assert_eq!(
+        a.metrics.get("loss").last().unwrap().1,
+        b.metrics.get("loss").last().unwrap().1
+    );
+}
+
+#[test]
+fn invalid_model_is_a_clean_error() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = quick_cfg(Algo::Fp32, 5);
+    cfg.model = "nonexistent".into();
+    assert!(Trainer::new(&rt, cfg).run().is_err());
+}
