@@ -1,35 +1,34 @@
-//! Runtime microbenches: XLA compile latency, per-step execution latency /
-//! throughput per model family, literal marshalling cost, data pipeline.
-//! The L3 §Perf numbers in EXPERIMENTS.md come from here.
+//! Runtime microbenches: program compile latency, per-step execution
+//! latency / throughput per model family, buffer marshalling cost, data
+//! pipeline. The L3 §Perf numbers in EXPERIMENTS.md come from here.
+//!
+//! Runs against the AOT artifacts when built (`make artifacts`), otherwise
+//! against the hermetic native backend.
 
 use waveq::bench_support::{header, row, BenchRunner};
 use waveq::config::{Algo, RunConfig};
 use waveq::coordinator::Trainer;
 use waveq::data::{spec, Batcher, Dataset};
-use waveq::runtime::{literal_f32, scalar_f32, to_vec_f32, Runtime};
+use waveq::runtime::{buffer_f32, scalar_f32, to_vec_f32, Buffer, Runtime};
 
 fn main() {
     waveq::util::logging::init();
-    let dir = waveq::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("bench_runtime: artifacts not built, skipping");
-        return;
-    }
-    let rt = Runtime::open(&dir).unwrap();
+    let rt = Runtime::open(&waveq::artifacts_dir()).unwrap();
     header("runtime");
+    println!("platform: {}", rt.platform());
 
     // --- literal marshalling ------------------------------------------------
     let runner = BenchRunner::new(3, 50);
     let data: Vec<f32> = (0..64 * 16 * 16 * 3).map(|i| i as f32).collect();
-    let s = runner.bench("literal_f32 upload 196KB", || {
-        let _ = literal_f32(&data, &[64, 16, 16, 3]).unwrap();
+    let s = runner.bench("buffer_f32 upload 196KB", || {
+        let _ = buffer_f32(&data, &[64, 16, 16, 3]).unwrap();
     });
-    row(&["literal_upload_196KB", &format!("{:.3?}", s.mean)]);
-    let lit = literal_f32(&data, &[64, 16, 16, 3]).unwrap();
-    let s = runner.bench("literal to_vec download 196KB", || {
+    row(&["buffer_upload_196KB", &format!("{:.3?}", s.mean)]);
+    let lit = buffer_f32(&data, &[64, 16, 16, 3]).unwrap();
+    let s = runner.bench("buffer to_vec download 196KB", || {
         let _ = to_vec_f32(&lit).unwrap();
     });
-    row(&["literal_download_196KB", &format!("{:.3?}", s.mean)]);
+    row(&["buffer_download_196KB", &format!("{:.3?}", s.mean)]);
 
     // --- data pipeline --------------------------------------------------------
     let ds = Dataset::generate(spec("cifar-lite"), 4096, 1, 0);
@@ -45,15 +44,16 @@ fn main() {
 
     // --- per-program step latency ------------------------------------------
     for prog in ["train_fp32_mlp", "train_waveq_mlp", "train_fp32_simplenet5", "train_waveq_simplenet5"] {
-        if rt.manifest.program(prog).is_err() {
+        // warm compile outside the timing loop; report compile separately.
+        // Skips programs the manifest lacks AND programs the active backend
+        // can't serve (e.g. AOT-manifest conv programs on the native backend).
+        let t0 = std::time::Instant::now();
+        if rt.warmup(&[prog]).is_err() {
             continue;
         }
-        // warm compile outside the timing loop; report compile separately
-        let t0 = std::time::Instant::now();
-        rt.warmup(&[prog]).unwrap();
         let compile = t0.elapsed();
         let sig = rt.sig(prog).unwrap().clone();
-        let args: Vec<xla::Literal> = sig
+        let args: Vec<Buffer> = sig
             .inputs
             .iter()
             .map(|a| {
@@ -67,7 +67,7 @@ fn main() {
                     let n = a.elem_count();
                     let v: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.1).sin() * 0.1).collect();
                     let v = if a.name == "beta" { vec![4.0; n] } else { v };
-                    literal_f32(&v, &a.shape).unwrap()
+                    buffer_f32(&v, &a.shape).unwrap()
                 }
             })
             .collect();

@@ -3,7 +3,7 @@
 //! print the compute/accuracy frontier with the learned solution located on
 //! it (the Figure-4 analysis, as a library-API walkthrough).
 //!
-//!   make artifacts && cargo run --release --example pareto_sweep
+//!   cargo run --release --example pareto_sweep
 
 use anyhow::Result;
 use waveq::config::{Algo, RunConfig};

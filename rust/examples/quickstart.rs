@@ -1,7 +1,7 @@
 //! Quickstart: train a small MLP with WaveQ's learned per-layer bitwidths
 //! and compare against the fp32 and plain-DoReFa baselines.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 //!
 //! Walks through the public API in ~60 lines: open the runtime, build a
 //! config, run the trainer, inspect the learned assignment and energy.
@@ -15,7 +15,8 @@ use waveq::runtime::Runtime;
 fn main() -> Result<()> {
     waveq::util::logging::init();
 
-    // 1. Open the AOT artifacts (HLO text + manifest) through PJRT.
+    // 1. Open the runtime: AOT artifacts when built (with `--features
+    //    pjrt`), otherwise the hermetic pure-Rust native backend.
     let rt = Runtime::open(&waveq::artifacts_dir())?;
     println!("platform: {}", rt.platform());
 

@@ -4,10 +4,10 @@
 //! vanishing/exploding-gradient comparison of the three normalization
 //! variants (Figure 3).
 //!
-//!   make artifacts && cargo run --release --example regularizer_landscape
+//!   cargo run --release --example regularizer_landscape
 
 use anyhow::Result;
-use waveq::runtime::{literal_f32, to_vec_f32, Runtime};
+use waveq::runtime::{buffer_f32, to_vec_f32, Runtime};
 
 const N_W: usize = 512;
 const N_B: usize = 256;
@@ -20,7 +20,7 @@ fn main() -> Result<()> {
     let b: Vec<f32> = (0..N_B).map(|i| 1.0 + 7.0 * i as f32 / (N_B - 1) as f32).collect();
     let outs = rt.execute(
         "reg_profile",
-        &[literal_f32(&w, &[N_W])?, literal_f32(&b, &[N_B])?],
+        &[buffer_f32(&w, &[N_W])?, buffer_f32(&b, &[N_B])?],
     )?;
     let r1 = to_vec_f32(&outs[3])?; // (N_W, N_B), norm = 1
 

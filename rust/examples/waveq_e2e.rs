@@ -4,7 +4,7 @@
 //! freeze, the learned heterogeneous bitwidths, and the final comparison
 //! against fp32 and plain DoReFa — plus the Stripes energy saving.
 //!
-//!   make artifacts && cargo run --release --example waveq_e2e
+//!   cargo run --release --example waveq_e2e
 //!
 //! The numbers this prints are the ones recorded in EXPERIMENTS.md §E2E.
 

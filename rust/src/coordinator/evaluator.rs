@@ -4,10 +4,9 @@
 //! assignments against one trained state), and the Fig. 5 sensitivity scan.
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
 
 use crate::data::{spec_for_input, Batcher, Dataset};
-use crate::runtime::{literal_f32, scalar_f32, to_scalar_f32, ModelMeta, Runtime};
+use crate::runtime::{buffer_f32, scalar_f32, to_scalar_f32, Buffer, ModelMeta, Runtime};
 
 /// Deterministic held-out batcher for a model (stream 1 never overlaps train).
 pub fn test_batcher(model: &ModelMeta, n_examples: usize, seed: u64) -> Batcher {
@@ -24,7 +23,7 @@ pub fn evaluate(
     rt: &Runtime,
     eval_prog: &str,
     model: &ModelMeta,
-    params: &[Literal],
+    params: &[Buffer],
     kw: Option<&[f32]>,
     ka: f32,
     test: &Batcher,
@@ -39,12 +38,12 @@ pub fn evaluate(
     let (mut loss_sum, mut acc_sum) = (0f64, 0f64);
     for b in &batches {
         // Positional: [w..., x, y, (kw, ka)?]
-        let x = literal_f32(
+        let x = buffer_f32(
             &b.x,
             &[model.batch, model.input_shape[0], model.input_shape[1], model.input_shape[2]],
         )?;
-        let y = literal_f32(&b.y, &[model.batch, model.num_classes])?;
-        let extra: Vec<Literal> = match kw {
+        let y = buffer_f32(&b.y, &[model.batch, model.num_classes])?;
+        let extra: Vec<Buffer> = match kw {
             Some(kw) => {
                 if kw.len() != model.num_qlayers {
                     return Err(anyhow!(
@@ -53,11 +52,11 @@ pub fn evaluate(
                         model.num_qlayers
                     ));
                 }
-                vec![x, y, literal_f32(kw, &[kw.len()])?, scalar_f32(ka)]
+                vec![x, y, buffer_f32(kw, &[kw.len()])?, scalar_f32(ka)]
             }
             None => vec![x, y],
         };
-        let mut args: Vec<&Literal> = Vec::with_capacity(params.len() + extra.len());
+        let mut args: Vec<&Buffer> = Vec::with_capacity(params.len() + extra.len());
         args.extend(params.iter());
         args.extend(extra.iter());
         let outs = rt.execute(eval_prog, &args)?;

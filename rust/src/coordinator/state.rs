@@ -1,18 +1,17 @@
-//! Device-interchange train state: parameters + optimizer velocities as XLA
-//! literals (moved into each step call and replaced by the step's outputs —
-//! no per-step host re-marshalling of weights), plus the small host-side
-//! mirrors the coordinator actually inspects (beta, scalars).
+//! Backend-interchange train state: parameters + optimizer velocities as
+//! runtime buffers (moved into each step call and replaced by the step's
+//! outputs — no per-step re-marshalling of weights), plus the small
+//! host-side mirrors the coordinator actually inspects (beta, scalars).
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
 
-use crate::runtime::{literal_f32, to_vec_f32, ModelMeta};
+use crate::runtime::{buffer_f32, to_vec_f32, Buffer, ModelMeta};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 pub struct TrainState {
-    pub params: Vec<Literal>,
-    pub vels: Vec<Literal>,
+    pub params: Vec<Buffer>,
+    pub vels: Vec<Buffer>,
     /// Continuous per-layer bitwidth parameter (waveq programs only).
     pub beta: Vec<f32>,
     pub vbeta: Vec<f32>,
@@ -42,8 +41,8 @@ impl TrainState {
                 "affine" if p.name.ends_with("_s") => vec![1.0; n],
                 _ => vec![0.0; n], // biases, affine shifts
             };
-            params.push(literal_f32(&data, &p.shape)?);
-            vels.push(literal_f32(&vec![0.0; n], &p.shape)?);
+            params.push(buffer_f32(&data, &p.shape)?);
+            vels.push(buffer_f32(&vec![0.0; n], &p.shape)?);
         }
         Ok(TrainState {
             params,
@@ -76,7 +75,7 @@ impl TrainState {
         }
         self.params = tensors
             .iter()
-            .map(|t| literal_f32(&t.data, &t.shape))
+            .map(|t| buffer_f32(&t.data, &t.shape))
             .collect::<Result<Vec<_>>>()?;
         Ok(())
     }

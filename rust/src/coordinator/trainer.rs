@@ -1,5 +1,6 @@
-//! The training coordinator: the rust-side event loop that drives AOT train
-//! programs, applies the 3-phase regularization schedule, watches beta for
+//! The training coordinator: the rust-side event loop that drives the
+//! backend's train programs (native or PJRT/AOT — same manifest contract),
+//! applies the 3-phase regularization schedule, watches beta for
 //! convergence, freezes bitwidths, and records every metric series the
 //! paper's figures need.
 //!
@@ -9,7 +10,6 @@
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
-use xla::Literal;
 
 use super::bitwidth::BitAssignment;
 use super::checkpoint::Checkpoint;
@@ -18,7 +18,7 @@ use super::metrics::MetricsRecorder;
 use super::state::TrainState;
 use crate::config::{levels, Algo, RunConfig};
 use crate::data::{spec_for_input, Batcher, Dataset, Prefetcher};
-use crate::runtime::{literal_f32, scalar_f32, to_scalar_f32, to_vec_f32, Runtime};
+use crate::runtime::{buffer_f32, scalar_f32, to_scalar_f32, to_vec_f32, Buffer, Runtime};
 use crate::schedule::PhaseController;
 use crate::tensor::Histogram;
 
@@ -201,22 +201,22 @@ impl<'a> Trainer<'a> {
             let warmup = 30.0_f32;
             let lr_t = cfg.lr * ((step as f32 + 1.0) / warmup).min(1.0);
 
-            // Assemble positional args, moving state literals in.
+            // Assemble positional args, moving state buffers in.
             let mut params = std::mem::take(&mut state.params);
             let mut vels = std::mem::take(&mut state.vels);
-            let mut args: Vec<Literal> = Vec::with_capacity(slots.len());
+            let mut args: Vec<Buffer> = Vec::with_capacity(slots.len());
             for slot in &slots {
                 args.push(match slot {
-                    Slot::Param(i) => std::mem::replace(&mut params[*i], Literal::scalar(0f32)),
-                    Slot::Vel(i) => std::mem::replace(&mut vels[*i], Literal::scalar(0f32)),
-                    Slot::Beta => literal_f32(&state.beta, &[state.beta.len()])?,
-                    Slot::VBeta => literal_f32(&state.vbeta, &[state.vbeta.len()])?,
-                    Slot::X => literal_f32(
+                    Slot::Param(i) => std::mem::replace(&mut params[*i], Buffer::scalar(0f32)),
+                    Slot::Vel(i) => std::mem::replace(&mut vels[*i], Buffer::scalar(0f32)),
+                    Slot::Beta => buffer_f32(&state.beta, &[state.beta.len()])?,
+                    Slot::VBeta => buffer_f32(&state.vbeta, &[state.vbeta.len()])?,
+                    Slot::X => buffer_f32(
                         &batch_data.x,
                         &[batch, model.input_shape[0], model.input_shape[1], model.input_shape[2]],
                     )?,
-                    Slot::Y => literal_f32(&batch_data.y, &[batch, model.num_classes])?,
-                    Slot::KwVec => literal_f32(&preset_kw, &[preset_kw.len()])?,
+                    Slot::Y => buffer_f32(&batch_data.y, &[batch, model.num_classes])?,
+                    Slot::KwVec => buffer_f32(&preset_kw, &[preset_kw.len()])?,
                     Slot::Scalar(name) => scalar_f32(match *name {
                         "lr" => lr_t,
                         "mom" => cfg.momentum,

@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use super::ExpContext;
-use crate::runtime::{literal_f32, to_vec_f32};
+use crate::runtime::{buffer_f32, to_vec_f32};
 use crate::schedule::ScheduleCfg;
 
 pub const N_W: usize = 512;
@@ -25,7 +25,7 @@ pub fn grids() -> (Vec<f32>, Vec<f32>) {
 /// [r_n0, d1_n0, d2_n0, r_n1, d1_n1, d2_n1, r_n2, d1_n2, d2_n2].
 pub fn profiles(ctx: &ExpContext) -> Result<Vec<Vec<f32>>> {
     let (w, b) = grids();
-    let args = vec![literal_f32(&w, &[N_W])?, literal_f32(&b, &[N_B])?];
+    let args = vec![buffer_f32(&w, &[N_W])?, buffer_f32(&b, &[N_B])?];
     let outs = ctx.rt.execute("reg_profile", &args)?;
     outs.iter().map(|o| to_vec_f32(o)).collect()
 }

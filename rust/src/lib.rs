@@ -5,9 +5,22 @@
 //! management, data pipelines, the Stripes energy model, Pareto analysis,
 //! and the experiment drivers that regenerate every table/figure.
 //!
-//! Python (L2 JAX model zoo + L1 Pallas kernels) runs only at build time:
-//! `make artifacts` lowers every program to HLO text which this crate loads
-//! through PJRT (`runtime`). See DESIGN.md for the full inventory.
+//! Execution is pluggable behind [`runtime::Backend`]:
+//!
+//! | backend            | feature        | needs                | programs            |
+//! |--------------------|----------------|----------------------|---------------------|
+//! | `runtime::native`  | (default)      | nothing — pure Rust  | WaveQ MLP family    |
+//! | `runtime::pjrt`    | `pjrt`         | `make artifacts` +   | every AOT program   |
+//! |                    |                | vendored `xla` crate |                     |
+//!
+//! The native backend executes the WaveQ train/eval programs (quantized
+//! forward/backward, the sinusoidal regularizer with analytic w- and
+//! beta-gradients, SGD+momentum) directly on the host against the same
+//! manifest signatures the AOT HLO programs export, so `cargo test` and the
+//! examples run end-to-end with zero Python/XLA artifacts. With the `pjrt`
+//! feature, Python (L2 JAX model zoo + L1 Pallas kernels) runs at build
+//! time: `make artifacts` lowers every program to HLO text which
+//! `runtime::pjrt` loads through the PJRT C API.
 
 pub mod bench_support;
 pub mod config;

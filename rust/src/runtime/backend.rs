@@ -1,0 +1,174 @@
+//! The pluggable execution backend abstraction.
+//!
+//! A [`Backend`] turns manifest-described programs into results: `compile`
+//! prepares a program (cache warm / lazy-compile), `execute` runs it on
+//! host [`Buffer`]s. Two implementations exist:
+//!
+//! * [`super::native::NativeBackend`] — pure Rust, hermetic, executes the
+//!   WaveQ MLP train/eval program family directly on the host (always
+//!   available; the default).
+//! * `super::pjrt::PjrtBackend` — compiles AOT HLO-text artifacts through
+//!   the XLA PJRT C API (behind the non-default `pjrt` cargo feature).
+//!
+//! [`Runtime`] is the coordinator-facing facade: it owns the [`Manifest`]
+//! (the program/model contract), validates call arity against it, keeps
+//! cumulative stats, and forwards to whichever backend it was opened with.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::buffer::Buffer;
+use super::manifest::{Manifest, ProgramSig};
+use super::native::NativeBackend;
+
+/// Cumulative (compiles, executions) — surfaced by `waveq smoke`/metrics.
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// An execution engine for manifest-described programs.
+///
+/// Implementations own their compile caches and timing; the [`Runtime`]
+/// facade has already validated input arity against the manifest before
+/// `execute` is called.
+pub trait Backend {
+    /// Human-readable platform tag ("native", "cpu", ...).
+    fn platform_name(&self) -> String;
+
+    /// Prepare a program for execution (idempotent; cheap when cached).
+    fn compile(&self, sig: &ProgramSig) -> Result<()>;
+
+    /// Execute a program on host buffers; one buffer per named output, in
+    /// the manifest's output order.
+    fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>>;
+
+    /// Cumulative compile/execute counters.
+    fn stats(&self) -> RuntimeStats;
+}
+
+/// Backend-neutral runtime: manifest + stats + a boxed [`Backend`].
+pub struct Runtime {
+    backend: Box<dyn Backend>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// A hermetic runtime on the pure-Rust reference backend: the manifest
+    /// is generated in-process (no artifacts directory, no Python, no XLA).
+    pub fn native() -> Runtime {
+        let backend = NativeBackend::new();
+        let manifest = backend.manifest();
+        Runtime { backend: Box::new(backend), manifest }
+    }
+
+    /// Open an artifacts directory.
+    ///
+    /// With the `pjrt` feature the programs execute through PJRT on the AOT
+    /// HLO artifacts in `dir`. Without it, the manifest is still loaded
+    /// (signature lookups, model metadata, error paths all work) and
+    /// execution is served by the native backend for the programs it
+    /// implements. If `manifest.json` is absent the fully-native runtime
+    /// is returned, so a clean clone works with zero built artifacts.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        if !dir.join("manifest.json").exists() {
+            return Ok(Runtime::native());
+        }
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { backend: open_backend(dir)?, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.backend.stats()
+    }
+
+    pub fn sig(&self, program: &str) -> Result<&ProgramSig> {
+        self.manifest.program(program)
+    }
+
+    /// Execute a program on host buffers; returns one buffer per output.
+    /// Accepts owned or borrowed buffers (`&[Buffer]` or `&[&Buffer]`).
+    pub fn execute<B: std::borrow::Borrow<Buffer>>(
+        &self,
+        program: &str,
+        args: &[B],
+    ) -> Result<Vec<Buffer>> {
+        let sig = self.manifest.program(program)?;
+        if args.len() != sig.inputs.len() {
+            return Err(anyhow!(
+                "{program}: got {} args, signature has {}",
+                args.len(),
+                sig.inputs.len()
+            ));
+        }
+        let refs: Vec<&Buffer> = args.iter().map(|a| a.borrow()).collect();
+        let outs = self.backend.execute(sig, &refs)?;
+        if outs.len() != sig.outputs.len() {
+            return Err(anyhow!(
+                "{program}: got {} outputs, manifest says {}",
+                outs.len(),
+                sig.outputs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Pre-compile a set of programs (amortize compilation outside the loop).
+    pub fn warmup(&self, programs: &[&str]) -> Result<()> {
+        for p in programs {
+            let sig = self.manifest.program(p)?;
+            self.backend
+                .compile(sig)
+                .with_context(|| format!("warming up {p}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn open_backend(dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(super::pjrt::PjrtBackend::open(dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn open_backend(_dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::buffer::scalar_f32;
+
+    #[test]
+    fn native_runtime_has_programs_and_models() {
+        let rt = Runtime::native();
+        assert_eq!(rt.platform(), "native");
+        assert!(rt.manifest.program("train_waveq_mlp").is_ok());
+        assert!(rt.manifest.model("mlp").is_ok());
+        assert!(rt.sig("nope").is_err());
+    }
+
+    #[test]
+    fn arity_mismatch_is_rejected_before_dispatch() {
+        let rt = Runtime::native();
+        let args = vec![scalar_f32(0.0)];
+        let err = rt.execute("train_fp32_mlp", &args).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("got 1 args"), "{msg}");
+    }
+
+    #[test]
+    fn warmup_unknown_program_errors() {
+        let rt = Runtime::native();
+        assert!(rt.warmup(&["definitely_missing"]).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Backend-neutral host buffer: the interchange value between the
+//! coordinator and any [`super::backend::Backend`].
+//!
+//! A `Buffer` is a dense row-major f32 array with an explicit shape — the
+//! same data model as `tensor::Tensor`, but kept as a distinct type so the
+//! runtime contract (what crosses the backend boundary) is independent of
+//! the host-side analysis substrate. The free helpers (`buffer_f32`,
+//! `scalar_f32`, `to_vec_f32`, `to_scalar_f32`) mirror the shapes of the
+//! old XLA literal helpers so call sites read identically on either
+//! backend.
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+
+/// A dense f32 array with row-major layout, owned on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buffer {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Buffer {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Buffer> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!(
+                "buffer shape {:?} wants {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            ));
+        }
+        Ok(Buffer { shape, data })
+    }
+
+    /// Rank-0 scalar.
+    pub fn scalar(v: f32) -> Buffer {
+        Buffer { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Buffer {
+        let n = shape.iter().product();
+        Buffer { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.shape.is_empty()
+    }
+
+    /// View as the host-side analysis tensor (clones the data).
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Tensor::new(self.shape.clone(), self.data.clone())
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Buffer {
+        Buffer { shape: t.shape.clone(), data: t.data.clone() }
+    }
+}
+
+/// Build an f32 buffer of the given shape from a host slice.
+pub fn buffer_f32(data: &[f32], shape: &[usize]) -> Result<Buffer> {
+    Buffer::new(shape.to_vec(), data.to_vec())
+}
+
+pub fn scalar_f32(v: f32) -> Buffer {
+    Buffer::scalar(v)
+}
+
+/// Extract an f32 vector from a buffer.
+pub fn to_vec_f32(b: &Buffer) -> Result<Vec<f32>> {
+    Ok(b.data.clone())
+}
+
+/// Extract a scalar f32 (first element, like the old literal helper).
+pub fn to_scalar_f32(b: &Buffer) -> Result<f32> {
+    b.data
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("to_scalar_f32: empty buffer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_preserves_data_and_shape() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let b = buffer_f32(&data, &[2, 3, 4]).unwrap();
+        assert_eq!(b.shape, vec![2, 3, 4]);
+        assert_eq!(to_vec_f32(&b).unwrap(), data);
+        assert!(buffer_f32(&data, &[5, 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let s = scalar_f32(2.5);
+        assert!(s.is_scalar());
+        assert_eq!(to_scalar_f32(&s).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn tensor_conversion() {
+        let b = buffer_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let t = b.to_tensor().unwrap();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(Buffer::from_tensor(&t), b);
+    }
+}

@@ -1,10 +1,20 @@
-//! L3 runtime: the bridge from AOT artifacts to executable programs.
+//! L3 runtime: manifest-described programs behind a pluggable backend.
 //!
 //! `manifest` — the python→rust contract (signatures, layouts, MACs).
-//! `client`   — PJRT load/compile/execute with caching + literal helpers.
+//! `buffer`   — the backend-neutral host buffer type + helpers.
+//! `backend`  — the `Backend` trait and the `Runtime` facade.
+//! `native`   — hermetic pure-Rust reference backend (always available).
+//! `pjrt`     — PJRT load/compile/execute over AOT HLO artifacts
+//!              (behind the non-default `pjrt` cargo feature).
 
-pub mod client;
+pub mod backend;
+pub mod buffer;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use client::{literal_f32, scalar_f32, to_scalar_f32, to_vec_f32, Runtime, RuntimeStats};
+pub use backend::{Backend, Runtime, RuntimeStats};
+pub use buffer::{buffer_f32, scalar_f32, to_scalar_f32, to_vec_f32, Buffer};
 pub use manifest::{ArgSpec, Manifest, ModelMeta, ParamMeta, ProgramSig};
+pub use native::{NativeBackend, NativeModel};

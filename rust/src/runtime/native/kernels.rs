@@ -1,0 +1,458 @@
+//! Pure-Rust reference kernels for the native backend: the same math the
+//! Pallas/JAX programs lower (see `python/compile/kernels/ref.py`, the
+//! ground-truth oracles), executed directly on host slices.
+//!
+//! Conventions (paper §2.2 "Quantizer", Eq. 2.3):
+//!   * `k = 2^b - 1` quantization levels over [0, 1]: `quantize_k`;
+//!   * DoReFa weights are tanh-normalized into [0, 1], quantized, then
+//!     mapped back to [-c, c] with the per-layer scale c = max|tanh(W)|;
+//!   * WaveQ regularizer (Eq. 2.2 / 2.5, production normalization n=1):
+//!       R(v; beta) = mean_j sin^2(pi * v_j * k) / 2^beta,  k = 2^beta - 1
+//!     applied to the quantizer-normalized coordinate
+//!       v = tanh(w) / (2 max|tanh(W)|) + 1/2
+//!     so the sin^2 minima coincide exactly with the DoReFa levels.
+//!
+//! Scalar reductions and the regularizer run in f64 (the XLA programs
+//! accumulate in higher precision too, and the finite-difference property
+//! tests need the head-room); elementwise tensors stay f32.
+
+pub const LN2: f64 = std::f64::consts::LN_2;
+pub const PI: f64 = std::f64::consts::PI;
+
+/// Linear quantizer over [0, 1] with k steps: round(x*k)/k (Eq. 2.3).
+pub fn quantize_k(x: f32, k: f32) -> f32 {
+    (x * k).round() / k
+}
+
+/// Per-layer DoReFa scale: max|tanh(W)| with a floor (ref.py convention).
+pub fn max_abs_tanh(w: &[f32]) -> f32 {
+    w.iter().fold(0.0f32, |m, &x| m.max(x.tanh().abs())).max(1e-8)
+}
+
+/// DoReFa weight fake-quantization (STE backward).
+///
+/// Returns `(wq, ste, m)`: the quantized weights, the per-element STE
+/// factor `dwq/dw = 1 - tanh(w)^2`, and the layer scale `m`.
+pub fn dorefa_quantize(w: &[f32], k: f32) -> (Vec<f32>, Vec<f32>, f32) {
+    let (wq, ste, _v, m) = dorefa_quantize_full(w, k);
+    (wq, ste, m)
+}
+
+/// Like [`dorefa_quantize`] but also returns the quantizer-normalized
+/// coordinates `v_j = tanh(w_j)/(2m) + 1/2` in [0, 1] — the coordinate
+/// system the WaveQ regularizer's sinusoid lives in (its sin^2 minima are
+/// exactly the `quantize_k` levels of these v).
+pub fn dorefa_quantize_full(w: &[f32], k: f32) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let m = max_abs_tanh(w);
+    let mut wq = Vec::with_capacity(w.len());
+    let mut ste = Vec::with_capacity(w.len());
+    let mut coords = Vec::with_capacity(w.len());
+    for &x in w {
+        let t = x.tanh();
+        let v = t / (2.0 * m) + 0.5;
+        wq.push(m * (2.0 * quantize_k(v, k) - 1.0));
+        ste.push(1.0 - t * t);
+        coords.push(v);
+    }
+    (wq, ste, coords, m)
+}
+
+/// WRPN weight fake-quantization: clip + linear quantize with scale
+/// c = max|W|. With that scale the clip never bites, so the STE backward
+/// is the identity (see `python/compile/kernels/wrpn.py`).
+pub fn wrpn_quantize(w: &[f32], k: f32) -> (Vec<f32>, f32) {
+    let m = w.iter().fold(0.0f32, |acc, &x| acc.max(x.abs())).max(1e-8);
+    let wq = w
+        .iter()
+        .map(|&x| {
+            let v = x.clamp(-m, m) / (2.0 * m) + 0.5;
+            m * (2.0 * quantize_k(v, k) - 1.0)
+        })
+        .collect();
+    (wq, m)
+}
+
+/// DoReFa activation fake-quantization in units of the batch max, applied
+/// in place to post-ReLU activations: a_q = m * quantize_k(clip(a/m, 0, 1)).
+/// Backward is the ReLU mask (the [0, 1] STE window always contains a/m).
+pub fn act_quantize(a: &mut [f32], ka: f32) {
+    let m = a.iter().fold(0.0f32, |acc, &x| acc.max(x)).max(1e-6);
+    for x in a.iter_mut() {
+        *x = m * quantize_k((*x / m).clamp(0.0, 1.0), ka);
+    }
+}
+
+// ---- WaveQ sinusoidal regularizer (normalization variant n = 1) ------------
+
+/// R(v; beta) = mean_j sin^2(pi v_j k) / 2^beta, k = 2^beta - 1.
+pub fn waveq_reg(v: &[f32], beta: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let k = 2f64.powf(beta) - 1.0;
+    let sum: f64 = v
+        .iter()
+        .map(|&x| {
+            let s = (PI * x as f64 * k).sin();
+            s * s
+        })
+        .sum();
+    sum / v.len() as f64 / 2f64.powf(beta)
+}
+
+/// Analytic dR/dv_j = sin(2 pi v_j k) * pi k / (N * 2^beta).
+pub fn waveq_reg_grad_v(v: &[f32], beta: f64) -> Vec<f32> {
+    let k = 2f64.powf(beta) - 1.0;
+    let scale = PI * k / (v.len().max(1) as f64 * 2f64.powf(beta));
+    v.iter()
+        .map(|&x| ((2.0 * PI * x as f64 * k).sin() * scale) as f32)
+        .collect()
+}
+
+/// Analytic dR/dbeta (scalar), n = 1:
+///   mean_j [ sin(2 pi v k) * pi v * ln2 * 2^beta - ln2 * sin^2(pi v k) ] / 2^beta
+pub fn waveq_reg_grad_beta(v: &[f32], beta: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let k = 2f64.powf(beta) - 1.0;
+    let two_b = 2f64.powf(beta);
+    let sum: f64 = v
+        .iter()
+        .map(|&xf| {
+            let x = xf as f64;
+            let s = (PI * x * k).sin();
+            let t1 = (2.0 * PI * x * k).sin() * PI * x * LN2 * two_b;
+            let t2 = LN2 * s * s;
+            t1 - t2
+        })
+        .sum();
+    sum / v.len() as f64 / two_b
+}
+
+// ---- reg_profile closed forms (Figures 2 & 3; all three normalizations) ----
+
+/// Pointwise R_n(w, beta) = sin^2(pi w k) / 2^(n beta).
+pub fn reg_point(w: f64, beta: f64, norm: u32) -> f64 {
+    let k = 2f64.powf(beta) - 1.0;
+    let s = (PI * w * k).sin();
+    s * s / 2f64.powf(norm as f64 * beta)
+}
+
+/// Pointwise dR_n/dbeta.
+pub fn reg_point_d1(w: f64, beta: f64, norm: u32) -> f64 {
+    let n = norm as f64;
+    let k = 2f64.powf(beta) - 1.0;
+    let two_b = 2f64.powf(beta);
+    let s = (PI * w * k).sin();
+    let u = PI * w * LN2 * two_b;
+    ((2.0 * PI * w * k).sin() * u - n * LN2 * s * s) / 2f64.powf(n * beta)
+}
+
+/// Pointwise d^2 R_n / dbeta^2:
+///   [ 2 u^2 cos(2 pi w k) + (1 - 2n) ln2 u sin(2 pi w k) + n^2 ln2^2 sin^2 ]
+///   / 2^(n beta),  u = pi w ln2 2^beta.
+pub fn reg_point_d2(w: f64, beta: f64, norm: u32) -> f64 {
+    let n = norm as f64;
+    let k = 2f64.powf(beta) - 1.0;
+    let two_b = 2f64.powf(beta);
+    let s = (PI * w * k).sin();
+    let u = PI * w * LN2 * two_b;
+    let c2 = (2.0 * PI * w * k).cos();
+    let s2 = (2.0 * PI * w * k).sin();
+    (2.0 * u * u * c2 + (1.0 - 2.0 * n) * LN2 * u * s2 + n * n * LN2 * LN2 * s * s)
+        / 2f64.powf(n * beta)
+}
+
+// ---- dense linear algebra (row-major) --------------------------------------
+
+/// out(b, o) = x(b, i) @ w(i, o) + bias(o)
+pub fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * dout];
+    for r in 0..b {
+        let xrow = &x[r * di..(r + 1) * di];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        orow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &w[i * dout..(i + 1) * dout];
+                for (o, &wv) in wrow.iter().enumerate() {
+                    orow[o] += xv * wv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// dW(i, o) = sum_b h(b, i) * dz(b, o)   (h^T @ dz)
+pub fn grad_weight(h: &[f32], dz: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
+    let mut dw = vec![0.0f32; di * dout];
+    for r in 0..b {
+        let hrow = &h[r * di..(r + 1) * di];
+        let drow = &dz[r * dout..(r + 1) * dout];
+        for (i, &hv) in hrow.iter().enumerate() {
+            if hv != 0.0 {
+                let wrow = &mut dw[i * dout..(i + 1) * dout];
+                for (o, &dv) in drow.iter().enumerate() {
+                    wrow[o] += hv * dv;
+                }
+            }
+        }
+    }
+    dw
+}
+
+/// db(o) = sum_b dz(b, o)
+pub fn grad_bias(dz: &[f32], b: usize, dout: usize) -> Vec<f32> {
+    let mut db = vec![0.0f32; dout];
+    for r in 0..b {
+        for (o, v) in db.iter_mut().enumerate() {
+            *v += dz[r * dout + o];
+        }
+    }
+    db
+}
+
+/// dh(b, i) = dz(b, o) @ w(i, o)^T
+pub fn grad_input(dz: &[f32], w: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
+    let mut dh = vec![0.0f32; b * di];
+    for r in 0..b {
+        let drow = &dz[r * dout..(r + 1) * dout];
+        let hrow = &mut dh[r * di..(r + 1) * di];
+        for i in 0..di {
+            let wrow = &w[i * dout..(i + 1) * dout];
+            let mut acc = 0.0f32;
+            for (o, &wv) in wrow.iter().enumerate() {
+                acc += drow[o] * wv;
+            }
+            hrow[i] = acc;
+        }
+    }
+    dh
+}
+
+// ---- loss ------------------------------------------------------------------
+
+/// Softmax cross-entropy (mean over batch) + accuracy + dL/dlogits.
+///
+/// `y` is one-hot (batch, classes); dlogits = (softmax - y) / batch.
+pub fn softmax_ce(logits: &[f32], y: &[f32], b: usize, c: usize) -> (f32, f32, Vec<f32>) {
+    let mut dlogits = vec![0.0f32; b * c];
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for r in 0..b {
+        let row = &logits[r * c..(r + 1) * c];
+        let yrow = &y[r * c..(r + 1) * c];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0f64;
+        for &v in row {
+            z += ((v - mx) as f64).exp();
+        }
+        let logz = z.ln();
+        let mut pred = 0usize;
+        let mut label = 0usize;
+        for j in 0..c {
+            let logp = (row[j] - mx) as f64 - logz;
+            let p = logp.exp();
+            dlogits[r * c + j] = (p as f32 - yrow[j]) / b as f32;
+            loss -= yrow[j] as f64 * logp;
+            if row[j] > row[pred] {
+                pred = j;
+            }
+            if yrow[j] > yrow[label] {
+                label = j;
+            }
+        }
+        if pred == label {
+            correct += 1;
+        }
+    }
+    ((loss / b as f64) as f32, correct as f32 / b as f32, dlogits)
+}
+
+// ---- optimizer -------------------------------------------------------------
+
+pub const GRAD_CLIP_NORM: f32 = 5.0;
+
+/// Scale the gradient list so its global L2 norm is <= max_norm (optim.py).
+pub fn clip_by_global_norm(grads: &mut [Vec<f32>], max_norm: f32) {
+    let mut total = 1e-12f64;
+    for g in grads.iter() {
+        for &v in g {
+            total += (v as f64) * (v as f64);
+        }
+    }
+    let total = total.sqrt();
+    let scale = (max_norm as f64 / total).min(1.0) as f32;
+    if scale < 1.0 {
+        for g in grads.iter_mut() {
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+}
+
+/// v' = mu v + g ; w' = w - lr v'  (in place on params/vels).
+pub fn sgd_momentum(params: &mut [Vec<f32>], vels: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32, mom: f32) {
+    for ((w, v), g) in params.iter_mut().zip(vels.iter_mut()).zip(grads.iter()) {
+        for ((wv, vv), &gv) in w.iter_mut().zip(v.iter_mut()).zip(g.iter()) {
+            *vv = mom * *vv + gv;
+            *wv -= lr * *vv;
+        }
+    }
+}
+
+/// Keep beta in (1, 8] so b = ceil(beta) lands in [2, 8] (optim.clip_beta).
+pub fn clip_beta(beta: f32) -> f32 {
+    beta.clamp(1.0 + 1e-3, 8.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_k_snaps_to_grid() {
+        assert_eq!(quantize_k(0.5, 1.0), 1.0); // round-half-away at 0.5 * 1
+        assert_eq!(quantize_k(0.26, 2.0), 0.5);
+        assert_eq!(quantize_k(0.0, 7.0), 0.0);
+        assert_eq!(quantize_k(1.0, 7.0), 1.0);
+    }
+
+    #[test]
+    fn dorefa_output_bounded_by_scale() {
+        let w: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.1).collect();
+        let (wq, ste, m) = dorefa_quantize(&w, 7.0);
+        for (&q, &s) in wq.iter().zip(&ste) {
+            assert!(q.abs() <= m + 1e-6, "|{q}| > {m}");
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn wrpn_identity_ste_and_bound() {
+        let w = vec![-0.8f32, -0.2, 0.0, 0.3, 0.9];
+        let (wq, m) = wrpn_quantize(&w, 3.0);
+        assert!((m - 0.9).abs() < 1e-6);
+        for &q in &wq {
+            assert!(q.abs() <= m + 1e-6);
+        }
+    }
+
+    #[test]
+    fn act_quantize_noop_at_high_levels() {
+        let mut a = vec![0.0f32, 0.25, 0.5, 2.0];
+        let orig = a.clone();
+        act_quantize(&mut a, 16_777_215.0);
+        for (&x, &o) in a.iter().zip(&orig) {
+            assert!((x - o).abs() < 1e-5, "{x} vs {o}");
+        }
+    }
+
+    #[test]
+    fn waveq_reg_zero_on_grid() {
+        // Minima at v = j / k for integer j.
+        let beta = 3.0f64;
+        let k = 2f64.powf(beta) - 1.0;
+        let grid: Vec<f32> = (0..=7).map(|j| (j as f64 / k) as f32).collect();
+        assert!(waveq_reg(&grid, beta) < 1e-9);
+    }
+
+    #[test]
+    fn waveq_grad_beta_matches_finite_difference() {
+        let v = vec![0.13f32, 0.41, 0.77, 0.05, 0.6];
+        for &beta in &[2.3f64, 4.0, 6.7] {
+            let h = 1e-5;
+            let fd = (waveq_reg(&v, beta + h) - waveq_reg(&v, beta - h)) / (2.0 * h);
+            let an = waveq_reg_grad_beta(&v, beta);
+            assert!((fd - an).abs() < 1e-4 * (1.0 + an.abs()), "beta={beta}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn reg_profile_derivatives_match_finite_difference() {
+        for norm in 0..3u32 {
+            for &(w, b) in &[(0.3f64, 2.5f64), (-0.7, 5.0), (0.9, 7.2)] {
+                let h = 1e-5;
+                let fd1 = (reg_point(w, b + h, norm) - reg_point(w, b - h, norm)) / (2.0 * h);
+                let an1 = reg_point_d1(w, b, norm);
+                assert!(
+                    (fd1 - an1).abs() < 1e-3 * (1.0 + an1.abs()),
+                    "d1 n={norm} w={w} b={b}: fd={fd1} an={an1}"
+                );
+                let fd2 =
+                    (reg_point_d1(w, b + h, norm) - reg_point_d1(w, b - h, norm)) / (2.0 * h);
+                let an2 = reg_point_d2(w, b, norm);
+                assert!(
+                    (fd2 - an2).abs() < 1e-2 * (1.0 + an2.abs()),
+                    "d2 n={norm} w={w} b={b}: fd={fd2} an={an2}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_and_grads_agree_with_manual() {
+        // x (2,3) @ w (3,2) + bias
+        let x = vec![1.0, 2.0, 3.0, 0.5, -1.0, 2.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let bias = vec![0.1, -0.1];
+        let out = matmul_bias(&x, &w, &bias, 2, 3, 2);
+        for (o, e) in out.iter().zip([4.1f32, 4.9, 2.6, 0.9]) {
+            assert!((o - e).abs() < 1e-6, "{o} vs {e}");
+        }
+        let dz = vec![1.0, 0.0, 0.0, 1.0];
+        let dw = grad_weight(&x, &dz, 2, 3, 2);
+        assert_eq!(dw, vec![1.0, 0.5, 2.0, -1.0, 3.0, 2.0]);
+        let db = grad_bias(&dz, 2, 2);
+        assert_eq!(db, vec![1.0, 1.0]);
+        let dh = grad_input(&dz, &w, 2, 3, 2);
+        assert_eq!(dh, vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        let logits = vec![0.0f32; 4 * 10];
+        let mut y = vec![0.0f32; 4 * 10];
+        for r in 0..4 {
+            y[r * 10 + r] = 1.0;
+        }
+        let (loss, _acc, dl) = softmax_ce(&logits, &y, 4, 10);
+        assert!((loss - (10f32).ln()).abs() < 1e-5);
+        // Gradient sums to zero per row.
+        for r in 0..4 {
+            let s: f32 = dl[r * 10..(r + 1) * 10].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clip_caps_global_norm() {
+        let mut g = vec![vec![3.0f32, 4.0], vec![0.0f32; 2]];
+        clip_by_global_norm(&mut g, 2.5);
+        let norm: f32 = g.iter().flatten().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((norm - 2.5).abs() < 1e-4);
+        let mut small = vec![vec![0.3f32]];
+        clip_by_global_norm(&mut small, 5.0);
+        assert_eq!(small[0][0], 0.3);
+    }
+
+    #[test]
+    fn sgd_momentum_updates() {
+        let mut p = vec![vec![1.0f32]];
+        let mut v = vec![vec![0.5f32]];
+        let g = vec![vec![1.0f32]];
+        sgd_momentum(&mut p, &mut v, &g, 0.1, 0.9);
+        assert!((v[0][0] - 1.45).abs() < 1e-6);
+        assert!((p[0][0] - (1.0 - 0.145)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_beta_range() {
+        assert_eq!(clip_beta(0.2), 1.001);
+        assert_eq!(clip_beta(9.5), 8.0);
+        assert_eq!(clip_beta(4.2), 4.2);
+    }
+}

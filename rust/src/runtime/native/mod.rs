@@ -1,0 +1,968 @@
+//! The pure-Rust reference backend: executes the WaveQ MLP program family
+//! end-to-end on the host, satisfying the same manifest signatures the AOT
+//! HLO programs export (`python/compile/train_step.py`):
+//!
+//!   train_fp32_mlp    : [w*P, v*P, x, y, lr, mom]                 -> [w', v', loss, acc]
+//!   train_dorefa_mlp  : [w*P, v*P, x, y, lr, mom, kw(Q,), ka]     -> [w', v', loss, acc]
+//!   train_wrpn_mlp_w2 : same as dorefa, on the width-doubled model
+//!   train_waveq_mlp   : [w*P, v*P, beta, vbeta, x, y, lr, mom,
+//!                        lr_beta, ka, lam_w, lam_beta, beta_train] -> [w', v', beta', vbeta',
+//!                                                                     loss, acc, ce, reg_w]
+//!   eval_fp32_mlp     : [w*P, x, y]                               -> [loss, acc]
+//!   eval_quant_mlp    : [w*P, x, y, kw(Q,), ka]                   -> [loss, acc]
+//!   eval_wrpn_mlp_w2  : [w*P, x, y, kw(Q,), ka]                   -> [loss, acc]
+//!   reg_profile       : [wgrid, bgrid]                            -> 9 x (n_w, n_b) surfaces
+//!
+//! The quantized forward uses the DoReFa/WRPN rules of `kernels`, the
+//! backward is the straight-through estimator, and the 'waveq' programs add
+//! the sinusoidal regularizer `lambda_w * sin^2(pi v 2^beta)`-family term
+//! with its *analytic* gradient in both w and beta — the heart of the paper,
+//! executed here with no Python, XLA, or artifacts involved.
+//!
+//! The backend also exports its own [`Manifest`] so the coordinator
+//! (trainer / evaluator / energy / pareto layers) runs identically on
+//! either backend.
+
+pub mod kernels;
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use self::kernels as kn;
+use super::backend::{Backend, RuntimeStats};
+use super::buffer::Buffer;
+use super::manifest::{ArgSpec, Manifest, ModelMeta, ParamMeta, ProgramSig};
+
+/// One fully-connected layer (weight + bias) of a native model.
+#[derive(Debug, Clone)]
+pub struct FcLayer {
+    pub name: String,
+    pub din: usize,
+    pub dout: usize,
+    /// Slot in the per-layer bitwidth vector, if this weight is quantized.
+    pub qidx: Option<usize>,
+}
+
+/// A native model: an MLP as a stack of FC layers with ReLU (+ optional
+/// activation fake-quant) between them. Mirrors `python/compile/models.mlp`
+/// including the §4.1 policy: first and last layers stay full precision.
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub name: String,
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    pub batch: usize,
+    pub width_mult: usize,
+    pub layers: Vec<FcLayer>,
+}
+
+impl NativeModel {
+    /// The WaveQ test MLP on mlp-lite (8x8x3 -> 10): 3 hidden layers of
+    /// width 128 * width_mult; the two middle FCs own bitwidth slots.
+    pub fn mlp(width_mult: usize) -> NativeModel {
+        let w = 128 * width_mult;
+        let din = 8 * 8 * 3;
+        let name = if width_mult == 1 { "mlp".to_string() } else { format!("mlp_w{width_mult}") };
+        let mk = |n: &str, i, o, q| FcLayer { name: n.to_string(), din: i, dout: o, qidx: q };
+        NativeModel {
+            name,
+            input_shape: [8, 8, 3],
+            num_classes: 10,
+            batch: 64,
+            width_mult,
+            layers: vec![
+                mk("fc1", din, w, None),
+                mk("fc2", w, w, Some(0)),
+                mk("fc3", w, w, Some(1)),
+                mk("fc4", w, 10, None),
+            ],
+        }
+    }
+
+    pub fn num_qlayers(&self) -> usize {
+        self.layers.iter().filter(|l| l.qidx.is_some()).count()
+    }
+
+    /// Number of parameter tensors (weight + bias per layer).
+    pub fn num_params(&self) -> usize {
+        2 * self.layers.len()
+    }
+
+    /// The manifest-side description of this model.
+    pub fn meta(&self) -> ModelMeta {
+        let mut params = Vec::with_capacity(self.num_params());
+        for l in &self.layers {
+            params.push(ParamMeta {
+                name: l.name.clone(),
+                shape: vec![l.din, l.dout],
+                kind: "fc".into(),
+                init: "he".into(),
+                qidx: l.qidx,
+                macs: (l.din * l.dout) as u64,
+                count: (l.din * l.dout) as u64,
+            });
+            params.push(ParamMeta {
+                name: format!("{}_b", l.name),
+                shape: vec![l.dout],
+                kind: "bias".into(),
+                init: "zeros".into(),
+                qidx: None,
+                macs: 0,
+                count: l.dout as u64,
+            });
+        }
+        ModelMeta {
+            name: self.name.clone(),
+            input_shape: self.input_shape,
+            num_classes: self.num_classes,
+            batch: self.batch,
+            width_mult: self.width_mult,
+            num_qlayers: self.num_qlayers(),
+            params,
+        }
+    }
+
+    fn pixels(&self) -> usize {
+        self.input_shape[0] * self.input_shape[1] * self.input_shape[2]
+    }
+
+    fn param_names(&self, prefix: &str) -> Vec<String> {
+        let mut v = Vec::with_capacity(self.num_params());
+        for l in &self.layers {
+            v.push(format!("{prefix}:{}", l.name));
+            v.push(format!("{prefix}:{}_b", l.name));
+        }
+        v
+    }
+
+    fn param_specs(&self, prefix: &str) -> Vec<ArgSpec> {
+        let mut v = Vec::with_capacity(self.num_params());
+        for l in &self.layers {
+            v.push(ArgSpec {
+                name: format!("{prefix}:{}", l.name),
+                shape: vec![l.din, l.dout],
+                dtype: "float32".into(),
+            });
+            v.push(ArgSpec {
+                name: format!("{prefix}:{}_b", l.name),
+                shape: vec![l.dout],
+                dtype: "float32".into(),
+            });
+        }
+        v
+    }
+}
+
+/// Which weight-quantizer family a program uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QuantFamily {
+    Fp32,
+    Dorefa,
+    Wrpn,
+    Waveq,
+}
+
+#[derive(Debug, Clone)]
+enum ProgramKind {
+    Train { model: String, quant: QuantFamily },
+    Eval { model: String, quant: QuantFamily },
+    RegProfile,
+}
+
+/// Grid sizes of the reg_profile surfaces (match `make_reg_profile`).
+pub const REG_PROFILE_NW: usize = 512;
+pub const REG_PROFILE_NB: usize = 256;
+
+/// The hermetic pure-Rust execution backend.
+pub struct NativeBackend {
+    models: BTreeMap<String, NativeModel>,
+    programs: BTreeMap<String, ProgramKind>,
+    compiled: RefCell<BTreeSet<String>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let mut models = BTreeMap::new();
+        for m in [NativeModel::mlp(1), NativeModel::mlp(2)] {
+            models.insert(m.name.clone(), m);
+        }
+        let mut programs = BTreeMap::new();
+        programs.insert(
+            "train_fp32_mlp".to_string(),
+            ProgramKind::Train { model: "mlp".into(), quant: QuantFamily::Fp32 },
+        );
+        programs.insert(
+            "train_dorefa_mlp".to_string(),
+            ProgramKind::Train { model: "mlp".into(), quant: QuantFamily::Dorefa },
+        );
+        programs.insert(
+            "train_waveq_mlp".to_string(),
+            ProgramKind::Train { model: "mlp".into(), quant: QuantFamily::Waveq },
+        );
+        programs.insert(
+            "train_wrpn_mlp_w2".to_string(),
+            ProgramKind::Train { model: "mlp_w2".into(), quant: QuantFamily::Wrpn },
+        );
+        programs.insert(
+            "eval_fp32_mlp".to_string(),
+            ProgramKind::Eval { model: "mlp".into(), quant: QuantFamily::Fp32 },
+        );
+        programs.insert(
+            "eval_quant_mlp".to_string(),
+            ProgramKind::Eval { model: "mlp".into(), quant: QuantFamily::Dorefa },
+        );
+        programs.insert(
+            "eval_wrpn_mlp_w2".to_string(),
+            ProgramKind::Eval { model: "mlp_w2".into(), quant: QuantFamily::Wrpn },
+        );
+        programs.insert("reg_profile".to_string(), ProgramKind::RegProfile);
+        NativeBackend {
+            models,
+            programs,
+            compiled: RefCell::new(BTreeSet::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        }
+    }
+
+    /// The manifest describing every native program and model — the same
+    /// contract `python/compile/aot.py` writes for the AOT artifacts.
+    pub fn manifest(&self) -> Manifest {
+        let mut programs = BTreeMap::new();
+        for (name, kind) in &self.programs {
+            programs.insert(name.clone(), self.sig_for(name, kind));
+        }
+        let models = self.models.iter().map(|(k, m)| (k.clone(), m.meta())).collect();
+        Manifest { programs, models }
+    }
+
+    fn sig_for(&self, name: &str, kind: &ProgramKind) -> ProgramSig {
+        let scalar = |n: &str| ArgSpec { name: n.into(), shape: vec![], dtype: "float32".into() };
+        let vec_q = |n: &str, q: usize| ArgSpec { name: n.into(), shape: vec![q], dtype: "float32".into() };
+        match kind {
+            ProgramKind::RegProfile => ProgramSig {
+                name: name.to_string(),
+                file: format!("{name}.native"),
+                model: None,
+                inputs: vec![
+                    vec_q("wgrid", REG_PROFILE_NW),
+                    vec_q("bgrid", REG_PROFILE_NB),
+                ],
+                outputs: (0..3u32)
+                    .flat_map(|n| ["r", "d1", "d2"].into_iter().map(move |q| format!("{q}_n{n}")))
+                    .collect(),
+            },
+            ProgramKind::Train { model, quant } => {
+                let m = &self.models[model];
+                let q = m.num_qlayers();
+                let x = ArgSpec {
+                    name: "x".into(),
+                    shape: vec![m.batch, m.input_shape[0], m.input_shape[1], m.input_shape[2]],
+                    dtype: "float32".into(),
+                };
+                let y = ArgSpec {
+                    name: "y".into(),
+                    shape: vec![m.batch, m.num_classes],
+                    dtype: "float32".into(),
+                };
+                let mut inputs = m.param_specs("w");
+                inputs.extend(m.param_specs("v"));
+                let mut outputs = m.param_names("w");
+                outputs.extend(m.param_names("v"));
+                match quant {
+                    QuantFamily::Fp32 => {
+                        inputs.extend([x, y, scalar("lr"), scalar("mom")]);
+                        outputs.extend(["loss".into(), "acc".into()]);
+                    }
+                    QuantFamily::Dorefa | QuantFamily::Wrpn => {
+                        inputs.extend([x, y, scalar("lr"), scalar("mom"), vec_q("kw", q), scalar("ka")]);
+                        outputs.extend(["loss".into(), "acc".into()]);
+                    }
+                    QuantFamily::Waveq => {
+                        inputs.extend([vec_q("beta", q), vec_q("vbeta", q), x, y]);
+                        inputs.extend([
+                            scalar("lr"),
+                            scalar("mom"),
+                            scalar("lr_beta"),
+                            scalar("ka"),
+                            scalar("lambda_w"),
+                            scalar("lambda_beta"),
+                            scalar("beta_train"),
+                        ]);
+                        outputs.extend([
+                            "beta".into(),
+                            "vbeta".into(),
+                            "loss".into(),
+                            "acc".into(),
+                            "ce".into(),
+                            "reg_w".into(),
+                        ]);
+                    }
+                }
+                ProgramSig {
+                    name: name.to_string(),
+                    file: format!("{name}.native"),
+                    model: Some(model.clone()),
+                    inputs,
+                    outputs,
+                }
+            }
+            ProgramKind::Eval { model, quant } => {
+                let m = &self.models[model];
+                let q = m.num_qlayers();
+                let x = ArgSpec {
+                    name: "x".into(),
+                    shape: vec![m.batch, m.input_shape[0], m.input_shape[1], m.input_shape[2]],
+                    dtype: "float32".into(),
+                };
+                let y = ArgSpec {
+                    name: "y".into(),
+                    shape: vec![m.batch, m.num_classes],
+                    dtype: "float32".into(),
+                };
+                let mut inputs = m.param_specs("w");
+                inputs.extend([x, y]);
+                if *quant != QuantFamily::Fp32 {
+                    inputs.extend([vec_q("kw", q), scalar("ka")]);
+                }
+                ProgramSig {
+                    name: name.to_string(),
+                    file: format!("{name}.native"),
+                    model: Some(model.clone()),
+                    inputs,
+                    outputs: vec!["loss".into(), "acc".into()],
+                }
+            }
+        }
+    }
+
+    fn model(&self, key: &str) -> Result<&NativeModel> {
+        self.models
+            .get(key)
+            .ok_or_else(|| anyhow!("native backend has no model '{key}'"))
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform_name(&self) -> String {
+        "native".to_string()
+    }
+
+    fn compile(&self, sig: &ProgramSig) -> Result<()> {
+        if !self.programs.contains_key(&sig.name) {
+            return Err(anyhow!("native backend has no program '{}'", sig.name));
+        }
+        if self.compiled.borrow_mut().insert(sig.name.clone()) {
+            self.stats.borrow_mut().compiles += 1;
+        }
+        Ok(())
+    }
+
+    fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>> {
+        let kind = self
+            .programs
+            .get(&sig.name)
+            .ok_or_else(|| anyhow!("native backend has no program '{}'", sig.name))?
+            .clone();
+        self.compile(sig)?;
+        let t0 = Instant::now();
+        let out = match &kind {
+            ProgramKind::RegProfile => run_reg_profile(args),
+            ProgramKind::Train { model, quant } => {
+                run_train(&sig.name, self.model(model)?, *quant, args)
+            }
+            ProgramKind::Eval { model, quant } => {
+                run_eval(&sig.name, self.model(model)?, *quant, args)
+            }
+        };
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        out
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}
+
+// ---- program implementations ------------------------------------------------
+
+/// Per-layer quantization state captured during the forward pass.
+struct LayerQuant {
+    /// Effective (possibly fake-quantized) weight used in the matmul.
+    wq: Vec<f32>,
+    /// STE factor dwq/dw per element; None = identity.
+    ste: Option<Vec<f32>>,
+    /// WaveQ only: (normalized coords v, scale m, beta_q) of this layer.
+    waveq: Option<(Vec<f32>, f32, f64)>,
+}
+
+fn param_slices<'a>(
+    prog: &str,
+    model: &NativeModel,
+    args: &'a [&Buffer],
+    offset: usize,
+) -> Result<Vec<&'a [f32]>> {
+    let mut out = Vec::with_capacity(model.num_params());
+    for (i, l) in model.layers.iter().enumerate() {
+        let w = args[offset + 2 * i];
+        let b = args[offset + 2 * i + 1];
+        if w.elem_count() != l.din * l.dout {
+            return Err(anyhow!(
+                "{prog}: param {} has {} elems, expected {}x{}",
+                l.name,
+                w.elem_count(),
+                l.din,
+                l.dout
+            ));
+        }
+        if b.elem_count() != l.dout {
+            return Err(anyhow!(
+                "{prog}: param {}_b has {} elems, expected {}",
+                l.name,
+                b.elem_count(),
+                l.dout
+            ));
+        }
+        out.push(w.data.as_slice());
+        out.push(b.data.as_slice());
+    }
+    Ok(out)
+}
+
+/// Resolve batch size from the x/y buffers and validate consistency.
+fn batch_of(prog: &str, model: &NativeModel, x: &Buffer, y: &Buffer) -> Result<usize> {
+    let pix = model.pixels();
+    if x.elem_count() == 0 || x.elem_count() % pix != 0 {
+        return Err(anyhow!(
+            "{prog}: x has {} elems, not a multiple of {} ({}x{}x{})",
+            x.elem_count(),
+            pix,
+            model.input_shape[0],
+            model.input_shape[1],
+            model.input_shape[2]
+        ));
+    }
+    let batch = x.elem_count() / pix;
+    if y.elem_count() != batch * model.num_classes {
+        return Err(anyhow!(
+            "{prog}: y has {} elems, expected {} x {}",
+            y.elem_count(),
+            batch,
+            model.num_classes
+        ));
+    }
+    Ok(batch)
+}
+
+fn scalar_arg(prog: &str, name: &str, b: &Buffer) -> Result<f32> {
+    b.data
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("{prog}: scalar input '{name}' is empty"))
+}
+
+fn kw_arg(prog: &str, model: &NativeModel, b: &Buffer) -> Result<Vec<f32>> {
+    if b.elem_count() != model.num_qlayers() {
+        return Err(anyhow!(
+            "{prog}: kw has {} entries, model wants {}",
+            b.elem_count(),
+            model.num_qlayers()
+        ));
+    }
+    Ok(b.data.clone())
+}
+
+/// Quantize one layer's weight for the forward pass.
+fn quantize_layer(
+    layer: &FcLayer,
+    w: &[f32],
+    quant: QuantFamily,
+    kw: &[f32],
+    beta: &[f32],
+) -> LayerQuant {
+    match (quant, layer.qidx) {
+        (QuantFamily::Fp32, _) | (_, None) => {
+            LayerQuant { wq: w.to_vec(), ste: None, waveq: None }
+        }
+        (QuantFamily::Dorefa, Some(q)) => {
+            let (wq, ste, _m) = kn::dorefa_quantize(w, kw[q]);
+            LayerQuant { wq, ste: Some(ste), waveq: None }
+        }
+        (QuantFamily::Wrpn, Some(q)) => {
+            let (wq, _m) = kn::wrpn_quantize(w, kw[q]);
+            LayerQuant { wq, ste: None, waveq: None }
+        }
+        (QuantFamily::Waveq, Some(q)) => {
+            let b = beta[q] as f64;
+            let k = (2f64.powf(b) - 1.0) as f32;
+            let (wq, ste, v, m) = kn::dorefa_quantize_full(w, k);
+            LayerQuant { wq, ste: Some(ste), waveq: Some((v, m, b)) }
+        }
+    }
+}
+
+struct ForwardPass {
+    /// hs[l] = input activations of layer l (hs[0] is x); len = L.
+    hs: Vec<Vec<f32>>,
+    /// ReLU masks of the hidden layers (len = L - 1), 1.0 where z > 0.
+    masks: Vec<Vec<f32>>,
+    quants: Vec<LayerQuant>,
+    logits: Vec<f32>,
+}
+
+/// Run the MLP forward; `act_ka = None` means fp32 activations (no fake
+/// quantization after ReLU).
+fn forward(
+    model: &NativeModel,
+    params: &[&[f32]],
+    x: &[f32],
+    batch: usize,
+    quant: QuantFamily,
+    kw: &[f32],
+    beta: &[f32],
+    act_ka: Option<f32>,
+) -> ForwardPass {
+    let nl = model.layers.len();
+    let mut hs: Vec<Vec<f32>> = Vec::with_capacity(nl);
+    let mut masks: Vec<Vec<f32>> = Vec::with_capacity(nl - 1);
+    let mut quants: Vec<LayerQuant> = Vec::with_capacity(nl);
+    let mut h = x.to_vec();
+    let mut logits = Vec::new();
+    for (li, l) in model.layers.iter().enumerate() {
+        let lq = quantize_layer(l, params[2 * li], quant, kw, beta);
+        let mut z = kn::matmul_bias(&h, &lq.wq, params[2 * li + 1], batch, l.din, l.dout);
+        quants.push(lq);
+        hs.push(h);
+        if li + 1 < nl {
+            let mut mask = vec![0.0f32; z.len()];
+            for (zi, mi) in z.iter_mut().zip(mask.iter_mut()) {
+                if *zi > 0.0 {
+                    *mi = 1.0;
+                } else {
+                    *zi = 0.0;
+                }
+            }
+            if let Some(ka) = act_ka {
+                kn::act_quantize(&mut z, ka);
+            }
+            masks.push(mask);
+            h = z;
+        } else {
+            logits = z;
+            h = Vec::new();
+        }
+    }
+    ForwardPass { hs, masks, quants, logits }
+}
+
+fn run_eval(
+    prog: &str,
+    model: &NativeModel,
+    quant: QuantFamily,
+    args: &[&Buffer],
+) -> Result<Vec<Buffer>> {
+    let np = model.num_params();
+    let expected = np + 2 + if quant == QuantFamily::Fp32 { 0 } else { 2 };
+    if args.len() != expected {
+        return Err(anyhow!("{prog}: native dispatch got {} args, wants {expected}", args.len()));
+    }
+    let params = param_slices(prog, model, args, 0)?;
+    let x = args[np];
+    let y = args[np + 1];
+    let batch = batch_of(prog, model, x, y)?;
+    let (kw, act_ka) = if quant == QuantFamily::Fp32 {
+        (Vec::new(), None)
+    } else {
+        (kw_arg(prog, model, args[np + 2])?, Some(scalar_arg(prog, "ka", args[np + 3])?))
+    };
+    let fwd = forward(model, &params, &x.data, batch, quant, &kw, &[], act_ka);
+    let (loss, acc, _dl) = kn::softmax_ce(&fwd.logits, &y.data, batch, model.num_classes);
+    Ok(vec![Buffer::scalar(loss), Buffer::scalar(acc)])
+}
+
+fn run_train(
+    prog: &str,
+    model: &NativeModel,
+    quant: QuantFamily,
+    args: &[&Buffer],
+) -> Result<Vec<Buffer>> {
+    let nl = model.layers.len();
+    let np = model.num_params();
+    let nq = model.num_qlayers();
+    let expected = 2 * np
+        + match quant {
+            QuantFamily::Fp32 => 4,                      // x, y, lr, mom
+            QuantFamily::Dorefa | QuantFamily::Wrpn => 6, // + kw, ka
+            QuantFamily::Waveq => 11, // beta, vbeta, x, y + 7 scalars
+        };
+    if args.len() != expected {
+        return Err(anyhow!("{prog}: native dispatch got {} args, wants {expected}", args.len()));
+    }
+    let params = param_slices(prog, model, args, 0)?;
+    let vels = param_slices(prog, model, args, np)?;
+
+    // Tail inputs, positionally after [w*, v*] (train_step.py layouts).
+    let tail = &args[2 * np..];
+    let beta_in: Vec<f32>;
+    let vbeta_in: Vec<f32>;
+    let x: &Buffer;
+    let y: &Buffer;
+    let lr: f32;
+    let mom: f32;
+    let lr_beta: f32;
+    let ka: Option<f32>;
+    let lam_w: f32;
+    let lam_beta: f32;
+    let beta_train: f32;
+    match quant {
+        QuantFamily::Fp32 => {
+            beta_in = Vec::new();
+            vbeta_in = Vec::new();
+            x = tail[0];
+            y = tail[1];
+            lr = scalar_arg(prog, "lr", tail[2])?;
+            mom = scalar_arg(prog, "mom", tail[3])?;
+            lr_beta = 0.0;
+            ka = None;
+            lam_w = 0.0;
+            lam_beta = 0.0;
+            beta_train = 0.0;
+        }
+        QuantFamily::Dorefa | QuantFamily::Wrpn => {
+            beta_in = Vec::new();
+            vbeta_in = Vec::new();
+            x = tail[0];
+            y = tail[1];
+            lr = scalar_arg(prog, "lr", tail[2])?;
+            mom = scalar_arg(prog, "mom", tail[3])?;
+            lr_beta = 0.0;
+            ka = Some(scalar_arg(prog, "ka", tail[5])?);
+            lam_w = 0.0;
+            lam_beta = 0.0;
+            beta_train = 0.0;
+        }
+        QuantFamily::Waveq => {
+            if tail[0].elem_count() != nq || tail[1].elem_count() != nq {
+                return Err(anyhow!(
+                    "{prog}: beta/vbeta have {}/{} entries, model wants {nq}",
+                    tail[0].elem_count(),
+                    tail[1].elem_count()
+                ));
+            }
+            beta_in = tail[0].data.clone();
+            vbeta_in = tail[1].data.clone();
+            x = tail[2];
+            y = tail[3];
+            lr = scalar_arg(prog, "lr", tail[4])?;
+            mom = scalar_arg(prog, "mom", tail[5])?;
+            lr_beta = scalar_arg(prog, "lr_beta", tail[6])?;
+            ka = Some(scalar_arg(prog, "ka", tail[7])?);
+            lam_w = scalar_arg(prog, "lambda_w", tail[8])?;
+            lam_beta = scalar_arg(prog, "lambda_beta", tail[9])?;
+            beta_train = scalar_arg(prog, "beta_train", tail[10])?;
+        }
+    }
+    let kw = match quant {
+        QuantFamily::Dorefa | QuantFamily::Wrpn => kw_arg(prog, model, tail[4])?,
+        _ => Vec::new(),
+    };
+    let batch = batch_of(prog, model, x, y)?;
+
+    // ---- forward ---------------------------------------------------------
+    let fwd = forward(model, &params, &x.data, batch, quant, &kw, &beta_in, ka);
+    let (ce, acc, dlogits) = kn::softmax_ce(&fwd.logits, &y.data, batch, model.num_classes);
+
+    // ---- regularizer (waveq only) ---------------------------------------
+    let mut reg_w = 0.0f64;
+    let mut dreg_dbeta = vec![0.0f64; nq];
+    if quant == QuantFamily::Waveq {
+        for lq in &fwd.quants {
+            if let Some((v, _m, b)) = &lq.waveq {
+                reg_w += kn::waveq_reg(v, *b);
+            }
+        }
+        for (l, lq) in model.layers.iter().zip(&fwd.quants) {
+            if let (Some(q), Some((v, _m, b))) = (l.qidx, &lq.waveq) {
+                dreg_dbeta[q] = kn::waveq_reg_grad_beta(v, *b);
+            }
+        }
+    }
+    let loss = ce + lam_w * reg_w as f32 + lam_beta * beta_in.iter().sum::<f32>();
+
+    // ---- backward --------------------------------------------------------
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); np];
+    let mut dz = dlogits;
+    for li in (0..nl).rev() {
+        let l = &model.layers[li];
+        let lq = &fwd.quants[li];
+        let mut dw = kn::grad_weight(&fwd.hs[li], &dz, batch, l.din, l.dout);
+        let db = kn::grad_bias(&dz, batch, l.dout);
+        if let Some(ste) = &lq.ste {
+            for (g, &s) in dw.iter_mut().zip(ste.iter()) {
+                *g *= s;
+            }
+        }
+        // WaveQ: lambda_w * dR/dw, chained v -> w through the tanh
+        // normalization (per-layer max treated as constant, like the STE).
+        if lam_w != 0.0 {
+            if let Some((v, m, b)) = &lq.waveq {
+                let gv = kn::waveq_reg_grad_v(v, *b);
+                let ste = lq.ste.as_ref().expect("waveq layers carry an STE");
+                for ((g, &gvj), &s) in dw.iter_mut().zip(gv.iter()).zip(ste.iter()) {
+                    *g += lam_w * gvj * s / (2.0 * m);
+                }
+            }
+        }
+        grads[2 * li] = dw;
+        grads[2 * li + 1] = db;
+        if li > 0 {
+            let mut dh = kn::grad_input(&dz, &lq.wq, batch, l.din, l.dout);
+            for (g, &mk) in dh.iter_mut().zip(fwd.masks[li - 1].iter()) {
+                *g *= mk;
+            }
+            dz = dh;
+        }
+    }
+
+    // ---- updates ---------------------------------------------------------
+    kn::clip_by_global_norm(&mut grads, kn::GRAD_CLIP_NORM);
+    let mut new_params: Vec<Vec<f32>> = params.iter().map(|p| p.to_vec()).collect();
+    let mut new_vels: Vec<Vec<f32>> = vels.iter().map(|v| v.to_vec()).collect();
+    kn::sgd_momentum(&mut new_params, &mut new_vels, &grads, lr, mom);
+
+    let (mut new_beta, mut new_vbeta) = (beta_in.clone(), vbeta_in.clone());
+    if quant == QuantFamily::Waveq {
+        for q in 0..nq {
+            let gb = (lam_w as f64 * dreg_dbeta[q] + lam_beta as f64) as f32 * beta_train;
+            new_vbeta[q] = mom * vbeta_in[q] + gb;
+            new_beta[q] = kn::clip_beta(beta_in[q] - lr_beta * new_vbeta[q]);
+        }
+    }
+
+    // ---- pack outputs ----------------------------------------------------
+    let mut outs: Vec<Buffer> = Vec::with_capacity(2 * np + 8);
+    for (i, l) in model.layers.iter().enumerate() {
+        outs.push(Buffer::new(vec![l.din, l.dout], std::mem::take(&mut new_params[2 * i]))?);
+        outs.push(Buffer::new(vec![l.dout], std::mem::take(&mut new_params[2 * i + 1]))?);
+    }
+    for (i, l) in model.layers.iter().enumerate() {
+        outs.push(Buffer::new(vec![l.din, l.dout], std::mem::take(&mut new_vels[2 * i]))?);
+        outs.push(Buffer::new(vec![l.dout], std::mem::take(&mut new_vels[2 * i + 1]))?);
+    }
+    if quant == QuantFamily::Waveq {
+        outs.push(Buffer::new(vec![nq], new_beta)?);
+        outs.push(Buffer::new(vec![nq], new_vbeta)?);
+    }
+    outs.push(Buffer::scalar(loss));
+    outs.push(Buffer::scalar(acc));
+    if quant == QuantFamily::Waveq {
+        outs.push(Buffer::scalar(ce));
+        outs.push(Buffer::scalar(reg_w as f32));
+    }
+    Ok(outs)
+}
+
+fn run_reg_profile(args: &[&Buffer]) -> Result<Vec<Buffer>> {
+    if args.len() != 2 {
+        return Err(anyhow!("reg_profile: native dispatch got {} args, wants 2", args.len()));
+    }
+    let wgrid = &args[0].data;
+    let bgrid = &args[1].data;
+    let (nw, nb) = (wgrid.len(), bgrid.len());
+    let mut outs = Vec::with_capacity(9);
+    for norm in 0..3u32 {
+        let mut r = vec![0.0f32; nw * nb];
+        let mut d1 = vec![0.0f32; nw * nb];
+        let mut d2 = vec![0.0f32; nw * nb];
+        for (wi, &wv) in wgrid.iter().enumerate() {
+            for (bi, &bv) in bgrid.iter().enumerate() {
+                let (w, b) = (wv as f64, bv as f64);
+                r[wi * nb + bi] = kn::reg_point(w, b, norm) as f32;
+                d1[wi * nb + bi] = kn::reg_point_d1(w, b, norm) as f32;
+                d2[wi * nb + bi] = kn::reg_point_d2(w, b, norm) as f32;
+            }
+        }
+        outs.push(Buffer::new(vec![nw, nb], r)?);
+        outs.push(Buffer::new(vec![nw, nb], d1)?);
+        outs.push(Buffer::new(vec![nw, nb], d2)?);
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::buffer::{buffer_f32, scalar_f32};
+    use crate::util::rng::Rng;
+
+    fn dummy_train_args(backend: &NativeBackend, prog: &str) -> Vec<Buffer> {
+        let manifest = backend.manifest();
+        let sig = manifest.program(prog).unwrap();
+        let mut rng = Rng::new(7);
+        sig.inputs
+            .iter()
+            .map(|a| {
+                if a.shape.is_empty() {
+                    return scalar_f32(match a.name.as_str() {
+                        "lr" => 0.01,
+                        "mom" => 0.9,
+                        "lr_beta" => 0.01,
+                        "ka" => 16_777_215.0,
+                        "lambda_w" => 0.1,
+                        "lambda_beta" => 0.01,
+                        "beta_train" => 1.0,
+                        _ => 0.5,
+                    });
+                }
+                let n = a.elem_count();
+                let data: Vec<f32> = match a.name.as_str() {
+                    "beta" => vec![4.0; n],
+                    "kw" => vec![7.0; n],
+                    "y" => {
+                        let classes = *a.shape.last().unwrap();
+                        let mut v = vec![0.0; n];
+                        for r in 0..a.shape[0] {
+                            v[r * classes + r % classes] = 1.0;
+                        }
+                        v
+                    }
+                    name if name.starts_with("w:") => rng.normal_vec(n, 0.1),
+                    _ => vec![0.0; n],
+                };
+                buffer_f32(&data, &a.shape).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_native_program_executes_with_matching_arity() {
+        let backend = NativeBackend::new();
+        let manifest = backend.manifest();
+        for (name, sig) in &manifest.programs {
+            let args = dummy_train_args(&backend, name);
+            let refs: Vec<&Buffer> = args.iter().collect();
+            let outs = backend
+                .execute(sig, &refs)
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(outs.len(), sig.outputs.len(), "{name} output arity");
+            if let Ok(i) = sig.output_index("loss") {
+                let loss = outs[i].data[0];
+                assert!(loss.is_finite(), "{name} loss not finite");
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_is_deterministic() {
+        let backend = NativeBackend::new();
+        let manifest = backend.manifest();
+        let sig = manifest.program("train_waveq_mlp").unwrap();
+        let args = dummy_train_args(&backend, "train_waveq_mlp");
+        let refs: Vec<&Buffer> = args.iter().collect();
+        let li = sig.output_index("loss").unwrap();
+        let a = backend.execute(sig, &refs).unwrap()[li].data[0];
+        let b = backend.execute(sig, &refs).unwrap()[li].data[0];
+        assert_eq!(a, b, "same inputs must give bit-identical loss");
+    }
+
+    #[test]
+    fn waveq_reg_term_raises_loss_over_ce() {
+        let backend = NativeBackend::new();
+        let manifest = backend.manifest();
+        let sig = manifest.program("train_waveq_mlp").unwrap();
+        let args = dummy_train_args(&backend, "train_waveq_mlp");
+        let refs: Vec<&Buffer> = args.iter().collect();
+        let outs = backend.execute(sig, &refs).unwrap();
+        let loss = outs[sig.output_index("loss").unwrap()].data[0];
+        let ce = outs[sig.output_index("ce").unwrap()].data[0];
+        let reg = outs[sig.output_index("reg_w").unwrap()].data[0];
+        assert!(reg > 0.0, "random weights should not sit on the grid");
+        assert!(loss > ce, "loss must include the positive penalty terms");
+    }
+
+    #[test]
+    fn beta_moves_only_when_beta_train_set() {
+        let backend = NativeBackend::new();
+        let manifest = backend.manifest();
+        let sig = manifest.program("train_waveq_mlp").unwrap();
+        let bidx = sig.output_index("beta").unwrap();
+        let bin = sig.input_index("beta").unwrap();
+        let fin = sig.input_index("beta_train").unwrap();
+
+        let mut args = dummy_train_args(&backend, "train_waveq_mlp");
+        // Use a beta off the integer grid so dR/dbeta is generically nonzero.
+        args[bin] = buffer_f32(&[3.7, 5.2], &[2]).unwrap();
+        args[fin] = scalar_f32(0.0);
+        let refs: Vec<&Buffer> = args.iter().collect();
+        let frozen = backend.execute(sig, &refs).unwrap()[bidx].data.clone();
+        assert_eq!(frozen, vec![3.7, 5.2], "beta must not move when gated off");
+
+        args[fin] = scalar_f32(1.0);
+        let refs: Vec<&Buffer> = args.iter().collect();
+        let live = backend.execute(sig, &refs).unwrap()[bidx].data.clone();
+        assert_ne!(live, vec![3.7, 5.2], "beta must move when training is enabled");
+        for &b in &live {
+            assert!((1.0..=8.0).contains(&b), "beta {b} escaped its clip range");
+        }
+    }
+
+    #[test]
+    fn reg_profile_surfaces_have_grid_zeros() {
+        let backend = NativeBackend::new();
+        let manifest = backend.manifest();
+        let sig = manifest.program("reg_profile").unwrap();
+        let w: Vec<f32> = (0..REG_PROFILE_NW)
+            .map(|i| -1.25 + 2.5 * i as f32 / (REG_PROFILE_NW - 1) as f32)
+            .collect();
+        let b: Vec<f32> = (0..REG_PROFILE_NB)
+            .map(|i| 1.0 + 7.0 * i as f32 / (REG_PROFILE_NB - 1) as f32)
+            .collect();
+        let args = vec![
+            buffer_f32(&w, &[REG_PROFILE_NW]).unwrap(),
+            buffer_f32(&b, &[REG_PROFILE_NB]).unwrap(),
+        ];
+        let refs: Vec<&Buffer> = args.iter().collect();
+        let outs = backend.execute(sig, &refs).unwrap();
+        assert_eq!(outs.len(), 9);
+        // R_n1 is non-negative and bounded by its 1/2^beta envelope.
+        let r1 = &outs[3];
+        for (wi, _) in w.iter().enumerate() {
+            for (bi, &bv) in b.iter().enumerate() {
+                let v = r1.data[wi * REG_PROFILE_NB + bi];
+                assert!(v >= 0.0, "R1 negative at ({wi},{bi})");
+                assert!(v <= 2f32.powf(-bv) + 1e-6, "R1 above envelope at ({wi},{bi})");
+            }
+        }
+        // All derivative surfaces are finite.
+        for o in &outs {
+            assert!(o.data.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn unknown_program_is_a_clean_error() {
+        let backend = NativeBackend::new();
+        let sig = ProgramSig {
+            name: "train_waveq_resnet99".into(),
+            file: "nope".into(),
+            model: None,
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let err = backend.execute(&sig, &[]).unwrap_err();
+        assert!(format!("{err}").contains("no program"), "{err}");
+    }
+}

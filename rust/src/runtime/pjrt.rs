@@ -1,0 +1,127 @@
+//! PJRT backend: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily and cached per program name, so the
+//! coordinator's hot loop never recompiles.
+//!
+//! All programs return a single tuple (lowered with `return_tuple=True`);
+//! [`PjrtBackend::execute`] decomposes it into one [`Buffer`] per named
+//! output.
+//!
+//! Only built with `--features pjrt`, which additionally requires the
+//! vendored `xla` crate closure in Cargo.toml (see the feature note there);
+//! the default build uses `runtime::native` and needs no artifacts.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::backend::{Backend, RuntimeStats};
+use super::buffer::Buffer;
+use super::manifest::ProgramSig;
+
+pub struct PjrtBackend {
+    client: PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl PjrtBackend {
+    /// Open the artifacts directory the manifest's program files live in.
+    pub fn open(dir: &Path) -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtBackend {
+            client,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Compile (or fetch cached) executable for a program.
+    fn executable(&self, sig: &ProgramSig) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&sig.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&sig.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", sig.name))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(sig.name.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+fn to_literal(b: &Buffer) -> Result<Literal> {
+    if b.shape.is_empty() {
+        return Ok(Literal::scalar(b.data[0]));
+    }
+    let lit = Literal::vec1(&b.data);
+    let dims: Vec<i64> = b.shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+fn from_literal(lit: &Literal) -> Result<Buffer> {
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+    let shape: Vec<usize> = lit
+        .array_shape()
+        .map_err(|e| anyhow!("shape: {e:?}"))?
+        .dims()
+        .iter()
+        .map(|&d| d as usize)
+        .collect();
+    Buffer::new(shape, data)
+}
+
+impl Backend for PjrtBackend {
+    fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, sig: &ProgramSig) -> Result<()> {
+        self.executable(sig).map(|_| ())
+    }
+
+    fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>> {
+        let exe = self.executable(sig)?;
+        let literals = args.iter().map(|b| to_literal(b)).collect::<Result<Vec<_>>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e:?}", sig.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {} result: {e:?}", sig.name))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {} result: {e:?}", sig.name))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        outs.iter().map(from_literal).collect()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}

@@ -314,3 +314,131 @@ fn prop_decrement_layer_never_increases_energy() {
         },
     );
 }
+
+// ---- native-backend kernel properties (the pure-Rust reference math) --------
+
+use waveq::config::levels;
+use waveq::runtime::native::kernels;
+
+#[test]
+fn prop_native_quantizer_agrees_with_levels_grid() {
+    check(
+        "dorefa output lands on the config::levels grid, nearest level",
+        &cfg(),
+        |r| {
+            let n = 1 + r.below_usize(200);
+            let w: Vec<f32> = (0..n).map(|_| r.normal_f32() * 1.5).collect();
+            (w, gen_bits(r))
+        },
+        |(w, bits)| {
+            let k = levels(*bits);
+            let (wq, ste, m) = kernels::dorefa_quantize(w, k);
+            for (i, (&q, &x)) in wq.iter().zip(w.iter()).enumerate() {
+                if q.abs() > m + 1e-5 {
+                    return Err(format!("wq[{i}]={q} outside [-m, m], m={m}"));
+                }
+                // Normalized coordinate must sit exactly on a j/k level.
+                let v = q / (2.0 * m) + 0.5;
+                let snapped = (v * k).round() / k;
+                if (v - snapped).abs() > 1e-5 {
+                    return Err(format!("wq[{i}]={q} -> v={v} is off-grid for k={k}"));
+                }
+                // ... and be the nearest level to the input's coordinate.
+                let vin = x.tanh() / (2.0 * m) + 0.5;
+                if (vin - v).abs() > 0.5 / k + 1e-5 {
+                    return Err(format!(
+                        "wq[{i}] not nearest level: vin={vin} v={v} k={k}"
+                    ));
+                }
+                let s = ste[i];
+                if !(0.0..=1.0).contains(&s) {
+                    return Err(format!("ste[{i}]={s} out of range"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sin2_regularizer_zero_on_grid_and_periodic() {
+    check(
+        "R(v; b) vanishes exactly at grid points and is 1/k-periodic in v",
+        &cfg(),
+        |r| {
+            let bits = gen_bits(r);
+            let n = 1 + r.below_usize(50);
+            let v: Vec<f32> = (0..n).map(|_| r.uniform_f32()).collect();
+            (v, bits, r.below_usize(3) as i32 + 1)
+        },
+        |(v, bits, period_mult)| {
+            let beta = *bits as f64;
+            let k = 2f64.powf(beta) - 1.0;
+            // Zero (within eps) exactly at the v = j/k grid points.
+            let grid: Vec<f32> = (0..=(k as i64)).map(|j| (j as f64 / k) as f32).collect();
+            let r_grid = kernels::waveq_reg(&grid, beta);
+            if r_grid > 1e-9 {
+                return Err(format!("R on grid = {r_grid} (bits {bits})"));
+            }
+            // Strictly positive at mid-grid points.
+            let mid: Vec<f32> = (0..(k as i64)).map(|j| ((j as f64 + 0.5) / k) as f32).collect();
+            if kernels::waveq_reg(&mid, beta) < 1e-6 {
+                return Err("R at mid-grid should be positive".into());
+            }
+            // Periodicity: shifting every v by p/k leaves R unchanged.
+            let p = *period_mult as f64;
+            let shifted: Vec<f32> = v.iter().map(|&x| (x as f64 + p / k) as f32).collect();
+            let a = kernels::waveq_reg(v, beta);
+            let b = kernels::waveq_reg(&shifted, beta);
+            if (a - b).abs() > 1e-4 * (1.0 + a.abs()) {
+                return Err(format!("R not periodic: {a} vs {b} (shift {p}/k)"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_regularizer_gradients_match_finite_difference() {
+    check(
+        "analytic dR/dbeta and dR/dv match a central-difference probe",
+        &cfg(),
+        |r| {
+            let n = 2 + r.below_usize(20);
+            let v: Vec<f32> = (0..n).map(|_| r.uniform_f32()).collect();
+            // Stay away from the very top of the beta range so beta + h
+            // remains in the meaningful domain.
+            let beta = 1.5 + 6.0 * r.uniform();
+            (v, beta)
+        },
+        |(v, beta)| {
+            let b = *beta;
+            let h = 1e-5;
+            // dR/dbeta
+            let fd = (kernels::waveq_reg(v, b + h) - kernels::waveq_reg(v, b - h)) / (2.0 * h);
+            let an = kernels::waveq_reg_grad_beta(v, b);
+            // The surface oscillates with amplitude ~ k = 2^b; scale the
+            // tolerance accordingly.
+            let scale = 1.0 + an.abs() + 2f64.powf(b);
+            if (fd - an).abs() > 1e-3 * scale {
+                return Err(format!("dR/dbeta mismatch: fd={fd} an={an} (beta {b})"));
+            }
+            // dR/dv at a probe element, via f64 recomputation.
+            let gv = kernels::waveq_reg_grad_v(v, b);
+            let i = v.len() / 2;
+            let probe = |delta: f64| -> f64 {
+                let mut vv = v.clone();
+                vv[i] = (vv[i] as f64 + delta) as f32;
+                kernels::waveq_reg(&vv, b)
+            };
+            let hv = 1e-4;
+            let fdv = (probe(hv) - probe(-hv)) / (2.0 * hv);
+            let anv = gv[i] as f64;
+            let vscale = 1.0 + anv.abs() + 2f64.powf(b);
+            if (fdv - anv).abs() > 5e-3 * vscale {
+                return Err(format!("dR/dv mismatch at {i}: fd={fdv} an={anv} (beta {b})"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,171 @@
+//! Minimal `anyhow` shim (string-backed), vendored so the workspace builds
+//! offline with no registry access. Implements exactly the subset the
+//! `waveq` crate uses:
+//!
+//! * [`Error`] — an opaque error holding a message plus a causal chain of
+//!   context strings (most recent first, like anyhow's `{:#}` rendering).
+//! * [`Result<T>`] — alias for `std::result::Result<T, Error>`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-style constructors.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on results whose
+//!   error is either a std error or already an [`Error`].
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `impl From<E: std::error::Error>` possible.
+
+use std::fmt;
+
+pub struct Error {
+    /// Outermost context first; the root cause is the last entry.
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (without the cause chain).
+    pub fn to_string_outer(&self) -> String {
+        self.chain.first().cloned().unwrap_or_default()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Plain and `{:#}` alternate both render the full chain,
+        // anyhow-style "outer: inner: root".
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to an error as it propagates.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(fails_io().is_err());
+    }
+
+    #[test]
+    fn context_chains_render_outer_first() {
+        let e = fails_io().with_context(|| "loading config").unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.starts_with("loading config: "), "{s}");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("bad {} at {}", "value", 7);
+        assert_eq!(e.to_string(), "bad value at 7");
+        let s = String::from("plain");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(v: i32) -> Result<i32> {
+            ensure!(v > 0, "v must be positive, got {v}");
+            if v > 100 {
+                bail!("v too large: {v}");
+            }
+            Ok(v)
+        }
+        assert!(check(5).is_ok());
+        assert!(check(-1).is_err());
+        assert!(check(101).is_err());
+    }
+}
