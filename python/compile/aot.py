@@ -33,6 +33,16 @@ BATCH = {
     "alexnetl": 32, "resnet18l": 32, "mobilenetl": 32,
 }
 
+# Dataset each model trains on (`data::synth` spec names on the Rust side).
+# Carried in the manifest because input shape alone is ambiguous: cifar-lite
+# and svhn-lite are both 16x16x3/10-way.
+DATASET = {
+    "mlp": "mlp-lite",
+    "simplenet5": "cifar-lite", "resnet20l": "cifar-lite", "vgg11l": "cifar-lite",
+    "svhn8": "svhn-lite",
+    "alexnetl": "imagenet-lite", "resnet18l": "imagenet-lite", "mobilenetl": "imagenet-lite",
+}
+
 # WRPN width multiplier (the paper's WRPN-2x configuration).
 WRPN_WIDTH = 2
 
@@ -53,8 +63,10 @@ def spec_json(s) -> dict:
 
 
 def model_json(model: zoo.Model, batch: int, width_mult: int) -> dict:
+    base = model.name.removesuffix(f"_w{width_mult}")
     return {
         "name": model.name,
+        "dataset": DATASET[base],
         "input_shape": list(model.input_shape),
         "num_classes": model.num_classes,
         "batch": batch,

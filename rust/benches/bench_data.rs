@@ -30,11 +30,11 @@ fn main() {
     // wait when the producer runs ahead.
     let ds = Dataset::generate(spec("cifar-lite"), 8192, 1, 0);
     let batcher = Batcher::new(ds, 64, 1);
-    let pf = Prefetcher::spawn(batcher, 4, 100);
+    let mut pf = Prefetcher::spawn(batcher, 4, 100);
     let mut waits = Vec::new();
     for _ in 0..100 {
         let t0 = Instant::now();
-        let batch = pf.next().unwrap();
+        let batch = pf.next().unwrap().unwrap();
         waits.push(t0.elapsed());
         std::thread::sleep(std::time::Duration::from_millis(2)); // simulated step
         std::hint::black_box(&batch);

@@ -2,16 +2,15 @@
 //! (set WAVEQ_BENCH_SCALE=full for paper scale; `waveq experiment fig8` is
 //! the CLI route). Prints the same rows the paper's fig8 reports.
 
+// Runs hermetically: `Runtime::open` serves the native backend when no
+// artifacts directory is present, and the native manifest covers the
+// full model zoo.
 use waveq::experiments::{self, ExpContext, Scale};
 use waveq::runtime::Runtime;
 
 fn main() {
     waveq::util::logging::init();
     let dir = waveq::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("bench_fig8_convergence: artifacts not built, skipping");
-        return;
-    }
     let rt = Runtime::open(&dir).unwrap();
     let scale = match waveq::bench_support::scale() {
         waveq::bench_support::Scale::Full => Scale::Full,

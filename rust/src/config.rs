@@ -135,8 +135,15 @@ impl RunConfig {
             Some(p) => Self::from_json_file(Path::new(p))?,
             None => RunConfig::default(),
         };
+        // `from_json` already syncs the schedule horizon to `steps` unless
+        // the file set `schedule.total_steps` explicitly (detectable here as
+        // the two disagreeing). An explicit file value wins over the sync,
+        // but a CLI `--steps` override is fresher intent and re-syncs.
+        let json_total_explicit = path.is_some() && cfg.schedule.total_steps != cfg.steps;
         cfg.apply_args(args)?;
-        cfg.schedule.total_steps = cfg.steps;
+        if !json_total_explicit || args.get("steps").is_some() {
+            cfg.schedule.total_steps = cfg.steps;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -205,6 +212,22 @@ impl RunConfig {
             if let Some(v) = s.get("gamma").and_then(|x| x.as_f64()) {
                 c.schedule.gamma = v;
             }
+            if let Some(v) = s.get("beta_decay").and_then(|x| x.as_f64()) {
+                c.schedule.beta_decay = v;
+            }
+        }
+        // Keep the schedule horizon in lockstep with the run length (the
+        // same sync `RunConfig::load` performs): a direct `from_json` caller
+        // would otherwise train 500 steps against a default 1000-step
+        // schedule and never leave the explore phase on time. An explicit
+        // schedule.total_steps still wins.
+        c.schedule.total_steps = c.steps;
+        if let Some(v) = j
+            .get("schedule")
+            .and_then(|s| s.get("total_steps"))
+            .and_then(|x| x.as_usize())
+        {
+            c.schedule.total_steps = v;
         }
         Ok(c)
     }
@@ -306,6 +329,9 @@ mod tests {
         assert_eq!(cfg.algo, Algo::Dorefa);
         assert_eq!(cfg.weight_bits, 3);
         assert_eq!(cfg.schedule.lambda_w_max, 2.5);
+        // Regression: from_json must sync the schedule horizon to the run
+        // length (not leave the 1000-step default on a 50-step run).
+        assert_eq!(cfg.schedule.total_steps, 50);
 
         let spec = ArgSpec { value_flags: &["bits", "model"], switch_flags: &[] };
         let args = Args::parse(
@@ -316,6 +342,44 @@ mod tests {
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.weight_bits, 5);
         assert_eq!(cfg.model, "vgg11l");
+    }
+
+    #[test]
+    fn from_json_schedule_round_trip() {
+        // Regression: beta_decay used to be silently dropped by from_json.
+        let j = Json::parse(
+            r#"{"steps": 500,
+                "schedule": {"beta_decay": 7.5, "explore_frac": 0.2}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.schedule.beta_decay, 7.5);
+        assert_eq!(cfg.schedule.explore_frac, 0.2);
+        assert_eq!(cfg.schedule.total_steps, 500);
+        // An explicit schedule.total_steps overrides the sync.
+        let j = Json::parse(r#"{"steps": 500, "schedule": {"total_steps": 800}}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.schedule.total_steps, 800);
+        // RunConfig::load with no config file syncs to the CLI-resolved steps.
+        let spec = ArgSpec { value_flags: &["steps"], switch_flags: &[] };
+        let args = Args::parse(&["x".to_string()], &spec).unwrap();
+        let cfg = RunConfig::load(None, &args).unwrap();
+        assert_eq!(cfg.schedule.total_steps, cfg.steps);
+        // Through the --config path the explicit file value also wins...
+        let path = std::env::temp_dir().join("waveq_cfg_total_steps.json");
+        std::fs::write(&path, r#"{"steps": 500, "schedule": {"total_steps": 800}}"#).unwrap();
+        let p = path.to_string_lossy().into_owned();
+        let cfg = RunConfig::load(Some(&p), &args).unwrap();
+        assert_eq!((cfg.steps, cfg.schedule.total_steps), (500, 800));
+        // ...unless a CLI --steps override re-syncs the horizon.
+        let args = Args::parse(
+            &["x".to_string(), "--steps".into(), "200".into()],
+            &spec,
+        )
+        .unwrap();
+        let cfg = RunConfig::load(Some(&p), &args).unwrap();
+        assert_eq!((cfg.steps, cfg.schedule.total_steps), (200, 200));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -12,13 +12,18 @@ pub struct BitAssignment {
 }
 
 impl BitAssignment {
-    /// Eq. 2.4 applied to a live beta vector.
+    /// Eq. 2.4 applied to a live beta vector. Beta is clamped into the
+    /// (1, 8] domain the training step itself enforces (`kernels::clip_beta`)
+    /// before computing alpha: a beta that drifted to or below zero would
+    /// otherwise blow alpha up to ~b/1e-6 (and flip its sign for negative
+    /// beta), poisoning every alpha-scaled consumer downstream. Legitimate
+    /// betas in (1, 2) keep their true alpha = ceil(beta)/beta (< 2).
     pub fn from_beta(beta: &[f32]) -> BitAssignment {
         let bits: Vec<u32> = beta.iter().map(|&b| ceil_bits(b)).collect();
         let alpha = beta
             .iter()
             .zip(&bits)
-            .map(|(&be, &bi)| bi as f32 / be.max(1e-6))
+            .map(|(&be, &bi)| bi as f32 / be.clamp(1.0 + 1e-3, 8.0))
             .collect();
         BitAssignment { bits, alpha }
     }
@@ -78,6 +83,28 @@ mod tests {
         assert!((a.alpha[1] - 1.0).abs() < 1e-6);
         // alpha >= 1 always (b = ceil(beta) >= beta)
         assert!(a.alpha.iter().all(|&x| x >= 1.0));
+    }
+
+    #[test]
+    fn from_beta_clamps_degenerate_beta() {
+        // Regression: beta <= 0 used to produce alpha ~ 2e6 (b / 1e-6) or a
+        // negative alpha; with the clip_beta-domain clamp every alpha stays
+        // finite and positive, bounded by 2/(1 + 1e-3) at the bottom.
+        let a = BitAssignment::from_beta(&[0.0, -3.5, 1e-9, 0.5, 9.7]);
+        assert_eq!(a.bits, vec![2, 2, 2, 2, 8]);
+        for &al in &a.alpha {
+            assert!((1.0..=2.0).contains(&al), "alpha {al} out of range");
+            assert!(al.is_finite());
+        }
+        // Degenerate betas all resolve to alpha = 2 / clip_beta floor.
+        for &al in &a.alpha[..4] {
+            assert!((al - 2.0 / 1.001).abs() < 1e-3, "alpha {al}");
+        }
+        // In-domain betas are untouched by the clamp, including the live
+        // (1, 2) band clip_beta allows: alpha = ceil(beta)/beta there.
+        let b = BitAssignment::from_beta(&[3.2, 1.5]);
+        assert!((b.alpha[0] - 4.0 / 3.2).abs() < 1e-6);
+        assert!((b.alpha[1] - 2.0 / 1.5).abs() < 1e-6);
     }
 
     #[test]

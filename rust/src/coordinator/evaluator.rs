@@ -5,12 +5,12 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::data::{spec_for_input, Batcher, Dataset};
+use crate::data::{spec_for_model, Batcher, Dataset};
 use crate::runtime::{buffer_f32, scalar_f32, to_scalar_f32, Buffer, ModelMeta, Runtime};
 
 /// Deterministic held-out batcher for a model (stream 1 never overlaps train).
 pub fn test_batcher(model: &ModelMeta, n_examples: usize, seed: u64) -> Batcher {
-    let dspec = spec_for_input(model.input_shape, model.num_classes);
+    let dspec = spec_for_model(model);
     let ds = Dataset::generate(dspec, n_examples, seed, 1);
     Batcher::new(ds, model.batch, seed)
 }

@@ -17,7 +17,7 @@ use super::evaluator::{evaluate, test_batcher};
 use super::metrics::MetricsRecorder;
 use super::state::TrainState;
 use crate::config::{levels, Algo, RunConfig};
-use crate::data::{spec_for_input, Batcher, Dataset, Prefetcher};
+use crate::data::{spec_for_model, Batcher, Dataset, Prefetcher};
 use crate::runtime::{buffer_f32, scalar_f32, to_scalar_f32, to_vec_f32, Buffer, Runtime};
 use crate::schedule::PhaseController;
 use crate::tensor::Histogram;
@@ -142,10 +142,10 @@ impl<'a> Trainer<'a> {
         let out_beta = sig.output_index("beta").ok();
 
         // ---- data pipeline ------------------------------------------------
-        let dspec = spec_for_input(model.input_shape, model.num_classes);
+        let dspec = spec_for_model(&model);
         let train_ds = Dataset::generate(dspec.clone(), cfg.train_examples, cfg.seed, 0);
         let batcher = Batcher::new(train_ds, batch, cfg.seed);
-        let prefetch = Prefetcher::spawn(batcher, 4, cfg.steps);
+        let mut prefetch = Prefetcher::spawn(batcher, 4, cfg.steps);
 
         // ---- state --------------------------------------------------------
         let is_waveq = matches!(cfg.algo, Algo::WaveqPreset | Algo::WaveqLearned);
@@ -174,7 +174,7 @@ impl<'a> Trainer<'a> {
         // ---- the loop -------------------------------------------------------
         for step in 0..cfg.steps {
             let batch_data = prefetch
-                .next()
+                .next()?
                 .ok_or_else(|| anyhow!("data pipeline ended early at step {step}"))?;
 
             // Schedule knobs (rust-side coordination contribution).

@@ -9,6 +9,8 @@
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::JoinHandle;
 
+use anyhow::{anyhow, Result};
+
 use super::synth::Dataset;
 use crate::util::rng::Rng;
 
@@ -94,25 +96,66 @@ impl Batcher {
 /// Background prefetcher: producer thread + bounded channel.
 pub struct Prefetcher {
     rx: Receiver<Batch>,
-    _handle: JoinHandle<()>,
+    /// Taken (joined) once the channel closes, so a producer panic is
+    /// surfaced instead of masquerading as an early end-of-stream.
+    handle: Option<JoinHandle<()>>,
+    /// Sticky panic message: once the producer is known to have died, every
+    /// later `next` keeps erroring instead of reporting a clean end.
+    failed: Option<String>,
 }
 
 impl Prefetcher {
     /// `depth` = number of batches buffered ahead of the consumer.
     pub fn spawn(mut batcher: Batcher, depth: usize, total_batches: usize) -> Prefetcher {
+        Self::spawn_source(move || batcher.next_batch(), depth, total_batches)
+    }
+
+    /// Generic producer (tests inject failing sources through this).
+    pub fn spawn_source(
+        mut source: impl FnMut() -> Batch + Send + 'static,
+        depth: usize,
+        total_batches: usize,
+    ) -> Prefetcher {
         let (tx, rx) = sync_channel(depth);
         let handle = std::thread::spawn(move || {
             for _ in 0..total_batches {
-                if tx.send(batcher.next_batch()).is_err() {
+                if tx.send(source()).is_err() {
                     return; // consumer dropped early
                 }
             }
         });
-        Prefetcher { rx, _handle: handle }
+        Prefetcher { rx, handle: Some(handle), failed: None }
     }
 
-    pub fn next(&self) -> Option<Batch> {
-        self.rx.recv().ok()
+    /// Next batch; `Ok(None)` once the producer delivered everything. If
+    /// the producer thread *panicked*, the panic message is propagated as
+    /// an error rather than a silent early end-of-stream — and stays an
+    /// error on every later call (a retrying caller must not mistake the
+    /// truncated stream for a clean end).
+    pub fn next(&mut self) -> Result<Option<Batch>> {
+        if let Some(msg) = &self.failed {
+            return Err(anyhow!("data producer thread panicked: {msg}"));
+        }
+        match self.rx.recv() {
+            Ok(b) => Ok(Some(b)),
+            Err(_) => match self.handle.take() {
+                Some(h) => match h.join() {
+                    Ok(()) => Ok(None),
+                    Err(payload) => {
+                        let msg = payload
+                            .downcast_ref::<String>()
+                            .map(String::as_str)
+                            .or_else(|| payload.downcast_ref::<&'static str>().copied())
+                            .unwrap_or("(non-string panic payload)")
+                            .to_string();
+                        let err = anyhow!("data producer thread panicked: {msg}");
+                        self.failed = Some(msg);
+                        Err(err)
+                    }
+                },
+                None => Ok(None), // already joined on a previous call
+            },
+        }
     }
 }
 
@@ -171,13 +214,44 @@ mod tests {
     #[test]
     fn prefetcher_delivers_all_batches() {
         let b = Batcher::new(small_ds(), 16, 0);
-        let pf = Prefetcher::spawn(b, 2, 10);
+        let mut pf = Prefetcher::spawn(b, 2, 10);
         let mut count = 0;
-        while let Some(batch) = pf.next() {
+        while let Some(batch) = pf.next().unwrap() {
             assert_eq!(batch.x.len(), 16 * 8 * 8 * 3);
             count += 1;
         }
         assert_eq!(count, 10);
+        // Polling past the end keeps returning a clean None.
+        assert!(pf.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn prefetcher_surfaces_producer_panics() {
+        // A source that dies mid-stream: the delivered batches arrive, then
+        // `next` must report the panic message instead of a silent end.
+        let mut calls = 0usize;
+        let mut src_batcher = Batcher::new(small_ds(), 16, 0);
+        let mut pf = Prefetcher::spawn_source(
+            move || {
+                calls += 1;
+                if calls > 2 {
+                    panic!("synthetic producer failure at batch {calls}");
+                }
+                src_batcher.next_batch()
+            },
+            1,
+            10,
+        );
+        assert!(pf.next().unwrap().is_some());
+        assert!(pf.next().unwrap().is_some());
+        let err = pf.next().unwrap_err().to_string();
+        assert!(
+            err.contains("producer thread panicked") && err.contains("synthetic producer failure"),
+            "unexpected error: {err}"
+        );
+        // The failure is sticky: polling again must NOT look like a clean end.
+        let again = pf.next().unwrap_err().to_string();
+        assert!(again.contains("producer thread panicked"), "{again}");
     }
 
     #[test]

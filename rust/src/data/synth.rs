@@ -39,7 +39,12 @@ pub struct DatasetSpec {
 /// is calibrated so fp32 lands in the high-80s/90s while 2-3-bit plain
 /// quantized training visibly degrades — matching the paper's Table-1/2 regime.
 pub fn spec(name: &str) -> DatasetSpec {
-    match name {
+    try_spec(name).unwrap_or_else(|| panic!("unknown dataset '{name}'"))
+}
+
+/// Fallible [`spec`]: `None` for names this module doesn't know.
+pub fn try_spec(name: &str) -> Option<DatasetSpec> {
+    Some(match name {
         "mlp-lite" => DatasetSpec {
             name: name.into(), h: 8, w: 8, c: 3, n_classes: 10,
             noise: 0.55, jitter: 1.0, gratings: 3, blobs: 1, class_sep: 0.6,
@@ -57,11 +62,24 @@ pub fn spec(name: &str) -> DatasetSpec {
             name: name.into(), h: 24, w: 24, c: 3, n_classes: 20,
             noise: 0.7, jitter: 2.0, gratings: 5, blobs: 3, class_sep: 0.62,
         },
-        other => panic!("unknown dataset '{other}'"),
-    }
+        _ => return None,
+    })
 }
 
-/// Dataset for a model's input shape (from the manifest).
+/// Dataset for a model, selected by the dataset *name* its manifest
+/// metadata declares. Shape-based inference alone cannot work here:
+/// cifar-lite and svhn-lite are both 16x16x3/10-way, so dispatching on
+/// input shape silently trained `svhn8` on cifar-lite and left svhn-lite
+/// dead. Falls back to [`spec_for_input`] for models that declare no
+/// dataset (older manifests, custom shapes).
+pub fn spec_for_model(meta: &crate::runtime::ModelMeta) -> DatasetSpec {
+    try_spec(&meta.dataset)
+        .unwrap_or_else(|| spec_for_input(meta.input_shape, meta.num_classes))
+}
+
+/// Dataset for a bare input shape (no manifest metadata). Ambiguous shapes
+/// resolve to their most common owner (16x16x3 -> cifar-lite); prefer
+/// [`spec_for_model`] whenever a `ModelMeta` is available.
 pub fn spec_for_input(input: [usize; 3], n_classes: usize) -> DatasetSpec {
     match (input, n_classes) {
         ([8, 8, 3], 10) => spec("mlp-lite"),
@@ -291,5 +309,30 @@ mod tests {
         assert_eq!(spec_for_input([24, 24, 3], 20).name, "imagenet-lite");
         let custom = spec_for_input([12, 12, 1], 4);
         assert_eq!(custom.n_classes, 4);
+    }
+
+    #[test]
+    fn spec_for_model_dispatches_by_name_with_shape_fallback() {
+        let mut meta = crate::runtime::ModelMeta {
+            name: "svhn8".into(),
+            dataset: "svhn-lite".into(),
+            input_shape: [16, 16, 3],
+            num_classes: 10,
+            batch: 32,
+            width_mult: 1,
+            num_qlayers: 0,
+            params: vec![],
+        };
+        // Regression (svhn-lite dead-code bug): the name must win over the
+        // shape, which would resolve to cifar-lite.
+        assert_eq!(spec_for_model(&meta).name, "svhn-lite");
+        // No declared dataset -> shape fallback.
+        meta.dataset = String::new();
+        assert_eq!(spec_for_model(&meta).name, "cifar-lite");
+        // Unknown declared name -> shape fallback, not a panic.
+        meta.dataset = "cifar100-lite".into();
+        meta.input_shape = [12, 12, 1];
+        meta.num_classes = 4;
+        assert_eq!(spec_for_model(&meta).name, "custom-12x12x1");
     }
 }

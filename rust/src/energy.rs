@@ -163,6 +163,7 @@ mod tests {
     fn toy_model() -> ModelMeta {
         ModelMeta {
             name: "toy".into(),
+            dataset: String::new(),
             input_shape: [8, 8, 3],
             num_classes: 10,
             batch: 16,

@@ -9,15 +9,17 @@
 //!
 //! | backend            | feature        | needs                | programs            |
 //! |--------------------|----------------|----------------------|---------------------|
-//! | `runtime::native`  | (default)      | nothing — pure Rust  | WaveQ MLP family    |
+//! | `runtime::native`  | (default)      | nothing — pure Rust  | full model zoo      |
 //! | `runtime::pjrt`    | `pjrt`         | `make artifacts` +   | every AOT program   |
 //! |                    |                | vendored `xla` crate |                     |
 //!
-//! The native backend executes the WaveQ train/eval programs (quantized
-//! forward/backward, the sinusoidal regularizer with analytic w- and
-//! beta-gradients, SGD+momentum) directly on the host against the same
-//! manifest signatures the AOT HLO programs export, so `cargo test` and the
-//! examples run end-to-end with zero Python/XLA artifacts. With the `pjrt`
+//! The native backend executes the WaveQ train/eval programs for the whole
+//! model zoo — conv2d via im2col, depthwise conv, pooling, affine norm,
+//! residual blocks, quantized forward/backward, the sinusoidal regularizer
+//! with analytic w- and beta-gradients, SGD+momentum — directly on the host
+//! against the same manifest signatures the AOT HLO programs export, so
+//! `cargo test`, the examples, and every `waveq experiment` driver
+//! (Tables 1–2, Figures 2–8) run end-to-end with zero Python/XLA artifacts. With the `pjrt`
 //! feature, Python (L2 JAX model zoo + L1 Pallas kernels) runs at build
 //! time: `make artifacts` lowers every program to HLO text which
 //! `runtime::pjrt` loads through the PJRT C API.

@@ -35,7 +35,11 @@ pub fn enumerate_assignments(layers: usize, lo: u32, hi: u32) -> Vec<Vec<u32>> {
     out
 }
 
-/// Subsample a space too big to enumerate (stratified by average bits).
+/// Subsample a space too big to enumerate, stratified by average bits:
+/// samples are spread round-robin over unit-width average-bit bands
+/// covering [lo, hi], so the frontier's low-compute tail (average near
+/// `lo`) is represented instead of everything piling up at the uniform
+/// mean (layers * (lo + hi) / 2, where plain i.i.d. sampling concentrates).
 pub fn sample_assignments(
     layers: usize,
     lo: u32,
@@ -43,9 +47,48 @@ pub fn sample_assignments(
     n: usize,
     rng: &mut crate::util::rng::Rng,
 ) -> Vec<Vec<u32>> {
+    assert!(hi >= lo);
     let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        let v: Vec<u32> = (0..layers).map(|_| lo + rng.below((hi - lo + 1) as u64) as u32).collect();
+    if layers == 0 {
+        out.resize(n, Vec::new());
+        return out;
+    }
+    let bands = ((hi - lo) as usize).max(1).min(n.max(1));
+    let width = (hi - lo) as f64 / bands as f64;
+    // The average moves in steps of 1/layers, so we can land within half a
+    // step of any target.
+    let tol = 0.5 / layers as f64;
+    for i in 0..n {
+        let band = i % bands;
+        let a0 = lo as f64 + width * band as f64;
+        // Target average drawn from the band's interior (middle 80%) so the
+        // achieved average — within `tol` of the target — stays inside the
+        // band rather than piling up on a shared boundary.
+        let target = a0 + (0.1 + 0.8 * rng.uniform()) * width;
+        let mut v: Vec<u32> =
+            (0..layers).map(|_| lo + rng.below((hi - lo + 1) as u64) as u32).collect();
+        // Repair toward the target: nudge random layers by +-1. Each step
+        // moves the average 1/layers closer, so this terminates in
+        // O(layers * (hi - lo)) steps and cannot oscillate (one step never
+        // overshoots past target + tol).
+        loop {
+            let avg = v.iter().map(|&b| b as f64).sum::<f64>() / layers as f64;
+            if avg < target - tol {
+                let up: Vec<usize> = (0..layers).filter(|&j| v[j] < hi).collect();
+                match up.is_empty() {
+                    true => break,
+                    false => v[up[rng.below_usize(up.len())]] += 1,
+                }
+            } else if avg > target + tol {
+                let down: Vec<usize> = (0..layers).filter(|&j| v[j] > lo).collect();
+                match down.is_empty() {
+                    true => break,
+                    false => v[down[rng.below_usize(down.len())]] -= 1,
+                }
+            } else {
+                break;
+            }
+        }
         out.push(v);
     }
     out
@@ -174,6 +217,35 @@ mod tests {
         let v = sample_assignments(5, 2, 6, 100, &mut rng);
         assert_eq!(v.len(), 100);
         assert!(v.iter().all(|a| a.len() == 5 && a.iter().all(|&b| (2..=6).contains(&b))));
+    }
+
+    #[test]
+    fn sampled_assignments_are_stratified_by_average_bits() {
+        // Regression: the old implementation was plain i.i.d. uniform, so
+        // for many layers the average-bits distribution concentrated near
+        // (lo + hi) / 2 and the low-compute tail was empty. Stratification
+        // must populate every unit band of the average-bits range.
+        let (layers, lo, hi, n) = (8usize, 2u32, 8u32, 120usize);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let v = sample_assignments(layers, lo, hi, n, &mut rng);
+        assert_eq!(v.len(), n);
+        let bands = (hi - lo) as usize;
+        let mut counts = vec![0usize; bands];
+        for a in &v {
+            assert_eq!(a.len(), layers);
+            assert!(a.iter().all(|&b| (lo..=hi).contains(&b)));
+            let avg = a.iter().map(|&b| b as f64).sum::<f64>() / layers as f64;
+            let band = (((avg - lo as f64).floor()) as usize).min(bands - 1);
+            counts[band] += 1;
+        }
+        // Round-robin banding: every band gets roughly n / bands samples.
+        for (b, &c) in counts.iter().enumerate() {
+            assert!(c >= n / bands / 2, "band {b} has only {c} of {n} samples: {counts:?}");
+        }
+        // Degenerate calls stay well-formed.
+        assert!(sample_assignments(0, 2, 8, 3, &mut rng).iter().all(|a| a.is_empty()));
+        let flat = sample_assignments(4, 5, 5, 10, &mut rng);
+        assert!(flat.iter().all(|a| a == &vec![5, 5, 5, 5]));
     }
 
     #[test]

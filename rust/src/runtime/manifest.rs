@@ -68,6 +68,10 @@ pub struct ParamMeta {
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
     pub name: String,
+    /// Dataset this model trains on (`data::synth` spec name, e.g.
+    /// "svhn-lite"). Empty for manifests that predate the field; consumers
+    /// fall back to shape-based inference (`data::spec_for_model`).
+    pub dataset: String,
     pub input_shape: [usize; 3],
     pub num_classes: usize,
     pub batch: usize,
@@ -237,6 +241,11 @@ fn parse_model(name: &str, m: &Json) -> Result<ModelMeta> {
         .collect::<Result<Vec<_>>>()?;
     Ok(ModelMeta {
         name: name.to_string(),
+        dataset: m
+            .get("dataset")
+            .and_then(|d| d.as_str())
+            .unwrap_or("")
+            .to_string(),
         input_shape: [ishape[0], ishape[1], ishape[2]],
         num_classes: m.get("num_classes").and_then(|x| x.as_usize()).unwrap_or(10),
         batch: m.get("batch").and_then(|x| x.as_usize()).unwrap_or(64),

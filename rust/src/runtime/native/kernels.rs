@@ -164,7 +164,378 @@ pub fn reg_point_d2(w: f64, beta: f64, norm: u32) -> f64 {
         / 2f64.powf(n * beta)
 }
 
+// ---- convolution / pooling geometry (NHWC, HWIO weights) -------------------
+
+/// Build-time resolved geometry of a 2-D convolution with XLA-style SAME
+/// padding (low = total/2, high = total - low), matching
+/// `lax.conv_general_dilated(..., padding="SAME")` in `python/compile/layers.py`.
+#[derive(Debug, Clone)]
+pub struct ConvGeom {
+    pub ksize: usize,
+    pub stride: usize,
+    /// Input channels (for depthwise this equals `cout`; the weight still
+    /// has HWIO shape [k, k, 1, c]).
+    pub cin: usize,
+    pub cout: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+    pub depthwise: bool,
+}
+
+impl ConvGeom {
+    /// Rows of the im2col matrix for a given batch.
+    pub fn rows(&self, batch: usize) -> usize {
+        batch * self.h_out * self.w_out
+    }
+
+    /// Columns of the im2col matrix (= flattened HWI weight leading dims).
+    pub fn kdim(&self) -> usize {
+        self.ksize * self.ksize * self.cin
+    }
+}
+
+/// Resolve SAME-padding conv geometry: h_out = ceil(h / stride).
+pub fn conv_geom(
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    ksize: usize,
+    stride: usize,
+    depthwise: bool,
+) -> ConvGeom {
+    let h_out = (h + stride - 1) / stride;
+    let w_out = (w + stride - 1) / stride;
+    let pad_h = ((h_out - 1) * stride + ksize).saturating_sub(h);
+    let pad_w = ((w_out - 1) * stride + ksize).saturating_sub(w);
+    ConvGeom {
+        ksize,
+        stride,
+        cin,
+        cout,
+        h_in: h,
+        w_in: w,
+        h_out,
+        w_out,
+        pad_top: pad_h / 2,
+        pad_left: pad_w / 2,
+        depthwise,
+    }
+}
+
+/// Unfold an NHWC input into im2col patch rows: (batch * h_out * w_out,
+/// k * k * cin), zero-padded at the borders. The row layout matches the
+/// row-major flattening of an HWIO weight's leading [k, k, cin] dims, so
+/// `conv = matmul(cols, w_flat)`.
+pub fn im2col(x: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let k = g.ksize;
+    let kk = g.kdim();
+    let plane = g.h_in * g.w_in * g.cin;
+    let mut cols = vec![0.0f32; g.rows(batch) * kk];
+    for b in 0..batch {
+        let xb = &x[b * plane..(b + 1) * plane];
+        for oh in 0..g.h_out {
+            for ow in 0..g.w_out {
+                let row = &mut cols[((b * g.h_out + oh) * g.w_out + ow) * kk..][..kk];
+                for kh in 0..k {
+                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                    if ih < 0 || ih >= g.h_in as isize {
+                        continue;
+                    }
+                    for kw in 0..k {
+                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                        if iw < 0 || iw >= g.w_in as isize {
+                            continue;
+                        }
+                        let src = ((ih as usize) * g.w_in + iw as usize) * g.cin;
+                        let dst = (kh * k + kw) * g.cin;
+                        row[dst..dst + g.cin].copy_from_slice(&xb[src..src + g.cin]);
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Transpose of [`im2col`]: scatter-add patch-row gradients back onto the
+/// input layout (the dx of the convolution given dcols = dz @ w^T).
+pub fn col2im(dcols: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let k = g.ksize;
+    let kk = g.kdim();
+    let plane = g.h_in * g.w_in * g.cin;
+    let mut dx = vec![0.0f32; batch * plane];
+    for b in 0..batch {
+        let dxb = &mut dx[b * plane..(b + 1) * plane];
+        for oh in 0..g.h_out {
+            for ow in 0..g.w_out {
+                let row = &dcols[((b * g.h_out + oh) * g.w_out + ow) * kk..][..kk];
+                for kh in 0..k {
+                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                    if ih < 0 || ih >= g.h_in as isize {
+                        continue;
+                    }
+                    for kw in 0..k {
+                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                        if iw < 0 || iw >= g.w_in as isize {
+                            continue;
+                        }
+                        let dst = ((ih as usize) * g.w_in + iw as usize) * g.cin;
+                        let src = (kh * k + kw) * g.cin;
+                        for c in 0..g.cin {
+                            dxb[dst + c] += row[src + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Depthwise conv forward: out(b, oh, ow, c) += x(b, ih, iw, c) * w(kh, kw, 0, c).
+pub fn dwconv_fwd(x: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let (k, c) = (g.ksize, g.cout);
+    let plane_in = g.h_in * g.w_in * c;
+    let mut out = vec![0.0f32; g.rows(batch) * c];
+    for b in 0..batch {
+        let xb = &x[b * plane_in..(b + 1) * plane_in];
+        for oh in 0..g.h_out {
+            for ow in 0..g.w_out {
+                let orow = &mut out[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
+                for kh in 0..k {
+                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                    if ih < 0 || ih >= g.h_in as isize {
+                        continue;
+                    }
+                    for kw in 0..k {
+                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                        if iw < 0 || iw >= g.w_in as isize {
+                            continue;
+                        }
+                        let xrow = &xb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
+                        let wrow = &w[(kh * k + kw) * c..][..c];
+                        for ch in 0..c {
+                            orow[ch] += xrow[ch] * wrow[ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise conv weight gradient: dW(kh, kw, 0, c) = sum x * dz.
+pub fn dwconv_grad_w(x: &[f32], dz: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let (k, c) = (g.ksize, g.cout);
+    let plane_in = g.h_in * g.w_in * c;
+    let mut dw = vec![0.0f32; k * k * c];
+    for b in 0..batch {
+        let xb = &x[b * plane_in..(b + 1) * plane_in];
+        for oh in 0..g.h_out {
+            for ow in 0..g.w_out {
+                let drow = &dz[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
+                for kh in 0..k {
+                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                    if ih < 0 || ih >= g.h_in as isize {
+                        continue;
+                    }
+                    for kw in 0..k {
+                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                        if iw < 0 || iw >= g.w_in as isize {
+                            continue;
+                        }
+                        let xrow = &xb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
+                        let wrow = &mut dw[(kh * k + kw) * c..][..c];
+                        for ch in 0..c {
+                            wrow[ch] += xrow[ch] * drow[ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dw
+}
+
+/// Depthwise conv input gradient: dx(b, ih, iw, c) += w(kh, kw, 0, c) * dz.
+pub fn dwconv_grad_x(dz: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let (k, c) = (g.ksize, g.cout);
+    let plane_in = g.h_in * g.w_in * c;
+    let mut dx = vec![0.0f32; batch * plane_in];
+    for b in 0..batch {
+        let dxb = &mut dx[b * plane_in..(b + 1) * plane_in];
+        for oh in 0..g.h_out {
+            for ow in 0..g.w_out {
+                let drow = &dz[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
+                for kh in 0..k {
+                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                    if ih < 0 || ih >= g.h_in as isize {
+                        continue;
+                    }
+                    for kw in 0..k {
+                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                        if iw < 0 || iw >= g.w_in as isize {
+                            continue;
+                        }
+                        let xrow = &mut dxb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
+                        let wrow = &w[(kh * k + kw) * c..][..c];
+                        for ch in 0..c {
+                            xrow[ch] += wrow[ch] * drow[ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// 2x2-style max pooling (VALID, stride = size, NHWC). Returns the pooled
+/// output and, per output element, the flat index of its argmax in `x`
+/// (first maximum wins ties) for the backward scatter.
+pub fn maxpool_fwd(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    size: usize,
+) -> (Vec<f32>, Vec<u32>) {
+    let (ho, wo) = (h / size, w / size);
+    let mut out = vec![0.0f32; batch * ho * wo * c];
+    let mut arg = vec![0u32; batch * ho * wo * c];
+    for b in 0..batch {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0u32;
+                    for kh in 0..size {
+                        for kw in 0..size {
+                            let idx = ((b * h + oh * size + kh) * w + ow * size + kw) * c + ch;
+                            if x[idx] > best {
+                                best = x[idx];
+                                best_idx = idx as u32;
+                            }
+                        }
+                    }
+                    let o = ((b * ho + oh) * wo + ow) * c + ch;
+                    out[o] = best;
+                    arg[o] = best_idx;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Max pooling backward: route each output gradient to its argmax input.
+pub fn maxpool_bwd(dz: &[f32], argmax: &[u32], in_len: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; in_len];
+    for (&g, &i) in dz.iter().zip(argmax.iter()) {
+        dx[i as usize] += g;
+    }
+    dx
+}
+
+/// Global average pool over the spatial dims: (b, h, w, c) -> (b, c).
+pub fn gap_fwd(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let hw = h * w;
+    let mut out = vec![0.0f32; batch * c];
+    for b in 0..batch {
+        let xb = &x[b * hw * c..(b + 1) * hw * c];
+        let orow = &mut out[b * c..(b + 1) * c];
+        for p in 0..hw {
+            for ch in 0..c {
+                orow[ch] += xb[p * c + ch];
+            }
+        }
+        for v in orow.iter_mut() {
+            *v /= hw as f32;
+        }
+    }
+    out
+}
+
+/// Global average pool backward: broadcast dz / (h * w) over the plane.
+pub fn gap_bwd(dz: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let hw = h * w;
+    let inv = 1.0 / hw as f32;
+    let mut dx = vec![0.0f32; batch * hw * c];
+    for b in 0..batch {
+        let drow = &dz[b * c..(b + 1) * c];
+        let xb = &mut dx[b * hw * c..(b + 1) * hw * c];
+        for p in 0..hw {
+            for ch in 0..c {
+                xb[p * c + ch] = drow[ch] * inv;
+            }
+        }
+    }
+    dx
+}
+
+/// Per-channel affine ("BN-lite"): out = x * s + b over (rows, c).
+pub fn affine_fwd(x: &[f32], s: &[f32], b: &[f32], rows: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * c];
+    for r in 0..rows {
+        let xrow = &x[r * c..(r + 1) * c];
+        let orow = &mut out[r * c..(r + 1) * c];
+        for ch in 0..c {
+            orow[ch] = xrow[ch] * s[ch] + b[ch];
+        }
+    }
+    out
+}
+
+/// Affine backward: (dx = dz * s, ds = sum x * dz, db = sum dz).
+pub fn affine_bwd(
+    x: &[f32],
+    dz: &[f32],
+    s: &[f32],
+    rows: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; rows * c];
+    let mut ds = vec![0.0f32; c];
+    let mut db = vec![0.0f32; c];
+    for r in 0..rows {
+        let xrow = &x[r * c..(r + 1) * c];
+        let drow = &dz[r * c..(r + 1) * c];
+        let orow = &mut dx[r * c..(r + 1) * c];
+        for ch in 0..c {
+            orow[ch] = drow[ch] * s[ch];
+            ds[ch] += xrow[ch] * drow[ch];
+            db[ch] += drow[ch];
+        }
+    }
+    (dx, ds, db)
+}
+
 // ---- dense linear algebra (row-major) --------------------------------------
+
+/// out(r, o) = x(r, i) @ w(i, o)   (no bias; conv-via-im2col path)
+pub fn matmul(x: &[f32], w: &[f32], rows: usize, din: usize, dout: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * dout];
+    for r in 0..rows {
+        let xrow = &x[r * din..(r + 1) * din];
+        let orow = &mut out[r * dout..(r + 1) * dout];
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &w[i * dout..(i + 1) * dout];
+                for (o, &wv) in wrow.iter().enumerate() {
+                    orow[o] += xv * wv;
+                }
+            }
+        }
+    }
+    out
+}
 
 /// out(b, o) = x(b, i) @ w(i, o) + bias(o)
 pub fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
@@ -454,5 +825,210 @@ mod tests {
         assert_eq!(clip_beta(0.2), 1.001);
         assert_eq!(clip_beta(9.5), 8.0);
         assert_eq!(clip_beta(4.2), 4.2);
+    }
+
+    // ---- conv / pool / affine kernels --------------------------------------
+
+    fn filled(n: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n).map(f).collect()
+    }
+
+    /// Forward conv via im2col + matmul (the path the executor takes).
+    fn conv_ref(x: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+        let cols = im2col(x, batch, g);
+        matmul(&cols, w, g.rows(batch), g.kdim(), g.cout)
+    }
+
+    #[test]
+    fn conv_geom_same_padding_matches_xla() {
+        // k=3 s=1: h preserved, symmetric pad 1.
+        let g = conv_geom(16, 16, 3, 8, 3, 1, false);
+        assert_eq!((g.h_out, g.w_out, g.pad_top, g.pad_left), (16, 16, 1, 1));
+        // k=3 s=2 on even h: ceil(16/2)=8, total pad 1 => low 0 / high 1.
+        let g = conv_geom(16, 16, 3, 8, 3, 2, false);
+        assert_eq!((g.h_out, g.pad_top), (8, 0));
+        // k=5 s=2 on 24: ho 12, total pad 3 => low 1 / high 2.
+        let g = conv_geom(24, 24, 3, 16, 5, 2, false);
+        assert_eq!((g.h_out, g.pad_top), (12, 1));
+        // 1x1 s=2 projection: no padding ever.
+        let g = conv_geom(16, 16, 8, 16, 1, 2, false);
+        assert_eq!((g.h_out, g.pad_top), (8, 0));
+    }
+
+    #[test]
+    fn conv_identity_kernel_passes_input_through() {
+        // 3x3 kernel with only the center tap set, 1 channel in/out, s=1:
+        // SAME conv must reproduce the input exactly.
+        let g = conv_geom(5, 4, 1, 1, 3, 1, false);
+        let x = filled(5 * 4, |i| (i as f32 * 0.7).sin());
+        let mut w = vec![0.0f32; 9];
+        w[4] = 1.0; // center of the 3x3
+        let out = conv_ref(&x, &w, 1, &g);
+        for (o, e) in out.iter().zip(&x) {
+            assert!((o - e).abs() < 1e-6, "{o} vs {e}");
+        }
+    }
+
+    #[test]
+    fn conv_matches_direct_convolution() {
+        // Naive direct conv as the oracle for the im2col path.
+        let (b, h, w_, cin, cout, k, s) = (2usize, 5usize, 4usize, 3usize, 2usize, 3usize, 2usize);
+        let g = conv_geom(h, w_, cin, cout, k, s, false);
+        let x = filled(b * h * w_ * cin, |i| ((i * 37 % 17) as f32 - 8.0) * 0.1);
+        let wt = filled(k * k * cin * cout, |i| ((i * 23 % 13) as f32 - 6.0) * 0.05);
+        let got = conv_ref(&x, &wt, b, &g);
+        for bi in 0..b {
+            for oh in 0..g.h_out {
+                for ow in 0..g.w_out {
+                    for co in 0..cout {
+                        let mut acc = 0.0f32;
+                        for kh in 0..k {
+                            for kw in 0..k {
+                                let ih = (oh * s + kh) as isize - g.pad_top as isize;
+                                let iw = (ow * s + kw) as isize - g.pad_left as isize;
+                                if ih < 0 || ih >= h as isize || iw < 0 || iw >= w_ as isize {
+                                    continue;
+                                }
+                                for ci in 0..cin {
+                                    let xi = ((bi * h + ih as usize) * w_ + iw as usize) * cin + ci;
+                                    let wi = ((kh * k + kw) * cin + ci) * cout + co;
+                                    acc += x[xi] * wt[wi];
+                                }
+                            }
+                        }
+                        let o = ((bi * g.h_out + oh) * g.w_out + ow) * cout + co;
+                        assert!((got[o] - acc).abs() < 1e-5, "({bi},{oh},{ow},{co})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_gradients_match_finite_difference() {
+        // Loss = sum(conv(x, w) * r); conv is linear, so FD is exact up to
+        // float roundoff. Checks dW (= cols^T @ dz) and dx (= col2im(dz @ w^T)).
+        let (b, h, w_, cin, cout, k, s) = (2usize, 4usize, 4usize, 2usize, 3usize, 3usize, 2usize);
+        let g = conv_geom(h, w_, cin, cout, k, s, false);
+        let x = filled(b * h * w_ * cin, |i| ((i * 31 % 19) as f32 - 9.0) * 0.07);
+        let wt = filled(k * k * cin * cout, |i| ((i * 29 % 11) as f32 - 5.0) * 0.06);
+        let r = filled(g.rows(b) * cout, |i| ((i * 13 % 7) as f32 - 3.0) * 0.2);
+        let loss = |x: &[f32], wt: &[f32]| -> f64 {
+            conv_ref(x, wt, b, &g)
+                .iter()
+                .zip(&r)
+                .map(|(&o, &rv)| (o * rv) as f64)
+                .sum()
+        };
+        let cols = im2col(&x, b, &g);
+        let dw = grad_weight(&cols, &r, g.rows(b), g.kdim(), cout);
+        let dcols = grad_input(&r, &wt, g.rows(b), g.kdim(), cout);
+        let dx = col2im(&dcols, b, &g);
+        let eps = 1e-2f32;
+        for &i in &[0usize, 7, wt.len() - 1] {
+            let mut wp = wt.clone();
+            wp[i] += eps;
+            let mut wm = wt.clone();
+            wm[i] -= eps;
+            let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps as f64);
+            assert!((fd - dw[i] as f64).abs() < 1e-3, "dW[{i}]: fd={fd} an={}", dw[i]);
+        }
+        for &i in &[0usize, 11, x.len() - 1] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (loss(&xp, &wt) - loss(&xm, &wt)) / (2.0 * eps as f64);
+            assert!((fd - dx[i] as f64).abs() < 1e-3, "dx[{i}]: fd={fd} an={}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn dwconv_gradients_match_finite_difference() {
+        let (b, h, w_, c, k, s) = (2usize, 4usize, 3usize, 3usize, 3usize, 1usize);
+        let g = conv_geom(h, w_, c, c, k, s, true);
+        let x = filled(b * h * w_ * c, |i| ((i * 41 % 23) as f32 - 11.0) * 0.05);
+        let wt = filled(k * k * c, |i| ((i * 17 % 9) as f32 - 4.0) * 0.1);
+        let r = filled(g.rows(b) * c, |i| ((i * 19 % 5) as f32 - 2.0) * 0.3);
+        let loss = |x: &[f32], wt: &[f32]| -> f64 {
+            dwconv_fwd(x, wt, b, &g)
+                .iter()
+                .zip(&r)
+                .map(|(&o, &rv)| (o * rv) as f64)
+                .sum()
+        };
+        let dw = dwconv_grad_w(&x, &r, b, &g);
+        let dx = dwconv_grad_x(&r, &wt, b, &g);
+        let eps = 1e-2f32;
+        for &i in &[0usize, 5, wt.len() - 1] {
+            let mut wp = wt.clone();
+            wp[i] += eps;
+            let mut wm = wt.clone();
+            wm[i] -= eps;
+            let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps as f64);
+            assert!((fd - dw[i] as f64).abs() < 1e-3, "dW[{i}]: fd={fd} an={}", dw[i]);
+        }
+        for &i in &[0usize, 9, x.len() - 1] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (loss(&xp, &wt) - loss(&xm, &wt)) / (2.0 * eps as f64);
+            assert!((fd - dx[i] as f64).abs() < 1e-3, "dx[{i}]: fd={fd} an={}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn maxpool_selects_max_and_routes_gradient() {
+        // One batch, 4x4x1, pool 2 -> 2x2.
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 5.0, 2.0, 0.0,
+            3.0, 4.0, 1.0, 7.0,
+            0.0, 1.0, 2.0, 2.0,
+            9.0, 0.0, 3.0, 1.0,
+        ];
+        let (out, arg) = maxpool_fwd(&x, 1, 4, 4, 1, 2);
+        assert_eq!(out, vec![5.0, 7.0, 9.0, 3.0]);
+        let dz = vec![1.0, 2.0, 3.0, 4.0];
+        let dx = maxpool_bwd(&dz, &arg, x.len());
+        assert_eq!(dx[1], 1.0); // 5.0 at flat index 1
+        assert_eq!(dx[7], 2.0); // 7.0
+        assert_eq!(dx[12], 3.0); // 9.0
+        assert_eq!(dx[14], 4.0); // 3.0
+        assert_eq!(dx.iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn gap_averages_and_spreads_gradient() {
+        // (1, 2, 2, 2): channel means.
+        let x = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let out = gap_fwd(&x, 1, 2, 2, 2);
+        assert_eq!(out, vec![2.5, 25.0]);
+        let dx = gap_bwd(&[4.0, 8.0], 1, 2, 2, 2);
+        assert_eq!(dx, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn affine_forward_and_gradients() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // rows=2, c=2
+        let s = vec![2.0, -1.0];
+        let b = vec![0.5, 0.0];
+        let out = affine_fwd(&x, &s, &b, 2, 2);
+        assert_eq!(out, vec![2.5, -2.0, 6.5, -4.0]);
+        let dz = vec![1.0, 1.0, 2.0, -1.0];
+        let (dx, ds, db) = affine_bwd(&x, &dz, &s, 2, 2);
+        assert_eq!(dx, vec![2.0, -1.0, 4.0, 1.0]); // dz * s
+        assert_eq!(ds, vec![1.0 + 6.0, 2.0 - 4.0]); // sum x * dz
+        assert_eq!(db, vec![3.0, 0.0]); // sum dz
+    }
+
+    #[test]
+    fn matmul_agrees_with_matmul_bias_at_zero_bias() {
+        let x = vec![1.0, 2.0, 3.0, 0.5, -1.0, 2.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let a = matmul(&x, &w, 2, 3, 2);
+        let b = matmul_bias(&x, &w, &[0.0, 0.0], 2, 3, 2);
+        assert_eq!(a, b);
     }
 }

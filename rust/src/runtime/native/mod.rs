@@ -1,22 +1,27 @@
-//! The pure-Rust reference backend: executes the WaveQ MLP program family
-//! end-to-end on the host, satisfying the same manifest signatures the AOT
-//! HLO programs export (`python/compile/train_step.py`):
+//! The pure-Rust reference backend: executes the WaveQ program family
+//! end-to-end on the host for the *entire* model zoo (mlp, simplenet5,
+//! resnet20l, vgg11l, svhn8, alexnetl, resnet18l, mobilenetl — mirroring
+//! `python/compile/models.py`), satisfying the same manifest signatures the
+//! AOT HLO programs export (`python/compile/train_step.py`):
 //!
-//!   train_fp32_mlp    : [w*P, v*P, x, y, lr, mom]                 -> [w', v', loss, acc]
-//!   train_dorefa_mlp  : [w*P, v*P, x, y, lr, mom, kw(Q,), ka]     -> [w', v', loss, acc]
-//!   train_wrpn_mlp_w2 : same as dorefa, on the width-doubled model
-//!   train_waveq_mlp   : [w*P, v*P, beta, vbeta, x, y, lr, mom,
+//!   train_fp32_<m>    : [w*P, v*P, x, y, lr, mom]                 -> [w', v', loss, acc]
+//!   train_dorefa_<m>  : [w*P, v*P, x, y, lr, mom, kw(Q,), ka]     -> [w', v', loss, acc]
+//!   train_wrpn_<m>_w2 : same as dorefa, on the width-doubled model
+//!   train_waveq_<m>   : [w*P, v*P, beta, vbeta, x, y, lr, mom,
 //!                        lr_beta, ka, lam_w, lam_beta, beta_train] -> [w', v', beta', vbeta',
 //!                                                                     loss, acc, ce, reg_w]
-//!   eval_fp32_mlp     : [w*P, x, y]                               -> [loss, acc]
-//!   eval_quant_mlp    : [w*P, x, y, kw(Q,), ka]                   -> [loss, acc]
-//!   eval_wrpn_mlp_w2  : [w*P, x, y, kw(Q,), ka]                   -> [loss, acc]
+//!   eval_fp32_<m>     : [w*P, x, y]                               -> [loss, acc]
+//!   eval_quant_<m>    : [w*P, x, y, kw(Q,), ka]                   -> [loss, acc]
+//!   eval_wrpn_<m>_w2  : [w*P, x, y, kw(Q,), ka]                   -> [loss, acc]
 //!   reg_profile       : [wgrid, bgrid]                            -> 9 x (n_w, n_b) surfaces
 //!
-//! The quantized forward uses the DoReFa/WRPN rules of `kernels`, the
-//! backward is the straight-through estimator, and the 'waveq' programs add
-//! the sinusoidal regularizer `lambda_w * sin^2(pi v 2^beta)`-family term
-//! with its *analytic* gradient in both w and beta — the heart of the paper,
+//! Models are op graphs (`models::OpNode`): conv2d via im2col + the shared
+//! matmul kernels, depthwise conv, max/global-avg pooling, per-channel
+//! affine, residual add — each with a hand-derived backward. The quantized
+//! forward uses the DoReFa/WRPN rules of `kernels`, the backward is the
+//! straight-through estimator, and the 'waveq' programs add the sinusoidal
+//! regularizer `lambda_w * sin^2(pi v 2^beta)`-family term with its
+//! *analytic* gradient in both w and beta — the heart of the paper,
 //! executed here with no Python, XLA, or artifacts involved.
 //!
 //! The backend also exports its own [`Manifest`] so the coordinator
@@ -24,6 +29,7 @@
 //! either backend.
 
 pub mod kernels;
+pub mod models;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
@@ -32,129 +38,11 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use self::kernels as kn;
+use self::models::{OpNode, WRPN_WIDTH, ZOO_NAMES};
+pub use self::models::NativeModel;
 use super::backend::{Backend, RuntimeStats};
 use super::buffer::Buffer;
-use super::manifest::{ArgSpec, Manifest, ModelMeta, ParamMeta, ProgramSig};
-
-/// One fully-connected layer (weight + bias) of a native model.
-#[derive(Debug, Clone)]
-pub struct FcLayer {
-    pub name: String,
-    pub din: usize,
-    pub dout: usize,
-    /// Slot in the per-layer bitwidth vector, if this weight is quantized.
-    pub qidx: Option<usize>,
-}
-
-/// A native model: an MLP as a stack of FC layers with ReLU (+ optional
-/// activation fake-quant) between them. Mirrors `python/compile/models.mlp`
-/// including the §4.1 policy: first and last layers stay full precision.
-#[derive(Debug, Clone)]
-pub struct NativeModel {
-    pub name: String,
-    pub input_shape: [usize; 3],
-    pub num_classes: usize,
-    pub batch: usize,
-    pub width_mult: usize,
-    pub layers: Vec<FcLayer>,
-}
-
-impl NativeModel {
-    /// The WaveQ test MLP on mlp-lite (8x8x3 -> 10): 3 hidden layers of
-    /// width 128 * width_mult; the two middle FCs own bitwidth slots.
-    pub fn mlp(width_mult: usize) -> NativeModel {
-        let w = 128 * width_mult;
-        let din = 8 * 8 * 3;
-        let name = if width_mult == 1 { "mlp".to_string() } else { format!("mlp_w{width_mult}") };
-        let mk = |n: &str, i, o, q| FcLayer { name: n.to_string(), din: i, dout: o, qidx: q };
-        NativeModel {
-            name,
-            input_shape: [8, 8, 3],
-            num_classes: 10,
-            batch: 64,
-            width_mult,
-            layers: vec![
-                mk("fc1", din, w, None),
-                mk("fc2", w, w, Some(0)),
-                mk("fc3", w, w, Some(1)),
-                mk("fc4", w, 10, None),
-            ],
-        }
-    }
-
-    pub fn num_qlayers(&self) -> usize {
-        self.layers.iter().filter(|l| l.qidx.is_some()).count()
-    }
-
-    /// Number of parameter tensors (weight + bias per layer).
-    pub fn num_params(&self) -> usize {
-        2 * self.layers.len()
-    }
-
-    /// The manifest-side description of this model.
-    pub fn meta(&self) -> ModelMeta {
-        let mut params = Vec::with_capacity(self.num_params());
-        for l in &self.layers {
-            params.push(ParamMeta {
-                name: l.name.clone(),
-                shape: vec![l.din, l.dout],
-                kind: "fc".into(),
-                init: "he".into(),
-                qidx: l.qidx,
-                macs: (l.din * l.dout) as u64,
-                count: (l.din * l.dout) as u64,
-            });
-            params.push(ParamMeta {
-                name: format!("{}_b", l.name),
-                shape: vec![l.dout],
-                kind: "bias".into(),
-                init: "zeros".into(),
-                qidx: None,
-                macs: 0,
-                count: l.dout as u64,
-            });
-        }
-        ModelMeta {
-            name: self.name.clone(),
-            input_shape: self.input_shape,
-            num_classes: self.num_classes,
-            batch: self.batch,
-            width_mult: self.width_mult,
-            num_qlayers: self.num_qlayers(),
-            params,
-        }
-    }
-
-    fn pixels(&self) -> usize {
-        self.input_shape[0] * self.input_shape[1] * self.input_shape[2]
-    }
-
-    fn param_names(&self, prefix: &str) -> Vec<String> {
-        let mut v = Vec::with_capacity(self.num_params());
-        for l in &self.layers {
-            v.push(format!("{prefix}:{}", l.name));
-            v.push(format!("{prefix}:{}_b", l.name));
-        }
-        v
-    }
-
-    fn param_specs(&self, prefix: &str) -> Vec<ArgSpec> {
-        let mut v = Vec::with_capacity(self.num_params());
-        for l in &self.layers {
-            v.push(ArgSpec {
-                name: format!("{prefix}:{}", l.name),
-                shape: vec![l.din, l.dout],
-                dtype: "float32".into(),
-            });
-            v.push(ArgSpec {
-                name: format!("{prefix}:{}_b", l.name),
-                shape: vec![l.dout],
-                dtype: "float32".into(),
-            });
-        }
-        v
-    }
-}
+use super::manifest::{ArgSpec, Manifest, ProgramSig};
 
 /// Which weight-quantizer family a program uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -187,38 +75,37 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new() -> NativeBackend {
         let mut models = BTreeMap::new();
-        for m in [NativeModel::mlp(1), NativeModel::mlp(2)] {
-            models.insert(m.name.clone(), m);
-        }
         let mut programs = BTreeMap::new();
-        programs.insert(
-            "train_fp32_mlp".to_string(),
-            ProgramKind::Train { model: "mlp".into(), quant: QuantFamily::Fp32 },
-        );
-        programs.insert(
-            "train_dorefa_mlp".to_string(),
-            ProgramKind::Train { model: "mlp".into(), quant: QuantFamily::Dorefa },
-        );
-        programs.insert(
-            "train_waveq_mlp".to_string(),
-            ProgramKind::Train { model: "mlp".into(), quant: QuantFamily::Waveq },
-        );
-        programs.insert(
-            "train_wrpn_mlp_w2".to_string(),
-            ProgramKind::Train { model: "mlp_w2".into(), quant: QuantFamily::Wrpn },
-        );
-        programs.insert(
-            "eval_fp32_mlp".to_string(),
-            ProgramKind::Eval { model: "mlp".into(), quant: QuantFamily::Fp32 },
-        );
-        programs.insert(
-            "eval_quant_mlp".to_string(),
-            ProgramKind::Eval { model: "mlp".into(), quant: QuantFamily::Dorefa },
-        );
-        programs.insert(
-            "eval_wrpn_mlp_w2".to_string(),
-            ProgramKind::Eval { model: "mlp_w2".into(), quant: QuantFamily::Wrpn },
-        );
+        for base in ZOO_NAMES {
+            let m = NativeModel::by_name(base, 1).expect("zoo name");
+            let wide = NativeModel::by_name(base, WRPN_WIDTH).expect("zoo name");
+            let wide_key = wide.name.clone();
+            models.insert(m.name.clone(), m);
+            models.insert(wide_key.clone(), wide);
+            for (prog, quant) in [
+                (format!("train_fp32_{base}"), QuantFamily::Fp32),
+                (format!("train_dorefa_{base}"), QuantFamily::Dorefa),
+                (format!("train_waveq_{base}"), QuantFamily::Waveq),
+            ] {
+                programs.insert(prog, ProgramKind::Train { model: base.to_string(), quant });
+            }
+            programs.insert(
+                format!("train_wrpn_{base}_w{WRPN_WIDTH}"),
+                ProgramKind::Train { model: wide_key.clone(), quant: QuantFamily::Wrpn },
+            );
+            programs.insert(
+                format!("eval_fp32_{base}"),
+                ProgramKind::Eval { model: base.to_string(), quant: QuantFamily::Fp32 },
+            );
+            programs.insert(
+                format!("eval_quant_{base}"),
+                ProgramKind::Eval { model: base.to_string(), quant: QuantFamily::Dorefa },
+            );
+            programs.insert(
+                format!("eval_wrpn_{base}_w{WRPN_WIDTH}"),
+                ProgramKind::Eval { model: wide_key, quant: QuantFamily::Wrpn },
+            );
+        }
         programs.insert("reg_profile".to_string(), ProgramKind::RegProfile);
         NativeBackend {
             models,
@@ -399,13 +286,13 @@ impl Backend for NativeBackend {
 
 // ---- program implementations ------------------------------------------------
 
-/// Per-layer quantization state captured during the forward pass.
+/// Per-parameter quantization state captured during the forward pass.
 struct LayerQuant {
-    /// Effective (possibly fake-quantized) weight used in the matmul.
+    /// Effective (possibly fake-quantized) weight used in the op.
     wq: Vec<f32>,
     /// STE factor dwq/dw per element; None = identity.
     ste: Option<Vec<f32>>,
-    /// WaveQ only: (normalized coords v, scale m, beta_q) of this layer.
+    /// WaveQ only: (normalized coords v, scale m, beta_q) of this weight.
     waveq: Option<(Vec<f32>, f32, f64)>,
 }
 
@@ -416,27 +303,17 @@ fn param_slices<'a>(
     offset: usize,
 ) -> Result<Vec<&'a [f32]>> {
     let mut out = Vec::with_capacity(model.num_params());
-    for (i, l) in model.layers.iter().enumerate() {
-        let w = args[offset + 2 * i];
-        let b = args[offset + 2 * i + 1];
-        if w.elem_count() != l.din * l.dout {
+    for (i, p) in model.params.iter().enumerate() {
+        let b = args[offset + i];
+        let want: usize = p.shape.iter().product();
+        if b.elem_count() != want {
             return Err(anyhow!(
-                "{prog}: param {} has {} elems, expected {}x{}",
-                l.name,
-                w.elem_count(),
-                l.din,
-                l.dout
-            ));
-        }
-        if b.elem_count() != l.dout {
-            return Err(anyhow!(
-                "{prog}: param {}_b has {} elems, expected {}",
-                l.name,
+                "{prog}: param {} has {} elems, expected {:?}",
+                p.name,
                 b.elem_count(),
-                l.dout
+                p.shape
             ));
         }
-        out.push(w.data.as_slice());
         out.push(b.data.as_slice());
     }
     Ok(out)
@@ -485,15 +362,15 @@ fn kw_arg(prog: &str, model: &NativeModel, b: &Buffer) -> Result<Vec<f32>> {
     Ok(b.data.clone())
 }
 
-/// Quantize one layer's weight for the forward pass.
-fn quantize_layer(
-    layer: &FcLayer,
+/// Quantize one parameter tensor for the forward pass.
+fn quantize_param(
+    qidx: Option<usize>,
     w: &[f32],
     quant: QuantFamily,
     kw: &[f32],
     beta: &[f32],
 ) -> LayerQuant {
-    match (quant, layer.qidx) {
+    match (quant, qidx) {
         (QuantFamily::Fp32, _) | (_, None) => {
             LayerQuant { wq: w.to_vec(), ste: None, waveq: None }
         }
@@ -514,17 +391,68 @@ fn quantize_layer(
     }
 }
 
-struct ForwardPass {
-    /// hs[l] = input activations of layer l (hs[0] is x); len = L.
-    hs: Vec<Vec<f32>>,
-    /// ReLU masks of the hidden layers (len = L - 1), 1.0 where z > 0.
-    masks: Vec<Vec<f32>>,
-    quants: Vec<LayerQuant>,
+/// Per-op forward residuals: exactly what the matching backward needs.
+enum Trace {
+    None,
+    Conv { cols: Vec<f32>, lq: LayerQuant },
+    DwConv { input: Vec<f32>, lq: LayerQuant },
+    Fc { input: Vec<f32>, lq: LayerQuant },
+    Affine { input: Vec<f32> },
+    Relu { mask: Vec<f32> },
+    MaxPool { argmax: Vec<u32>, in_len: usize },
+    Gap,
+    SkipProj { cols: Vec<f32>, lq: LayerQuant },
+    SkipAdd { mask: Vec<f32> },
+}
+
+impl Trace {
+    fn quant(&self) -> Option<&LayerQuant> {
+        match self {
+            Trace::Conv { lq, .. }
+            | Trace::DwConv { lq, .. }
+            | Trace::Fc { lq, .. }
+            | Trace::SkipProj { lq, .. } => Some(lq),
+            _ => None,
+        }
+    }
+}
+
+struct GraphForward {
+    /// One trace per op, in op order.
+    traces: Vec<Trace>,
     logits: Vec<f32>,
 }
 
-/// Run the MLP forward; `act_ka = None` means fp32 activations (no fake
-/// quantization after ReLU).
+/// ReLU in place, recording the mask when a backward pass will need it,
+/// then optional activation fake-quant (`act_ka = None` means fp32
+/// activations). Returns an empty mask when `record` is off.
+fn relu_quant(h: &mut [f32], act_ka: Option<f32>, record: bool) -> Vec<f32> {
+    let mut mask = if record { vec![0.0f32; h.len()] } else { Vec::new() };
+    if record {
+        for (zi, mi) in h.iter_mut().zip(mask.iter_mut()) {
+            if *zi > 0.0 {
+                *mi = 1.0;
+            } else {
+                *zi = 0.0;
+            }
+        }
+    } else {
+        for zi in h.iter_mut() {
+            if *zi < 0.0 {
+                *zi = 0.0;
+            }
+        }
+    }
+    if let Some(ka) = act_ka {
+        kn::act_quantize(h, ka);
+    }
+    mask
+}
+
+/// Run the op graph forward. With `record` set, a tape of per-op residuals
+/// is kept for [`backward`]; eval-only callers pass `false` so the cols /
+/// mask / input buffers are dropped as soon as each op completes (peak
+/// memory stays at the live activation, not the sum over layers).
 fn forward(
     model: &NativeModel,
     params: &[&[f32]],
@@ -534,38 +462,192 @@ fn forward(
     kw: &[f32],
     beta: &[f32],
     act_ka: Option<f32>,
-) -> ForwardPass {
-    let nl = model.layers.len();
-    let mut hs: Vec<Vec<f32>> = Vec::with_capacity(nl);
-    let mut masks: Vec<Vec<f32>> = Vec::with_capacity(nl - 1);
-    let mut quants: Vec<LayerQuant> = Vec::with_capacity(nl);
+    record: bool,
+) -> GraphForward {
     let mut h = x.to_vec();
-    let mut logits = Vec::new();
-    for (li, l) in model.layers.iter().enumerate() {
-        let lq = quantize_layer(l, params[2 * li], quant, kw, beta);
-        let mut z = kn::matmul_bias(&h, &lq.wq, params[2 * li + 1], batch, l.din, l.dout);
-        quants.push(lq);
-        hs.push(h);
-        if li + 1 < nl {
-            let mut mask = vec![0.0f32; z.len()];
-            for (zi, mi) in z.iter_mut().zip(mask.iter_mut()) {
-                if *zi > 0.0 {
-                    *mi = 1.0;
+    let mut traces: Vec<Trace> = Vec::with_capacity(model.ops.len());
+    // Saved activations of open residual blocks (innermost last).
+    let mut skips: Vec<Vec<f32>> = Vec::new();
+    // Projected shortcut pending its SkipAdd.
+    let mut shortcut: Option<Vec<f32>> = None;
+    for op in &model.ops {
+        match op {
+            OpNode::Conv { geom, pidx } => {
+                let lq = quantize_param(model.params[*pidx].qidx, params[*pidx], quant, kw, beta);
+                if geom.depthwise {
+                    let out = kn::dwconv_fwd(&h, &lq.wq, batch, geom);
+                    let input = std::mem::replace(&mut h, out);
+                    traces.push(if record { Trace::DwConv { input, lq } } else { Trace::None });
                 } else {
-                    *zi = 0.0;
+                    let cols = kn::im2col(&h, batch, geom);
+                    h = kn::matmul(&cols, &lq.wq, geom.rows(batch), geom.kdim(), geom.cout);
+                    traces.push(if record { Trace::Conv { cols, lq } } else { Trace::None });
                 }
             }
-            if let Some(ka) = act_ka {
-                kn::act_quantize(&mut z, ka);
+            OpNode::Fc { din, dout, widx, bidx } => {
+                let lq = quantize_param(model.params[*widx].qidx, params[*widx], quant, kw, beta);
+                let out = kn::matmul_bias(&h, &lq.wq, params[*bidx], batch, *din, *dout);
+                let input = std::mem::replace(&mut h, out);
+                traces.push(if record { Trace::Fc { input, lq } } else { Trace::None });
             }
-            masks.push(mask);
-            h = z;
-        } else {
-            logits = z;
-            h = Vec::new();
+            OpNode::Affine { c, hw, sidx, bidx } => {
+                let out = kn::affine_fwd(&h, params[*sidx], params[*bidx], batch * hw, *c);
+                let input = std::mem::replace(&mut h, out);
+                traces.push(if record { Trace::Affine { input } } else { Trace::None });
+            }
+            OpNode::Relu => {
+                let mask = relu_quant(&mut h, act_ka, record);
+                traces.push(if record { Trace::Relu { mask } } else { Trace::None });
+            }
+            OpNode::MaxPool { h: ph, w: pw, c, size } => {
+                let in_len = h.len();
+                let (out, argmax) = kn::maxpool_fwd(&h, batch, *ph, *pw, *c, *size);
+                h = out;
+                traces.push(if record { Trace::MaxPool { argmax, in_len } } else { Trace::None });
+            }
+            OpNode::GlobalAvgPool { h: ph, w: pw, c } => {
+                h = kn::gap_fwd(&h, batch, *ph, *pw, *c);
+                traces.push(Trace::Gap);
+            }
+            OpNode::Flatten => traces.push(Trace::None),
+            OpNode::SkipSave => {
+                skips.push(h.clone());
+                traces.push(Trace::None);
+            }
+            OpNode::SkipProj { geom, pidx } => {
+                let saved = skips.last().expect("SkipProj without SkipSave");
+                let lq = quantize_param(model.params[*pidx].qidx, params[*pidx], quant, kw, beta);
+                let cols = kn::im2col(saved, batch, geom);
+                shortcut = Some(kn::matmul(&cols, &lq.wq, geom.rows(batch), geom.kdim(), geom.cout));
+                traces.push(if record { Trace::SkipProj { cols, lq } } else { Trace::None });
+            }
+            OpNode::SkipAdd => {
+                let saved = skips.pop().expect("SkipAdd without SkipSave");
+                let sc = shortcut.take().unwrap_or(saved);
+                debug_assert_eq!(h.len(), sc.len());
+                for (hv, &sv) in h.iter_mut().zip(sc.iter()) {
+                    *hv += sv;
+                }
+                let mask = relu_quant(&mut h, act_ka, record);
+                traces.push(if record { Trace::SkipAdd { mask } } else { Trace::None });
+            }
         }
     }
-    ForwardPass { hs, masks, quants, logits }
+    GraphForward { traces, logits: h }
+}
+
+/// STE backward through a quantized weight + the WaveQ regularizer's
+/// analytic w-gradient, chained v -> w through the tanh normalization
+/// (per-layer max treated as constant, like the STE).
+fn apply_quant_grad(dw: &mut [f32], lq: &LayerQuant, lam_w: f32) {
+    if let Some(ste) = &lq.ste {
+        for (g, &s) in dw.iter_mut().zip(ste.iter()) {
+            *g *= s;
+        }
+    }
+    if lam_w != 0.0 {
+        if let Some((v, m, b)) = &lq.waveq {
+            let gv = kn::waveq_reg_grad_v(v, *b);
+            let ste = lq.ste.as_ref().expect("waveq layers carry an STE");
+            for ((g, &gvj), &s) in dw.iter_mut().zip(gv.iter()).zip(ste.iter()) {
+                *g += lam_w * gvj * s / (2.0 * m);
+            }
+        }
+    }
+}
+
+/// Reverse sweep over the op graph: one gradient tensor per parameter.
+fn backward(
+    model: &NativeModel,
+    fwd: &GraphForward,
+    dlogits: Vec<f32>,
+    batch: usize,
+    params: &[&[f32]],
+    lam_w: f32,
+) -> Vec<Vec<f32>> {
+    // Empty placeholders only: every parameter belongs to exactly one op,
+    // so the reverse sweep assigns each slot exactly once (asserted below).
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); model.params.len()];
+    let mut dh = dlogits;
+    // Gradients flowing to shortcut branches of open residual blocks.
+    let mut skip_grads: Vec<Vec<f32>> = Vec::new();
+    for (op, tr) in model.ops.iter().zip(fwd.traces.iter()).rev() {
+        match (op, tr) {
+            (OpNode::Fc { din, dout, widx, bidx }, Trace::Fc { input, lq }) => {
+                let mut dw = kn::grad_weight(input, &dh, batch, *din, *dout);
+                let db = kn::grad_bias(&dh, batch, *dout);
+                apply_quant_grad(&mut dw, lq, lam_w);
+                grads[*widx] = dw;
+                grads[*bidx] = db;
+                dh = kn::grad_input(&dh, &lq.wq, batch, *din, *dout);
+            }
+            (OpNode::Conv { geom, pidx }, Trace::Conv { cols, lq }) => {
+                let (rows, kdim) = (geom.rows(batch), geom.kdim());
+                let mut dw = kn::grad_weight(cols, &dh, rows, kdim, geom.cout);
+                apply_quant_grad(&mut dw, lq, lam_w);
+                grads[*pidx] = dw;
+                let dcols = kn::grad_input(&dh, &lq.wq, rows, kdim, geom.cout);
+                dh = kn::col2im(&dcols, batch, geom);
+            }
+            (OpNode::Conv { geom, pidx }, Trace::DwConv { input, lq }) => {
+                let mut dw = kn::dwconv_grad_w(input, &dh, batch, geom);
+                apply_quant_grad(&mut dw, lq, lam_w);
+                grads[*pidx] = dw;
+                dh = kn::dwconv_grad_x(&dh, &lq.wq, batch, geom);
+            }
+            (OpNode::Affine { c, hw, sidx, bidx }, Trace::Affine { input }) => {
+                let (dx, ds, db) = kn::affine_bwd(input, &dh, params[*sidx], batch * hw, *c);
+                grads[*sidx] = ds;
+                grads[*bidx] = db;
+                dh = dx;
+            }
+            (OpNode::Relu, Trace::Relu { mask }) => {
+                for (g, &m) in dh.iter_mut().zip(mask.iter()) {
+                    *g *= m;
+                }
+            }
+            (OpNode::MaxPool { .. }, Trace::MaxPool { argmax, in_len }) => {
+                dh = kn::maxpool_bwd(&dh, argmax, *in_len);
+            }
+            (OpNode::GlobalAvgPool { h, w, c }, Trace::Gap) => {
+                dh = kn::gap_bwd(&dh, batch, *h, *w, *c);
+            }
+            (OpNode::Flatten, Trace::None) => {}
+            (OpNode::SkipAdd, Trace::SkipAdd { mask }) => {
+                for (g, &m) in dh.iter_mut().zip(mask.iter()) {
+                    *g *= m;
+                }
+                // The post-mask gradient feeds both the body (dh continues)
+                // and the shortcut (pushed for SkipProj/SkipSave).
+                skip_grads.push(dh.clone());
+            }
+            (OpNode::SkipProj { geom, pidx }, Trace::SkipProj { cols, lq }) => {
+                let g = skip_grads.pop().expect("SkipProj without SkipAdd gradient");
+                let (rows, kdim) = (geom.rows(batch), geom.kdim());
+                let mut dw = kn::grad_weight(cols, &g, rows, kdim, geom.cout);
+                apply_quant_grad(&mut dw, lq, lam_w);
+                grads[*pidx] = dw;
+                let dcols = kn::grad_input(&g, &lq.wq, rows, kdim, geom.cout);
+                skip_grads.push(kn::col2im(&dcols, batch, geom));
+            }
+            (OpNode::SkipSave, Trace::None) => {
+                let g = skip_grads.pop().expect("SkipSave without skip gradient");
+                debug_assert_eq!(dh.len(), g.len());
+                for (a, &b) in dh.iter_mut().zip(g.iter()) {
+                    *a += b;
+                }
+            }
+            _ => unreachable!("op/trace mismatch in native backward"),
+        }
+    }
+    debug_assert!(
+        grads
+            .iter()
+            .zip(&model.params)
+            .all(|(g, p)| g.len() == p.shape.iter().product::<usize>()),
+        "native backward left a parameter gradient unassigned"
+    );
+    grads
 }
 
 fn run_eval(
@@ -588,7 +670,7 @@ fn run_eval(
     } else {
         (kw_arg(prog, model, args[np + 2])?, Some(scalar_arg(prog, "ka", args[np + 3])?))
     };
-    let fwd = forward(model, &params, &x.data, batch, quant, &kw, &[], act_ka);
+    let fwd = forward(model, &params, &x.data, batch, quant, &kw, &[], act_ka, false);
     let (loss, acc, _dl) = kn::softmax_ce(&fwd.logits, &y.data, batch, model.num_classes);
     Ok(vec![Buffer::scalar(loss), Buffer::scalar(acc)])
 }
@@ -599,7 +681,6 @@ fn run_train(
     quant: QuantFamily,
     args: &[&Buffer],
 ) -> Result<Vec<Buffer>> {
-    let nl = model.layers.len();
     let np = model.num_params();
     let nq = model.num_qlayers();
     let expected = 2 * np
@@ -682,60 +763,37 @@ fn run_train(
     let batch = batch_of(prog, model, x, y)?;
 
     // ---- forward ---------------------------------------------------------
-    let fwd = forward(model, &params, &x.data, batch, quant, &kw, &beta_in, ka);
+    let fwd = forward(model, &params, &x.data, batch, quant, &kw, &beta_in, ka, true);
     let (ce, acc, dlogits) = kn::softmax_ce(&fwd.logits, &y.data, batch, model.num_classes);
 
     // ---- regularizer (waveq only) ---------------------------------------
     let mut reg_w = 0.0f64;
     let mut dreg_dbeta = vec![0.0f64; nq];
     if quant == QuantFamily::Waveq {
-        for lq in &fwd.quants {
-            if let Some((v, _m, b)) = &lq.waveq {
-                reg_w += kn::waveq_reg(v, *b);
+        for tr in &fwd.traces {
+            if let Some(lq) = tr.quant() {
+                if let Some((v, _m, b)) = &lq.waveq {
+                    reg_w += kn::waveq_reg(v, *b);
+                }
             }
         }
-        for (l, lq) in model.layers.iter().zip(&fwd.quants) {
-            if let (Some(q), Some((v, _m, b))) = (l.qidx, &lq.waveq) {
-                dreg_dbeta[q] = kn::waveq_reg_grad_beta(v, *b);
+        for (op, tr) in model.ops.iter().zip(fwd.traces.iter()) {
+            let pidx = match op {
+                OpNode::Conv { pidx, .. } | OpNode::SkipProj { pidx, .. } => *pidx,
+                OpNode::Fc { widx, .. } => *widx,
+                _ => continue,
+            };
+            if let (Some(q), Some(lq)) = (model.params[pidx].qidx, tr.quant()) {
+                if let Some((v, _m, b)) = &lq.waveq {
+                    dreg_dbeta[q] = kn::waveq_reg_grad_beta(v, *b);
+                }
             }
         }
     }
     let loss = ce + lam_w * reg_w as f32 + lam_beta * beta_in.iter().sum::<f32>();
 
     // ---- backward --------------------------------------------------------
-    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); np];
-    let mut dz = dlogits;
-    for li in (0..nl).rev() {
-        let l = &model.layers[li];
-        let lq = &fwd.quants[li];
-        let mut dw = kn::grad_weight(&fwd.hs[li], &dz, batch, l.din, l.dout);
-        let db = kn::grad_bias(&dz, batch, l.dout);
-        if let Some(ste) = &lq.ste {
-            for (g, &s) in dw.iter_mut().zip(ste.iter()) {
-                *g *= s;
-            }
-        }
-        // WaveQ: lambda_w * dR/dw, chained v -> w through the tanh
-        // normalization (per-layer max treated as constant, like the STE).
-        if lam_w != 0.0 {
-            if let Some((v, m, b)) = &lq.waveq {
-                let gv = kn::waveq_reg_grad_v(v, *b);
-                let ste = lq.ste.as_ref().expect("waveq layers carry an STE");
-                for ((g, &gvj), &s) in dw.iter_mut().zip(gv.iter()).zip(ste.iter()) {
-                    *g += lam_w * gvj * s / (2.0 * m);
-                }
-            }
-        }
-        grads[2 * li] = dw;
-        grads[2 * li + 1] = db;
-        if li > 0 {
-            let mut dh = kn::grad_input(&dz, &lq.wq, batch, l.din, l.dout);
-            for (g, &mk) in dh.iter_mut().zip(fwd.masks[li - 1].iter()) {
-                *g *= mk;
-            }
-            dz = dh;
-        }
-    }
+    let mut grads = backward(model, &fwd, dlogits, batch, &params, lam_w);
 
     // ---- updates ---------------------------------------------------------
     kn::clip_by_global_norm(&mut grads, kn::GRAD_CLIP_NORM);
@@ -754,13 +812,11 @@ fn run_train(
 
     // ---- pack outputs ----------------------------------------------------
     let mut outs: Vec<Buffer> = Vec::with_capacity(2 * np + 8);
-    for (i, l) in model.layers.iter().enumerate() {
-        outs.push(Buffer::new(vec![l.din, l.dout], std::mem::take(&mut new_params[2 * i]))?);
-        outs.push(Buffer::new(vec![l.dout], std::mem::take(&mut new_params[2 * i + 1]))?);
+    for (i, p) in model.params.iter().enumerate() {
+        outs.push(Buffer::new(p.shape.clone(), std::mem::take(&mut new_params[i]))?);
     }
-    for (i, l) in model.layers.iter().enumerate() {
-        outs.push(Buffer::new(vec![l.din, l.dout], std::mem::take(&mut new_vels[2 * i]))?);
-        outs.push(Buffer::new(vec![l.dout], std::mem::take(&mut new_vels[2 * i + 1]))?);
+    for (i, p) in model.params.iter().enumerate() {
+        outs.push(Buffer::new(p.shape.clone(), std::mem::take(&mut new_vels[i]))?);
     }
     if quant == QuantFamily::Waveq {
         outs.push(Buffer::new(vec![nq], new_beta)?);
@@ -839,6 +895,7 @@ mod tests {
                         }
                         v
                     }
+                    name if name.starts_with("w:affine") && name.ends_with("_s") => vec![1.0; n],
                     name if name.starts_with("w:") => rng.normal_vec(n, 0.1),
                     _ => vec![0.0; n],
                 };
@@ -882,15 +939,17 @@ mod tests {
     fn waveq_reg_term_raises_loss_over_ce() {
         let backend = NativeBackend::new();
         let manifest = backend.manifest();
-        let sig = manifest.program("train_waveq_mlp").unwrap();
-        let args = dummy_train_args(&backend, "train_waveq_mlp");
-        let refs: Vec<&Buffer> = args.iter().collect();
-        let outs = backend.execute(sig, &refs).unwrap();
-        let loss = outs[sig.output_index("loss").unwrap()].data[0];
-        let ce = outs[sig.output_index("ce").unwrap()].data[0];
-        let reg = outs[sig.output_index("reg_w").unwrap()].data[0];
-        assert!(reg > 0.0, "random weights should not sit on the grid");
-        assert!(loss > ce, "loss must include the positive penalty terms");
+        for prog in ["train_waveq_mlp", "train_waveq_simplenet5"] {
+            let sig = manifest.program(prog).unwrap();
+            let args = dummy_train_args(&backend, prog);
+            let refs: Vec<&Buffer> = args.iter().collect();
+            let outs = backend.execute(sig, &refs).unwrap();
+            let loss = outs[sig.output_index("loss").unwrap()].data[0];
+            let ce = outs[sig.output_index("ce").unwrap()].data[0];
+            let reg = outs[sig.output_index("reg_w").unwrap()].data[0];
+            assert!(reg > 0.0, "{prog}: random weights should not sit on the grid");
+            assert!(loss > ce, "{prog}: loss must include the positive penalty terms");
+        }
     }
 
     #[test]
@@ -916,6 +975,128 @@ mod tests {
         assert_ne!(live, vec![3.7, 5.2], "beta must move when training is enabled");
         for &b in &live {
             assert!((1.0..=8.0).contains(&b), "beta {b} escaped its clip range");
+        }
+    }
+
+    #[test]
+    fn conv_graph_gradients_match_finite_difference() {
+        // End-to-end FD check through the op graph: fp32 simplenet5, one
+        // small batch, perturb single weights of a conv, an affine scale,
+        // and the head fc; the analytic parameter gradient (pre-clip) must
+        // match (loss(w+h) - loss(w-h)) / 2h. fp32 keeps the graph smooth
+        // (no quantizer staircase), so FD is trustworthy.
+        let model = NativeModel::simplenet5(1);
+        let batch = 4usize;
+        let mut rng = Rng::new(11);
+        let mut params_data: Vec<Vec<f32>> = model
+            .params
+            .iter()
+            .map(|p| {
+                let n: usize = p.shape.iter().product();
+                match p.kind.as_str() {
+                    "affine" if p.name.ends_with("_s") => vec![1.0; n],
+                    "affine" | "bias" => vec![0.0; n],
+                    _ => rng.normal_vec(n, 0.2),
+                }
+            })
+            .collect();
+        let x: Vec<f32> = rng.normal_vec(batch * model.pixels(), 1.0);
+        let mut y = vec![0.0f32; batch * model.num_classes];
+        for r in 0..batch {
+            y[r * model.num_classes + r % model.num_classes] = 1.0;
+        }
+        let loss_of = |params_data: &Vec<Vec<f32>>| -> f64 {
+            let ps: Vec<&[f32]> = params_data.iter().map(|v| v.as_slice()).collect();
+            let fwd = forward(&model, &ps, &x, batch, QuantFamily::Fp32, &[], &[], None, false);
+            let (ce, _, _) = kn::softmax_ce(&fwd.logits, &y, batch, model.num_classes);
+            ce as f64
+        };
+        let ps: Vec<&[f32]> = params_data.iter().map(|v| v.as_slice()).collect();
+        let fwd = forward(&model, &ps, &x, batch, QuantFamily::Fp32, &[], &[], None, true);
+        let (_, _, dl) = kn::softmax_ce(&fwd.logits, &y, batch, model.num_classes);
+        let grads = backward(&model, &fwd, dl, batch, &ps, 0.0);
+        drop(ps);
+        // (param index, element) probes: conv2 weight, affine2 scale, fc1 w.
+        let probes: Vec<(usize, usize)> = vec![
+            (model.params.iter().position(|p| p.name == "conv2").unwrap(), 3),
+            (model.params.iter().position(|p| p.name == "affine2_s").unwrap(), 1),
+            (model.params.iter().position(|p| p.name == "fc1").unwrap(), 17),
+            (model.params.iter().position(|p| p.name == "fc2_b").unwrap(), 0),
+        ];
+        let h = 1e-3f32;
+        for (pi, ei) in probes {
+            let orig = params_data[pi][ei];
+            params_data[pi][ei] = orig + h;
+            let lp = loss_of(&params_data);
+            params_data[pi][ei] = orig - h;
+            let lm = loss_of(&params_data);
+            params_data[pi][ei] = orig;
+            let fd = (lp - lm) / (2.0 * h as f64);
+            let an = grads[pi][ei] as f64;
+            assert!(
+                (fd - an).abs() < 2e-3 * (1.0 + an.abs()),
+                "param {pi} elem {ei}: fd={fd} an={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn residual_graph_gradients_match_finite_difference() {
+        // Same FD check through resnet20l's skip/projection machinery.
+        let model = NativeModel::resnet20l(1);
+        let batch = 2usize;
+        let mut rng = Rng::new(5);
+        let mut params_data: Vec<Vec<f32>> = model
+            .params
+            .iter()
+            .map(|p| {
+                let n: usize = p.shape.iter().product();
+                match p.kind.as_str() {
+                    "affine" if p.name.ends_with("_s") => vec![1.0; n],
+                    "affine" | "bias" => vec![0.0; n],
+                    _ => rng.normal_vec(n, 0.3),
+                }
+            })
+            .collect();
+        let x: Vec<f32> = rng.normal_vec(batch * model.pixels(), 1.0);
+        let mut y = vec![0.0f32; batch * model.num_classes];
+        for r in 0..batch {
+            y[r * model.num_classes + r] = 1.0;
+        }
+        let loss_of = |params_data: &Vec<Vec<f32>>| -> f64 {
+            let ps: Vec<&[f32]> = params_data.iter().map(|v| v.as_slice()).collect();
+            let fwd = forward(&model, &ps, &x, batch, QuantFamily::Fp32, &[], &[], None, false);
+            let (ce, _, _) = kn::softmax_ce(&fwd.logits, &y, batch, model.num_classes);
+            ce as f64
+        };
+        let ps: Vec<&[f32]> = params_data.iter().map(|v| v.as_slice()).collect();
+        let fwd = forward(&model, &ps, &x, batch, QuantFamily::Fp32, &[], &[], None, true);
+        let (_, _, dl) = kn::softmax_ce(&fwd.logits, &y, batch, model.num_classes);
+        let grads = backward(&model, &fwd, dl, batch, &ps, 0.0);
+        drop(ps);
+        // Probe the stem, a residual-body conv, and a projection conv.
+        // conv4 = 2nd body conv of block 1; conv8 = projection of block 3
+        // (blocks: conv2/conv3, conv4... stem=conv1; block1 body conv2,conv3;
+        // block2 conv4,conv5; block3 body conv6,conv7 + proj conv8).
+        let probes: Vec<(usize, usize)> = ["conv1", "conv3", "conv8", "fc1"]
+            .iter()
+            .map(|n| (model.params.iter().position(|p| &p.name == n).unwrap(), 2))
+            .collect();
+        let h = 1e-3f32;
+        for (pi, ei) in probes {
+            let orig = params_data[pi][ei];
+            params_data[pi][ei] = orig + h;
+            let lp = loss_of(&params_data);
+            params_data[pi][ei] = orig - h;
+            let lm = loss_of(&params_data);
+            params_data[pi][ei] = orig;
+            let fd = (lp - lm) / (2.0 * h as f64);
+            let an = grads[pi][ei] as f64;
+            assert!(
+                (fd - an).abs() < 2e-3 * (1.0 + an.abs()),
+                "param {} elem {ei}: fd={fd} an={an}",
+                model.params[pi].name
+            );
         }
     }
 

@@ -1,0 +1,638 @@
+//! The native model zoo: op-graph definitions of every WaveQ benchmark
+//! network, mirroring `python/compile/models.py` one-for-one (same layer
+//! order, same parameter names/shapes/inits, same quantization-slot policy)
+//! so the native backend exports the same manifest contract the AOT
+//! pipeline writes.
+//!
+//! A model is a flat list of [`OpNode`]s over NHWC activations plus a flat
+//! parameter table (`Vec<ParamMeta>`, the manifest layout). Residual blocks
+//! are linearized with explicit skip markers:
+//!
+//!   SkipSave, <body ops>, [SkipProj], SkipAdd
+//!
+//! `SkipSave` pushes the current activation; `SkipProj` (when the block
+//! changes shape) runs a 1x1 strided conv on the saved activation;
+//! `SkipAdd` pops, adds, and applies ReLU + activation fake-quant — exactly
+//! `layers.Residual.apply`.
+//!
+//! Quantization policy (paper §4.1): every conv/dwconv/fc weight asks for a
+//! bitwidth slot; the first and last quantizable layers of the network are
+//! resolved back to full precision.
+
+use std::collections::BTreeMap;
+
+use super::kernels::{conv_geom, ConvGeom};
+use crate::runtime::manifest::{ArgSpec, ModelMeta, ParamMeta};
+
+/// One node of a native model's op graph, with build-time resolved shapes.
+#[derive(Debug, Clone)]
+pub enum OpNode {
+    /// Standard or depthwise 2-D convolution (SAME padding, no bias);
+    /// `geom.depthwise` selects the kernel. Param = HWIO weight.
+    Conv { geom: ConvGeom, pidx: usize },
+    /// Fully-connected layer with bias.
+    Fc { din: usize, dout: usize, widx: usize, bidx: usize },
+    /// Per-channel scale + bias over (batch * hw, c) ("BN-lite").
+    Affine { c: usize, hw: usize, sidx: usize, bidx: usize },
+    /// ReLU followed by activation fake-quant when the program asks.
+    Relu,
+    /// VALID max pooling with stride = size.
+    MaxPool { h: usize, w: usize, c: usize, size: usize },
+    GlobalAvgPool { h: usize, w: usize, c: usize },
+    Flatten,
+    /// Push the current activation onto the skip stack (residual entry).
+    SkipSave,
+    /// 1x1 strided projection of the saved skip activation.
+    SkipProj { geom: ConvGeom, pidx: usize },
+    /// Pop the skip (projected or identity), add, ReLU + act-quant.
+    SkipAdd,
+}
+
+/// A native model: op graph + flat manifest-style parameter table.
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub name: String,
+    /// Dataset this model trains on (`data::synth` spec name).
+    pub dataset: String,
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    pub batch: usize,
+    pub width_mult: usize,
+    pub ops: Vec<OpNode>,
+    pub params: Vec<ParamMeta>,
+}
+
+impl NativeModel {
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn num_qlayers(&self) -> usize {
+        self.params.iter().filter(|p| p.qidx.is_some()).count()
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.input_shape[0] * self.input_shape[1] * self.input_shape[2]
+    }
+
+    /// The manifest-side description of this model.
+    pub fn meta(&self) -> ModelMeta {
+        ModelMeta {
+            name: self.name.clone(),
+            dataset: self.dataset.clone(),
+            input_shape: self.input_shape,
+            num_classes: self.num_classes,
+            batch: self.batch,
+            width_mult: self.width_mult,
+            num_qlayers: self.num_qlayers(),
+            params: self.params.clone(),
+        }
+    }
+
+    pub fn param_names(&self, prefix: &str) -> Vec<String> {
+        self.params.iter().map(|p| format!("{prefix}:{}", p.name)).collect()
+    }
+
+    pub fn param_specs(&self, prefix: &str) -> Vec<ArgSpec> {
+        self.params
+            .iter()
+            .map(|p| ArgSpec {
+                name: format!("{prefix}:{}", p.name),
+                shape: p.shape.clone(),
+                dtype: "float32".into(),
+            })
+            .collect()
+    }
+
+    // ---- zoo constructors (mirror python/compile/models.py) ----------------
+
+    /// The WaveQ test MLP on mlp-lite (8x8x3 -> 10).
+    pub fn mlp(width_mult: usize) -> NativeModel {
+        let w = 128 * width_mult;
+        let mut b = Builder::new([8, 8, 3]);
+        b.flatten();
+        b.fc(w);
+        b.relu();
+        b.fc(w);
+        b.relu();
+        b.fc(w);
+        b.relu();
+        b.fc(10);
+        b.finish("mlp", "mlp-lite", 10, 64, width_mult)
+    }
+
+    /// SimpleNet-5 stand-in: 3 convs + 2 FCs on cifar-lite.
+    pub fn simplenet5(width_mult: usize) -> NativeModel {
+        let m = width_mult;
+        let mut b = Builder::new([16, 16, 3]);
+        b.conv(16 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.conv(32 * m, 3, 2);
+        b.affine();
+        b.relu();
+        b.conv(32 * m, 3, 2);
+        b.affine();
+        b.relu();
+        b.flatten();
+        b.fc(64 * m);
+        b.relu();
+        b.fc(10);
+        b.finish("simplenet5", "cifar-lite", 10, 32, width_mult)
+    }
+
+    /// ResNet-20-lite: 3 stages x 2 blocks, widths 8/16/32.
+    pub fn resnet20l(width_mult: usize) -> NativeModel {
+        let m = width_mult;
+        let mut b = Builder::new([16, 16, 3]);
+        b.conv(8 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.res_block(8 * m, 1, false);
+        b.res_block(8 * m, 1, false);
+        b.res_block(16 * m, 2, true);
+        b.res_block(16 * m, 1, false);
+        b.res_block(32 * m, 2, true);
+        b.res_block(32 * m, 1, false);
+        b.gap();
+        b.flatten();
+        b.fc(10);
+        b.finish("resnet20l", "cifar-lite", 10, 32, width_mult)
+    }
+
+    /// VGG-11-lite: conv/pool ladder + 2-layer FC head.
+    pub fn vgg11l(width_mult: usize) -> NativeModel {
+        let m = width_mult;
+        let mut b = Builder::new([16, 16, 3]);
+        b.conv(16 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.maxpool(2);
+        b.conv(32 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.maxpool(2);
+        b.conv(64 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.conv(64 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.maxpool(2);
+        b.flatten();
+        b.fc(128 * m);
+        b.relu();
+        b.fc(10);
+        b.finish("vgg11l", "cifar-lite", 10, 32, width_mult)
+    }
+
+    /// SVHN-8-lite: 6 convs + 2 FCs on svhn-lite.
+    pub fn svhn8(width_mult: usize) -> NativeModel {
+        let m = width_mult;
+        let mut b = Builder::new([16, 16, 3]);
+        b.conv(16 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.conv(16 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.maxpool(2);
+        b.conv(32 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.conv(32 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.maxpool(2);
+        b.conv(48 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.conv(48 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.gap();
+        b.flatten();
+        b.fc(64 * m);
+        b.relu();
+        b.fc(10);
+        b.finish("svhn8", "svhn-lite", 10, 32, width_mult)
+    }
+
+    /// AlexNet-lite: 5 convs + 3 FCs on imagenet-lite (24x24, 20 classes).
+    pub fn alexnetl(width_mult: usize) -> NativeModel {
+        let m = width_mult;
+        let mut b = Builder::new([24, 24, 3]);
+        b.conv(16 * m, 5, 2);
+        b.affine();
+        b.relu();
+        b.conv(32 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.maxpool(2);
+        b.conv(48 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.conv(48 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.conv(32 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.maxpool(2);
+        b.flatten();
+        b.fc(128 * m);
+        b.relu();
+        b.fc(128 * m);
+        b.relu();
+        b.fc(20);
+        b.finish("alexnetl", "imagenet-lite", 20, 16, width_mult)
+    }
+
+    /// ResNet-18-lite: 4 stages x 2 blocks, widths 8/16/32/64.
+    pub fn resnet18l(width_mult: usize) -> NativeModel {
+        let m = width_mult;
+        let mut b = Builder::new([24, 24, 3]);
+        b.conv(8 * m, 3, 1);
+        b.affine();
+        b.relu();
+        b.res_block(8 * m, 1, false);
+        b.res_block(8 * m, 1, false);
+        b.res_block(16 * m, 2, true);
+        b.res_block(16 * m, 1, false);
+        b.res_block(32 * m, 2, true);
+        b.res_block(32 * m, 1, false);
+        b.res_block(64 * m, 2, true);
+        b.res_block(64 * m, 1, false);
+        b.gap();
+        b.flatten();
+        b.fc(20);
+        b.finish("resnet18l", "imagenet-lite", 20, 16, width_mult)
+    }
+
+    /// MobileNet-lite: stem conv + 6 depthwise-separable blocks.
+    pub fn mobilenetl(width_mult: usize) -> NativeModel {
+        let m = width_mult;
+        let mut b = Builder::new([24, 24, 3]);
+        b.conv(16 * m, 3, 2);
+        b.affine();
+        b.relu();
+        for (cout, stride) in
+            [(16 * m, 1), (32 * m, 2), (32 * m, 1), (64 * m, 2), (64 * m, 1), (64 * m, 1)]
+        {
+            b.sep_block(cout, stride);
+        }
+        b.gap();
+        b.flatten();
+        b.fc(20);
+        b.finish("mobilenetl", "imagenet-lite", 20, 16, width_mult)
+    }
+
+    /// Build a zoo model by base name.
+    pub fn by_name(name: &str, width_mult: usize) -> Option<NativeModel> {
+        Some(match name {
+            "mlp" => Self::mlp(width_mult),
+            "simplenet5" => Self::simplenet5(width_mult),
+            "resnet20l" => Self::resnet20l(width_mult),
+            "vgg11l" => Self::vgg11l(width_mult),
+            "svhn8" => Self::svhn8(width_mult),
+            "alexnetl" => Self::alexnetl(width_mult),
+            "resnet18l" => Self::resnet18l(width_mult),
+            "mobilenetl" => Self::mobilenetl(width_mult),
+            _ => return None,
+        })
+    }
+}
+
+/// Base names of every zoo member, in registration order.
+pub const ZOO_NAMES: &[&str] = &[
+    "mlp", "simplenet5", "resnet20l", "vgg11l", "svhn8", "alexnetl", "resnet18l", "mobilenetl",
+];
+
+/// WRPN width multiplier (the paper's WRPN-2x configuration).
+pub const WRPN_WIDTH: usize = 2;
+
+// ---- the builder (mirrors models._ShapeTracker + build) --------------------
+
+struct Builder {
+    h: usize,
+    w: usize,
+    c: usize,
+    input_shape: [usize; 3],
+    flat: Option<usize>,
+    ids: BTreeMap<&'static str, usize>,
+    ops: Vec<OpNode>,
+    params: Vec<ParamMeta>,
+    /// Param indices awaiting quantization-slot resolution, in spec order.
+    pending: Vec<usize>,
+}
+
+impl Builder {
+    fn new(input_shape: [usize; 3]) -> Builder {
+        Builder {
+            h: input_shape[0],
+            w: input_shape[1],
+            c: input_shape[2],
+            input_shape,
+            flat: None,
+            ids: BTreeMap::new(),
+            ops: Vec::new(),
+            params: Vec::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    fn next_id(&mut self, kind: &'static str) -> usize {
+        let e = self.ids.entry(kind).or_insert(0);
+        *e += 1;
+        *e
+    }
+
+    fn push_param(
+        &mut self,
+        name: String,
+        shape: Vec<usize>,
+        kind: &str,
+        init: &str,
+        macs: u64,
+        quantizable: bool,
+    ) -> usize {
+        let count: usize = shape.iter().product();
+        let idx = self.params.len();
+        self.params.push(ParamMeta {
+            name,
+            shape,
+            kind: kind.into(),
+            init: init.into(),
+            qidx: None,
+            macs,
+            count: count as u64,
+        });
+        if quantizable {
+            self.pending.push(idx);
+        }
+        idx
+    }
+
+    fn conv(&mut self, cout: usize, ksize: usize, stride: usize) {
+        let geom = conv_geom(self.h, self.w, self.c, cout, ksize, stride, false);
+        let macs = (geom.h_out * geom.w_out * ksize * ksize * self.c * cout) as u64;
+        let name = format!("conv{}", self.next_id("conv"));
+        let pidx =
+            self.push_param(name, vec![ksize, ksize, self.c, cout], "conv", "he", macs, true);
+        self.h = geom.h_out;
+        self.w = geom.w_out;
+        self.c = cout;
+        self.ops.push(OpNode::Conv { geom, pidx });
+    }
+
+    fn dwconv(&mut self, ksize: usize, stride: usize) {
+        let c = self.c;
+        let geom = conv_geom(self.h, self.w, c, c, ksize, stride, true);
+        let macs = (geom.h_out * geom.w_out * ksize * ksize * c) as u64;
+        let name = format!("dwconv{}", self.next_id("dwconv"));
+        let pidx = self.push_param(name, vec![ksize, ksize, 1, c], "dwconv", "he", macs, true);
+        self.h = geom.h_out;
+        self.w = geom.w_out;
+        self.ops.push(OpNode::Conv { geom, pidx });
+    }
+
+    fn fc(&mut self, dout: usize) {
+        let din = match self.flat {
+            Some(n) => n,
+            None => {
+                let n = self.h * self.w * self.c;
+                self.flat = Some(n);
+                n
+            }
+        };
+        let name = format!("fc{}", self.next_id("fc"));
+        let widx = self.push_param(
+            name.clone(),
+            vec![din, dout],
+            "fc",
+            "he",
+            (din * dout) as u64,
+            true,
+        );
+        let bidx = self.push_param(format!("{name}_b"), vec![dout], "bias", "zeros", 0, false);
+        self.flat = Some(dout);
+        self.ops.push(OpNode::Fc { din, dout, widx, bidx });
+    }
+
+    fn affine(&mut self) {
+        let c = self.c;
+        let i = self.next_id("affine");
+        let sidx = self.push_param(format!("affine{i}_s"), vec![c], "affine", "ones", 0, false);
+        let bidx = self.push_param(format!("affine{i}_b"), vec![c], "affine", "zeros", 0, false);
+        self.ops.push(OpNode::Affine { c, hw: self.h * self.w, sidx, bidx });
+    }
+
+    fn relu(&mut self) {
+        self.ops.push(OpNode::Relu);
+    }
+
+    fn maxpool(&mut self, size: usize) {
+        self.ops.push(OpNode::MaxPool { h: self.h, w: self.w, c: self.c, size });
+        self.h /= size;
+        self.w /= size;
+    }
+
+    fn gap(&mut self) {
+        self.ops.push(OpNode::GlobalAvgPool { h: self.h, w: self.w, c: self.c });
+        self.h = 1;
+        self.w = 1;
+    }
+
+    fn flatten(&mut self) {
+        self.flat = Some(self.h * self.w * self.c);
+        self.ops.push(OpNode::Flatten);
+    }
+
+    /// Residual block: [Conv(cout, 3, stride), Affine, ReLU, Conv(cout, 3, 1),
+    /// Affine] + optional 1x1 projection, then add + ReLU. The last body conv
+    /// initializes near zero ("he_res", fixup-style) so deep stacks start as
+    /// near-identity — same as `models._res_block`.
+    fn res_block(&mut self, cout: usize, stride: usize, project: bool) {
+        let (h0, w0, c0) = (self.h, self.w, self.c);
+        self.ops.push(OpNode::SkipSave);
+        self.conv(cout, 3, stride);
+        self.affine();
+        self.relu();
+        self.conv(cout, 3, 1);
+        // Fixup: the body conv just added starts near zero.
+        let last = self
+            .params
+            .iter_mut()
+            .rev()
+            .find(|p| p.kind == "conv")
+            .expect("res_block body has a conv");
+        last.init = "he_res".into();
+        self.affine();
+        if project {
+            let geom = conv_geom(h0, w0, c0, cout, 1, stride, false);
+            let macs = (geom.h_out * geom.w_out * c0 * cout) as u64;
+            let name = format!("conv{}", self.next_id("conv"));
+            let pidx = self.push_param(name, vec![1, 1, c0, cout], "conv", "he", macs, true);
+            self.ops.push(OpNode::SkipProj { geom, pidx });
+        }
+        self.ops.push(OpNode::SkipAdd);
+    }
+
+    /// MobileNet-style depthwise-separable block.
+    fn sep_block(&mut self, cout: usize, stride: usize) {
+        self.dwconv(3, stride);
+        self.affine();
+        self.relu();
+        self.conv(cout, 1, 1);
+        self.affine();
+        self.relu();
+    }
+
+    /// Resolve pending quantization slots (first & last stay fp32, like
+    /// `models.build`) and seal the model.
+    fn finish(
+        mut self,
+        base: &str,
+        dataset: &str,
+        num_classes: usize,
+        batch: usize,
+        width_mult: usize,
+    ) -> NativeModel {
+        let n = self.pending.len();
+        let mut qi = 0usize;
+        for (i, &p) in self.pending.iter().enumerate() {
+            let keep = n < 3 || (i != 0 && i != n - 1);
+            if keep {
+                self.params[p].qidx = Some(qi);
+                qi += 1;
+            }
+        }
+        let name =
+            if width_mult == 1 { base.to_string() } else { format!("{base}_w{width_mult}") };
+        NativeModel {
+            name,
+            dataset: dataset.into(),
+            input_shape: self.input_shape,
+            num_classes,
+            batch,
+            width_mult,
+            ops: self.ops,
+            params: self.params,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_layout_matches_the_fc_era() {
+        // The op-graph mlp must reproduce the original FcLayer-based layout
+        // exactly: names, shapes, qidx slots, macs.
+        let m = NativeModel::mlp(1);
+        let names: Vec<&str> = m.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["fc1", "fc1_b", "fc2", "fc2_b", "fc3", "fc3_b", "fc4", "fc4_b"]
+        );
+        assert_eq!(m.params[0].shape, vec![192, 128]);
+        assert_eq!(m.params[2].qidx, Some(0));
+        assert_eq!(m.params[4].qidx, Some(1));
+        assert_eq!(m.params[0].qidx, None);
+        assert_eq!(m.params[6].qidx, None);
+        assert_eq!(m.num_qlayers(), 2);
+        assert_eq!(m.params[2].macs, 128 * 128);
+        assert_eq!(m.batch, 64);
+        let w2 = NativeModel::mlp(2);
+        assert_eq!(w2.name, "mlp_w2");
+        assert_eq!(w2.params[0].shape, vec![192, 256]);
+    }
+
+    #[test]
+    fn zoo_qlayer_counts_match_the_policy() {
+        // #quantizable = #(conv + dwconv + fc weights) - 2 (first & last fp32).
+        for (name, quantizable) in [
+            ("mlp", 4),
+            ("simplenet5", 5),
+            ("resnet20l", 16),
+            ("vgg11l", 6),
+            ("svhn8", 8),
+            ("alexnetl", 8),
+            ("resnet18l", 21),
+            ("mobilenetl", 14),
+        ] {
+            let m = NativeModel::by_name(name, 1).unwrap();
+            let compute = m
+                .params
+                .iter()
+                .filter(|p| matches!(p.kind.as_str(), "conv" | "dwconv" | "fc"))
+                .count();
+            assert_eq!(compute, quantizable, "{name} compute-layer count");
+            assert_eq!(m.num_qlayers(), quantizable - 2, "{name} qlayer count");
+            // qidx values are 0..q in param order.
+            let slots: Vec<usize> = m.params.iter().filter_map(|p| p.qidx).collect();
+            assert_eq!(slots, (0..m.num_qlayers()).collect::<Vec<_>>(), "{name} slots");
+        }
+    }
+
+    #[test]
+    fn resnet_blocks_linearize_with_skip_markers() {
+        let m = NativeModel::resnet20l(1);
+        let saves = m.ops.iter().filter(|o| matches!(o, OpNode::SkipSave)).count();
+        let adds = m.ops.iter().filter(|o| matches!(o, OpNode::SkipAdd)).count();
+        let projs = m.ops.iter().filter(|o| matches!(o, OpNode::SkipProj { .. })).count();
+        assert_eq!((saves, adds, projs), (6, 6, 2));
+        // The fixup init lands on the last body conv of every block.
+        let he_res = m.params.iter().filter(|p| p.init == "he_res").count();
+        assert_eq!(he_res, 6);
+    }
+
+    #[test]
+    fn spatial_bookkeeping_produces_consistent_fc_dims() {
+        // vgg11l: 16 -> 8 -> 4 -> 2 via three pools; head fc is 2*2*64 -> 128.
+        let m = NativeModel::vgg11l(1);
+        let fc = m.params.iter().find(|p| p.name == "fc1").unwrap();
+        assert_eq!(fc.shape, vec![2 * 2 * 64, 128]);
+        // alexnetl: 24 -(s2)-> 12 -> pool 6 -> pool 3; head fc is 3*3*32 -> 128.
+        let m = NativeModel::alexnetl(1);
+        let fc = m.params.iter().find(|p| p.name == "fc1").unwrap();
+        assert_eq!(fc.shape, vec![3 * 3 * 32, 128]);
+        // GAP models feed c channels to the head.
+        let m = NativeModel::svhn8(1);
+        let fc = m.params.iter().find(|p| p.name == "fc1").unwrap();
+        assert_eq!(fc.shape, vec![48, 64]);
+        let m = NativeModel::mobilenetl(1);
+        let fc = m.params.iter().find(|p| p.name == "fc1").unwrap();
+        assert_eq!(fc.shape, vec![64, 20]);
+    }
+
+    #[test]
+    fn datasets_are_assigned_by_model() {
+        for (name, ds) in [
+            ("mlp", "mlp-lite"),
+            ("simplenet5", "cifar-lite"),
+            ("vgg11l", "cifar-lite"),
+            ("svhn8", "svhn-lite"),
+            ("alexnetl", "imagenet-lite"),
+            ("mobilenetl", "imagenet-lite"),
+        ] {
+            let m = NativeModel::by_name(name, 1).unwrap();
+            assert_eq!(m.dataset, ds, "{name}");
+            assert_eq!(m.meta().dataset, ds, "{name} meta");
+        }
+    }
+
+    #[test]
+    fn macs_and_counts_are_positive_for_compute_layers() {
+        for name in ZOO_NAMES {
+            let m = NativeModel::by_name(name, 1).unwrap();
+            for p in &m.params {
+                let is_compute = matches!(p.kind.as_str(), "conv" | "dwconv" | "fc");
+                assert_eq!(p.macs > 0, is_compute, "{name}/{}", p.name);
+                assert!(p.count > 0, "{name}/{}", p.name);
+                assert_eq!(p.count as usize, p.shape.iter().product::<usize>());
+            }
+        }
+    }
+}

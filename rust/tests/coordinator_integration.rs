@@ -12,6 +12,7 @@ use waveq::util::json::Json;
 fn toy_model() -> ModelMeta {
     ModelMeta {
         name: "toy".into(),
+        dataset: String::new(),
         input_shape: [8, 8, 3],
         num_classes: 10,
         batch: 16,

@@ -131,6 +131,7 @@ fn random_model(r: &mut Rng) -> ModelMeta {
     }
     ModelMeta {
         name: "rand".into(),
+        dataset: String::new(),
         input_shape: [8, 8, 3],
         num_classes: 10,
         batch: 8,

@@ -160,6 +160,7 @@ fn fixture_manifest_parses_with_signatures() {
 
     let model = man.model("toynet").unwrap();
     assert_eq!(model.num_params(), 3);
+    assert_eq!(model.dataset, "mlp-lite");
     assert_eq!(model.num_qlayers, 1);
     assert_eq!(model.qlayer_param_indices(), vec![1]);
     assert_eq!(model.total_macs(), 110_592 + 294_912 + 1280);

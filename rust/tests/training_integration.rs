@@ -174,6 +174,58 @@ fn determinism_same_seed_same_outcome() {
 }
 
 #[test]
+fn every_zoo_model_trains_and_evaluates_natively() {
+    // Conv-zoo smoke at trainer level: for every model the full coordinator
+    // path (dataset resolution by manifest name, 4-D activation plumbing,
+    // quantized train step, held-out eval) must produce finite losses and a
+    // sane accuracy. Two steps per model keeps this cheap in debug builds;
+    // the backend-level tests already exercise every program numerically.
+    let rt = Runtime::native();
+    for model in ["simplenet5", "resnet20l", "vgg11l", "svhn8", "alexnetl", "resnet18l", "mobilenetl"] {
+        let meta = rt.manifest.model(model).unwrap();
+        assert!(!meta.dataset.is_empty(), "{model} declares no dataset");
+        let mut cfg = quick_cfg(Algo::WaveqPreset, 2);
+        cfg.model = model.into();
+        cfg.train_examples = 64;
+        cfg.test_examples = 64;
+        cfg.lr = waveq::config::model_lr(model);
+        let out = Trainer::new(&rt, cfg)
+            .run()
+            .unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        for &(_, l) in out.metrics.get("loss") {
+            assert!(l.is_finite(), "{model}: non-finite train loss");
+        }
+        assert!(out.test_loss.is_finite(), "{model}: non-finite test loss");
+        assert!(
+            (0.0..=1.0).contains(&out.test_acc),
+            "{model}: test_acc {} out of range",
+            out.test_acc
+        );
+    }
+}
+
+#[test]
+fn svhn8_trains_on_svhn_lite_not_cifar_lite() {
+    // Regression for the dataset-dispatch bug: svhn8 and simplenet5 share
+    // an input shape, so shape-based dispatch fed both cifar-lite. With
+    // name-based dispatch their training streams must differ.
+    let rt = Runtime::native();
+    let svhn = rt.manifest.model("svhn8").unwrap();
+    let cifar = rt.manifest.model("simplenet5").unwrap();
+    assert_eq!(svhn.dataset, "svhn-lite");
+    assert_eq!(cifar.dataset, "cifar-lite");
+    assert_eq!(svhn.input_shape, cifar.input_shape, "shapes must collide for this regression");
+    let a = waveq::data::spec_for_model(svhn);
+    let b = waveq::data::spec_for_model(cifar);
+    assert_eq!(a.name, "svhn-lite");
+    assert_eq!(b.name, "cifar-lite");
+    // The resolved specs generate different data for the same (seed, stream).
+    let da = waveq::data::Dataset::generate(a, 32, 7, 0);
+    let db = waveq::data::Dataset::generate(b, 32, 7, 0);
+    assert_ne!(da.images, db.images, "svhn-lite stream must differ from cifar-lite");
+}
+
+#[test]
 fn invalid_model_is_a_clean_error() {
     let rt = Runtime::native();
     let mut cfg = quick_cfg(Algo::Fp32, 5);
