@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Render the BENCH_*.json reports as GitHub step-summary markdown.
+
+Usage: bench_summary.py <dir-with-BENCH_jsons>
+
+Consumes the machine-readable reports the `cargo bench` binaries emit
+(`bench_support::write_report`): BENCH_kernels.json (blocked vs scalar
+matmul/grad kernels, thread scaling) and BENCH_runtime.json (per-program
+step latency across the model zoo). Prints markdown to stdout; the
+perf-smoke CI job appends it to $GITHUB_STEP_SUMMARY.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+
+def kernels_table(report: dict) -> None:
+    summary = report.get("summary", {})
+    print("## Kernel bench (blocked + multi-threaded vs scalar seed kernel)")
+    print()
+    print(f"threads available: {int(report.get('threads_available', 1))}, "
+          f"scale: {report.get('scale', '?')}")
+    print()
+    for key, label in [
+        ("matmul_speedup_t1", "matmul speedup, 1 thread"),
+        ("matmul_speedup_tmax", "matmul speedup, max threads"),
+        ("matmul_scaling_tmax_vs_t1", "matmul thread scaling (tmax vs t1)"),
+        ("grad_weight_speedup_t1", "grad_weight speedup, 1 thread"),
+        ("grad_input_speedup_t1", "grad_input speedup, 1 thread"),
+        ("matmul_max_rel_err", "blocked-vs-scalar max rel err"),
+    ]:
+        if key in summary:
+            value = summary[key]
+            formatted = f"{value:.2e}" if "err" in key else f"{value:.2f}x"
+            print(f"- {label}: **{formatted}**")
+    print()
+    print("| kernel | shape (rows x din x dout) | variant | threads | "
+          "GFLOP/s | speedup vs scalar |")
+    print("|---|---|---|---|---|---|")
+    for e in report.get("entries", []):
+        shape = f"{int(e['rows'])} x {int(e['din'])} x {int(e['dout'])}"
+        speedup = e.get("speedup_vs_scalar")
+        speedup_s = f"{speedup:.2f}x" if speedup is not None else "-"
+        print(f"| {e['kernel']} | {shape} | {e['variant']} | "
+              f"{int(e['threads'])} | {e['gflops']:.2f} | {speedup_s} |")
+    print()
+
+
+def runtime_table(report: dict) -> None:
+    print(f"## Runtime bench (backend: {report.get('platform', '?')})")
+    print()
+    print("| program | compile | step mean | steps/s |")
+    print("|---|---|---|---|")
+    for e in report.get("programs", []):
+        print(f"| {e['program']} | {e['compile_s'] * 1e3:.2f} ms | "
+              f"{e['step_mean_s'] * 1e3:.3f} ms | {e['steps_per_s']:.1f} |")
+    e2e = report.get("e2e_mlp_waveq_50steps")
+    if e2e:
+        print()
+        print(f"- e2e mlp waveq 50 steps: **{e2e['steps_per_s']:.1f} steps/s** "
+              f"(test_acc {e2e['test_acc']:.3f})")
+    print()
+
+
+def main() -> int:
+    outdir = Path(sys.argv[1] if len(sys.argv) > 1 else ".")
+    found = False
+    kernels = outdir / "BENCH_kernels.json"
+    if kernels.exists():
+        kernels_table(json.loads(kernels.read_text()))
+        found = True
+    runtime = outdir / "BENCH_runtime.json"
+    if runtime.exists():
+        runtime_table(json.loads(runtime.read_text()))
+        found = True
+    if not found:
+        print(f"no BENCH_*.json reports under {outdir}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,275 @@
+//! Kernel microbench: the blocked multi-threaded matmul/grad kernels
+//! against the seed's scalar reference (`kernels::scalar`), on zoo-shaped
+//! problems. Emits the machine-readable `BENCH_kernels.json` the
+//! `perf-smoke` CI lane uploads and renders: per-shape timings, GFLOP/s,
+//! single-thread speedup over the scalar kernel, thread-scaling entries
+//! (`WAVEQ_THREADS` = 1/2/4/max), and a blocked-vs-scalar max relative
+//! error as an in-bench numerics guard.
+
+use waveq::bench_support::{header, row, scale, steps, write_report, BenchRunner};
+use waveq::runtime::native::kernels::{self as kn, scalar};
+use waveq::runtime::native::pool;
+use waveq::runtime::NativeModel;
+use waveq::util::json::Json;
+use waveq::util::rng::Rng;
+
+/// Seed-deterministic fill via the crate's own RNG.
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    Rng::new(seed).normal_vec(n, 0.5)
+}
+
+fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| ((x - y).abs() / (1.0 + y.abs())) as f64)
+        .fold(0.0, f64::max)
+}
+
+struct Entry {
+    kernel: &'static str,
+    shape: (usize, usize, usize),
+    variant: String,
+    threads: usize,
+    mean_ns: f64,
+    gflops: f64,
+    speedup_vs_scalar: Option<f64>,
+}
+
+impl Entry {
+    fn json(&self) -> Json {
+        let mut pairs = vec![
+            ("kernel", Json::Str(self.kernel.into())),
+            ("rows", Json::Num(self.shape.0 as f64)),
+            ("din", Json::Num(self.shape.1 as f64)),
+            ("dout", Json::Num(self.shape.2 as f64)),
+            ("variant", Json::Str(self.variant.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("gflops", Json::Num(self.gflops)),
+        ];
+        if let Some(s) = self.speedup_vs_scalar {
+            pairs.push(("speedup_vs_scalar", Json::Num(s)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Time one closure and return (mean_ns, gflops) for `flops` useful work.
+fn time<F: FnMut()>(runner: &BenchRunner, name: &str, flops: f64, f: F) -> (f64, f64) {
+    let s = runner.bench(name, f);
+    let ns = s.mean.as_secs_f64() * 1e9;
+    (ns, flops / s.mean.as_secs_f64() / 1e9)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bench_shape(
+    label: &str,
+    rows: usize,
+    din: usize,
+    dout: usize,
+    grads: bool,
+    thread_sweep: &[usize],
+    entries: &mut Vec<Entry>,
+    summary: &mut Vec<(&'static str, Json)>,
+) {
+    let x = fill(rows * din, 1);
+    let w = fill(din * dout, 2);
+    let dz = fill(rows * dout, 3);
+    let flops = 2.0 * rows as f64 * din as f64 * dout as f64;
+    let shape = (rows, din, dout);
+    // Iteration counts: the scalar baseline is slow, keep its loop short.
+    let scalar_runner = BenchRunner::new(1, steps(3, 10));
+    let blocked_runner = BenchRunner::new(2, steps(7, 30));
+
+    std::env::set_var("WAVEQ_THREADS", "1");
+    let err = max_rel_err(
+        &kn::matmul(&x, &w, rows, din, dout),
+        &scalar::matmul(&x, &w, rows, din, dout),
+    );
+    assert!(err < 1e-4, "{label}: blocked matmul drifted from the scalar oracle ({err:.2e})");
+    // `summary` keys are global (one value each): only the acceptance
+    // shape (the one benched with grads) contributes them.
+    if grads {
+        summary.push(("matmul_max_rel_err", Json::Num(err)));
+    }
+
+    let (s_ns, s_gf) = time(&scalar_runner, &format!("{label} matmul scalar"), flops, || {
+        let _ = scalar::matmul(&x, &w, rows, din, dout);
+    });
+    entries.push(Entry {
+        kernel: "matmul",
+        shape,
+        variant: "scalar".into(),
+        threads: 1,
+        mean_ns: s_ns,
+        gflops: s_gf,
+        speedup_vs_scalar: None,
+    });
+
+    let (b_ns, b_gf) = time(&blocked_runner, &format!("{label} matmul blocked t1"), flops, || {
+        let _ = kn::matmul(&x, &w, rows, din, dout);
+    });
+    entries.push(Entry {
+        kernel: "matmul",
+        shape,
+        variant: "blocked".into(),
+        threads: 1,
+        mean_ns: b_ns,
+        gflops: b_gf,
+        speedup_vs_scalar: Some(s_ns / b_ns),
+    });
+    row(&[
+        label,
+        "matmul",
+        &format!("scalar {:.1} GFLOP/s", s_gf),
+        &format!("blocked(t1) {:.1} GFLOP/s", b_gf),
+        &format!("speedup_t1 {:.2}x", s_ns / b_ns),
+    ]);
+    if grads {
+        summary.push(("matmul_speedup_t1", Json::Num(s_ns / b_ns)));
+        // Regression floor, enforced in the perf-smoke CI lane: the target
+        // is >=5x on this shape, but the floor stays loose so noisy shared
+        // runners don't flake. It exists to catch a silent fall-back to
+        // scalar-speed code (e.g. a packing bug disabling the tiling).
+        assert!(
+            s_ns / b_ns >= 2.0,
+            "{label}: blocked matmul speedup collapsed to {:.2}x (< 2x floor)",
+            s_ns / b_ns
+        );
+    }
+
+    for &t in thread_sweep {
+        std::env::set_var("WAVEQ_THREADS", t.to_string());
+        let (t_ns, t_gf) =
+            time(&blocked_runner, &format!("{label} matmul blocked t{t}"), flops, || {
+                let _ = kn::matmul(&x, &w, rows, din, dout);
+            });
+        entries.push(Entry {
+            kernel: "matmul",
+            shape,
+            variant: "blocked".into(),
+            threads: t,
+            mean_ns: t_ns,
+            gflops: t_gf,
+            speedup_vs_scalar: Some(s_ns / t_ns),
+        });
+        row(&[
+            label,
+            &format!("matmul t{t}"),
+            &format!("{:.1} GFLOP/s", t_gf),
+            &format!("scaling_vs_t1 {:.2}x", b_ns / t_ns),
+        ]);
+        if grads && t == *thread_sweep.last().unwrap() {
+            summary.push(("matmul_speedup_tmax", Json::Num(s_ns / t_ns)));
+            summary.push(("matmul_scaling_tmax_vs_t1", Json::Num(b_ns / t_ns)));
+        }
+    }
+
+    if grads {
+        std::env::set_var("WAVEQ_THREADS", "1");
+        for (kernel, scalar_ns, blocked_ns) in [
+            (
+                "grad_weight",
+                time(&scalar_runner, &format!("{label} grad_weight scalar"), flops, || {
+                    let _ = scalar::grad_weight(&x, &dz, rows, din, dout);
+                })
+                .0,
+                time(&blocked_runner, &format!("{label} grad_weight blocked t1"), flops, || {
+                    let _ = kn::grad_weight(&x, &dz, rows, din, dout);
+                })
+                .0,
+            ),
+            (
+                "grad_input",
+                time(&scalar_runner, &format!("{label} grad_input scalar"), flops, || {
+                    let _ = scalar::grad_input(&dz, &w, rows, din, dout);
+                })
+                .0,
+                time(&blocked_runner, &format!("{label} grad_input blocked t1"), flops, || {
+                    let _ = kn::grad_input(&dz, &w, rows, din, dout);
+                })
+                .0,
+            ),
+        ] {
+            entries.push(Entry {
+                kernel,
+                shape,
+                variant: "scalar".into(),
+                threads: 1,
+                mean_ns: scalar_ns,
+                gflops: flops / scalar_ns,
+                speedup_vs_scalar: None,
+            });
+            entries.push(Entry {
+                kernel,
+                shape,
+                variant: "blocked".into(),
+                threads: 1,
+                mean_ns: blocked_ns,
+                gflops: flops / blocked_ns,
+                speedup_vs_scalar: Some(scalar_ns / blocked_ns),
+            });
+            row(&[
+                label,
+                kernel,
+                &format!("speedup_t1 {:.2}x", scalar_ns / blocked_ns),
+            ]);
+            let key: &'static str = match kernel {
+                "grad_weight" => "grad_weight_speedup_t1",
+                _ => "grad_input_speedup_t1",
+            };
+            summary.push((key, Json::Num(scalar_ns / blocked_ns)));
+        }
+    }
+}
+
+fn main() {
+    waveq::util::logging::init();
+    header("kernels");
+    // A pre-set WAVEQ_THREADS caps the sweep's upper end (the bench sets
+    // the var itself per measurement and restores the override at exit).
+    let preset = std::env::var("WAVEQ_THREADS").ok();
+    let avail = pool::num_threads();
+    println!("threads available: {avail}");
+
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut summary: Vec<(&'static str, Json)> = Vec::new();
+
+    // The acceptance shape: a resnet20l_w2 stage-3 body conv at batch 256
+    // (im2col rows 4096, k*k*cin 576, cout 64) — taken from the model's own
+    // geometry so the label stays honest.
+    let r20w2 = NativeModel::resnet20l(2);
+    let &(rows, din, dout) = r20w2
+        .conv_matmul_shapes(256)
+        .iter()
+        .rev()
+        .find(|&&(r, k, c)| r >= 4096 && k >= 144 && c >= 64)
+        .expect("resnet20l_w2 has a stage-3 conv");
+    let mut sweep: Vec<usize> = vec![2, 4];
+    if avail > 4 {
+        sweep.push(avail);
+    }
+    sweep.retain(|&t| t <= avail);
+    let big = "resnet20l_w2-stage3-b256";
+    bench_shape(big, rows, din, dout, true, &sweep, &mut entries, &mut summary);
+
+    // A stem-shaped conv (wide rows, shallow k) and an FC-shaped matmul.
+    let r20 = NativeModel::resnet20l(1);
+    let &(srows, sdin, sdout) = r20.conv_matmul_shapes(64).first().expect("resnet20l stem");
+    bench_shape("resnet20l-stem-b64", srows, sdin, sdout, false, &[], &mut entries, &mut summary);
+    bench_shape("mlp-fc-b64", 64, 192, 128, false, &[], &mut entries, &mut summary);
+
+    match preset {
+        Some(v) => std::env::set_var("WAVEQ_THREADS", v),
+        None => std::env::remove_var("WAVEQ_THREADS"),
+    }
+
+    let body = Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("scale", Json::Str(format!("{:?}", scale()))),
+        ("threads_available", Json::Num(avail as f64)),
+        ("summary", Json::obj(summary.iter().map(|(k, v)| (*k, v.clone())).collect())),
+        ("entries", Json::Arr(entries.iter().map(Entry::json).collect())),
+    ]);
+    write_report("kernels", &body).expect("write BENCH_kernels.json");
+}

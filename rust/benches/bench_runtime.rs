@@ -1,21 +1,29 @@
 //! Runtime microbenches: program compile latency, per-step execution
 //! latency / throughput per model family, buffer marshalling cost, data
-//! pipeline. The L3 §Perf numbers in EXPERIMENTS.md come from here.
+//! pipeline. The L3 §Perf numbers in EXPERIMENTS.md come from here, and
+//! the machine-readable `BENCH_runtime.json` feeds the `perf-smoke` CI
+//! lane's artifacts + step summary.
 //!
 //! Runs against the AOT artifacts when built (`make artifacts`), otherwise
-//! against the hermetic native backend.
+//! against the hermetic native backend — which serves the full conv zoo,
+//! so the per-program loop covers MLP and conv families alike.
 
-use waveq::bench_support::{header, row, BenchRunner};
+use waveq::bench_support::{header, row, write_report, BenchRunner};
 use waveq::config::{Algo, RunConfig};
 use waveq::coordinator::Trainer;
 use waveq::data::{spec, Batcher, Dataset};
 use waveq::runtime::{buffer_f32, scalar_f32, to_vec_f32, Buffer, Runtime};
+use waveq::util::json::Json;
 
 fn main() {
     waveq::util::logging::init();
     let rt = Runtime::open(&waveq::artifacts_dir()).unwrap();
     header("runtime");
     println!("platform: {}", rt.platform());
+    let mut report: Vec<(&str, Json)> = vec![
+        ("bench", Json::Str("runtime".into())),
+        ("platform", Json::Str(rt.platform())),
+    ];
 
     // --- literal marshalling ------------------------------------------------
     let runner = BenchRunner::new(3, 50);
@@ -43,10 +51,22 @@ fn main() {
     row(&["datagen_1024", &format!("{:.3?}", s.mean)]);
 
     // --- per-program step latency ------------------------------------------
-    for prog in ["train_fp32_mlp", "train_waveq_mlp", "train_fp32_simplenet5", "train_waveq_simplenet5"] {
-        // warm compile outside the timing loop; report compile separately.
-        // Skips programs the manifest lacks AND programs the active backend
-        // can't serve (e.g. AOT-manifest conv programs on the native backend).
+    // fp32 + waveq across the families the native backend serves: the MLP,
+    // a plain conv net, a residual net, and the depthwise-separable net.
+    let mut programs: Vec<Json> = Vec::new();
+    for prog in [
+        "train_fp32_mlp",
+        "train_waveq_mlp",
+        "train_fp32_simplenet5",
+        "train_waveq_simplenet5",
+        "train_fp32_resnet20l",
+        "train_waveq_resnet20l",
+        "train_fp32_mobilenetl",
+        "train_waveq_mobilenetl",
+    ] {
+        // Warm compile outside the timing loop; report compile separately.
+        // Skips programs only when the manifest lacks them (AOT manifests
+        // without the conv programs); the native backend serves them all.
         let t0 = std::time::Instant::now();
         if rt.warmup(&[prog]).is_err() {
             continue;
@@ -71,7 +91,10 @@ fn main() {
                 }
             })
             .collect();
-        let s = BenchRunner::new(3, 15).bench(&format!("{prog} step"), || {
+        // Conv-family steps are orders of magnitude heavier than MLP ones:
+        // scale the iteration count so the bench stays CI-sized.
+        let iters = if prog.ends_with("_mlp") { 15 } else { 8 };
+        let s = BenchRunner::new(2, iters).bench(&format!("{prog} step"), || {
             let _ = rt.execute(prog, &args).unwrap();
         });
         row(&[
@@ -80,7 +103,14 @@ fn main() {
             &format!("step {:.3?}", s.mean),
             &format!("{:.1} steps/s", s.per_sec()),
         ]);
+        programs.push(Json::obj(vec![
+            ("program", Json::Str(prog.into())),
+            ("compile_s", Json::Num(compile.as_secs_f64())),
+            ("step_mean_s", Json::Num(s.mean.as_secs_f64())),
+            ("steps_per_s", Json::Num(s.per_sec())),
+        ]));
     }
+    report.push(("programs", Json::Arr(programs)));
 
     // --- end-to-end short training throughput --------------------------------
     let mut cfg = RunConfig {
@@ -98,4 +128,13 @@ fn main() {
         &format!("{:.1} steps/s", 50.0 / out.train_secs),
         &format!("test_acc {:.3}", out.test_acc),
     ]);
+    report.push((
+        "e2e_mlp_waveq_50steps",
+        Json::obj(vec![
+            ("steps_per_s", Json::Num(50.0 / out.train_secs)),
+            ("test_acc", Json::Num(out.test_acc as f64)),
+        ]),
+    ));
+
+    write_report("runtime", &Json::obj(report)).expect("write BENCH_runtime.json");
 }

@@ -5,7 +5,13 @@
 //! Conventions: every bench binary prints rows prefixed with `BENCH` so
 //! `cargo bench` output is grep-able, and honours `WAVEQ_BENCH_SCALE`
 //! (smoke|full) so CI-scale runs stay fast while `waveq experiment <id>`
-//! regenerates paper-scale numbers.
+//! regenerates paper-scale numbers. Benches that feed the `perf-smoke` CI
+//! lane additionally emit a machine-readable `BENCH_<name>.json` via
+//! [`write_report`] so the repo accumulates a perf trajectory.
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
 
 pub use crate::util::timer::{BenchRunner, BenchStats};
 
@@ -38,6 +44,24 @@ pub fn row(cols: &[&str]) {
     println!("BENCH {}", cols.join(" | "));
 }
 
+/// Directory machine-readable bench reports land in: `WAVEQ_BENCH_OUT`
+/// when set, else the current working directory.
+pub fn bench_out_dir() -> PathBuf {
+    std::env::var("WAVEQ_BENCH_OUT").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("."))
+}
+
+/// Write `BENCH_<name>.json` (one JSON object per bench binary) into
+/// [`bench_out_dir`]. The `perf-smoke` CI job uploads these as workflow
+/// artifacts and renders them into the step summary. Returns the path.
+pub fn write_report(name: &str, body: &Json) -> std::io::Result<PathBuf> {
+    let dir = bench_out_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{body}\n"))?;
+    println!("BENCH report -> {}", path.display());
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -47,5 +71,18 @@ mod tests {
         std::env::remove_var("WAVEQ_BENCH_SCALE");
         assert_eq!(scale(), Scale::Smoke);
         assert_eq!(steps(5, 500), 5);
+    }
+
+    #[test]
+    fn write_report_emits_parseable_json_into_bench_out_dir() {
+        let dir = std::env::temp_dir().join("waveq-bench-report-test");
+        std::env::set_var("WAVEQ_BENCH_OUT", &dir);
+        let body = Json::obj(vec![("bench", Json::Str("t".into())), ("n", Json::Num(3.0))]);
+        let path = write_report("selftest", &body).unwrap();
+        std::env::remove_var("WAVEQ_BENCH_OUT");
+        assert!(path.ends_with("BENCH_selftest.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(&text).unwrap(), body);
+        let _ = std::fs::remove_file(&path);
     }
 }

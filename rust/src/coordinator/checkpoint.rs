@@ -111,7 +111,10 @@ mod tests {
     fn round_trip() {
         let ck = Checkpoint {
             tensors: vec![
-                ("w1".into(), Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-9, -7.25]).unwrap()),
+                (
+                    "w1".into(),
+                    Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-9, -7.25]).unwrap(),
+                ),
                 ("b1".into(), Tensor::new(vec![3], vec![0.1, 0.2, 0.3]).unwrap()),
                 ("scalar".into(), Tensor::new(vec![], vec![42.0]).unwrap()),
             ],

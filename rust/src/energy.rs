@@ -123,7 +123,12 @@ impl Stripes {
     }
 
     /// Homogeneous-assignment convenience.
-    pub fn evaluate_homogeneous(&self, model: &ModelMeta, bits: u32, act_bits: u32) -> EnergyReport {
+    pub fn evaluate_homogeneous(
+        &self,
+        model: &ModelMeta,
+        bits: u32,
+        act_bits: u32,
+    ) -> EnergyReport {
         let qbits = vec![bits; model.num_qlayers];
         self.evaluate(model, &qbits, act_bits, self.cfg.baseline_bits.min(8))
     }
@@ -171,20 +176,40 @@ mod tests {
             num_qlayers: 2,
             params: vec![
                 ParamMeta {
-                    name: "conv1".into(), shape: vec![3, 3, 3, 8], kind: "conv".into(), init: "he".into(),
-                    qidx: None, macs: 110_592, count: 216,
+                    name: "conv1".into(),
+                    shape: vec![3, 3, 3, 8],
+                    kind: "conv".into(),
+                    init: "he".into(),
+                    qidx: None,
+                    macs: 110_592,
+                    count: 216,
                 },
                 ParamMeta {
-                    name: "conv2".into(), shape: vec![3, 3, 8, 8], kind: "conv".into(), init: "he".into(),
-                    qidx: Some(0), macs: 294_912, count: 576,
+                    name: "conv2".into(),
+                    shape: vec![3, 3, 8, 8],
+                    kind: "conv".into(),
+                    init: "he".into(),
+                    qidx: Some(0),
+                    macs: 294_912,
+                    count: 576,
                 },
                 ParamMeta {
-                    name: "fc".into(), shape: vec![512, 10], kind: "fc".into(), init: "he".into(),
-                    qidx: Some(1), macs: 5_120, count: 5_120,
+                    name: "fc".into(),
+                    shape: vec![512, 10],
+                    kind: "fc".into(),
+                    init: "he".into(),
+                    qidx: Some(1),
+                    macs: 5_120,
+                    count: 5_120,
                 },
                 ParamMeta {
-                    name: "affine_s".into(), shape: vec![8], kind: "affine".into(), init: "ones".into(),
-                    qidx: None, macs: 0, count: 8,
+                    name: "affine_s".into(),
+                    shape: vec![8],
+                    kind: "affine".into(),
+                    init: "ones".into(),
+                    qidx: None,
+                    macs: 0,
+                    count: 8,
                 },
             ],
         }

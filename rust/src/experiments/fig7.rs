@@ -96,7 +96,8 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         // Row II — constant lambda_w from step 0.
         let mut opts = track.clone();
         opts.constant_lambda_w = Some(2.0);
-        let out_const = Trainer::with_options(ctx.rt, make_cfg(Algo::WaveqPreset, bits), opts).run()?;
+        let out_const =
+            Trainer::with_options(ctx.rt, make_cfg(Algo::WaveqPreset, bits), opts).run()?;
         ctx.write("fig7", &format!("const_w{bits}.csv"), &traj_csv(&out_const))?;
 
         // Row III — scheduled (exponential ramp) lambda_w.

@@ -143,7 +143,10 @@ fn run(argv: &[String]) -> Result<()> {
                     l.name, l.bits, l.macs, l.cycles, l.energy
                 );
             }
-            println!("  total: cycles={:.0} energy={:.0}", report.total_cycles, report.total_energy);
+            println!(
+                "  total: cycles={:.0} energy={:.0}",
+                report.total_cycles, report.total_energy
+            );
             let saving = stripes.saving_vs_baseline(model, &vec![bits; model.num_qlayers], act);
             println!("  energy saving vs 16-bit bit-parallel baseline: {saving:.2}x");
             Ok(())

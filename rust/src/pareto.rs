@@ -245,7 +245,7 @@ mod tests {
         // Degenerate calls stay well-formed.
         assert!(sample_assignments(0, 2, 8, 3, &mut rng).iter().all(|a| a.is_empty()));
         let flat = sample_assignments(4, 5, 5, 10, &mut rng);
-        assert!(flat.iter().all(|a| a == &vec![5, 5, 5, 5]));
+        assert!(flat.iter().all(|a| a[..] == [5, 5, 5, 5]));
     }
 
     #[test]

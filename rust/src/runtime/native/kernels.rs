@@ -15,6 +15,15 @@
 //! Scalar reductions and the regularizer run in f64 (the XLA programs
 //! accumulate in higher precision too, and the finite-difference property
 //! tests need the head-room); elementwise tensors stay f32.
+//!
+//! The dense linear algebra (matmul / matmul_bias / grad_weight /
+//! grad_input) is cache-blocked, register-tiled, and multi-threaded via
+//! [`super::pool`]; im2col / col2im / the depthwise convs split the batch
+//! dimension across the same workers. All of it is bitwise deterministic
+//! for any `WAVEQ_THREADS` value — see the "dense linear algebra" section
+//! below and `pool`'s module docs for the contract.
+
+use super::pool;
 
 pub const LN2: f64 = std::f64::consts::LN_2;
 pub const PI: f64 = std::f64::consts::PI;
@@ -208,8 +217,8 @@ pub fn conv_geom(
     stride: usize,
     depthwise: bool,
 ) -> ConvGeom {
-    let h_out = (h + stride - 1) / stride;
-    let w_out = (w + stride - 1) / stride;
+    let h_out = h.div_ceil(stride);
+    let w_out = w.div_ceil(stride);
     let pad_h = ((h_out - 1) * stride + ksize).saturating_sub(h);
     let pad_w = ((w_out - 1) * stride + ksize).saturating_sub(w);
     ConvGeom {
@@ -230,107 +239,122 @@ pub fn conv_geom(
 /// Unfold an NHWC input into im2col patch rows: (batch * h_out * w_out,
 /// k * k * cin), zero-padded at the borders. The row layout matches the
 /// row-major flattening of an HWIO weight's leading [k, k, cin] dims, so
-/// `conv = matmul(cols, w_flat)`.
+/// `conv = matmul(cols, w_flat)`. Images are split across the worker pool;
+/// each image's rows are written by exactly one worker.
 pub fn im2col(x: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
     let k = g.ksize;
     let kk = g.kdim();
     let plane = g.h_in * g.w_in * g.cin;
-    let mut cols = vec![0.0f32; g.rows(batch) * kk];
-    for b in 0..batch {
-        let xb = &x[b * plane..(b + 1) * plane];
-        for oh in 0..g.h_out {
-            for ow in 0..g.w_out {
-                let row = &mut cols[((b * g.h_out + oh) * g.w_out + ow) * kk..][..kk];
-                for kh in 0..k {
-                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                    if ih < 0 || ih >= g.h_in as isize {
-                        continue;
-                    }
-                    for kw in 0..k {
-                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                        if iw < 0 || iw >= g.w_in as isize {
+    let width = g.h_out * g.w_out * kk;
+    let mut cols = vec![0.0f32; batch * width];
+    pool::run_rows(&mut cols, batch, width, CONV_MIN_BATCH, |b0, shard| {
+        for (bi, dst) in shard.chunks_mut(width).enumerate() {
+            let xb = &x[(b0 + bi) * plane..(b0 + bi + 1) * plane];
+            for oh in 0..g.h_out {
+                for ow in 0..g.w_out {
+                    let row = &mut dst[(oh * g.w_out + ow) * kk..][..kk];
+                    for kh in 0..k {
+                        let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                        if ih < 0 || ih >= g.h_in as isize {
                             continue;
                         }
-                        let src = ((ih as usize) * g.w_in + iw as usize) * g.cin;
-                        let dst = (kh * k + kw) * g.cin;
-                        row[dst..dst + g.cin].copy_from_slice(&xb[src..src + g.cin]);
+                        for kw in 0..k {
+                            let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                            if iw < 0 || iw >= g.w_in as isize {
+                                continue;
+                            }
+                            let src = ((ih as usize) * g.w_in + iw as usize) * g.cin;
+                            let d = (kh * k + kw) * g.cin;
+                            row[d..d + g.cin].copy_from_slice(&xb[src..src + g.cin]);
+                        }
                     }
                 }
             }
         }
-    }
+    });
     cols
 }
 
 /// Transpose of [`im2col`]: scatter-add patch-row gradients back onto the
-/// input layout (the dx of the convolution given dcols = dz @ w^T).
+/// input layout (the dx of the convolution given dcols = dz @ w^T). Split
+/// by image like [`im2col`]; the scatter-adds within one image run in the
+/// fixed (oh, ow, kh, kw) order regardless of the worker count.
 pub fn col2im(dcols: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
     let k = g.ksize;
     let kk = g.kdim();
     let plane = g.h_in * g.w_in * g.cin;
     let mut dx = vec![0.0f32; batch * plane];
-    for b in 0..batch {
-        let dxb = &mut dx[b * plane..(b + 1) * plane];
-        for oh in 0..g.h_out {
-            for ow in 0..g.w_out {
-                let row = &dcols[((b * g.h_out + oh) * g.w_out + ow) * kk..][..kk];
-                for kh in 0..k {
-                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                    if ih < 0 || ih >= g.h_in as isize {
-                        continue;
-                    }
-                    for kw in 0..k {
-                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                        if iw < 0 || iw >= g.w_in as isize {
+    pool::run_rows(&mut dx, batch, plane, CONV_MIN_BATCH, |b0, shard| {
+        for (bi, dxb) in shard.chunks_mut(plane).enumerate() {
+            let b = b0 + bi;
+            for oh in 0..g.h_out {
+                for ow in 0..g.w_out {
+                    let row = &dcols[((b * g.h_out + oh) * g.w_out + ow) * kk..][..kk];
+                    for kh in 0..k {
+                        let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                        if ih < 0 || ih >= g.h_in as isize {
                             continue;
                         }
-                        let dst = ((ih as usize) * g.w_in + iw as usize) * g.cin;
-                        let src = (kh * k + kw) * g.cin;
-                        for c in 0..g.cin {
-                            dxb[dst + c] += row[src + c];
+                        for kw in 0..k {
+                            let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                            if iw < 0 || iw >= g.w_in as isize {
+                                continue;
+                            }
+                            let dst = ((ih as usize) * g.w_in + iw as usize) * g.cin;
+                            let src = (kh * k + kw) * g.cin;
+                            for c in 0..g.cin {
+                                dxb[dst + c] += row[src + c];
+                            }
                         }
                     }
                 }
             }
         }
-    }
+    });
     dx
 }
 
 /// Depthwise conv forward: out(b, oh, ow, c) += x(b, ih, iw, c) * w(kh, kw, 0, c).
+/// Images are split across the worker pool (one image per output shard).
 pub fn dwconv_fwd(x: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
     let (k, c) = (g.ksize, g.cout);
     let plane_in = g.h_in * g.w_in * c;
-    let mut out = vec![0.0f32; g.rows(batch) * c];
-    for b in 0..batch {
-        let xb = &x[b * plane_in..(b + 1) * plane_in];
-        for oh in 0..g.h_out {
-            for ow in 0..g.w_out {
-                let orow = &mut out[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
-                for kh in 0..k {
-                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                    if ih < 0 || ih >= g.h_in as isize {
-                        continue;
-                    }
-                    for kw in 0..k {
-                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                        if iw < 0 || iw >= g.w_in as isize {
+    let width = g.h_out * g.w_out * c;
+    let mut out = vec![0.0f32; batch * width];
+    pool::run_rows(&mut out, batch, width, CONV_MIN_BATCH, |b0, shard| {
+        for (bi, ob) in shard.chunks_mut(width).enumerate() {
+            let xb = &x[(b0 + bi) * plane_in..(b0 + bi + 1) * plane_in];
+            for oh in 0..g.h_out {
+                for ow in 0..g.w_out {
+                    let orow = &mut ob[(oh * g.w_out + ow) * c..][..c];
+                    for kh in 0..k {
+                        let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                        if ih < 0 || ih >= g.h_in as isize {
                             continue;
                         }
-                        let xrow = &xb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
-                        let wrow = &w[(kh * k + kw) * c..][..c];
-                        for ch in 0..c {
-                            orow[ch] += xrow[ch] * wrow[ch];
+                        for kw in 0..k {
+                            let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                            if iw < 0 || iw >= g.w_in as isize {
+                                continue;
+                            }
+                            let xrow = &xb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
+                            let wrow = &w[(kh * k + kw) * c..][..c];
+                            for ch in 0..c {
+                                orow[ch] += xrow[ch] * wrow[ch];
+                            }
                         }
                     }
                 }
             }
         }
-    }
+    });
     out
 }
 
 /// Depthwise conv weight gradient: dW(kh, kw, 0, c) = sum x * dz.
+/// Stays single-threaded: the reduction runs over the whole batch into one
+/// small k*k*c tensor, and splitting it would change the summation order
+/// (the work is a tiny fraction of the separable block's 1x1 convs anyway).
 pub fn dwconv_grad_w(x: &[f32], dz: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
     let (k, c) = (g.ksize, g.cout);
     let plane_in = g.h_in * g.w_in * c;
@@ -364,35 +388,39 @@ pub fn dwconv_grad_w(x: &[f32], dz: &[f32], batch: usize, g: &ConvGeom) -> Vec<f
 }
 
 /// Depthwise conv input gradient: dx(b, ih, iw, c) += w(kh, kw, 0, c) * dz.
+/// Images are split across the worker pool; each image's scatter-adds run
+/// in the fixed (oh, ow, kh, kw) order regardless of the worker count.
 pub fn dwconv_grad_x(dz: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
     let (k, c) = (g.ksize, g.cout);
     let plane_in = g.h_in * g.w_in * c;
     let mut dx = vec![0.0f32; batch * plane_in];
-    for b in 0..batch {
-        let dxb = &mut dx[b * plane_in..(b + 1) * plane_in];
-        for oh in 0..g.h_out {
-            for ow in 0..g.w_out {
-                let drow = &dz[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
-                for kh in 0..k {
-                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                    if ih < 0 || ih >= g.h_in as isize {
-                        continue;
-                    }
-                    for kw in 0..k {
-                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                        if iw < 0 || iw >= g.w_in as isize {
+    pool::run_rows(&mut dx, batch, plane_in, CONV_MIN_BATCH, |b0, shard| {
+        for (bi, dxb) in shard.chunks_mut(plane_in).enumerate() {
+            let b = b0 + bi;
+            for oh in 0..g.h_out {
+                for ow in 0..g.w_out {
+                    let drow = &dz[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
+                    for kh in 0..k {
+                        let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                        if ih < 0 || ih >= g.h_in as isize {
                             continue;
                         }
-                        let xrow = &mut dxb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
-                        let wrow = &w[(kh * k + kw) * c..][..c];
-                        for ch in 0..c {
-                            xrow[ch] += wrow[ch] * drow[ch];
+                        for kw in 0..k {
+                            let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                            if iw < 0 || iw >= g.w_in as isize {
+                                continue;
+                            }
+                            let xrow = &mut dxb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
+                            let wrow = &w[(kh * k + kw) * c..][..c];
+                            for ch in 0..c {
+                                xrow[ch] += wrow[ch] * drow[ch];
+                            }
                         }
                     }
                 }
             }
         }
-    }
+    });
     dx
 }
 
@@ -518,59 +546,199 @@ pub fn affine_bwd(
 }
 
 // ---- dense linear algebra (row-major) --------------------------------------
+//
+// The production kernels are cache-blocked and register-tiled: the right
+// operand is packed once per call into NR-wide column panels, and each
+// MR x NR output tile accumulates in a bank of f32 registers shaped for
+// auto-vectorization (NR = 16 -> two 8-lane vectors per tile row). Output
+// row ranges are split across the `pool` workers. Every output element is
+// reduced over k in a single chain of increasing k, an order fixed by the
+// tile constants alone — so results are bitwise identical for any thread
+// count (`WAVEQ_THREADS`) and any tile position. The seed's triple-loop
+// kernels live on in [`scalar`] as the numerics oracle for the property
+// tests and the baseline `bench_kernels` measures speedup against.
+
+/// Rows per register tile.
+const MR: usize = 4;
+/// Columns per register tile (two 8-lane f32 vectors).
+const NR: usize = 16;
+
+/// Minimum output rows per worker shard for the row-parallel GEMMs.
+const GEMM_MIN_ROWS: usize = 32;
+/// Minimum dW rows per worker shard (each row is a full-depth reduction).
+const GRADW_MIN_ROWS: usize = 8;
+/// Minimum batch images per worker shard for im2col/col2im/dwconv.
+const CONV_MIN_BATCH: usize = 4;
+
+/// Fused (on targets with FMA) or separate multiply-add. The choice is a
+/// compile-time constant, so any given binary is internally consistent and
+/// the thread-count determinism guarantee is unaffected.
+#[inline(always)]
+fn fma(a: f32, b: f32, c: f32) -> f32 {
+    #[cfg(target_feature = "fma")]
+    {
+        a.mul_add(b, c)
+    }
+    #[cfg(not(target_feature = "fma"))]
+    {
+        a * b + c
+    }
+}
+
+/// Strided view of the left GEMM operand: element (m, k) sits at
+/// `buf[m * ms + k * ks]`, so one microkernel serves both `x @ w`
+/// (ms = row stride, ks = 1) and `h^T @ dz` (ms = 1, ks = row stride).
+#[derive(Clone, Copy)]
+struct AView<'a> {
+    buf: &'a [f32],
+    ms: usize,
+    ks: usize,
+}
+
+/// One MR x NR register tile: out[m][..nw] = init + sum_k a(m, k) * B(k, ..).
+///
+/// The panel is k-major and NR-wide (zero-padded past `nw`), so the inner
+/// loop is a broadcast multiply-accumulate over NR contiguous lanes — the
+/// shape LLVM auto-vectorizes. Each output element is one add chain in
+/// increasing k: the fixed reduction order behind the determinism contract.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_tile(
+    a: AView<'_>,
+    mr: usize,
+    k: usize,
+    panel: &[f32],
+    init: &[f32; NR],
+    out: &mut [f32],
+    ldo: usize,
+    nw: usize,
+) {
+    debug_assert!(mr >= 1 && mr <= MR && nw >= 1 && nw <= NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for row in acc.iter_mut().take(mr) {
+        *row = *init;
+    }
+    for kk in 0..k {
+        let prow = &panel[kk * NR..kk * NR + NR];
+        for (m, row) in acc.iter_mut().enumerate().take(mr) {
+            let av = a.buf[m * a.ms + kk * a.ks];
+            for (ac, &pv) in row.iter_mut().zip(prow.iter()) {
+                *ac = fma(av, pv, *ac);
+            }
+        }
+    }
+    for (m, row) in acc.iter().enumerate().take(mr) {
+        out[m * ldo..m * ldo + nw].copy_from_slice(&row[..nw]);
+    }
+}
+
+/// Pack a row-major (k x n) matrix into k-major NR-wide column panels,
+/// zero-padded in the final panel.
+fn pack_b(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let panels = n.div_ceil(NR);
+    let mut packed = vec![0.0f32; panels * k * NR];
+    for j in 0..panels {
+        let n0 = j * NR;
+        let nw = NR.min(n - n0);
+        let dst = &mut packed[j * k * NR..(j + 1) * k * NR];
+        for kk in 0..k {
+            dst[kk * NR..kk * NR + nw].copy_from_slice(&b[kk * n + n0..kk * n + n0 + nw]);
+        }
+    }
+    packed
+}
+
+/// Pack the transpose of a row-major (n x k) matrix into the same layout
+/// as [`pack_b`] — i.e. the panels of the (k x n) matrix B^T.
+fn pack_bt(b: &[f32], n: usize, k: usize) -> Vec<f32> {
+    let panels = n.div_ceil(NR);
+    let mut packed = vec![0.0f32; panels * k * NR];
+    for j in 0..panels {
+        let n0 = j * NR;
+        let nw = NR.min(n - n0);
+        let dst = &mut packed[j * k * NR..(j + 1) * k * NR];
+        for ni in 0..nw {
+            let src = &b[(n0 + ni) * k..(n0 + ni) * k + k];
+            for (kk, &v) in src.iter().enumerate() {
+                dst[kk * NR + ni] = v;
+            }
+        }
+    }
+    packed
+}
+
+/// Row-parallel blocked GEMM over a pre-packed right operand:
+/// out(r, j) = bias(j) + sum_k a(r, k) * B(k, j).
+///
+/// Row blocks are outermost so the big left operand streams from memory
+/// exactly once per panel sweep while the packed panels stay cache-hot.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed(
+    a: &[f32],
+    row_stride: usize,
+    k_stride: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    packed: &[f32],
+    bias: Option<&[f32]>,
+    min_rows: usize,
+    out: &mut [f32],
+) {
+    let panels = n.div_ceil(NR);
+    pool::run_rows(out, rows, n, min_rows, |r0, shard| {
+        let nrows = shard.len() / n;
+        let mut r = 0;
+        while r < nrows {
+            let mr = MR.min(nrows - r);
+            let tile = AView { buf: &a[(r0 + r) * row_stride..], ms: row_stride, ks: k_stride };
+            for j in 0..panels {
+                let n0 = j * NR;
+                let nw = NR.min(n - n0);
+                let mut init = [0.0f32; NR];
+                if let Some(bv) = bias {
+                    init[..nw].copy_from_slice(&bv[n0..n0 + nw]);
+                }
+                let panel = &packed[j * k * NR..(j + 1) * k * NR];
+                micro_tile(tile, mr, k, panel, &init, &mut shard[r * n + n0..], n, nw);
+            }
+            r += mr;
+        }
+    });
+}
 
 /// out(r, o) = x(r, i) @ w(i, o)   (no bias; conv-via-im2col path)
 pub fn matmul(x: &[f32], w: &[f32], rows: usize, din: usize, dout: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; rows * dout];
-    for r in 0..rows {
-        let xrow = &x[r * din..(r + 1) * din];
-        let orow = &mut out[r * dout..(r + 1) * dout];
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv != 0.0 {
-                let wrow = &w[i * dout..(i + 1) * dout];
-                for (o, &wv) in wrow.iter().enumerate() {
-                    orow[o] += xv * wv;
-                }
-            }
-        }
-    }
+    let packed = pack_b(w, din, dout);
+    gemm_packed(x, din, 1, rows, din, dout, &packed, None, GEMM_MIN_ROWS, &mut out);
     out
 }
 
 /// out(b, o) = x(b, i) @ w(i, o) + bias(o)
-pub fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
+pub fn matmul_bias(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    di: usize,
+    dout: usize,
+) -> Vec<f32> {
     let mut out = vec![0.0f32; b * dout];
-    for r in 0..b {
-        let xrow = &x[r * di..(r + 1) * di];
-        let orow = &mut out[r * dout..(r + 1) * dout];
-        orow.copy_from_slice(bias);
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv != 0.0 {
-                let wrow = &w[i * dout..(i + 1) * dout];
-                for (o, &wv) in wrow.iter().enumerate() {
-                    orow[o] += xv * wv;
-                }
-            }
-        }
-    }
+    let packed = pack_b(w, di, dout);
+    gemm_packed(x, di, 1, b, di, dout, &packed, Some(bias), GEMM_MIN_ROWS, &mut out);
     out
 }
 
 /// dW(i, o) = sum_b h(b, i) * dz(b, o)   (h^T @ dz)
+///
+/// Runs as a GEMM whose left operand is the *columns* of h (ms = 1,
+/// ks = di), parallelized over dW rows: the reduction over the batch/rows
+/// dimension stays a single in-order chain per element.
 pub fn grad_weight(h: &[f32], dz: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
     let mut dw = vec![0.0f32; di * dout];
-    for r in 0..b {
-        let hrow = &h[r * di..(r + 1) * di];
-        let drow = &dz[r * dout..(r + 1) * dout];
-        for (i, &hv) in hrow.iter().enumerate() {
-            if hv != 0.0 {
-                let wrow = &mut dw[i * dout..(i + 1) * dout];
-                for (o, &dv) in drow.iter().enumerate() {
-                    wrow[o] += hv * dv;
-                }
-            }
-        }
-    }
+    let packed = pack_b(dz, b, dout);
+    gemm_packed(h, 1, di, di, b, dout, &packed, None, GRADW_MIN_ROWS, &mut dw);
     dw
 }
 
@@ -588,19 +756,95 @@ pub fn grad_bias(dz: &[f32], b: usize, dout: usize) -> Vec<f32> {
 /// dh(b, i) = dz(b, o) @ w(i, o)^T
 pub fn grad_input(dz: &[f32], w: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
     let mut dh = vec![0.0f32; b * di];
-    for r in 0..b {
-        let drow = &dz[r * dout..(r + 1) * dout];
-        let hrow = &mut dh[r * di..(r + 1) * di];
-        for i in 0..di {
-            let wrow = &w[i * dout..(i + 1) * dout];
-            let mut acc = 0.0f32;
-            for (o, &wv) in wrow.iter().enumerate() {
-                acc += drow[o] * wv;
-            }
-            hrow[i] = acc;
-        }
-    }
+    let packed = pack_bt(w, di, dout);
+    gemm_packed(dz, dout, 1, b, dout, di, &packed, None, GEMM_MIN_ROWS, &mut dh);
     dh
+}
+
+/// The seed's scalar triple-loop kernels, kept verbatim: the numerics
+/// oracle the blocked kernels' property tests compare against, and the
+/// single-thread baseline `bench_kernels` measures speedup over for
+/// `BENCH_kernels.json`.
+pub mod scalar {
+    /// out(r, o) = x(r, i) @ w(i, o) — naive row-major triple loop.
+    pub fn matmul(x: &[f32], w: &[f32], rows: usize, din: usize, dout: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * dout];
+        for r in 0..rows {
+            let xrow = &x[r * din..(r + 1) * din];
+            let orow = &mut out[r * dout..(r + 1) * dout];
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv != 0.0 {
+                    let wrow = &w[i * dout..(i + 1) * dout];
+                    for (o, &wv) in wrow.iter().enumerate() {
+                        orow[o] += xv * wv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// out(b, o) = x(b, i) @ w(i, o) + bias(o)
+    pub fn matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        b: usize,
+        di: usize,
+        dout: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; b * dout];
+        for r in 0..b {
+            let xrow = &x[r * di..(r + 1) * di];
+            let orow = &mut out[r * dout..(r + 1) * dout];
+            orow.copy_from_slice(bias);
+            for (i, &xv) in xrow.iter().enumerate() {
+                if xv != 0.0 {
+                    let wrow = &w[i * dout..(i + 1) * dout];
+                    for (o, &wv) in wrow.iter().enumerate() {
+                        orow[o] += xv * wv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// dW(i, o) = sum_b h(b, i) * dz(b, o)   (h^T @ dz)
+    pub fn grad_weight(h: &[f32], dz: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
+        let mut dw = vec![0.0f32; di * dout];
+        for r in 0..b {
+            let hrow = &h[r * di..(r + 1) * di];
+            let drow = &dz[r * dout..(r + 1) * dout];
+            for (i, &hv) in hrow.iter().enumerate() {
+                if hv != 0.0 {
+                    let wrow = &mut dw[i * dout..(i + 1) * dout];
+                    for (o, &dv) in drow.iter().enumerate() {
+                        wrow[o] += hv * dv;
+                    }
+                }
+            }
+        }
+        dw
+    }
+
+    /// dh(b, i) = dz(b, o) @ w(i, o)^T
+    pub fn grad_input(dz: &[f32], w: &[f32], b: usize, di: usize, dout: usize) -> Vec<f32> {
+        let mut dh = vec![0.0f32; b * di];
+        for r in 0..b {
+            let drow = &dz[r * dout..(r + 1) * dout];
+            let hrow = &mut dh[r * di..(r + 1) * di];
+            for i in 0..di {
+                let wrow = &w[i * dout..(i + 1) * dout];
+                let mut acc = 0.0f32;
+                for (o, &wv) in wrow.iter().enumerate() {
+                    acc += drow[o] * wv;
+                }
+                hrow[i] = acc;
+            }
+        }
+        dh
+    }
 }
 
 // ---- loss ------------------------------------------------------------------
@@ -666,7 +910,13 @@ pub fn clip_by_global_norm(grads: &mut [Vec<f32>], max_norm: f32) {
 }
 
 /// v' = mu v + g ; w' = w - lr v'  (in place on params/vels).
-pub fn sgd_momentum(params: &mut [Vec<f32>], vels: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f32, mom: f32) {
+pub fn sgd_momentum(
+    params: &mut [Vec<f32>],
+    vels: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    lr: f32,
+    mom: f32,
+) {
     for ((w, v), g) in params.iter_mut().zip(vels.iter_mut()).zip(grads.iter()) {
         for ((wv, vv), &gv) in w.iter_mut().zip(v.iter_mut()).zip(g.iter()) {
             *vv = mom * *vv + gv;
@@ -1030,5 +1280,165 @@ mod tests {
         let a = matmul(&x, &w, 2, 3, 2);
         let b = matmul_bias(&x, &w, &[0.0, 0.0], 2, 3, 2);
         assert_eq!(a, b);
+    }
+
+    // ---- blocked kernels vs the scalar oracle -------------------------------
+
+    /// Seed-deterministic fill via the crate's own RNG.
+    fn prand(n: usize, seed: u64) -> Vec<f32> {
+        crate::util::rng::Rng::new(seed).normal_vec(n, 0.5)
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * (1.0 + w.abs()),
+                "{what}[{i}]: got {g}, oracle {w}"
+            );
+        }
+    }
+
+    /// Shapes that exercise full tiles, row tails (rows % MR != 0), column
+    /// tails (cols % NR != 0), sub-tile problems, and zoo-sized matmuls.
+    const GEMM_SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 7),
+        (4, 16, 16),
+        (7, 33, 17),
+        (13, 2, 19),
+        (64, 192, 128),
+        (130, 27, 16),
+        (96, 144, 33),
+    ];
+
+    #[test]
+    fn blocked_matmul_matches_scalar_oracle() {
+        for &(rows, din, dout) in GEMM_SHAPES {
+            let x = prand(rows * din, 1);
+            let w = prand(din * dout, 2);
+            let bias = prand(dout, 3);
+            let shape = format!("({rows},{din},{dout})");
+            assert_close(
+                &matmul(&x, &w, rows, din, dout),
+                &scalar::matmul(&x, &w, rows, din, dout),
+                1e-4,
+                &format!("matmul{shape}"),
+            );
+            assert_close(
+                &matmul_bias(&x, &w, &bias, rows, din, dout),
+                &scalar::matmul_bias(&x, &w, &bias, rows, din, dout),
+                1e-4,
+                &format!("matmul_bias{shape}"),
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_gradients_match_scalar_oracle() {
+        for &(rows, din, dout) in GEMM_SHAPES {
+            let h = prand(rows * din, 4);
+            let dz = prand(rows * dout, 5);
+            let w = prand(din * dout, 6);
+            let shape = format!("({rows},{din},{dout})");
+            assert_close(
+                &grad_weight(&h, &dz, rows, din, dout),
+                &scalar::grad_weight(&h, &dz, rows, din, dout),
+                1e-4,
+                &format!("grad_weight{shape}"),
+            );
+            assert_close(
+                &grad_input(&dz, &w, rows, din, dout),
+                &scalar::grad_input(&dz, &w, rows, din, dout),
+                1e-4,
+                &format!("grad_input{shape}"),
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_handle_exact_zero_rows() {
+        // The scalar oracle skips zero x entries; the blocked kernel must
+        // produce the same values when inputs contain exact zeros (padded
+        // im2col borders, post-ReLU activations).
+        let (rows, din, dout) = (9, 21, 18);
+        let mut x = prand(rows * din, 7);
+        for (i, v) in x.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let w = prand(din * dout, 8);
+        assert_close(
+            &matmul(&x, &w, rows, din, dout),
+            &scalar::matmul(&x, &w, rows, din, dout),
+            1e-4,
+            "matmul-with-zeros",
+        );
+    }
+
+    #[test]
+    fn kernels_are_bitwise_deterministic_across_thread_counts() {
+        // The contract the pool + fixed reduction order guarantee: the same
+        // bits for WAVEQ_THREADS = 1, 2, 4 (and any other value). Exact
+        // f32 bit equality, not approximate closeness.
+        let (rows, din, dout) = (97, 66, 35);
+        let x = prand(rows * din, 9);
+        let w = prand(din * dout, 10);
+        let bias = prand(dout, 11);
+        let dz = prand(rows * dout, 12);
+        let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+        let mut refs: Option<(Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>)> = None;
+        let _guard = pool::env_lock();
+        for threads in ["1", "2", "4"] {
+            std::env::set_var("WAVEQ_THREADS", threads);
+            let got = (
+                bits(&matmul(&x, &w, rows, din, dout)),
+                bits(&matmul_bias(&x, &w, &bias, rows, din, dout)),
+                bits(&grad_weight(&x, &dz, rows, din, dout)),
+                bits(&grad_input(&dz, &w, rows, din, dout)),
+            );
+            match &refs {
+                None => refs = Some(got),
+                Some(r) => {
+                    assert_eq!(r.0, got.0, "matmul bits differ at WAVEQ_THREADS={threads}");
+                    assert_eq!(r.1, got.1, "matmul_bias bits differ at WAVEQ_THREADS={threads}");
+                    assert_eq!(r.2, got.2, "grad_weight bits differ at WAVEQ_THREADS={threads}");
+                    assert_eq!(r.3, got.3, "grad_input bits differ at WAVEQ_THREADS={threads}");
+                }
+            }
+        }
+        std::env::remove_var("WAVEQ_THREADS");
+    }
+
+    #[test]
+    fn conv_support_kernels_are_deterministic_across_thread_counts() {
+        let g = conv_geom(9, 7, 3, 5, 3, 2, false);
+        let batch = 10usize;
+        let x = prand(batch * 9 * 7 * 3, 13);
+        let dcols = prand(g.rows(batch) * g.kdim(), 14);
+        let gd = conv_geom(6, 6, 4, 4, 3, 1, true);
+        let xd = prand(batch * 6 * 6 * 4, 15);
+        let wd = prand(3 * 3 * 4, 16);
+        let dzd = prand(gd.rows(batch) * 4, 17);
+        let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+        let run = || {
+            (
+                bits(&im2col(&x, batch, &g)),
+                bits(&col2im(&dcols, batch, &g)),
+                bits(&dwconv_fwd(&xd, &wd, batch, &gd)),
+                bits(&dwconv_grad_x(&dzd, &wd, batch, &gd)),
+            )
+        };
+        let _guard = pool::env_lock();
+        std::env::set_var("WAVEQ_THREADS", "1");
+        let a = run();
+        std::env::set_var("WAVEQ_THREADS", "4");
+        let b = run();
+        std::env::remove_var("WAVEQ_THREADS");
+        assert_eq!(a.0, b.0, "im2col bits differ across thread counts");
+        assert_eq!(a.1, b.1, "col2im bits differ across thread counts");
+        assert_eq!(a.2, b.2, "dwconv_fwd bits differ across thread counts");
+        assert_eq!(a.3, b.3, "dwconv_grad_x bits differ across thread counts");
     }
 }

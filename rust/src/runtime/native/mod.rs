@@ -16,8 +16,10 @@
 //!   reg_profile       : [wgrid, bgrid]                            -> 9 x (n_w, n_b) surfaces
 //!
 //! Models are op graphs (`models::OpNode`): conv2d via im2col + the shared
-//! matmul kernels, depthwise conv, max/global-avg pooling, per-channel
-//! affine, residual add — each with a hand-derived backward. The quantized
+//! blocked, multi-threaded matmul kernels (`kernels`/`pool`; worker count
+//! from `WAVEQ_THREADS`, bitwise deterministic for any value), depthwise
+//! conv, max/global-avg pooling, per-channel affine, residual add — each
+//! with a hand-derived backward. The quantized
 //! forward uses the DoReFa/WRPN rules of `kernels`, the backward is the
 //! straight-through estimator, and the 'waveq' programs add the sinusoidal
 //! regularizer `lambda_w * sin^2(pi v 2^beta)`-family term with its
@@ -30,6 +32,7 @@
 
 pub mod kernels;
 pub mod models;
+pub mod pool;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
@@ -128,7 +131,11 @@ impl NativeBackend {
 
     fn sig_for(&self, name: &str, kind: &ProgramKind) -> ProgramSig {
         let scalar = |n: &str| ArgSpec { name: n.into(), shape: vec![], dtype: "float32".into() };
-        let vec_q = |n: &str, q: usize| ArgSpec { name: n.into(), shape: vec![q], dtype: "float32".into() };
+        let vec_q = |n: &str, q: usize| ArgSpec {
+            name: n.into(),
+            shape: vec![q],
+            dtype: "float32".into(),
+        };
         match kind {
             ProgramKind::RegProfile => ProgramSig {
                 name: name.to_string(),
@@ -165,7 +172,8 @@ impl NativeBackend {
                         outputs.extend(["loss".into(), "acc".into()]);
                     }
                     QuantFamily::Dorefa | QuantFamily::Wrpn => {
-                        inputs.extend([x, y, scalar("lr"), scalar("mom"), vec_q("kw", q), scalar("ka")]);
+                        let kw = vec_q("kw", q);
+                        inputs.extend([x, y, scalar("lr"), scalar("mom"), kw, scalar("ka")]);
                         outputs.extend(["loss".into(), "acc".into()]);
                     }
                     QuantFamily::Waveq => {
@@ -518,7 +526,8 @@ fn forward(
                 let saved = skips.last().expect("SkipProj without SkipSave");
                 let lq = quantize_param(model.params[*pidx].qidx, params[*pidx], quant, kw, beta);
                 let cols = kn::im2col(saved, batch, geom);
-                shortcut = Some(kn::matmul(&cols, &lq.wq, geom.rows(batch), geom.kdim(), geom.cout));
+                shortcut =
+                    Some(kn::matmul(&cols, &lq.wq, geom.rows(batch), geom.kdim(), geom.cout));
                 traces.push(if record { Trace::SkipProj { cols, lq } } else { Trace::None });
             }
             OpNode::SkipAdd => {

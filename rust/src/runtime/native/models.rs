@@ -104,6 +104,23 @@ impl NativeModel {
             .collect()
     }
 
+    /// (rows, kdim, cout) of every im2col matmul this model's forward pass
+    /// performs at batch size `batch` — standard convs and projection
+    /// shortcuts, in op order. These are the shapes `bench_kernels`
+    /// measures the blocked matmul on.
+    pub fn conv_matmul_shapes(&self, batch: usize) -> Vec<(usize, usize, usize)> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                OpNode::Conv { geom, .. } if !geom.depthwise => {
+                    Some((geom.rows(batch), geom.kdim(), geom.cout))
+                }
+                OpNode::SkipProj { geom, .. } => Some((geom.rows(batch), geom.kdim(), geom.cout)),
+                _ => None,
+            })
+            .collect()
+    }
+
     // ---- zoo constructors (mirror python/compile/models.py) ----------------
 
     /// The WaveQ test MLP on mlp-lite (8x8x3 -> 10).
@@ -621,6 +638,20 @@ mod tests {
             assert_eq!(m.dataset, ds, "{name}");
             assert_eq!(m.meta().dataset, ds, "{name} meta");
         }
+    }
+
+    #[test]
+    fn conv_matmul_shapes_cover_convs_and_projections() {
+        let m = NativeModel::resnet20l(1);
+        let shapes = m.conv_matmul_shapes(32);
+        // Stem + 6 blocks x 2 body convs + 2 projections = 15 matmuls.
+        assert_eq!(shapes.len(), 15);
+        // Stem: 16x16 spatial at batch 32, 3x3x3 patches, 8 filters.
+        assert_eq!(shapes[0], (32 * 16 * 16, 27, 8));
+        // Every shape is non-degenerate.
+        assert!(shapes.iter().all(|&(r, k, c)| r > 0 && k > 0 && c > 0));
+        // Pure-FC models have no conv matmuls.
+        assert!(NativeModel::mlp(1).conv_matmul_shapes(32).is_empty());
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! In-crate worker pool for the native kernels, built on
+//! [`std::thread::scope`] only (the crate resolves offline from
+//! `rust/vendor/`, so no rayon/crossbeam).
+//!
+//! The pool parallelizes over *output rows*: a row-major `rows x width`
+//! output buffer is split into contiguous row shards, each handed to one
+//! scoped worker. Every output element is produced by exactly one shard,
+//! and the kernels compute each element with a reduction order fixed by
+//! tile constants (see `kernels`), so results are **bitwise identical for
+//! any thread count** — `WAVEQ_THREADS=1` and `WAVEQ_THREADS=8` produce
+//! the same bits, which the determinism tests assert.
+//!
+//! Thread count resolution: the `WAVEQ_THREADS` env var when set to a
+//! positive integer, else [`std::thread::available_parallelism`]. The env
+//! var is re-read on every dispatch so tests (and operators) can change it
+//! at runtime without rebuilding.
+
+use std::num::NonZeroUsize;
+
+/// Hard cap on the worker budget, however large the override or machine.
+const MAX_THREADS: usize = 64;
+
+/// Worker budget: `WAVEQ_THREADS` override, else available parallelism.
+pub fn num_threads() -> usize {
+    let configured = std::env::var("WAVEQ_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1);
+    configured
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+        })
+        .min(MAX_THREADS)
+}
+
+/// Run `f` over contiguous row shards of `out` (a row-major `rows x width`
+/// buffer), in parallel when the worker budget and problem size allow.
+///
+/// `f(first_row, shard)` receives the absolute index of its first row and
+/// the mutable sub-slice holding rows `first_row ..
+/// first_row + shard.len() / width`. Shards never overlap, shard boundaries
+/// never split a row, and the worker budget is capped at
+/// `rows / min_rows`, so tiny problems stay on the calling thread with
+/// zero spawn overhead.
+///
+/// Determinism contract: `f` must compute each output element with an
+/// arithmetic order that does not depend on `first_row` or the shard size —
+/// the kernels guarantee this by fixing the per-element reduction order —
+/// making the result independent of the thread count.
+pub fn run_rows<F>(out: &mut [f32], rows: usize, width: usize, min_rows: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * width);
+    if rows == 0 {
+        return;
+    }
+    let budget = num_threads().min(rows / min_rows.max(1)).max(1);
+    if budget == 1 {
+        f(0, out);
+        return;
+    }
+    let per = rows.div_ceil(budget);
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut iter = out.chunks_mut(per * width).enumerate();
+        // Run the first shard on the calling thread; spawn the rest.
+        let first = iter.next();
+        for (i, chunk) in iter {
+            s.spawn(move || f(i * per, chunk));
+        }
+        if let Some((_, chunk)) = first {
+            f(0, chunk);
+        }
+    });
+}
+
+/// Serializes tests that mutate `WAVEQ_THREADS`: unit tests in this crate
+/// run concurrently and the env var is process-global. Determinism makes
+/// racing *values* harmless, but tests asserting a specific thread count
+/// must hold this lock.
+#[cfg(test)]
+pub(crate) fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_threads_honours_env_override() {
+        let _guard = env_lock();
+        std::env::set_var("WAVEQ_THREADS", "3");
+        assert_eq!(num_threads(), 3);
+        std::env::set_var("WAVEQ_THREADS", "not-a-number");
+        assert!(num_threads() >= 1); // falls back to available parallelism
+        std::env::set_var("WAVEQ_THREADS", "0");
+        assert!(num_threads() >= 1);
+        std::env::remove_var("WAVEQ_THREADS");
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn shards_cover_every_row_exactly_once() {
+        let _guard = env_lock();
+        std::env::set_var("WAVEQ_THREADS", "4");
+        let (rows, width) = (37, 5);
+        let mut out = vec![0.0f32; rows * width];
+        run_rows(&mut out, rows, width, 1, |r0, shard| {
+            let n = shard.len() / width;
+            for r in 0..n {
+                for c in 0..width {
+                    shard[r * width + c] += ((r0 + r) * width + c) as f32;
+                }
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as f32, "element {i} written wrongly or twice");
+        }
+        std::env::remove_var("WAVEQ_THREADS");
+    }
+
+    #[test]
+    fn small_problems_stay_on_one_shard() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let _guard = env_lock();
+        std::env::set_var("WAVEQ_THREADS", "8");
+        let calls = AtomicUsize::new(0);
+        let mut out = vec![0.0f32; 4 * 2];
+        // min_rows=64 > rows=4 forces a single whole-buffer shard.
+        run_rows(&mut out, 4, 2, 64, |r0, shard| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!(r0, 0);
+            assert_eq!(shard.len(), 8);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        std::env::remove_var("WAVEQ_THREADS");
+    }
+}

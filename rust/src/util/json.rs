@@ -113,12 +113,6 @@ impl Json {
 
     // ---- writer ------------------------------------------------------------
 
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -154,6 +148,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialization lives behind `Display`, so `.to_string()` keeps working
+/// at every call site via the blanket `ToString`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -20,20 +20,40 @@ fn toy_model() -> ModelMeta {
         num_qlayers: 3,
         params: vec![
             waveq::runtime::ParamMeta {
-                name: "c1".into(), shape: vec![3, 3, 3, 8], kind: "conv".into(), init: "he".into(),
-                qidx: None, macs: 110_592, count: 216,
+                name: "c1".into(),
+                shape: vec![3, 3, 3, 8],
+                kind: "conv".into(),
+                init: "he".into(),
+                qidx: None,
+                macs: 110_592,
+                count: 216,
             },
             waveq::runtime::ParamMeta {
-                name: "c2".into(), shape: vec![3, 3, 8, 16], kind: "conv".into(), init: "he".into(),
-                qidx: Some(0), macs: 294_912, count: 1_152,
+                name: "c2".into(),
+                shape: vec![3, 3, 8, 16],
+                kind: "conv".into(),
+                init: "he".into(),
+                qidx: Some(0),
+                macs: 294_912,
+                count: 1_152,
             },
             waveq::runtime::ParamMeta {
-                name: "c3".into(), shape: vec![3, 3, 16, 16], kind: "conv".into(), init: "he".into(),
-                qidx: Some(1), macs: 147_456, count: 2_304,
+                name: "c3".into(),
+                shape: vec![3, 3, 16, 16],
+                kind: "conv".into(),
+                init: "he".into(),
+                qidx: Some(1),
+                macs: 147_456,
+                count: 2_304,
             },
             waveq::runtime::ParamMeta {
-                name: "f1".into(), shape: vec![256, 64], kind: "fc".into(), init: "he".into(),
-                qidx: Some(2), macs: 16_384, count: 16_384,
+                name: "f1".into(),
+                shape: vec![256, 64],
+                kind: "fc".into(),
+                init: "he".into(),
+                qidx: Some(2),
+                macs: 16_384,
+                count: 16_384,
             },
         ],
     }

@@ -1,0 +1,111 @@
+//! Thread-count determinism, end to end: the blocked multi-threaded
+//! kernels must make *training itself* bitwise reproducible regardless of
+//! `WAVEQ_THREADS`. The native backend fixes every per-element reduction
+//! order independently of the shard split (see `runtime::native::pool`),
+//! so 50 full train steps at 1 thread and at 4 threads must leave the
+//! model in bit-identical state — weights, velocities, and beta alike.
+
+use waveq::runtime::{Backend, Buffer, NativeBackend};
+use waveq::runtime::{buffer_f32, scalar_f32};
+use waveq::util::rng::Rng;
+
+/// Serializes the env-mutating tests in this binary (the test harness runs
+/// them on concurrent threads and `WAVEQ_THREADS` is process-global).
+fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Seed-deterministic initial arguments for a native train program.
+fn train_args(backend: &NativeBackend, prog: &str, seed: u64) -> Vec<Buffer> {
+    let manifest = backend.manifest();
+    let sig = manifest.program(prog).unwrap();
+    let mut rng = Rng::new(seed);
+    sig.inputs
+        .iter()
+        .map(|a| {
+            if a.shape.is_empty() {
+                return scalar_f32(match a.name.as_str() {
+                    "lr" => 0.05,
+                    "mom" => 0.9,
+                    "lr_beta" => 0.01,
+                    "ka" => 255.0,
+                    "lambda_w" => 0.1,
+                    "lambda_beta" => 0.01,
+                    "beta_train" => 1.0,
+                    _ => 0.5,
+                });
+            }
+            let n = a.elem_count();
+            let data: Vec<f32> = match a.name.as_str() {
+                "beta" => vec![4.0; n],
+                "kw" => vec![7.0; n],
+                "x" => rng.normal_vec(n, 1.0),
+                "y" => {
+                    let classes = *a.shape.last().unwrap();
+                    let mut v = vec![0.0; n];
+                    for r in 0..a.shape[0] {
+                        v[r * classes + r % classes] = 1.0;
+                    }
+                    v
+                }
+                name if name.starts_with("w:affine") && name.ends_with("_s") => vec![1.0; n],
+                name if name.starts_with("w:") => rng.normal_vec(n, 0.1),
+                _ => vec![0.0; n],
+            };
+            buffer_f32(&data, &a.shape).unwrap()
+        })
+        .collect()
+}
+
+/// Run `steps` train steps feeding the carried state (params, velocities,
+/// and for waveq beta/vbeta) back into the inputs; return the final state
+/// as raw f32 bit patterns.
+fn run_steps(prog: &str, steps: usize, threads: &str, carried_extra: usize) -> Vec<Vec<u32>> {
+    std::env::set_var("WAVEQ_THREADS", threads);
+    let backend = NativeBackend::new();
+    let manifest = backend.manifest();
+    let sig = manifest.program(prog).unwrap();
+    let model = manifest.model(sig.model.as_deref().unwrap()).unwrap();
+    let carried = 2 * model.params.len() + carried_extra;
+    let li = sig.output_index("loss").unwrap();
+    let mut args = train_args(&backend, prog, 42);
+    for step in 0..steps {
+        let refs: Vec<&Buffer> = args.iter().collect();
+        let mut outs = backend.execute(sig, &refs).unwrap();
+        let loss = outs[li].data[0];
+        assert!(loss.is_finite(), "{prog} step {step} (t={threads}): loss {loss}");
+        for (i, o) in outs.drain(..carried).enumerate() {
+            args[i] = o;
+        }
+    }
+    args[..carried]
+        .iter()
+        .map(|b| b.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn waveq_simplenet5_state_is_bitwise_identical_after_50_steps_at_1_2_4_threads() {
+    let _guard = env_lock();
+    // beta + vbeta ride along with the 2*P param/velocity outputs.
+    let reference = run_steps("train_waveq_simplenet5", 50, "1", 2);
+    for threads in ["2", "4"] {
+        let got = run_steps("train_waveq_simplenet5", 50, threads, 2);
+        assert_eq!(reference.len(), got.len());
+        for (i, (x, y)) in reference.iter().zip(got.iter()).enumerate() {
+            assert_eq!(x, y, "carried state {i} differs between 1 and {threads} threads");
+        }
+    }
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+#[test]
+fn dorefa_resnet20l_state_is_bitwise_identical_across_thread_counts() {
+    let _guard = env_lock();
+    // Shorter run, but through the residual/projection graph.
+    let a = run_steps("train_dorefa_resnet20l", 5, "1", 0);
+    let b = run_steps("train_dorefa_resnet20l", 5, "4", 0);
+    std::env::remove_var("WAVEQ_THREADS");
+    assert_eq!(a, b, "resnet20l carried state differs between 1 and 4 threads");
+}

@@ -202,7 +202,8 @@ fn prop_schedule_bounds_and_transition() {
                 if frozen_at.is_some() && flag != 0.0 {
                     return Err(format!("beta_train reactivated after freeze at {step}"));
                 }
-                let beta = vec![4.0 + 0.5 * r.normal_f32() * if frozen_at.is_some() { 0.0 } else { 1.0 }];
+                let jitter = if frozen_at.is_some() { 0.0 } else { 1.0 };
+                let beta = vec![4.0 + 0.5 * r.normal_f32() * jitter];
                 if pc.observe_beta(step, &beta) {
                     frozen_at = Some(step);
                 }

@@ -181,7 +181,8 @@ fn every_zoo_model_trains_and_evaluates_natively() {
     // sane accuracy. Two steps per model keeps this cheap in debug builds;
     // the backend-level tests already exercise every program numerically.
     let rt = Runtime::native();
-    for model in ["simplenet5", "resnet20l", "vgg11l", "svhn8", "alexnetl", "resnet18l", "mobilenetl"] {
+    let zoo = ["simplenet5", "resnet20l", "vgg11l", "svhn8", "alexnetl", "resnet18l", "mobilenetl"];
+    for model in zoo {
         let meta = rt.manifest.model(model).unwrap();
         assert!(!meta.dataset.is_empty(), "{model} declares no dataset");
         let mut cfg = quick_cfg(Algo::WaveqPreset, 2);
