@@ -55,6 +55,21 @@ def runtime_table(report: dict) -> None:
     for e in report.get("programs", []):
         print(f"| {e['program']} | {e['compile_s'] * 1e3:.2f} ms | "
               f"{e['step_mean_s'] * 1e3:.3f} ms | {e['steps_per_s']:.1f} |")
+    sv = report.get("session_vs_legacy")
+    if sv:
+        print()
+        print(f"### Session vs legacy dispatch ({sv.get('program', '?')}, "
+              f"{int(sv.get('steps', 0))} steps)")
+        print()
+        print("| path | steps/s |")
+        print("|---|---|")
+        print(f"| legacy `Runtime::execute` (name lookup + output alloc) | "
+              f"{sv['legacy_steps_per_s']:.1f} |")
+        print(f"| `Session::step` (prepared handle, double-buffered state) | "
+              f"{sv['session_steps_per_s']:.1f} |")
+        print()
+        print(f"- steady-state dispatch overhead (excl. kernel time): "
+              f"**{sv['dispatch_overhead_us_per_step']:.1f} µs/step**")
     e2e = report.get("e2e_mlp_waveq_50steps")
     if e2e:
         print()

@@ -1,8 +1,10 @@
 //! Runtime microbenches: program compile latency, per-step execution
 //! latency / throughput per model family, buffer marshalling cost, data
-//! pipeline. The L3 §Perf numbers in EXPERIMENTS.md come from here, and
-//! the machine-readable `BENCH_runtime.json` feeds the `perf-smoke` CI
-//! lane's artifacts + step summary.
+//! pipeline, and the steady-state dispatch overhead of the session API
+//! (µs/step excluding kernel time) vs the legacy stringly-typed path.
+//! The L3 §Perf numbers in EXPERIMENTS.md come from here, and the
+//! machine-readable `BENCH_runtime.json` feeds the `perf-smoke` CI lane's
+//! artifacts + step summary.
 //!
 //! Runs against the AOT artifacts when built (`make artifacts`), otherwise
 //! against the hermetic native backend — which serves the full conv zoo,
@@ -12,7 +14,9 @@ use waveq::bench_support::{header, row, write_report, BenchRunner};
 use waveq::config::{Algo, RunConfig};
 use waveq::coordinator::Trainer;
 use waveq::data::{spec, Batcher, Dataset};
-use waveq::runtime::{buffer_f32, scalar_f32, to_vec_f32, Buffer, Runtime};
+use waveq::runtime::{
+    buffer_f32, scalar_f32, to_vec_f32, Buffer, Runtime, Session, SessionCfg, StepKnobs,
+};
 use waveq::util::json::Json;
 
 fn main() {
@@ -53,8 +57,10 @@ fn main() {
     // --- per-program step latency ------------------------------------------
     // fp32 + waveq across the families the native backend serves: the MLP,
     // a plain conv net, a residual net, and the depthwise-separable net.
+    // Each program is prepared once; the timed loop dispatches through the
+    // handle (the steady-state path).
     let mut programs: Vec<Json> = Vec::new();
-    for prog in [
+    for prog_name in [
         "train_fp32_mlp",
         "train_waveq_mlp",
         "train_fp32_simplenet5",
@@ -64,16 +70,17 @@ fn main() {
         "train_fp32_mobilenetl",
         "train_waveq_mobilenetl",
     ] {
-        // Warm compile outside the timing loop; report compile separately.
-        // Skips programs only when the manifest lacks them (AOT manifests
-        // without the conv programs); the native backend serves them all.
+        // Compile inside prepare, reported separately. Skips programs only
+        // when the manifest lacks them (AOT manifests without the conv
+        // programs); the native backend serves them all.
         let t0 = std::time::Instant::now();
-        if rt.warmup(&[prog]).is_err() {
-            continue;
-        }
+        let prog = match rt.prepare(prog_name) {
+            Ok(p) => p,
+            Err(_) => continue,
+        };
         let compile = t0.elapsed();
-        let sig = rt.sig(prog).unwrap().clone();
-        let args: Vec<Buffer> = sig
+        let args: Vec<Buffer> = prog
+            .sig()
             .inputs
             .iter()
             .map(|a| {
@@ -93,24 +100,133 @@ fn main() {
             .collect();
         // Conv-family steps are orders of magnitude heavier than MLP ones:
         // scale the iteration count so the bench stays CI-sized.
-        let iters = if prog.ends_with("_mlp") { 15 } else { 8 };
-        let s = BenchRunner::new(2, iters).bench(&format!("{prog} step"), || {
-            let _ = rt.execute(prog, &args).unwrap();
+        let iters = if prog_name.ends_with("_mlp") { 15 } else { 8 };
+        let s = BenchRunner::new(2, iters).bench(&format!("{prog_name} step"), || {
+            let _ = prog.call(&args).unwrap();
         });
         row(&[
-            prog,
+            prog_name,
             &format!("compile {:.2?}", compile),
             &format!("step {:.3?}", s.mean),
             &format!("{:.1} steps/s", s.per_sec()),
         ]);
         programs.push(Json::obj(vec![
-            ("program", Json::Str(prog.into())),
+            ("program", Json::Str(prog_name.into())),
             ("compile_s", Json::Num(compile.as_secs_f64())),
             ("step_mean_s", Json::Num(s.mean.as_secs_f64())),
             ("steps_per_s", Json::Num(s.per_sec())),
         ]));
     }
     report.push(("programs", Json::Arr(programs)));
+
+    // --- session vs legacy: steady-state dispatch overhead -------------------
+    // Same program, same fixed batch, same step count; the legacy loop
+    // re-resolves by name, reallocates outputs and re-threads them, the
+    // session loop flips double-buffered state. Dispatch overhead =
+    // (session wall time - backend kernel time) / steps, i.e. everything
+    // the runtime layer adds around the math.
+    // Skipped (like the loop above) when the manifest lacks the program —
+    // e.g. an AOT artifacts directory built without the MLP family.
+    if rt.sig("train_waveq_mlp").is_ok()
+        && rt.sig("eval_quant_mlp").is_ok()
+        && rt.manifest.model("mlp").is_ok()
+    {
+        let prog_name = "train_waveq_mlp";
+        let model = rt.manifest.model("mlp").unwrap().clone();
+        let pix: usize = model.input_shape.iter().product();
+        let x: Vec<f32> = (0..model.batch * pix).map(|i| ((i as f32) * 0.1).sin()).collect();
+        let mut y = vec![0.0f32; model.batch * model.num_classes];
+        for r in 0..model.batch {
+            y[r * model.num_classes + r % model.num_classes] = 1.0;
+        }
+        let knobs = StepKnobs {
+            lr: 0.01,
+            momentum: 0.9,
+            lr_beta: 0.01,
+            ka: 255.0,
+            lambda_w: 0.1,
+            lambda_beta: 0.01,
+            beta_train: 1.0,
+        };
+        let steps = 200usize;
+
+        // Legacy loop: stringly execute + manifest-ordered re-threading.
+        let sig = rt.sig(prog_name).unwrap().clone();
+        let np = model.num_params();
+        let carried = 2 * np + 2; // params, vels, beta, vbeta
+        let mut args: Vec<Buffer> = sig
+            .inputs
+            .iter()
+            .map(|a| {
+                if a.shape.is_empty() {
+                    return scalar_f32(match a.name.as_str() {
+                        "lr" => knobs.lr,
+                        "mom" => knobs.momentum,
+                        "lr_beta" => knobs.lr_beta,
+                        "ka" => knobs.ka,
+                        "lambda_w" => knobs.lambda_w,
+                        "lambda_beta" => knobs.lambda_beta,
+                        "beta_train" => knobs.beta_train,
+                        _ => 0.5,
+                    });
+                }
+                let data: Vec<f32> = match a.name.as_str() {
+                    "beta" => vec![4.0; a.elem_count()],
+                    "x" => x.clone(),
+                    "y" => y.clone(),
+                    _ => (0..a.elem_count()).map(|i| ((i as f32) * 0.13).sin() * 0.1).collect(),
+                };
+                buffer_f32(&data, &a.shape).unwrap()
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let mut outs = rt.execute(prog_name, &args).unwrap();
+            for (i, o) in outs.drain(..carried).enumerate() {
+                args[i] = o;
+            }
+        }
+        let legacy_secs = t0.elapsed().as_secs_f64();
+
+        // Session loop: prepared handle + double-buffered state.
+        let mut session = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: prog_name.into(),
+                eval_program: "eval_quant_mlp".into(),
+                seed: 42,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        let kernel0 = rt.stats().execute_secs;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            session.step(&x, &y, &knobs).unwrap();
+        }
+        let session_secs = t0.elapsed().as_secs_f64();
+        let kernel_secs = rt.stats().execute_secs - kernel0;
+        let overhead_us = ((session_secs - kernel_secs) * 1e6 / steps as f64).max(0.0);
+
+        row(&[
+            "session_vs_legacy",
+            prog_name,
+            &format!("legacy {:.1} steps/s", steps as f64 / legacy_secs),
+            &format!("session {:.1} steps/s", steps as f64 / session_secs),
+            &format!("dispatch overhead {:.1} us/step", overhead_us),
+        ]);
+        report.push((
+            "session_vs_legacy",
+            Json::obj(vec![
+                ("program", Json::Str(prog_name.into())),
+                ("steps", Json::Num(steps as f64)),
+                ("legacy_steps_per_s", Json::Num(steps as f64 / legacy_secs)),
+                ("session_steps_per_s", Json::Num(steps as f64 / session_secs)),
+                ("dispatch_overhead_us_per_step", Json::Num(overhead_us)),
+            ]),
+        ));
+    }
 
     // --- end-to-end short training throughput --------------------------------
     let mut cfg = RunConfig {

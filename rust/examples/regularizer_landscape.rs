@@ -18,10 +18,9 @@ fn main() -> Result<()> {
 
     let w: Vec<f32> = (0..N_W).map(|i| -1.25 + 2.5 * i as f32 / (N_W - 1) as f32).collect();
     let b: Vec<f32> = (0..N_B).map(|i| 1.0 + 7.0 * i as f32 / (N_B - 1) as f32).collect();
-    let outs = rt.execute(
-        "reg_profile",
-        &[buffer_f32(&w, &[N_W])?, buffer_f32(&b, &[N_B])?],
-    )?;
+    let outs = rt
+        .prepare("reg_profile")?
+        .call(&[buffer_f32(&w, &[N_W])?, buffer_f32(&b, &[N_B])?])?;
     let r1 = to_vec_f32(&outs[3])?; // (N_W, N_B), norm = 1
 
     // ASCII profile of R1 vs w at a few bitwidths.

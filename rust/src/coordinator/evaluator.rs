@@ -1,18 +1,44 @@
 //! Evaluation: run an eval program over the held-out stream, batch by
-//! batch, and average loss/accuracy. Shared by the trainer's mid-training
-//! probes, the Pareto enumerator (which evaluates hundreds of bitwidth
-//! assignments against one trained state), and the Fig. 5 sensitivity scan.
+//! batch, and average loss/accuracy. Shared by the Pareto enumerator
+//! (which evaluates hundreds of bitwidth assignments against one trained
+//! state) and the Fig. 5 sensitivity scan; the trainer's own mid-training
+//! probes go through `Session::eval` instead.
+//!
+//! The program is resolved *once* via [`Runtime::prepare`] and every batch
+//! dispatches through the handle into preallocated buffers — no per-batch
+//! name lookups or output allocation.
 
 use anyhow::{anyhow, Result};
 
-use crate::data::{spec_for_model, Batcher, Dataset};
-use crate::runtime::{buffer_f32, scalar_f32, to_scalar_f32, Buffer, ModelMeta, Runtime};
+use crate::data::{spec_for_model, Batch, Batcher, Dataset};
+use crate::runtime::{buffer_f32, Buffer, ModelMeta, Runtime};
 
 /// Deterministic held-out batcher for a model (stream 1 never overlaps train).
 pub fn test_batcher(model: &ModelMeta, n_examples: usize, seed: u64) -> Batcher {
     let dspec = spec_for_model(model);
     let ds = Dataset::generate(dspec, n_examples, seed, 1);
     Batcher::new(ds, model.batch, seed)
+}
+
+/// Average a per-batch `(loss, acc)` eval over all full test batches —
+/// the accumulation shared by [`evaluate`] and the trainer's
+/// `Session`-based mid-training probes.
+pub fn eval_batches<F>(test: &Batcher, mut eval_batch: F) -> Result<(f32, f32)>
+where
+    F: FnMut(&Batch) -> Result<(f32, f32)>,
+{
+    let batches = test.sequential_batches();
+    if batches.is_empty() {
+        return Err(anyhow!("test set smaller than one batch"));
+    }
+    let (mut loss_sum, mut acc_sum) = (0f64, 0f64);
+    for b in &batches {
+        let (l, a) = eval_batch(b)?;
+        loss_sum += l as f64;
+        acc_sum += a as f64;
+    }
+    let n = batches.len() as f64;
+    Ok(((loss_sum / n) as f32, (acc_sum / n) as f32))
 }
 
 /// Average (loss, acc) of `params` over all full test batches.
@@ -28,41 +54,45 @@ pub fn evaluate(
     ka: f32,
     test: &Batcher,
 ) -> Result<(f32, f32)> {
-    let sig = rt.sig(eval_prog)?.clone();
-    let batches = test.sequential_batches();
-    if batches.is_empty() {
-        return Err(anyhow!("test set smaller than one batch"));
-    }
-    let out_loss = sig.output_index("loss")?;
-    let out_acc = sig.output_index("acc")?;
-    let (mut loss_sum, mut acc_sum) = (0f64, 0f64);
-    for b in &batches {
-        // Positional: [w..., x, y, (kw, ka)?]
-        let x = buffer_f32(
-            &b.x,
-            &[model.batch, model.input_shape[0], model.input_shape[1], model.input_shape[2]],
-        )?;
-        let y = buffer_f32(&b.y, &[model.batch, model.num_classes])?;
-        let extra: Vec<Buffer> = match kw {
-            Some(kw) => {
-                if kw.len() != model.num_qlayers {
-                    return Err(anyhow!(
-                        "{eval_prog}: kw has {} entries, model wants {}",
-                        kw.len(),
-                        model.num_qlayers
-                    ));
-                }
-                vec![x, y, buffer_f32(kw, &[kw.len()])?, scalar_f32(ka)]
+    let prog = rt.prepare(eval_prog)?;
+    let out_loss = prog.sig().output_index("loss")?;
+    let out_acc = prog.sig().output_index("acc")?;
+
+    // Preallocated I/O: positional layout [w..., x, y, (kw, ka)?].
+    let mut x = Buffer::zeros(vec![
+        model.batch,
+        model.input_shape[0],
+        model.input_shape[1],
+        model.input_shape[2],
+    ]);
+    let mut y = Buffer::zeros(vec![model.batch, model.num_classes]);
+    let quant = match kw {
+        Some(kw) => {
+            if kw.len() != model.num_qlayers {
+                return Err(anyhow!(
+                    "{eval_prog}: kw has {} entries, model wants {}",
+                    kw.len(),
+                    model.num_qlayers
+                ));
             }
-            None => vec![x, y],
-        };
-        let mut args: Vec<&Buffer> = Vec::with_capacity(params.len() + extra.len());
+            Some((buffer_f32(kw, &[kw.len()])?, Buffer::scalar(ka)))
+        }
+        None => None,
+    };
+    let mut outs = vec![Buffer::scalar(0.0); prog.sig().outputs.len()];
+
+    eval_batches(test, |b| {
+        x.fill_from(&b.x)?;
+        y.fill_from(&b.y)?;
+        let mut args: Vec<&Buffer> = Vec::with_capacity(params.len() + 4);
         args.extend(params.iter());
-        args.extend(extra.iter());
-        let outs = rt.execute(eval_prog, &args)?;
-        loss_sum += to_scalar_f32(&outs[out_loss])? as f64;
-        acc_sum += to_scalar_f32(&outs[out_acc])? as f64;
-    }
-    let n = batches.len() as f64;
-    Ok(((loss_sum / n) as f32, (acc_sum / n) as f32))
+        args.push(&x);
+        args.push(&y);
+        if let Some((kwb, kab)) = &quant {
+            args.push(kwb);
+            args.push(kab);
+        }
+        prog.call_into(&args, &mut outs)?;
+        Ok((outs[out_loss].data[0], outs[out_acc].data[0]))
+    })
 }

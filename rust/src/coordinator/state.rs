@@ -1,82 +1,9 @@
-//! Backend-interchange train state: parameters + optimizer velocities as
-//! runtime buffers (moved into each step call and replaced by the step's
-//! outputs — no per-step re-marshalling of weights), plus the small
-//! host-side mirrors the coordinator actually inspects (beta, scalars).
+//! Backend-interchange train state.
+//!
+//! The state type now lives with the runtime session that owns it during
+//! training (`runtime::session::SessionState` — parameters and optimizer
+//! velocities as runtime buffers, plus the beta/vbeta host mirrors); this
+//! module keeps the coordinator-facing `TrainState` name for the
+//! checkpoint/outcome plumbing built on it.
 
-use anyhow::{anyhow, Result};
-
-use crate::runtime::{buffer_f32, to_vec_f32, Buffer, ModelMeta};
-use crate::tensor::Tensor;
-use crate::util::rng::Rng;
-
-pub struct TrainState {
-    pub params: Vec<Buffer>,
-    pub vels: Vec<Buffer>,
-    /// Continuous per-layer bitwidth parameter (waveq programs only).
-    pub beta: Vec<f32>,
-    pub vbeta: Vec<f32>,
-    pub step: usize,
-}
-
-impl TrainState {
-    /// He/affine initialization matching the layer kinds in the manifest.
-    pub fn init(model: &ModelMeta, seed: u64, beta_init: f32) -> Result<TrainState> {
-        let mut rng = Rng::new(seed).split(0x1417);
-        let mut params = Vec::with_capacity(model.params.len());
-        let mut vels = Vec::with_capacity(model.params.len());
-        for p in &model.params {
-            let n: usize = p.shape.iter().product();
-            // Fixup-style: residual-body tail convs start near zero so deep
-            // residual chains begin as identity (manifest init = "he_res").
-            let res_scale = if p.init == "he_res" { 0.1 } else { 1.0 };
-            let data = match p.kind.as_str() {
-                "conv" | "dwconv" => {
-                    let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
-                    rng.normal_vec(n, res_scale * (2.0 / fan_in as f32).sqrt())
-                }
-                "fc" => {
-                    let fan_in = p.shape[0];
-                    rng.normal_vec(n, (2.0 / fan_in as f32).sqrt())
-                }
-                "affine" if p.name.ends_with("_s") => vec![1.0; n],
-                _ => vec![0.0; n], // biases, affine shifts
-            };
-            params.push(buffer_f32(&data, &p.shape)?);
-            vels.push(buffer_f32(&vec![0.0; n], &p.shape)?);
-        }
-        Ok(TrainState {
-            params,
-            vels,
-            beta: vec![beta_init; model.num_qlayers],
-            vbeta: vec![0.0; model.num_qlayers],
-            step: 0,
-        })
-    }
-
-    /// Host copy of one parameter (observers, checkpoints, histograms).
-    pub fn param_tensor(&self, model: &ModelMeta, idx: usize) -> Result<Tensor> {
-        let data = to_vec_f32(&self.params[idx])?;
-        Tensor::new(model.params[idx].shape.clone(), data)
-    }
-
-    /// Host copies of all parameters.
-    pub fn all_params(&self, model: &ModelMeta) -> Result<Vec<Tensor>> {
-        (0..self.params.len()).map(|i| self.param_tensor(model, i)).collect()
-    }
-
-    /// Replace parameters from host tensors (checkpoint restore).
-    pub fn set_params(&mut self, tensors: &[Tensor]) -> Result<()> {
-        if tensors.len() != self.params.len() {
-            return Err(anyhow!(
-                "checkpoint has {} params, model wants {}",
-                tensors.len(),
-                self.params.len()
-            ));
-        }
-        self.params = tensors
-            .iter()
-            .map(|t| buffer_f32(&t.data, &t.shape))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(())
-    }
-}
+pub use crate::runtime::session::SessionState as TrainState;

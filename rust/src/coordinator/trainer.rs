@@ -1,11 +1,13 @@
 //! The training coordinator: the rust-side event loop that drives the
-//! backend's train programs (native or PJRT/AOT — same manifest contract),
-//! applies the 3-phase regularization schedule, watches beta for
-//! convergence, freezes bitwidths, and records every metric series the
-//! paper's figures need.
+//! backend's train programs (native or PJRT/AOT — same manifest contract)
+//! through a [`Session`], applies the 3-phase regularization schedule,
+//! watches beta for convergence, freezes bitwidths, and records every
+//! metric series the paper's figures need.
 //!
-//! One `Trainer::run` = one training run of one (model, algorithm, bitwidth)
-//! cell of Table 1/2. The experiment drivers compose many runs.
+//! The session owns the training state and the hot-loop buffers; this loop
+//! owns *policy*: schedule knobs, freeze detection, observers, evaluation
+//! cadence. One `Trainer::run` = one training run of one (model, algorithm,
+//! bitwidth) cell of Table 1/2. The experiment drivers compose many runs.
 
 use std::time::Instant;
 
@@ -13,12 +15,12 @@ use anyhow::{anyhow, Context, Result};
 
 use super::bitwidth::BitAssignment;
 use super::checkpoint::Checkpoint;
-use super::evaluator::{evaluate, test_batcher};
+use super::evaluator::{eval_batches, test_batcher};
 use super::metrics::MetricsRecorder;
 use super::state::TrainState;
 use crate::config::{levels, Algo, RunConfig};
 use crate::data::{spec_for_model, Batcher, Dataset, Prefetcher};
-use crate::runtime::{buffer_f32, scalar_f32, to_scalar_f32, to_vec_f32, Buffer, Runtime};
+use crate::runtime::{Runtime, Session, SessionCfg, StepKnobs};
 use crate::schedule::PhaseController;
 use crate::tensor::Histogram;
 
@@ -70,19 +72,6 @@ pub struct TrainOutcome {
     pub state: TrainState,
 }
 
-/// Positional role of each train-program input (resolved once per run).
-enum Slot {
-    Param(usize),
-    Vel(usize),
-    Beta,
-    VBeta,
-    X,
-    Y,
-    Scalar(&'static str),
-    /// Homogeneous preset kw vector (dorefa/wrpn programs).
-    KwVec,
-}
-
 pub struct Trainer<'a> {
     rt: &'a Runtime,
     pub cfg: RunConfig,
@@ -103,75 +92,48 @@ impl<'a> Trainer<'a> {
         let model_key = cfg.algo.model_key(&cfg.model);
         let model = self.rt.manifest.model(&model_key)?.clone();
         let train_prog = cfg.algo.train_program(&cfg.model);
-        let sig = self.rt.sig(&train_prog)?.clone();
-        let batch = model.batch;
+        let eval_prog = cfg.algo.eval_program(&cfg.model);
 
-        // ---- resolve the positional layout once --------------------------
-        let mut slots = Vec::with_capacity(sig.inputs.len());
-        let (mut pi, mut vi) = (0usize, 0usize);
-        for a in &sig.inputs {
-            slots.push(match a.name.as_str() {
-                n if n.starts_with("w:") => {
-                    pi += 1;
-                    Slot::Param(pi - 1)
-                }
-                n if n.starts_with("v:") => {
-                    vi += 1;
-                    Slot::Vel(vi - 1)
-                }
-                "beta" => Slot::Beta,
-                "vbeta" => Slot::VBeta,
-                "x" => Slot::X,
-                "y" => Slot::Y,
-                "kw" => Slot::KwVec,
-                "lr" => Slot::Scalar("lr"),
-                "mom" => Slot::Scalar("mom"),
-                "lr_beta" => Slot::Scalar("lr_beta"),
-                "ka" => Slot::Scalar("ka"),
-                "lambda_w" => Slot::Scalar("lambda_w"),
-                "lambda_beta" => Slot::Scalar("lambda_beta"),
-                "beta_train" => Slot::Scalar("beta_train"),
-                other => return Err(anyhow!("{train_prog}: unknown input '{other}'")),
-            });
-        }
-        let n_params = pi;
-        let out_loss = sig.output_index("loss")?;
-        let out_acc = sig.output_index("acc")?;
-        let out_ce = sig.output_index("ce").ok();
-        let out_regw = sig.output_index("reg_w").ok();
-        let out_beta = sig.output_index("beta").ok();
-
-        // ---- data pipeline ------------------------------------------------
-        let dspec = spec_for_model(&model);
-        let train_ds = Dataset::generate(dspec.clone(), cfg.train_examples, cfg.seed, 0);
-        let batcher = Batcher::new(train_ds, batch, cfg.seed);
-        let mut prefetch = Prefetcher::spawn(batcher, 4, cfg.steps);
-
-        // ---- state --------------------------------------------------------
+        // ---- open the session (signature resolution + state init) --------
         let is_waveq = matches!(cfg.algo, Algo::WaveqPreset | Algo::WaveqLearned);
         let beta_init = match cfg.algo {
             Algo::WaveqPreset => cfg.weight_bits as f32,
             _ => cfg.beta_init,
         };
-        let mut state = TrainState::init(&model, cfg.seed, beta_init)?;
+        let preset_kw = matches!(cfg.algo, Algo::Dorefa | Algo::Wrpn)
+            .then(|| vec![levels(cfg.weight_bits); model.num_qlayers]);
+        let mut session = Session::open(
+            self.rt,
+            &SessionCfg {
+                train_program: train_prog.clone(),
+                eval_program: eval_prog,
+                seed: cfg.seed,
+                beta_init,
+                preset_kw,
+            },
+        )?;
         if let Some(path) = &self.opts.init_from {
             let ck = Checkpoint::load(std::path::Path::new(path))
                 .with_context(|| format!("loading init checkpoint {path}"))?;
             let tensors: Vec<_> = ck.tensors.into_iter().map(|(_, t)| t).collect();
-            state.set_params(&tensors)?;
+            session.state_mut().set_params(&tensors)?;
         }
+
+        // ---- data pipeline ------------------------------------------------
+        let dspec = spec_for_model(&model);
+        let train_ds = Dataset::generate(dspec.clone(), cfg.train_examples, cfg.seed, 0);
+        let batcher = Batcher::new(train_ds, model.batch, cfg.seed);
+        let mut prefetch = Prefetcher::spawn(batcher, 4, cfg.steps);
 
         let mut controller = PhaseController::new(cfg.schedule.clone());
         let mut metrics = MetricsRecorder::new();
         let mut snapshots = Vec::new();
         let mut freeze_step: Option<usize> = None;
-        let preset_kw = vec![levels(cfg.weight_bits); model.num_qlayers];
         let ka = cfg.ka();
 
-        self.rt.warmup(&[train_prog.as_str()])?;
         let t0 = Instant::now();
 
-        // ---- the loop -------------------------------------------------------
+        // ---- the loop -----------------------------------------------------
         for step in 0..cfg.steps {
             let batch_data = prefetch
                 .next()?
@@ -201,82 +163,49 @@ impl<'a> Trainer<'a> {
             let warmup = 30.0_f32;
             let lr_t = cfg.lr * ((step as f32 + 1.0) / warmup).min(1.0);
 
-            // Assemble positional args, moving state buffers in.
-            let mut params = std::mem::take(&mut state.params);
-            let mut vels = std::mem::take(&mut state.vels);
-            let mut args: Vec<Buffer> = Vec::with_capacity(slots.len());
-            for slot in &slots {
-                args.push(match slot {
-                    Slot::Param(i) => std::mem::replace(&mut params[*i], Buffer::scalar(0f32)),
-                    Slot::Vel(i) => std::mem::replace(&mut vels[*i], Buffer::scalar(0f32)),
-                    Slot::Beta => buffer_f32(&state.beta, &[state.beta.len()])?,
-                    Slot::VBeta => buffer_f32(&state.vbeta, &[state.vbeta.len()])?,
-                    Slot::X => buffer_f32(
-                        &batch_data.x,
-                        &[batch, model.input_shape[0], model.input_shape[1], model.input_shape[2]],
-                    )?,
-                    Slot::Y => buffer_f32(&batch_data.y, &[batch, model.num_classes])?,
-                    Slot::KwVec => buffer_f32(&preset_kw, &[preset_kw.len()])?,
-                    Slot::Scalar(name) => scalar_f32(match *name {
-                        "lr" => lr_t,
-                        "mom" => cfg.momentum,
-                        "lr_beta" => cfg.lr_beta,
-                        "ka" => ka,
-                        "lambda_w" => lam_w,
-                        "lambda_beta" => lam_b,
-                        "beta_train" => flag,
-                        _ => unreachable!(),
-                    }),
-                });
-            }
-
-            let mut outs = self.rt.execute(&train_prog, &args)?;
-
-            // Unpack: params', vels' [, beta', vbeta'], scalars.
-            state.vels = outs.drain(n_params..2 * n_params).collect();
-            state.params = outs.drain(0..n_params).collect();
-            // After the two drains the tail outputs start at index 0 offset:
-            // outs now holds [beta?, vbeta?, loss, acc, ...] in original order
-            // minus the first 2P entries.
-            if let Some(bidx) = out_beta {
-                let rel = bidx - 2 * n_params;
-                state.beta = to_vec_f32(&outs[rel])?;
-                state.vbeta = to_vec_f32(&outs[rel + 1])?;
-            }
-            let rel_loss = out_loss - 2 * n_params;
-            let rel_acc = out_acc - 2 * n_params;
-            let loss = to_scalar_f32(&outs[rel_loss])?;
-            let acc = to_scalar_f32(&outs[rel_acc])?;
-            if !loss.is_finite() {
+            let m = session.step(
+                &batch_data.x,
+                &batch_data.y,
+                &StepKnobs {
+                    lr: lr_t,
+                    momentum: cfg.momentum,
+                    lr_beta: cfg.lr_beta,
+                    ka,
+                    lambda_w: lam_w,
+                    lambda_beta: lam_b,
+                    beta_train: flag,
+                },
+            )?;
+            if !m.loss.is_finite() {
                 return Err(anyhow!("{train_prog}: loss diverged (NaN/inf) at step {step}"));
             }
-            state.step = step + 1;
 
-            metrics.add_f32(step, "loss", loss);
-            metrics.add_f32(step, "acc", acc);
+            metrics.add_f32(step, "loss", m.loss);
+            metrics.add_f32(step, "acc", m.acc);
             metrics.add_f32(step, "lambda_w", lam_w);
             metrics.add_f32(step, "lambda_beta", lam_b);
-            if let Some(i) = out_ce {
-                metrics.add_f32(step, "ce", to_scalar_f32(&outs[i - 2 * n_params])?);
+            if let Some(ce) = m.ce {
+                metrics.add_f32(step, "ce", ce);
             }
-            if let Some(i) = out_regw {
-                metrics.add_f32(step, "reg_w", to_scalar_f32(&outs[i - 2 * n_params])?);
+            if let Some(reg_w) = m.reg_w {
+                metrics.add_f32(step, "reg_w", reg_w);
             }
-            if is_waveq && !state.beta.is_empty() {
-                let mean_beta: f32 =
-                    state.beta.iter().sum::<f32>() / state.beta.len() as f32;
+            if is_waveq && !session.state().beta.is_empty() {
+                let beta = &session.state().beta;
+                let mean_beta: f32 = beta.iter().sum::<f32>() / beta.len() as f32;
                 metrics.add_f32(step, "beta_mean", mean_beta);
             }
 
             // Phase-3 detection (learned mode): freeze + snap beta.
             if cfg.algo == Algo::WaveqLearned
                 && freeze_step.is_none()
-                && controller.observe_beta(step, &state.beta)
+                && controller.observe_beta(step, &session.state().beta)
             {
                 freeze_step = Some(step);
-                let assign = BitAssignment::from_beta(&state.beta);
-                state.beta = assign.snapped_beta();
-                state.vbeta = vec![0.0; state.vbeta.len()];
+                let assign = BitAssignment::from_beta(&session.state().beta);
+                let st = session.state_mut();
+                st.beta = assign.snapped_beta();
+                st.vbeta = vec![0.0; st.vbeta.len()];
                 if !self.opts.quiet {
                     crate::info!(
                         "{}: beta frozen at step {} -> bits {:?} (avg {:.2})",
@@ -289,9 +218,9 @@ impl<'a> Trainer<'a> {
             }
 
             // Observers (figure data).
-            for (ti, req) in self.opts.track.iter().enumerate() {
+            for req in &self.opts.track {
                 if req.every > 0 && step % req.every == 0 {
-                    let t = state.param_tensor(&model, req.param)?;
+                    let t = session.state().param_tensor(&model, req.param)?;
                     let snap = match &req.kind {
                         TrackKind::Weights { count } => Snapshot {
                             step,
@@ -305,14 +234,13 @@ impl<'a> Trainer<'a> {
                             Snapshot { step, param: req.param, weights: None, histogram: Some(h) }
                         }
                     };
-                    let _ = ti;
                     snapshots.push(snap);
                 }
             }
 
             // Mid-training eval (Fig. 8 convergence curves).
             if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-                let (tl, tacc) = self.eval_now(&model_key, &state, &cfg)?;
+                let (tl, tacc) = self.eval_now(&mut session)?;
                 metrics.add_f32(step, "test_loss", tl);
                 metrics.add_f32(step, "test_acc", tacc);
             }
@@ -322,11 +250,11 @@ impl<'a> Trainer<'a> {
 
         // ---- final assignment + eval ---------------------------------------
         let assignment = match cfg.algo {
-            Algo::WaveqLearned => BitAssignment::from_beta(&state.beta),
+            Algo::WaveqLearned => BitAssignment::from_beta(&session.state().beta),
             Algo::Fp32 => BitAssignment::homogeneous(8, model.num_qlayers),
             _ => BitAssignment::homogeneous(cfg.weight_bits, model.num_qlayers),
         };
-        let (test_loss, test_acc) = self.eval_now(&model_key, &state, &cfg)?;
+        let (test_loss, test_acc) = self.eval_now(&mut session)?;
 
         if !self.opts.quiet {
             crate::info!(
@@ -349,20 +277,21 @@ impl<'a> Trainer<'a> {
             test_loss,
             test_acc,
             train_secs,
-            state,
+            state: session.into_state(),
         })
     }
 
-    /// Evaluate the current state on the held-out stream.
-    fn eval_now(&self, model_key: &str, state: &TrainState, cfg: &RunConfig) -> Result<(f32, f32)> {
-        let model = self.rt.manifest.model(model_key)?;
-        let eval_prog = cfg.algo.eval_program(&cfg.model);
+    /// Evaluate the session's current state on the held-out stream: pick
+    /// the quantizer levels by algorithm, then average the session's eval
+    /// over all full test batches.
+    fn eval_now(&self, session: &mut Session<'_>) -> Result<(f32, f32)> {
+        let cfg = &self.cfg;
         let kw = match cfg.algo {
             Algo::Fp32 => None,
-            Algo::WaveqLearned => Some(BitAssignment::from_beta(&state.beta).kw()),
-            _ => Some(vec![levels(cfg.weight_bits); model.num_qlayers]),
+            Algo::WaveqLearned => Some(BitAssignment::from_beta(&session.state().beta).kw()),
+            _ => Some(vec![levels(cfg.weight_bits); session.model().num_qlayers]),
         };
-        let test = test_batcher(model, cfg.test_examples, cfg.seed);
-        evaluate(self.rt, &eval_prog, model, &state.params, kw.as_deref(), cfg.ka(), &test)
+        let test = test_batcher(session.model(), cfg.test_examples, cfg.seed);
+        eval_batches(&test, |b| session.eval(&b.x, &b.y, kw.as_deref(), cfg.ka()))
     }
 }

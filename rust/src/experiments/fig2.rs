@@ -26,7 +26,7 @@ pub fn grids() -> (Vec<f32>, Vec<f32>) {
 pub fn profiles(ctx: &ExpContext) -> Result<Vec<Vec<f32>>> {
     let (w, b) = grids();
     let args = vec![buffer_f32(&w, &[N_W])?, buffer_f32(&b, &[N_B])?];
-    let outs = ctx.rt.execute("reg_profile", &args)?;
+    let outs = ctx.rt.prepare("reg_profile")?.call(&args)?;
     outs.iter().map(|o| to_vec_f32(o)).collect()
 }
 

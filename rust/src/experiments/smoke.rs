@@ -52,6 +52,17 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         stats.executions,
         1e3 * stats.execute_secs / stats.executions.max(1) as f64
     );
+    println!("smoke: top programs by cumulative execute time:");
+    println!("  {:<28} {:>10} {:>10} {:>10}", "program", "execs", "total", "mean");
+    for (name, p) in stats.top_programs(5) {
+        println!(
+            "  {:<28} {:>10} {:>9.3}s {:>8.2}ms",
+            name,
+            p.executions,
+            p.execute_secs,
+            1e3 * p.execute_secs / p.executions.max(1) as f64
+        );
+    }
     println!("SMOKE OK");
     Ok(())
 }

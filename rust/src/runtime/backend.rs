@@ -1,19 +1,28 @@
-//! The pluggable execution backend abstraction.
+//! The pluggable execution backend abstraction and the typed program
+//! handles the coordinator dispatches through.
 //!
 //! A [`Backend`] turns manifest-described programs into results: `compile`
 //! prepares a program (cache warm / lazy-compile), `execute` runs it on
-//! host [`Buffer`]s. Two implementations exist:
+//! host [`Buffer`]s allocating its outputs, and `execute_into` runs it
+//! writing into *caller-owned* output buffers (the zero-allocation
+//! steady-state path). Two implementations exist:
 //!
 //! * [`super::native::NativeBackend`] — pure Rust, hermetic, executes the
-//!   WaveQ MLP train/eval program family directly on the host (always
-//!   available; the default).
+//!   WaveQ train/eval program family directly on the host (always
+//!   available; the default). Writes `execute_into` outputs in place.
 //! * `super::pjrt::PjrtBackend` — compiles AOT HLO-text artifacts through
 //!   the XLA PJRT C API (behind the non-default `pjrt` cargo feature).
+//!   Keeps the default copy-out `execute_into` fallback.
 //!
 //! [`Runtime`] is the coordinator-facing facade: it owns the [`Manifest`]
-//! (the program/model contract), validates call arity against it, keeps
-//! cumulative stats, and forwards to whichever backend it was opened with.
+//! (the program/model contract), keeps cumulative stats, and forwards to
+//! whichever backend it was opened with. The steady-state call interface
+//! is [`Runtime::prepare`], which resolves a program name *once* into a
+//! [`Program`] handle whose `call`/`call_into` are lookup-free; the
+//! stringly-typed [`Runtime::execute`] remains only as the legacy shim the
+//! property/determinism tests use as their oracle path.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
@@ -22,20 +31,53 @@ use super::buffer::Buffer;
 use super::manifest::{Manifest, ProgramSig};
 use super::native::NativeBackend;
 
-/// Cumulative (compiles, executions) — surfaced by `waveq smoke`/metrics.
+/// Per-program slice of [`RuntimeStats`].
+#[derive(Debug, Default, Clone)]
+pub struct ProgramStats {
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// Cumulative compile/execute counters — surfaced by `waveq smoke`/metrics.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub compiles: usize,
     pub compile_secs: f64,
     pub executions: usize,
     pub execute_secs: f64,
+    /// Per-program execute counts and cumulative seconds, by program name.
+    pub per_program: BTreeMap<String, ProgramStats>,
+}
+
+impl RuntimeStats {
+    /// Record one execution of `program` taking `secs` (total + per-program).
+    pub fn record_execute(&mut self, program: &str, secs: f64) {
+        self.executions += 1;
+        self.execute_secs += secs;
+        let p = self.per_program.entry(program.to_string()).or_default();
+        p.executions += 1;
+        p.execute_secs += secs;
+    }
+
+    /// The `n` programs with the largest cumulative execute time, descending.
+    pub fn top_programs(&self, n: usize) -> Vec<(String, ProgramStats)> {
+        let mut v: Vec<(String, ProgramStats)> =
+            self.per_program.iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| {
+            b.1.execute_secs
+                .partial_cmp(&a.1.execute_secs)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        v.truncate(n);
+        v
+    }
 }
 
 /// An execution engine for manifest-described programs.
 ///
-/// Implementations own their compile caches and timing; the [`Runtime`]
-/// facade has already validated input arity against the manifest before
-/// `execute` is called.
+/// Implementations own their compile caches and timing; the [`Program`]
+/// handle has already validated input arity against the manifest before
+/// `execute`/`execute_into` is called.
 pub trait Backend {
     /// Human-readable platform tag ("native", "cpu", ...).
     fn platform_name(&self) -> String;
@@ -47,8 +89,105 @@ pub trait Backend {
     /// the manifest's output order.
     fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>>;
 
+    /// Execute writing into caller-owned output buffers: one per named
+    /// output, manifest order, already shaped. Backends that can write in
+    /// place override this (the native backend does); the default falls
+    /// back to [`Backend::execute`] and moves the produced buffers out —
+    /// the pjrt copy-out path.
+    fn execute_into(&self, sig: &ProgramSig, args: &[&Buffer], outs: &mut [Buffer]) -> Result<()> {
+        let produced = self.execute(sig, args)?;
+        if produced.len() != outs.len() {
+            return Err(anyhow!(
+                "{}: program produced {} outputs, caller provided {} buffers",
+                sig.name,
+                produced.len(),
+                outs.len()
+            ));
+        }
+        for (i, (dst, src)) in outs.iter_mut().zip(produced).enumerate() {
+            if dst.shape != src.shape {
+                return Err(anyhow!(
+                    "{}: output {} ('{}') has shape {:?}, caller buffer is {:?}",
+                    sig.name,
+                    i,
+                    sig.outputs.get(i).map(String::as_str).unwrap_or("?"),
+                    src.shape,
+                    dst.shape
+                ));
+            }
+            *dst = src;
+        }
+        Ok(())
+    }
+
     /// Cumulative compile/execute counters.
     fn stats(&self) -> RuntimeStats;
+}
+
+/// A prepared program handle: name resolved, signature cloned, and backend
+/// compile cache warmed exactly once at [`Runtime::prepare`] time, so
+/// [`Program::call`] / [`Program::call_into`] do no lookups — the
+/// steady-state training loop dispatches through the handle with nothing
+/// but an arity check in front of the backend.
+pub struct Program<'rt> {
+    backend: &'rt dyn Backend,
+    sig: ProgramSig,
+}
+
+impl Program<'_> {
+    pub fn name(&self) -> &str {
+        &self.sig.name
+    }
+
+    /// The resolved positional signature (inputs and output names).
+    pub fn sig(&self) -> &ProgramSig {
+        &self.sig
+    }
+
+    fn check_arity(&self, n: usize) -> Result<()> {
+        if n != self.sig.inputs.len() {
+            return Err(anyhow!(
+                "{}: got {} args, signature has {}",
+                self.sig.name,
+                n,
+                self.sig.inputs.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Execute, allocating one output buffer per named output.
+    /// Accepts owned or borrowed buffers (`&[Buffer]` or `&[&Buffer]`).
+    pub fn call<B: std::borrow::Borrow<Buffer>>(&self, args: &[B]) -> Result<Vec<Buffer>> {
+        self.check_arity(args.len())?;
+        let refs: Vec<&Buffer> = args.iter().map(|a| a.borrow()).collect();
+        let outs = self.backend.execute(&self.sig, &refs)?;
+        if outs.len() != self.sig.outputs.len() {
+            return Err(anyhow!(
+                "{}: got {} outputs, manifest says {}",
+                self.sig.name,
+                outs.len(),
+                self.sig.outputs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Execute into caller-owned, pre-shaped output buffers — no output
+    /// allocation on backends that support in-place writes (native). The
+    /// buffers must match the program's outputs in count and shape.
+    pub fn call_into(&self, args: &[&Buffer], outs: &mut [Buffer]) -> Result<()> {
+        self.check_arity(args.len())?;
+        if outs.len() != self.sig.outputs.len() {
+            return Err(anyhow!(
+                "{}: caller provided {} output buffers, signature has {}",
+                self.sig.name,
+                outs.len(),
+                self.sig.outputs.len()
+            ));
+        }
+        self.backend.execute_into(&self.sig, args, outs)
+    }
 }
 
 /// Backend-neutral runtime: manifest + stats + a boxed [`Backend`].
@@ -94,8 +233,21 @@ impl Runtime {
         self.manifest.program(program)
     }
 
-    /// Execute a program on host buffers; returns one buffer per output.
-    /// Accepts owned or borrowed buffers (`&[Buffer]` or `&[&Buffer]`).
+    /// Resolve and pre-compile a program *once*, returning a typed handle
+    /// whose `call`/`call_into` skip the name lookup entirely. This is the
+    /// steady-state dispatch path; [`super::session::Session`] builds on it.
+    pub fn prepare(&self, program: &str) -> Result<Program<'_>> {
+        let sig = self.manifest.program(program)?.clone();
+        self.backend
+            .compile(&sig)
+            .with_context(|| format!("preparing {program}"))?;
+        Ok(Program { backend: self.backend.as_ref(), sig })
+    }
+
+    /// Legacy stringly-typed dispatch: re-resolves the program by name and
+    /// allocates every output on each call. Kept as the oracle path for
+    /// the property/determinism tests; steady-state code should call
+    /// [`Runtime::prepare`] once and dispatch through the [`Program`].
     pub fn execute<B: std::borrow::Borrow<Buffer>>(
         &self,
         program: &str,
@@ -164,11 +316,40 @@ mod tests {
         let err = rt.execute("train_fp32_mlp", &args).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("got 1 args"), "{msg}");
+        // Same guard on the prepared-handle path.
+        let prog = rt.prepare("train_fp32_mlp").unwrap();
+        let err = prog.call(&args).unwrap_err();
+        assert!(format!("{err}").contains("got 1 args"), "{err}");
     }
 
     #[test]
     fn warmup_unknown_program_errors() {
         let rt = Runtime::native();
         assert!(rt.warmup(&["definitely_missing"]).is_err());
+    }
+
+    #[test]
+    fn prepare_unknown_program_errors() {
+        let rt = Runtime::native();
+        let err = rt.prepare("definitely_missing").unwrap_err();
+        assert!(format!("{err:#}").contains("definitely_missing"), "{err:#}");
+    }
+
+    #[test]
+    fn stats_track_per_program_time() {
+        let rt = Runtime::native();
+        let prog = rt.prepare("reg_profile").unwrap();
+        let args = vec![
+            crate::runtime::buffer::buffer_f32(&[0.1, 0.2], &[2]).unwrap(),
+            crate::runtime::buffer::buffer_f32(&[2.0, 3.0, 4.0], &[3]).unwrap(),
+        ];
+        prog.call(&args).unwrap();
+        prog.call(&args).unwrap();
+        let stats = rt.stats();
+        let per = stats.per_program.get("reg_profile").expect("per-program entry");
+        assert_eq!(per.executions, 2);
+        assert!(per.execute_secs >= 0.0);
+        let top = stats.top_programs(5);
+        assert_eq!(top[0].0, "reg_profile");
     }
 }

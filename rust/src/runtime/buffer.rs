@@ -52,6 +52,21 @@ impl Buffer {
         self.shape.is_empty()
     }
 
+    /// Overwrite the contents from a host slice without reallocating
+    /// (shape unchanged) — the session's zero-alloc input refresh.
+    pub fn fill_from(&mut self, data: &[f32]) -> Result<()> {
+        if data.len() != self.data.len() {
+            return Err(anyhow!(
+                "fill_from: {} elems into a buffer of {} (shape {:?})",
+                data.len(),
+                self.data.len(),
+                self.shape
+            ));
+        }
+        self.data.copy_from_slice(data);
+        Ok(())
+    }
+
     /// View as the host-side analysis tensor (clones the data).
     pub fn to_tensor(&self) -> Result<Tensor> {
         Tensor::new(self.shape.clone(), self.data.clone())
@@ -102,6 +117,14 @@ mod tests {
         let s = scalar_f32(2.5);
         assert!(s.is_scalar());
         assert_eq!(to_scalar_f32(&s).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn fill_from_checks_length() {
+        let mut b = buffer_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        b.fill_from(&[5.0, 6.0, 7.0, 8.0]).unwrap();
+        assert_eq!(b.data, vec![5.0, 6.0, 7.0, 8.0]);
+        assert!(b.fill_from(&[1.0]).is_err());
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //!
 //! `manifest` — the python→rust contract (signatures, layouts, MACs).
 //! `buffer`   — the backend-neutral host buffer type + helpers.
-//! `backend`  — the `Backend` trait and the `Runtime` facade.
+//! `backend`  — the `Backend` trait, the `Runtime` facade, and the typed
+//!              `Program` handles `Runtime::prepare` returns.
+//! `session`  — stateful training sessions: backend-resident state +
+//!              zero-alloc steady-state stepping over prepared handles.
 //! `native`   — hermetic pure-Rust reference backend (always available).
 //! `pjrt`     — PJRT load/compile/execute over AOT HLO artifacts
 //!              (behind the non-default `pjrt` cargo feature).
@@ -13,8 +16,10 @@ pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod session;
 
-pub use backend::{Backend, Runtime, RuntimeStats};
+pub use backend::{Backend, Program, ProgramStats, Runtime, RuntimeStats};
 pub use buffer::{buffer_f32, scalar_f32, to_scalar_f32, to_vec_f32, Buffer};
 pub use manifest::{ArgSpec, Manifest, ModelMeta, ParamMeta, ProgramSig};
 pub use native::{NativeBackend, NativeModel};
+pub use session::{Session, SessionCfg, SessionState, StepKnobs, StepMetrics};

@@ -352,36 +352,54 @@ pub fn dwconv_fwd(x: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> 
 }
 
 /// Depthwise conv weight gradient: dW(kh, kw, 0, c) = sum x * dz.
-/// Stays single-threaded: the reduction runs over the whole batch into one
-/// small k*k*c tensor, and splitting it would change the summation order
-/// (the work is a tiny fraction of the separable block's 1x1 convs anyway).
+///
+/// Parallelized by sharding the *channel* dimension across the worker pool:
+/// each worker owns a contiguous channel range and reduces its channels over
+/// the full (batch, oh, ow, kh, kw) nest in exactly the order the serial
+/// kernel used, accumulating into a channel-major scratch; a final cheap
+/// transpose restores the (k*k, c) output layout. Because a channel's
+/// reduction chain never crosses a shard boundary, the result is bitwise
+/// identical for any thread count — and to the historical serial kernel.
 pub fn dwconv_grad_w(x: &[f32], dz: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
     let (k, c) = (g.ksize, g.cout);
+    let kk = k * k;
     let plane_in = g.h_in * g.w_in * c;
-    let mut dw = vec![0.0f32; k * k * c];
-    for b in 0..batch {
-        let xb = &x[b * plane_in..(b + 1) * plane_in];
-        for oh in 0..g.h_out {
-            for ow in 0..g.w_out {
-                let drow = &dz[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
-                for kh in 0..k {
-                    let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                    if ih < 0 || ih >= g.h_in as isize {
-                        continue;
-                    }
-                    for kw in 0..k {
-                        let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                        if iw < 0 || iw >= g.w_in as isize {
+    // Channel-major scratch: row ch holds dW(.., .., 0, ch) over the taps.
+    let mut dwt = vec![0.0f32; c * kk];
+    pool::run_rows(&mut dwt, c, kk, DWGRADW_MIN_CH, |c0, shard| {
+        let nch = shard.len() / kk;
+        for b in 0..batch {
+            let xb = &x[b * plane_in..(b + 1) * plane_in];
+            for oh in 0..g.h_out {
+                for ow in 0..g.w_out {
+                    let drow = &dz[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
+                    for kh in 0..k {
+                        let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
+                        if ih < 0 || ih >= g.h_in as isize {
                             continue;
                         }
-                        let xrow = &xb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
-                        let wrow = &mut dw[(kh * k + kw) * c..][..c];
-                        for ch in 0..c {
-                            wrow[ch] += xrow[ch] * drow[ch];
+                        for kw in 0..k {
+                            let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
+                            if iw < 0 || iw >= g.w_in as isize {
+                                continue;
+                            }
+                            let xrow = &xb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
+                            let tap = kh * k + kw;
+                            for ci in 0..nch {
+                                let ch = c0 + ci;
+                                shard[ci * kk + tap] += xrow[ch] * drow[ch];
+                            }
                         }
                     }
                 }
             }
+        }
+    });
+    // Transpose the (c, k*k) scratch back to the (k*k, c) weight layout.
+    let mut dw = vec![0.0f32; kk * c];
+    for ch in 0..c {
+        for tap in 0..kk {
+            dw[tap * c + ch] = dwt[ch * kk + tap];
         }
     }
     dw
@@ -569,6 +587,8 @@ const GEMM_MIN_ROWS: usize = 32;
 const GRADW_MIN_ROWS: usize = 8;
 /// Minimum batch images per worker shard for im2col/col2im/dwconv.
 const CONV_MIN_BATCH: usize = 4;
+/// Minimum channels per worker shard for the depthwise weight gradient.
+const DWGRADW_MIN_CH: usize = 8;
 
 /// Fused (on targets with FMA) or separate multiply-add. The choice is a
 /// compile-time constant, so any given binary is internally consistent and
@@ -909,6 +929,16 @@ pub fn clip_by_global_norm(grads: &mut [Vec<f32>], max_norm: f32) {
     }
 }
 
+/// One parameter's momentum update, in place: v' = mu v + g ; w' = w - lr v'.
+/// The slice form lets the backend update caller-owned output buffers
+/// directly (the `execute_into` zero-copy path).
+pub fn sgd_momentum_step(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, mom: f32) {
+    for ((wv, vv), &gv) in w.iter_mut().zip(v.iter_mut()).zip(g.iter()) {
+        *vv = mom * *vv + gv;
+        *wv -= lr * *vv;
+    }
+}
+
 /// v' = mu v + g ; w' = w - lr v'  (in place on params/vels).
 pub fn sgd_momentum(
     params: &mut [Vec<f32>],
@@ -918,10 +948,7 @@ pub fn sgd_momentum(
     mom: f32,
 ) {
     for ((w, v), g) in params.iter_mut().zip(vels.iter_mut()).zip(grads.iter()) {
-        for ((wv, vv), &gv) in w.iter_mut().zip(v.iter_mut()).zip(g.iter()) {
-            *vv = mom * *vv + gv;
-            *wv -= lr * *vv;
-        }
+        sgd_momentum_step(w, v, g, lr, mom);
     }
 }
 

@@ -77,6 +77,9 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
+        // Spawn the persistent kernel worker pool now (idempotent), so the
+        // thread-creation cost never lands inside a timed train step.
+        pool::ensure_started();
         let mut models = BTreeMap::new();
         let mut programs = BTreeMap::new();
         for base in ZOO_NAMES {
@@ -239,6 +242,75 @@ impl NativeBackend {
             .get(key)
             .ok_or_else(|| anyhow!("native backend has no model '{key}'"))
     }
+
+    fn kind_of(&self, name: &str) -> Result<ProgramKind> {
+        self.programs
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("native backend has no program '{name}'"))
+    }
+
+    /// Correctly-shaped zero buffers for a program's outputs — the
+    /// allocating `execute` path; `execute_into` writes into caller-owned
+    /// buffers instead.
+    fn output_template(&self, kind: &ProgramKind, args: &[&Buffer]) -> Result<Vec<Buffer>> {
+        Ok(match kind {
+            ProgramKind::RegProfile => {
+                if args.len() != 2 {
+                    return Err(anyhow!(
+                        "reg_profile: native dispatch got {} args, wants 2",
+                        args.len()
+                    ));
+                }
+                let (nw, nb) = (args[0].elem_count(), args[1].elem_count());
+                (0..9).map(|_| Buffer::zeros(vec![nw, nb])).collect()
+            }
+            ProgramKind::Train { model, quant } => {
+                let m = self.model(model)?;
+                let nq = m.num_qlayers();
+                let mut outs: Vec<Buffer> = Vec::with_capacity(2 * m.num_params() + 8);
+                for _ in 0..2 {
+                    outs.extend(m.params.iter().map(|p| Buffer::zeros(p.shape.clone())));
+                }
+                if *quant == QuantFamily::Waveq {
+                    outs.push(Buffer::zeros(vec![nq]));
+                    outs.push(Buffer::zeros(vec![nq]));
+                }
+                outs.push(Buffer::scalar(0.0));
+                outs.push(Buffer::scalar(0.0));
+                if *quant == QuantFamily::Waveq {
+                    outs.push(Buffer::scalar(0.0));
+                    outs.push(Buffer::scalar(0.0));
+                }
+                outs
+            }
+            ProgramKind::Eval { .. } => vec![Buffer::scalar(0.0), Buffer::scalar(0.0)],
+        })
+    }
+
+    fn dispatch(
+        &self,
+        sig: &ProgramSig,
+        kind: &ProgramKind,
+        args: &[&Buffer],
+        outs: &mut [Buffer],
+    ) -> Result<()> {
+        self.compile(sig)?;
+        let t0 = Instant::now();
+        let result = match kind {
+            ProgramKind::RegProfile => run_reg_profile_into(args, outs),
+            ProgramKind::Train { model, quant } => {
+                run_train_into(&sig.name, self.model(model)?, *quant, args, outs)
+            }
+            ProgramKind::Eval { model, quant } => {
+                run_eval_into(&sig.name, self.model(model)?, *quant, args, outs)
+            }
+        };
+        self.stats
+            .borrow_mut()
+            .record_execute(&sig.name, t0.elapsed().as_secs_f64());
+        result
+    }
 }
 
 impl Default for NativeBackend {
@@ -263,28 +335,18 @@ impl Backend for NativeBackend {
     }
 
     fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>> {
-        let kind = self
-            .programs
-            .get(&sig.name)
-            .ok_or_else(|| anyhow!("native backend has no program '{}'", sig.name))?
-            .clone();
-        self.compile(sig)?;
-        let t0 = Instant::now();
-        let out = match &kind {
-            ProgramKind::RegProfile => run_reg_profile(args),
-            ProgramKind::Train { model, quant } => {
-                run_train(&sig.name, self.model(model)?, *quant, args)
-            }
-            ProgramKind::Eval { model, quant } => {
-                run_eval(&sig.name, self.model(model)?, *quant, args)
-            }
-        };
-        {
-            let mut st = self.stats.borrow_mut();
-            st.executions += 1;
-            st.execute_secs += t0.elapsed().as_secs_f64();
-        }
-        out
+        let kind = self.kind_of(&sig.name)?;
+        let mut outs = self.output_template(&kind, args)?;
+        self.dispatch(sig, &kind, args, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// Write results into caller-owned buffers: parameters/velocities are
+    /// updated in place in the output storage (copy state, apply SGD on the
+    /// destination), scalars overwrite their slot — no output allocation.
+    fn execute_into(&self, sig: &ProgramSig, args: &[&Buffer], outs: &mut [Buffer]) -> Result<()> {
+        let kind = self.kind_of(&sig.name)?;
+        self.dispatch(sig, &kind, args, outs)
     }
 
     fn stats(&self) -> RuntimeStats {
@@ -659,17 +721,36 @@ fn backward(
     grads
 }
 
-fn run_eval(
+/// Validate one caller-owned output buffer against the shape the program
+/// writes (the `execute_into` contract).
+fn check_out(prog: &str, name: &str, out: &Buffer, shape: &[usize]) -> Result<()> {
+    if out.shape.as_slice() != shape {
+        return Err(anyhow!(
+            "{prog}: output '{name}' buffer has shape {:?}, program writes {:?}",
+            out.shape,
+            shape
+        ));
+    }
+    Ok(())
+}
+
+fn run_eval_into(
     prog: &str,
     model: &NativeModel,
     quant: QuantFamily,
     args: &[&Buffer],
-) -> Result<Vec<Buffer>> {
+    outs: &mut [Buffer],
+) -> Result<()> {
     let np = model.num_params();
     let expected = np + 2 + if quant == QuantFamily::Fp32 { 0 } else { 2 };
     if args.len() != expected {
         return Err(anyhow!("{prog}: native dispatch got {} args, wants {expected}", args.len()));
     }
+    if outs.len() != 2 {
+        return Err(anyhow!("{prog}: got {} output buffers, program writes 2", outs.len()));
+    }
+    check_out(prog, "loss", &outs[0], &[])?;
+    check_out(prog, "acc", &outs[1], &[])?;
     let params = param_slices(prog, model, args, 0)?;
     let x = args[np];
     let y = args[np + 1];
@@ -681,15 +762,18 @@ fn run_eval(
     };
     let fwd = forward(model, &params, &x.data, batch, quant, &kw, &[], act_ka, false);
     let (loss, acc, _dl) = kn::softmax_ce(&fwd.logits, &y.data, batch, model.num_classes);
-    Ok(vec![Buffer::scalar(loss), Buffer::scalar(acc)])
+    outs[0].data[0] = loss;
+    outs[1].data[0] = acc;
+    Ok(())
 }
 
-fn run_train(
+fn run_train_into(
     prog: &str,
     model: &NativeModel,
     quant: QuantFamily,
     args: &[&Buffer],
-) -> Result<Vec<Buffer>> {
+    outs: &mut [Buffer],
+) -> Result<()> {
     let np = model.num_params();
     let nq = model.num_qlayers();
     let expected = 2 * np
@@ -700,6 +784,26 @@ fn run_train(
         };
     if args.len() != expected {
         return Err(anyhow!("{prog}: native dispatch got {} args, wants {expected}", args.len()));
+    }
+    let n_scalars = if quant == QuantFamily::Waveq { 4 } else { 2 };
+    let n_beta = if quant == QuantFamily::Waveq { 2 } else { 0 };
+    let expected_outs = 2 * np + n_beta + n_scalars;
+    if outs.len() != expected_outs {
+        return Err(anyhow!(
+            "{prog}: got {} output buffers, program writes {expected_outs}",
+            outs.len()
+        ));
+    }
+    for (i, p) in model.params.iter().enumerate() {
+        check_out(prog, &p.name, &outs[i], &p.shape)?;
+        check_out(prog, &p.name, &outs[np + i], &p.shape)?;
+    }
+    if quant == QuantFamily::Waveq {
+        check_out(prog, "beta", &outs[2 * np], &[nq])?;
+        check_out(prog, "vbeta", &outs[2 * np + 1], &[nq])?;
+    }
+    for i in 0..n_scalars {
+        check_out(prog, "scalar", &outs[2 * np + n_beta + i], &[])?;
     }
     let params = param_slices(prog, model, args, 0)?;
     let vels = param_slices(prog, model, args, np)?;
@@ -804,54 +908,54 @@ fn run_train(
     // ---- backward --------------------------------------------------------
     let mut grads = backward(model, &fwd, dlogits, batch, &params, lam_w);
 
-    // ---- updates ---------------------------------------------------------
+    // ---- updates (into the caller-owned output buffers) ------------------
     kn::clip_by_global_norm(&mut grads, kn::GRAD_CLIP_NORM);
-    let mut new_params: Vec<Vec<f32>> = params.iter().map(|p| p.to_vec()).collect();
-    let mut new_vels: Vec<Vec<f32>> = vels.iter().map(|v| v.to_vec()).collect();
-    kn::sgd_momentum(&mut new_params, &mut new_vels, &grads, lr, mom);
+    let (pouts, rest) = outs.split_at_mut(np);
+    let (vouts, tail_outs) = rest.split_at_mut(np);
+    for i in 0..np {
+        pouts[i].data.copy_from_slice(params[i]);
+        vouts[i].data.copy_from_slice(vels[i]);
+        kn::sgd_momentum_step(&mut pouts[i].data, &mut vouts[i].data, &grads[i], lr, mom);
+    }
 
-    let (mut new_beta, mut new_vbeta) = (beta_in.clone(), vbeta_in.clone());
     if quant == QuantFamily::Waveq {
         for q in 0..nq {
             let gb = (lam_w as f64 * dreg_dbeta[q] + lam_beta as f64) as f32 * beta_train;
-            new_vbeta[q] = mom * vbeta_in[q] + gb;
-            new_beta[q] = kn::clip_beta(beta_in[q] - lr_beta * new_vbeta[q]);
+            let nv = mom * vbeta_in[q] + gb;
+            tail_outs[1].data[q] = nv;
+            tail_outs[0].data[q] = kn::clip_beta(beta_in[q] - lr_beta * nv);
         }
     }
-
-    // ---- pack outputs ----------------------------------------------------
-    let mut outs: Vec<Buffer> = Vec::with_capacity(2 * np + 8);
-    for (i, p) in model.params.iter().enumerate() {
-        outs.push(Buffer::new(p.shape.clone(), std::mem::take(&mut new_params[i]))?);
-    }
-    for (i, p) in model.params.iter().enumerate() {
-        outs.push(Buffer::new(p.shape.clone(), std::mem::take(&mut new_vels[i]))?);
-    }
+    let si = if quant == QuantFamily::Waveq { 2 } else { 0 };
+    tail_outs[si].data[0] = loss;
+    tail_outs[si + 1].data[0] = acc;
     if quant == QuantFamily::Waveq {
-        outs.push(Buffer::new(vec![nq], new_beta)?);
-        outs.push(Buffer::new(vec![nq], new_vbeta)?);
+        tail_outs[si + 2].data[0] = ce;
+        tail_outs[si + 3].data[0] = reg_w as f32;
     }
-    outs.push(Buffer::scalar(loss));
-    outs.push(Buffer::scalar(acc));
-    if quant == QuantFamily::Waveq {
-        outs.push(Buffer::scalar(ce));
-        outs.push(Buffer::scalar(reg_w as f32));
-    }
-    Ok(outs)
+    Ok(())
 }
 
-fn run_reg_profile(args: &[&Buffer]) -> Result<Vec<Buffer>> {
+fn run_reg_profile_into(args: &[&Buffer], outs: &mut [Buffer]) -> Result<()> {
     if args.len() != 2 {
         return Err(anyhow!("reg_profile: native dispatch got {} args, wants 2", args.len()));
     }
     let wgrid = &args[0].data;
     let bgrid = &args[1].data;
     let (nw, nb) = (wgrid.len(), bgrid.len());
-    let mut outs = Vec::with_capacity(9);
+    if outs.len() != 9 {
+        return Err(anyhow!("reg_profile: got {} output buffers, program writes 9", outs.len()));
+    }
+    for (i, o) in outs.iter().enumerate() {
+        check_out("reg_profile", &format!("surface {i}"), o, &[nw, nb])?;
+    }
     for norm in 0..3u32 {
-        let mut r = vec![0.0f32; nw * nb];
-        let mut d1 = vec![0.0f32; nw * nb];
-        let mut d2 = vec![0.0f32; nw * nb];
+        let base = norm as usize * 3;
+        let (head, tail) = outs.split_at_mut(base + 1);
+        let (d1s, d2s) = tail.split_at_mut(1);
+        let r = &mut head[base].data;
+        let d1 = &mut d1s[0].data;
+        let d2 = &mut d2s[0].data;
         for (wi, &wv) in wgrid.iter().enumerate() {
             for (bi, &bv) in bgrid.iter().enumerate() {
                 let (w, b) = (wv as f64, bv as f64);
@@ -860,11 +964,8 @@ fn run_reg_profile(args: &[&Buffer]) -> Result<Vec<Buffer>> {
                 d2[wi * nb + bi] = kn::reg_point_d2(w, b, norm) as f32;
             }
         }
-        outs.push(Buffer::new(vec![nw, nb], r)?);
-        outs.push(Buffer::new(vec![nw, nb], d1)?);
-        outs.push(Buffer::new(vec![nw, nb], d2)?);
     }
-    Ok(outs)
+    Ok(())
 }
 
 #[cfg(test)]

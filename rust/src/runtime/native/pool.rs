@@ -1,21 +1,40 @@
-//! In-crate worker pool for the native kernels, built on
-//! [`std::thread::scope`] only (the crate resolves offline from
-//! `rust/vendor/`, so no rayon/crossbeam).
+//! Persistent channel-fed worker pool for the native kernels, built on
+//! `std` only (the crate resolves offline from `rust/vendor/`, so no
+//! rayon/crossbeam).
+//!
+//! Workers are spawned once (lazily, on the first dispatch; `NativeBackend::
+//! new` warms them eagerly via [`ensure_started`]) and then *parked* on a
+//! shared job channel between dispatches — replacing the per-dispatch
+//! `std::thread::scope` spawns, whose create/join cost was paid on every one
+//! of the ~100 kernel dispatches of a conv-zoo train step. A dispatch now
+//! costs a few channel sends and one latch wait.
 //!
 //! The pool parallelizes over *output rows*: a row-major `rows x width`
 //! output buffer is split into contiguous row shards, each handed to one
-//! scoped worker. Every output element is produced by exactly one shard,
-//! and the kernels compute each element with a reduction order fixed by
-//! tile constants (see `kernels`), so results are **bitwise identical for
-//! any thread count** — `WAVEQ_THREADS=1` and `WAVEQ_THREADS=8` produce
-//! the same bits, which the determinism tests assert.
+//! worker (the calling thread runs the first shard itself). Every output
+//! element is produced by exactly one shard, and the kernels compute each
+//! element with a reduction order fixed by tile constants (see `kernels`),
+//! so results are **bitwise identical for any thread count** —
+//! `WAVEQ_THREADS=1` and `WAVEQ_THREADS=8` produce the same bits, which the
+//! determinism tests assert. Which worker executes a shard is scheduling
+//! noise; the shard boundaries (and therefore the arithmetic) depend only
+//! on the budget.
 //!
 //! Thread count resolution: the `WAVEQ_THREADS` env var when set to a
 //! positive integer, else [`std::thread::available_parallelism`]. The env
 //! var is re-read on every dispatch so tests (and operators) can change it
-//! at runtime without rebuilding.
+//! at runtime without rebuilding; a budget larger than the worker count
+//! simply queues more shards than workers (still deterministic).
+//!
+//! Safety: tasks carry raw pointers into the caller's stack (the closure,
+//! the output shard, the completion latch). [`run_rows`] blocks on the
+//! latch until every queued shard has finished — on the panic path too —
+//! so no task can outlive the borrows it erased.
 
 use std::num::NonZeroUsize;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Hard cap on the worker budget, however large the override or machine.
 const MAX_THREADS: usize = 64;
@@ -33,6 +52,126 @@ pub fn num_threads() -> usize {
         .min(MAX_THREADS)
 }
 
+/// One queued shard of a dispatch, with every borrow erased to a raw
+/// pointer. Sound because `run_rows` waits on `latch` before any of the
+/// pointed-to data can go out of scope.
+struct Task {
+    f: *const (dyn Fn(usize, &mut [f32]) + Sync),
+    first_row: usize,
+    out: *mut f32,
+    len: usize,
+    latch: *const Latch,
+}
+
+// The pointers reference data that outlives the task (latch-guarded) and
+// the closure is `Sync`, so moving the task to a worker thread is sound.
+unsafe impl Send for Task {}
+
+/// A worker shard's panic payload, carried back to the dispatcher so the
+/// original message/location survive (as `thread::scope` joins did).
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Counts a dispatch's outstanding worker shards; the dispatching thread
+/// blocks in [`Latch::wait`] until all of them have arrived.
+struct Latch {
+    /// (remaining shards, first shard panic payload)
+    state: Mutex<(usize, Option<PanicPayload>)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new((n, None)), cv: Condvar::new() }
+    }
+
+    fn arrive(&self, panic: Option<PanicPayload>) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        if st.1.is_none() {
+            st.1 = panic;
+        }
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every shard arrived; returns the first panic payload.
+    fn wait(&self) -> Option<PanicPayload> {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1.take()
+    }
+}
+
+struct Pool {
+    queue: Sender<Task>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let workers = std::thread::available_parallelism()
+            .map(NonZeroUsize::get)
+            .unwrap_or(1)
+            .min(MAX_THREADS);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("waveq-pool-{i}"))
+                .spawn(move || worker_loop(&rx))
+                .expect("spawning waveq pool worker");
+        }
+        Pool { queue: tx }
+    })
+}
+
+/// Spawn the persistent workers now (idempotent). Called by
+/// `NativeBackend::new` so the spawn cost never lands inside a timed step.
+pub fn ensure_started() {
+    let _ = pool();
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Task>>) {
+    loop {
+        // Hold the receiver lock only for the dequeue; a worker parked in
+        // `recv` wakes, releases the lock, and runs its task while the
+        // next worker parks.
+        let task = match rx.lock().unwrap().recv() {
+            Ok(t) => t,
+            Err(_) => return, // channel closed (process teardown)
+        };
+        run_task(task);
+    }
+}
+
+std::thread_local! {
+    /// Set while this thread is executing a pool task. A nested `run_rows`
+    /// from inside a shard closure must not queue sub-tasks: with a fixed
+    /// worker count every worker could be blocked in `Latch::wait` while
+    /// the sub-tasks sit unserved — a deadlock the old per-dispatch
+    /// `thread::scope` design could not hit. Nested calls run serially
+    /// instead (bitwise-identical by the determinism contract).
+    static IN_POOL_TASK: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn run_task(task: Task) {
+    // Catch panics so a failed shard reports through the latch instead of
+    // killing the worker (the pool must survive for later dispatches) or
+    // deadlocking the dispatcher.
+    let result = catch_unwind(AssertUnwindSafe(|| unsafe {
+        let shard = std::slice::from_raw_parts_mut(task.out, task.len);
+        IN_POOL_TASK.with(|t| t.set(true));
+        (*task.f)(task.first_row, shard);
+    }));
+    IN_POOL_TASK.with(|t| t.set(false));
+    unsafe { (*task.latch).arrive(result.err()) };
+}
+
 /// Run `f` over contiguous row shards of `out` (a row-major `rows x width`
 /// buffer), in parallel when the worker budget and problem size allow.
 ///
@@ -41,7 +180,7 @@ pub fn num_threads() -> usize {
 /// first_row + shard.len() / width`. Shards never overlap, shard boundaries
 /// never split a row, and the worker budget is capped at
 /// `rows / min_rows`, so tiny problems stay on the calling thread with
-/// zero spawn overhead.
+/// zero dispatch overhead.
 ///
 /// Determinism contract: `f` must compute each output element with an
 /// arithmetic order that does not depend on `first_row` or the shard size —
@@ -55,24 +194,56 @@ where
     if rows == 0 {
         return;
     }
-    let budget = num_threads().min(rows / min_rows.max(1)).max(1);
+    // Nested dispatch from inside a pool task would deadlock the fixed
+    // worker set (see IN_POOL_TASK); run such calls serially — identical
+    // bits by the determinism contract, since shard boundaries never
+    // change the per-element arithmetic.
+    let budget = if IN_POOL_TASK.with(|t| t.get()) {
+        1
+    } else {
+        num_threads().min(rows / min_rows.max(1)).max(1)
+    };
     if budget == 1 {
         f(0, out);
         return;
     }
     let per = rows.div_ceil(budget);
-    let f = &f;
-    std::thread::scope(|s| {
-        let mut iter = out.chunks_mut(per * width).enumerate();
-        // Run the first shard on the calling thread; spawn the rest.
-        let first = iter.next();
-        for (i, chunk) in iter {
-            s.spawn(move || f(i * per, chunk));
-        }
-        if let Some((_, chunk)) = first {
-            f(0, chunk);
-        }
-    });
+    let n_shards = rows.div_ceil(per);
+    if n_shards == 1 {
+        f(0, out);
+        return;
+    }
+    let f_obj: &(dyn Fn(usize, &mut [f32]) + Sync) = &f;
+    let latch = Latch::new(n_shards - 1);
+    let p = pool();
+    let mut iter = out.chunks_mut(per * width).enumerate();
+    // Queue all but the first shard; run the first on the calling thread.
+    let first = iter.next();
+    for (i, chunk) in iter {
+        let task = Task {
+            f: f_obj as *const _,
+            first_row: i * per,
+            out: chunk.as_mut_ptr(),
+            len: chunk.len(),
+            latch: &latch,
+        };
+        p.queue.send(task).expect("waveq pool queue closed");
+    }
+    let caller = match first {
+        Some((_, chunk)) => catch_unwind(AssertUnwindSafe(|| f_obj(0, chunk))),
+        None => Ok(()),
+    };
+    // Wait for the workers even when the caller's own shard panicked:
+    // queued tasks hold pointers into `out`, `f`, and `latch`.
+    let worker_panic = latch.wait();
+    if let Err(payload) = caller {
+        resume_unwind(payload);
+    }
+    if let Some(payload) = worker_panic {
+        // Re-raise the shard's own payload so the message survives, as it
+        // did under the per-dispatch `thread::scope` joins.
+        resume_unwind(payload);
+    }
 }
 
 /// Serializes tests that mutate `WAVEQ_THREADS`: unit tests in this crate
@@ -136,6 +307,80 @@ mod tests {
             assert_eq!(shard.len(), 8);
         });
         assert_eq!(calls.load(Ordering::Relaxed), 1);
+        std::env::remove_var("WAVEQ_THREADS");
+    }
+
+    #[test]
+    fn persistent_pool_serves_many_dispatches() {
+        let _guard = env_lock();
+        std::env::set_var("WAVEQ_THREADS", "4");
+        // Far more dispatches than workers: each must complete and cover
+        // its rows exactly once (workers are reused, not respawned).
+        for round in 0..50usize {
+            let (rows, width) = (16 + round % 7, 3);
+            let mut out = vec![0.0f32; rows * width];
+            run_rows(&mut out, rows, width, 1, |r0, shard| {
+                for (i, v) in shard.iter_mut().enumerate() {
+                    *v = (r0 * width + i) as f32;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i as f32, "round {round} element {i}");
+            }
+        }
+        std::env::remove_var("WAVEQ_THREADS");
+    }
+
+    #[test]
+    fn nested_dispatch_runs_serially_instead_of_deadlocking() {
+        let _guard = env_lock();
+        std::env::set_var("WAVEQ_THREADS", "4");
+        let (rows, width) = (32, 4);
+        let mut out = vec![0.0f32; rows * width];
+        run_rows(&mut out, rows, width, 1, |r0, shard| {
+            // A dispatch from inside a shard must fall back to serial
+            // execution (IN_POOL_TASK) rather than queue sub-tasks that
+            // no free worker can serve.
+            let mut inner = vec![0.0f32; 8 * 2];
+            run_rows(&mut inner, 8, 2, 1, |ir0, ishard| {
+                for (i, v) in ishard.iter_mut().enumerate() {
+                    *v = (ir0 * 2 + i) as f32;
+                }
+            });
+            let inner_sum: f32 = inner.iter().sum();
+            for (i, v) in shard.iter_mut().enumerate() {
+                *v = (r0 * width + i) as f32 + inner_sum - 120.0; // sum 0..16 = 120
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as f32, "element {i}");
+        }
+        std::env::remove_var("WAVEQ_THREADS");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let _guard = env_lock();
+        std::env::set_var("WAVEQ_THREADS", "4");
+        let result = catch_unwind(|| {
+            let mut out = vec![0.0f32; 64 * 4];
+            run_rows(&mut out, 64, 4, 1, |r0, _| {
+                if r0 > 0 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(result.is_err(), "shard panic must propagate to the dispatcher");
+        // The pool must keep serving dispatches after a task panic.
+        let mut out = vec![0.0f32; 64 * 4];
+        run_rows(&mut out, 64, 4, 1, |r0, shard| {
+            for (i, v) in shard.iter_mut().enumerate() {
+                *v = (r0 * 4 + i) as f32;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
         std::env::remove_var("WAVEQ_THREADS");
     }
 }

@@ -7,7 +7,9 @@
 //!
 //! All programs return a single tuple (lowered with `return_tuple=True`);
 //! [`PjrtBackend::execute`] decomposes it into one [`Buffer`] per named
-//! output.
+//! output. `execute_into` is served by the trait's default copy-out
+//! fallback: PJRT owns its device buffers, so results are fetched and then
+//! moved into the caller's output slots (no in-place write).
 //!
 //! Only built with `--features pjrt`, which additionally requires the
 //! vendored `xla` crate closure in Cargo.toml (see the feature note there);
@@ -113,11 +115,9 @@ impl Backend for PjrtBackend {
         let outs = tuple
             .to_tuple()
             .map_err(|e| anyhow!("untupling {} result: {e:?}", sig.name))?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.executions += 1;
-            st.execute_secs += t0.elapsed().as_secs_f64();
-        }
+        self.stats
+            .borrow_mut()
+            .record_execute(&sig.name, t0.elapsed().as_secs_f64());
         outs.iter().map(from_literal).collect()
     }
 

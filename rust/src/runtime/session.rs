@@ -1,0 +1,721 @@
+//! Stateful training sessions over prepared program handles: the
+//! backend-resident training state (parameters, momenta, the continuous
+//! bitwidth beta and its velocity, the step counter) lives *inside* the
+//! [`Session`], keyed by the manifest's `ParamMeta` order, and one
+//! [`Session::step`] call runs one train-program dispatch with
+//!
+//! * **no name lookups** — the train/eval programs are resolved once via
+//!   [`Runtime::prepare`] at [`Session::open`] time;
+//! * **no steady-state allocation of tensors** — inputs are refreshed into
+//!   preallocated buffers and outputs land in a double-buffered output set
+//!   that is *flipped* with the state (`std::mem::swap`) instead of
+//!   reallocated;
+//! * **no full-state host copies** — only the small beta/vbeta mirrors and
+//!   the scalar metrics cross back to the coordinator each step.
+//!
+//! The trainer's old loop (manual positional `args` vec assembly plus
+//! manifest-ordered output re-threading) shrinks to `session.step(..)`;
+//! the legacy stringly-typed [`Runtime::execute`] path remains only as the
+//! tests' oracle, and `tests/session.rs` asserts the two are bitwise
+//! identical over a 50-step WaveQ run.
+//!
+//! # Example
+//!
+//! ```
+//! use waveq::runtime::{Runtime, Session, SessionCfg, StepKnobs};
+//!
+//! let rt = Runtime::native();
+//! let mut session = Session::open(
+//!     &rt,
+//!     &SessionCfg {
+//!         train_program: "train_waveq_mlp".into(),
+//!         eval_program: "eval_quant_mlp".into(),
+//!         seed: 7,
+//!         beta_init: 6.0,
+//!         preset_kw: None,
+//!     },
+//! )
+//! .unwrap();
+//!
+//! // One synthetic batch, shaped by the session's model metadata.
+//! let m = session.model().clone();
+//! let pix: usize = m.input_shape.iter().product();
+//! let x = vec![0.1f32; m.batch * pix];
+//! let mut y = vec![0.0f32; m.batch * m.num_classes];
+//! for r in 0..m.batch {
+//!     y[r * m.num_classes + r % m.num_classes] = 1.0;
+//! }
+//!
+//! let knobs = StepKnobs {
+//!     lr: 0.05,
+//!     momentum: 0.9,
+//!     lr_beta: 0.01,
+//!     ka: 255.0,
+//!     lambda_w: 0.1,
+//!     lambda_beta: 0.01,
+//!     beta_train: 1.0,
+//! };
+//! let metrics = session.step(&x, &y, &knobs).unwrap();
+//! assert!(metrics.loss.is_finite());
+//! assert_eq!(session.state().step, 1);
+//!
+//! // Evaluate the current state on the same batch (quantized eval needs
+//! // the per-layer level counts kw and the activation levels ka).
+//! let kw = vec![7.0f32; m.num_qlayers];
+//! let (eval_loss, eval_acc) = session.eval(&x, &y, Some(&kw), 255.0).unwrap();
+//! assert!(eval_loss.is_finite() && (0.0..=1.0).contains(&eval_acc));
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use super::backend::{Program, Runtime};
+use super::buffer::{buffer_f32, to_vec_f32, Buffer};
+use super::manifest::ModelMeta;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Backend-interchange train state: parameters + optimizer velocities as
+/// runtime buffers in the manifest's `ParamMeta` order, plus the small
+/// host-side mirrors the coordinator actually inspects (beta, scalars).
+/// Owned by a [`Session`] during training; extracted via
+/// [`Session::into_state`] for checkpointing and analysis.
+pub struct SessionState {
+    pub params: Vec<Buffer>,
+    pub vels: Vec<Buffer>,
+    /// Continuous per-layer bitwidth parameter (waveq programs only).
+    pub beta: Vec<f32>,
+    pub vbeta: Vec<f32>,
+    pub step: usize,
+}
+
+impl SessionState {
+    /// He/affine initialization matching the layer kinds in the manifest.
+    pub fn init(model: &ModelMeta, seed: u64, beta_init: f32) -> Result<SessionState> {
+        let mut rng = Rng::new(seed).split(0x1417);
+        let mut params = Vec::with_capacity(model.params.len());
+        let mut vels = Vec::with_capacity(model.params.len());
+        for p in &model.params {
+            let n: usize = p.shape.iter().product();
+            // Fixup-style: residual-body tail convs start near zero so deep
+            // residual chains begin as identity (manifest init = "he_res").
+            let res_scale = if p.init == "he_res" { 0.1 } else { 1.0 };
+            let data = match p.kind.as_str() {
+                "conv" | "dwconv" => {
+                    let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
+                    rng.normal_vec(n, res_scale * (2.0 / fan_in as f32).sqrt())
+                }
+                "fc" => {
+                    let fan_in = p.shape[0];
+                    rng.normal_vec(n, (2.0 / fan_in as f32).sqrt())
+                }
+                "affine" if p.name.ends_with("_s") => vec![1.0; n],
+                _ => vec![0.0; n], // biases, affine shifts
+            };
+            params.push(buffer_f32(&data, &p.shape)?);
+            vels.push(buffer_f32(&vec![0.0; n], &p.shape)?);
+        }
+        Ok(SessionState {
+            params,
+            vels,
+            beta: vec![beta_init; model.num_qlayers],
+            vbeta: vec![0.0; model.num_qlayers],
+            step: 0,
+        })
+    }
+
+    /// Host copy of one parameter (observers, checkpoints, histograms).
+    pub fn param_tensor(&self, model: &ModelMeta, idx: usize) -> Result<Tensor> {
+        let data = to_vec_f32(&self.params[idx])?;
+        Tensor::new(model.params[idx].shape.clone(), data)
+    }
+
+    /// Host copies of all parameters.
+    pub fn all_params(&self, model: &ModelMeta) -> Result<Vec<Tensor>> {
+        (0..self.params.len()).map(|i| self.param_tensor(model, i)).collect()
+    }
+
+    /// Replace parameters from host tensors (checkpoint restore).
+    pub fn set_params(&mut self, tensors: &[Tensor]) -> Result<()> {
+        if tensors.len() != self.params.len() {
+            return Err(anyhow!(
+                "checkpoint has {} params, model wants {}",
+                tensors.len(),
+                self.params.len()
+            ));
+        }
+        self.params = tensors
+            .iter()
+            .map(|t| buffer_f32(&t.data, &t.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+}
+
+/// Positional role of each train-program input (resolved once at open).
+enum Slot {
+    Param(usize),
+    Vel(usize),
+    Beta,
+    VBeta,
+    X,
+    Y,
+    /// Homogeneous preset kw vector (dorefa/wrpn programs); filled once at
+    /// open from [`SessionCfg::preset_kw`].
+    KwVec,
+    Scalar(ScalarKnob),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ScalarKnob {
+    Lr,
+    Mom,
+    LrBeta,
+    Ka,
+    LambdaW,
+    LambdaBeta,
+    BetaTrain,
+}
+
+/// The per-step schedule knobs the coordinator feeds a train dispatch.
+/// Knobs a program does not take (e.g. `lr_beta` on an fp32 program) are
+/// simply ignored.
+#[derive(Debug, Clone, Default)]
+pub struct StepKnobs {
+    pub lr: f32,
+    pub momentum: f32,
+    pub lr_beta: f32,
+    /// Activation quantizer level count (`2^a_bits - 1`).
+    pub ka: f32,
+    pub lambda_w: f32,
+    pub lambda_beta: f32,
+    /// 1.0 while beta is learning, 0.0 once frozen (phase 3).
+    pub beta_train: f32,
+}
+
+impl StepKnobs {
+    fn get(&self, k: ScalarKnob) -> f32 {
+        match k {
+            ScalarKnob::Lr => self.lr,
+            ScalarKnob::Mom => self.momentum,
+            ScalarKnob::LrBeta => self.lr_beta,
+            ScalarKnob::Ka => self.ka,
+            ScalarKnob::LambdaW => self.lambda_w,
+            ScalarKnob::LambdaBeta => self.lambda_beta,
+            ScalarKnob::BetaTrain => self.beta_train,
+        }
+    }
+}
+
+/// The scalar outputs of one train step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub acc: f32,
+    /// Cross-entropy alone (waveq programs only).
+    pub ce: Option<f32>,
+    /// The sinusoidal regularization term (waveq programs only).
+    pub reg_w: Option<f32>,
+}
+
+/// What a [`Session`] is opened over.
+#[derive(Debug, Clone)]
+pub struct SessionCfg {
+    pub train_program: String,
+    pub eval_program: String,
+    /// Seed for the parameter initialization.
+    pub seed: u64,
+    /// Initial value of every beta slot (waveq programs).
+    pub beta_init: f32,
+    /// Per-layer quantizer level counts for programs taking a `kw` input
+    /// (dorefa / wrpn); must be `Some` with `num_qlayers` entries there.
+    pub preset_kw: Option<Vec<f32>>,
+}
+
+/// A stateful training session: prepared train/eval handles + the training
+/// state they advance + every preallocated I/O buffer of the hot loop.
+pub struct Session<'rt> {
+    train: Program<'rt>,
+    eval: Program<'rt>,
+    model: ModelMeta,
+    slots: Vec<Slot>,
+    n_params: usize,
+    x_idx: usize,
+    y_idx: usize,
+    // Train-program output indices (absolute, in manifest order).
+    out_beta: Option<usize>,
+    out_loss: usize,
+    out_acc: usize,
+    out_ce: Option<usize>,
+    out_regw: Option<usize>,
+    // Eval-program layout.
+    eval_quant: bool,
+    eval_out_loss: usize,
+    eval_out_acc: usize,
+    // State + preallocated I/O.
+    state: SessionState,
+    /// One input buffer per slot (placeholders for Param/Vel slots, whose
+    /// storage lives in `state`).
+    bufs: Vec<Buffer>,
+    /// Double-buffered outputs, flipped with `state` after each step.
+    outs: Vec<Buffer>,
+    eval_kw_buf: Buffer,
+    eval_ka_buf: Buffer,
+    eval_outs: Vec<Buffer>,
+}
+
+impl<'rt> Session<'rt> {
+    /// Resolve both programs once, pre-validate the positional layout, and
+    /// initialize the backend-resident state (He init at `cfg.seed`).
+    pub fn open(rt: &'rt Runtime, cfg: &SessionCfg) -> Result<Session<'rt>> {
+        let train = rt.prepare(&cfg.train_program)?;
+        let eval = rt.prepare(&cfg.eval_program)?;
+        let model_key = train
+            .sig()
+            .model
+            .clone()
+            .ok_or_else(|| anyhow!("{}: program declares no model", cfg.train_program))?;
+        let model = rt.manifest.model(&model_key)?.clone();
+        let nq = model.num_qlayers;
+
+        // ---- resolve the train program's positional layout ---------------
+        let mut slots = Vec::with_capacity(train.sig().inputs.len());
+        let (mut pi, mut vi) = (0usize, 0usize);
+        let (mut x_idx, mut y_idx) = (None, None);
+        for (i, a) in train.sig().inputs.iter().enumerate() {
+            slots.push(match a.name.as_str() {
+                n if n.starts_with("w:") => {
+                    pi += 1;
+                    Slot::Param(pi - 1)
+                }
+                n if n.starts_with("v:") => {
+                    vi += 1;
+                    Slot::Vel(vi - 1)
+                }
+                "beta" => Slot::Beta,
+                "vbeta" => Slot::VBeta,
+                "x" => {
+                    x_idx = Some(i);
+                    Slot::X
+                }
+                "y" => {
+                    y_idx = Some(i);
+                    Slot::Y
+                }
+                "kw" => Slot::KwVec,
+                "lr" => Slot::Scalar(ScalarKnob::Lr),
+                "mom" => Slot::Scalar(ScalarKnob::Mom),
+                "lr_beta" => Slot::Scalar(ScalarKnob::LrBeta),
+                "ka" => Slot::Scalar(ScalarKnob::Ka),
+                "lambda_w" => Slot::Scalar(ScalarKnob::LambdaW),
+                "lambda_beta" => Slot::Scalar(ScalarKnob::LambdaBeta),
+                "beta_train" => Slot::Scalar(ScalarKnob::BetaTrain),
+                other => return Err(anyhow!("{}: unknown input '{other}'", cfg.train_program)),
+            });
+        }
+        let n_params = pi;
+        if n_params != model.num_params() || vi != n_params {
+            return Err(anyhow!(
+                "{}: signature has {n_params} w / {vi} v inputs, model '{model_key}' has {}",
+                cfg.train_program,
+                model.num_params()
+            ));
+        }
+        let (x_idx, y_idx) = match (x_idx, y_idx) {
+            (Some(x), Some(y)) => (x, y),
+            _ => return Err(anyhow!("{}: not a train program (no x/y)", cfg.train_program)),
+        };
+
+        // ---- preallocate one input buffer per slot ------------------------
+        let mut bufs = Vec::with_capacity(slots.len());
+        for slot in &slots {
+            bufs.push(match slot {
+                // Placeholders — the real storage lives in `state`.
+                Slot::Param(_) | Slot::Vel(_) => Buffer::scalar(0.0),
+                Slot::Beta | Slot::VBeta => Buffer::zeros(vec![nq]),
+                Slot::X => Buffer::zeros(vec![
+                    model.batch,
+                    model.input_shape[0],
+                    model.input_shape[1],
+                    model.input_shape[2],
+                ]),
+                Slot::Y => Buffer::zeros(vec![model.batch, model.num_classes]),
+                Slot::KwVec => {
+                    let kw = cfg.preset_kw.as_deref().ok_or_else(|| {
+                        anyhow!("{}: program takes kw but cfg.preset_kw is None", cfg.train_program)
+                    })?;
+                    if kw.len() != nq {
+                        return Err(anyhow!(
+                            "{}: preset_kw has {} entries, model wants {nq}",
+                            cfg.train_program,
+                            kw.len()
+                        ));
+                    }
+                    buffer_f32(kw, &[nq])?
+                }
+                Slot::Scalar(_) => Buffer::scalar(0.0),
+            });
+        }
+
+        // ---- output indices + double-buffered output set ------------------
+        let sig = train.sig();
+        let out_loss = sig.output_index("loss")?;
+        let out_acc = sig.output_index("acc")?;
+        let out_ce = sig.output_index("ce").ok();
+        let out_regw = sig.output_index("reg_w").ok();
+        let out_beta = sig.output_index("beta").ok();
+        let mut outs = Vec::with_capacity(sig.outputs.len());
+        let (mut wo, mut vo) = (0usize, 0usize);
+        for name in &sig.outputs {
+            outs.push(match name.as_str() {
+                n if n.starts_with("w:") => {
+                    wo += 1;
+                    Buffer::zeros(model.params[wo - 1].shape.clone())
+                }
+                n if n.starts_with("v:") => {
+                    vo += 1;
+                    Buffer::zeros(model.params[vo - 1].shape.clone())
+                }
+                "beta" | "vbeta" => Buffer::zeros(vec![nq]),
+                _ => Buffer::scalar(0.0), // loss, acc, ce, reg_w
+            });
+        }
+        if wo != n_params || vo != n_params {
+            return Err(anyhow!(
+                "{}: outputs carry {wo} w / {vo} v tensors, expected {n_params}",
+                cfg.train_program
+            ));
+        }
+
+        // ---- eval layout --------------------------------------------------
+        let esig = eval.sig();
+        let eval_quant = esig.inputs.iter().any(|a| a.name == "kw");
+        let want = n_params + 2 + if eval_quant { 2 } else { 0 };
+        if esig.inputs.len() != want {
+            return Err(anyhow!(
+                "{}: eval signature has {} inputs, expected {want} for model '{model_key}'",
+                cfg.eval_program,
+                esig.inputs.len()
+            ));
+        }
+        let eval_out_loss = esig.output_index("loss")?;
+        let eval_out_acc = esig.output_index("acc")?;
+        let eval_outs = vec![Buffer::scalar(0.0); esig.outputs.len()];
+
+        let state = SessionState::init(&model, cfg.seed, cfg.beta_init)?;
+        Ok(Session {
+            train,
+            eval,
+            model,
+            slots,
+            n_params,
+            x_idx,
+            y_idx,
+            out_beta,
+            out_loss,
+            out_acc,
+            out_ce,
+            out_regw,
+            eval_quant,
+            eval_out_loss,
+            eval_out_acc,
+            state,
+            bufs,
+            outs,
+            eval_kw_buf: Buffer::zeros(vec![nq]),
+            eval_ka_buf: Buffer::scalar(0.0),
+            eval_outs,
+        })
+    }
+
+    /// The model this session trains (manifest metadata).
+    pub fn model(&self) -> &ModelMeta {
+        &self.model
+    }
+
+    /// Name of the prepared train program.
+    pub fn train_program(&self) -> &str {
+        self.train.name()
+    }
+
+    /// The live training state (read-only).
+    pub fn state(&self) -> &SessionState {
+        &self.state
+    }
+
+    /// Mutable access to the live state — the coordinator's freeze step
+    /// snaps beta / zeroes vbeta through this.
+    pub fn state_mut(&mut self) -> &mut SessionState {
+        &mut self.state
+    }
+
+    /// Extract the state (end of training; checkpointing).
+    pub fn into_state(self) -> SessionState {
+        self.state
+    }
+
+    /// Replace the whole state (checkpoint restore). Shapes must match the
+    /// session's model.
+    pub fn load_state(&mut self, state: SessionState) -> Result<()> {
+        if state.params.len() != self.n_params || state.vels.len() != self.n_params {
+            return Err(anyhow!(
+                "load_state: got {} params / {} vels, model wants {}",
+                state.params.len(),
+                state.vels.len(),
+                self.n_params
+            ));
+        }
+        for (i, p) in self.model.params.iter().enumerate() {
+            if state.params[i].shape != p.shape || state.vels[i].shape != p.shape {
+                return Err(anyhow!(
+                    "load_state: param {} has shape {:?}, model wants {:?}",
+                    p.name,
+                    state.params[i].shape,
+                    p.shape
+                ));
+            }
+        }
+        if state.beta.len() != self.model.num_qlayers
+            || state.vbeta.len() != self.model.num_qlayers
+        {
+            return Err(anyhow!(
+                "load_state: beta/vbeta have {}/{} entries, model wants {}",
+                state.beta.len(),
+                state.vbeta.len(),
+                self.model.num_qlayers
+            ));
+        }
+        self.state = state;
+        Ok(())
+    }
+
+    /// Run one train step on a host batch: refresh the preallocated input
+    /// buffers, dispatch through the prepared handle into the back output
+    /// buffers, then flip state and outputs. Steady state allocates no
+    /// tensor storage and copies no parameters.
+    pub fn step(&mut self, x: &[f32], y: &[f32], knobs: &StepKnobs) -> Result<StepMetrics> {
+        let (out_beta, out_loss, out_acc) = (self.out_beta, self.out_loss, self.out_acc);
+        let (out_ce, out_regw) = (self.out_ce, self.out_regw);
+        let Session { train, slots, state, bufs, outs, n_params, .. } = self;
+        let np = *n_params;
+        // Refresh inputs.
+        for (i, slot) in slots.iter().enumerate() {
+            match slot {
+                Slot::X => bufs[i].fill_from(x)?,
+                Slot::Y => bufs[i].fill_from(y)?,
+                Slot::Beta => bufs[i].fill_from(&state.beta)?,
+                Slot::VBeta => bufs[i].fill_from(&state.vbeta)?,
+                Slot::Scalar(k) => bufs[i].data[0] = knobs.get(*k),
+                Slot::Param(_) | Slot::Vel(_) | Slot::KwVec => {}
+            }
+        }
+        // Assemble positional refs (state buffers are borrowed, not moved).
+        let args: Vec<&Buffer> = slots
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| match slot {
+                Slot::Param(p) => &state.params[*p],
+                Slot::Vel(v) => &state.vels[*v],
+                _ => &bufs[i],
+            })
+            .collect();
+        train.call_into(&args, outs)?;
+        // Flip: the freshly-written outputs become the state; the old state
+        // buffers become the next step's output storage.
+        for i in 0..np {
+            std::mem::swap(&mut state.params[i], &mut outs[i]);
+            std::mem::swap(&mut state.vels[i], &mut outs[np + i]);
+        }
+        if let Some(bi) = out_beta {
+            state.beta.copy_from_slice(&outs[bi].data);
+            state.vbeta.copy_from_slice(&outs[bi + 1].data);
+        }
+        state.step += 1;
+        Ok(StepMetrics {
+            loss: outs[out_loss].data[0],
+            acc: outs[out_acc].data[0],
+            ce: out_ce.map(|i| outs[i].data[0]),
+            reg_w: out_regw.map(|i| outs[i].data[0]),
+        })
+    }
+
+    /// Evaluate the *current* state on one host batch through the prepared
+    /// eval program. Quantized eval programs need the per-layer level
+    /// counts `kw` (e.g. `BitAssignment::kw()`) and the activation level
+    /// count `ka`; fp32 eval ignores both.
+    pub fn eval(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        kw: Option<&[f32]>,
+        ka: f32,
+    ) -> Result<(f32, f32)> {
+        let (eval_out_loss, eval_out_acc) = (self.eval_out_loss, self.eval_out_acc);
+        let Session {
+            eval,
+            state,
+            bufs,
+            eval_outs,
+            eval_kw_buf,
+            eval_ka_buf,
+            x_idx,
+            y_idx,
+            eval_quant,
+            ..
+        } = self;
+        bufs[*x_idx].fill_from(x)?;
+        bufs[*y_idx].fill_from(y)?;
+        if *eval_quant {
+            let kw = kw.ok_or_else(|| anyhow!("{}: quantized eval needs kw", eval.name()))?;
+            eval_kw_buf.fill_from(kw)?;
+            eval_ka_buf.data[0] = ka;
+        }
+        let mut args: Vec<&Buffer> = Vec::with_capacity(state.params.len() + 4);
+        args.extend(state.params.iter());
+        args.push(&bufs[*x_idx]);
+        args.push(&bufs[*y_idx]);
+        if *eval_quant {
+            args.push(eval_kw_buf);
+            args.push(eval_ka_buf);
+        }
+        eval.call_into(&args, eval_outs)?;
+        Ok((eval_outs[eval_out_loss].data[0], eval_outs[eval_out_acc].data[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch_for(model: &ModelMeta) -> (Vec<f32>, Vec<f32>) {
+        let pix: usize = model.input_shape.iter().product();
+        let x: Vec<f32> = (0..model.batch * pix).map(|i| ((i as f32) * 0.11).sin()).collect();
+        let mut y = vec![0.0f32; model.batch * model.num_classes];
+        for r in 0..model.batch {
+            y[r * model.num_classes + r % model.num_classes] = 1.0;
+        }
+        (x, y)
+    }
+
+    fn knobs() -> StepKnobs {
+        StepKnobs {
+            lr: 0.05,
+            momentum: 0.9,
+            lr_beta: 0.01,
+            ka: 255.0,
+            lambda_w: 0.1,
+            lambda_beta: 0.01,
+            beta_train: 1.0,
+        }
+    }
+
+    #[test]
+    fn waveq_session_steps_and_evaluates() {
+        let rt = Runtime::native();
+        let mut s = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_waveq_mlp".into(),
+                eval_program: "eval_quant_mlp".into(),
+                seed: 7,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        let (x, y) = batch_for(&s.model().clone());
+        let m0 = s.step(&x, &y, &knobs()).unwrap();
+        assert!(m0.loss.is_finite() && m0.ce.is_some() && m0.reg_w.is_some());
+        let m1 = s.step(&x, &y, &knobs()).unwrap();
+        assert!(m1.loss < m0.loss, "same batch twice must reduce loss");
+        assert_eq!(s.state().step, 2);
+        let kw = vec![15.0; s.model().num_qlayers];
+        let (el, ea) = s.eval(&x, &y, Some(&kw), 255.0).unwrap();
+        assert!(el.is_finite() && (0.0..=1.0).contains(&ea));
+        // Another step after an eval keeps working (buffers are reusable).
+        s.step(&x, &y, &knobs()).unwrap();
+        assert_eq!(s.state().step, 3);
+    }
+
+    #[test]
+    fn dorefa_session_requires_preset_kw() {
+        let rt = Runtime::native();
+        let missing = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_dorefa_mlp".into(),
+                eval_program: "eval_quant_mlp".into(),
+                seed: 1,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        );
+        assert!(missing.is_err(), "dorefa programs take kw; open must demand it");
+        let mut s = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_dorefa_mlp".into(),
+                eval_program: "eval_quant_mlp".into(),
+                seed: 1,
+                beta_init: 4.0,
+                preset_kw: Some(vec![7.0; 2]),
+            },
+        )
+        .unwrap();
+        let (x, y) = batch_for(&s.model().clone());
+        let m = s.step(&x, &y, &knobs()).unwrap();
+        assert!(m.loss.is_finite() && m.ce.is_none());
+    }
+
+    #[test]
+    fn open_rejects_non_train_programs() {
+        let rt = Runtime::native();
+        // reg_profile declares no model, so open fails at the model guard.
+        let err = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "reg_profile".into(),
+                eval_program: "eval_fp32_mlp".into(),
+                seed: 1,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("declares no model"), "{err}");
+        // An eval program has a model but no velocity inputs: rejected by
+        // the w/v layout check.
+        let err = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "eval_fp32_mlp".into(),
+                eval_program: "eval_fp32_mlp".into(),
+                seed: 1,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("v inputs"), "{err}");
+    }
+
+    #[test]
+    fn step_rejects_wrong_batch_length() {
+        let rt = Runtime::native();
+        let mut s = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_fp32_mlp".into(),
+                eval_program: "eval_fp32_mlp".into(),
+                seed: 2,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        let (x, y) = batch_for(&s.model().clone());
+        assert!(s.step(&x[..10], &y, &knobs()).is_err());
+        assert!(s.step(&x, &y[..4], &knobs()).is_err());
+        // A good call still works afterwards.
+        assert!(s.step(&x, &y, &knobs()).is_ok());
+    }
+}

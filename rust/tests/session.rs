@@ -1,0 +1,247 @@
+//! Session-API integration: the new zero-alloc stepping path
+//! (`Runtime::prepare` + `Session::step` over `Backend::execute_into`)
+//! must be *bitwise identical* to the legacy stringly-typed
+//! `Runtime::execute` path with manual manifest-ordered output
+//! re-threading — and bitwise identical across `WAVEQ_THREADS` values on
+//! the persistent worker pool. Plus the error paths: `prepare` on unknown
+//! programs and shape-mismatched `call_into`.
+
+use waveq::runtime::{
+    buffer_f32, scalar_f32, Buffer, ModelMeta, Runtime, Session, SessionCfg, SessionState,
+    StepKnobs,
+};
+use waveq::util::rng::Rng;
+
+/// Serializes the env-mutating tests in this binary (the test harness runs
+/// them on concurrent threads and `WAVEQ_THREADS` is process-global).
+fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn knobs() -> StepKnobs {
+    StepKnobs {
+        lr: 0.05,
+        momentum: 0.9,
+        lr_beta: 0.01,
+        ka: 255.0,
+        lambda_w: 0.1,
+        lambda_beta: 0.01,
+        beta_train: 1.0,
+    }
+}
+
+/// One deterministic batch shaped for the model.
+fn fixed_batch(model: &ModelMeta, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let pix: usize = model.input_shape.iter().product();
+    let mut rng = Rng::new(seed).split(0xBA7);
+    let x = rng.normal_vec(model.batch * pix, 1.0);
+    let mut y = vec![0.0f32; model.batch * model.num_classes];
+    for r in 0..model.batch {
+        y[r * model.num_classes + r % model.num_classes] = 1.0;
+    }
+    (x, y)
+}
+
+/// Final state as raw bit patterns: params, vels, beta, vbeta.
+fn state_bits(state: &SessionState) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = state
+        .params
+        .iter()
+        .chain(state.vels.iter())
+        .map(|b| b.data.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    out.push(state.beta.iter().map(|v| v.to_bits()).collect());
+    out.push(state.vbeta.iter().map(|v| v.to_bits()).collect());
+    out
+}
+
+/// Drive `steps` train steps through the Session API.
+fn run_session(
+    prog: &str,
+    eval_prog: &str,
+    steps: usize,
+    preset_kw: Option<Vec<f32>>,
+) -> Vec<Vec<u32>> {
+    let rt = Runtime::native();
+    let mut session = Session::open(
+        &rt,
+        &SessionCfg {
+            train_program: prog.into(),
+            eval_program: eval_prog.into(),
+            seed: 42,
+            beta_init: 4.0,
+            preset_kw,
+        },
+    )
+    .unwrap();
+    let (x, y) = fixed_batch(&session.model().clone(), 42);
+    for step in 0..steps {
+        let m = session.step(&x, &y, &knobs()).unwrap();
+        assert!(m.loss.is_finite(), "{prog} step {step}: loss {}", m.loss);
+    }
+    state_bits(&session.into_state())
+}
+
+/// Drive the same run through the legacy path: stringly-typed
+/// `Runtime::execute`, positional args assembled by input name, outputs
+/// re-threaded back into the state in manifest order.
+fn run_legacy(prog: &str, steps: usize, preset_kw: Option<Vec<f32>>) -> Vec<Vec<u32>> {
+    let rt = Runtime::native();
+    let sig = rt.sig(prog).unwrap().clone();
+    let model = rt.manifest.model(sig.model.as_deref().unwrap()).unwrap().clone();
+    let np = model.num_params();
+    let nq = model.num_qlayers;
+    let mut state = SessionState::init(&model, 42, 4.0).unwrap();
+    let (x, y) = fixed_batch(&model, 42);
+    let k = knobs();
+    let waveq = sig.inputs.iter().any(|a| a.name == "beta");
+    for step in 0..steps {
+        let mut args: Vec<Buffer> = Vec::with_capacity(sig.inputs.len());
+        let (mut pi, mut vi) = (0usize, 0usize);
+        for a in &sig.inputs {
+            args.push(match a.name.as_str() {
+                n if n.starts_with("w:") => {
+                    pi += 1;
+                    state.params[pi - 1].clone()
+                }
+                n if n.starts_with("v:") => {
+                    vi += 1;
+                    state.vels[vi - 1].clone()
+                }
+                "beta" => buffer_f32(&state.beta, &[nq]).unwrap(),
+                "vbeta" => buffer_f32(&state.vbeta, &[nq]).unwrap(),
+                "x" => buffer_f32(&x, &a.shape).unwrap(),
+                "y" => buffer_f32(&y, &a.shape).unwrap(),
+                "kw" => buffer_f32(preset_kw.as_deref().unwrap(), &[nq]).unwrap(),
+                "lr" => scalar_f32(k.lr),
+                "mom" => scalar_f32(k.momentum),
+                "lr_beta" => scalar_f32(k.lr_beta),
+                "ka" => scalar_f32(k.ka),
+                "lambda_w" => scalar_f32(k.lambda_w),
+                "lambda_beta" => scalar_f32(k.lambda_beta),
+                "beta_train" => scalar_f32(k.beta_train),
+                other => panic!("{prog}: unexpected input {other}"),
+            });
+        }
+        let mut outs = rt.execute(prog, &args).unwrap();
+        let loss = outs[sig.output_index("loss").unwrap()].data[0];
+        assert!(loss.is_finite(), "{prog} legacy step {step}: loss {loss}");
+        if waveq {
+            state.vbeta = outs[2 * np + 1].data.clone();
+            state.beta = outs[2 * np].data.clone();
+        }
+        state.vels = outs.drain(np..2 * np).collect();
+        state.params = outs.drain(0..np).collect();
+    }
+    state_bits(&state)
+}
+
+fn assert_bits_eq(a: &[Vec<u32>], b: &[Vec<u32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: carried tensor count");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: carried state {i} differs");
+    }
+}
+
+#[test]
+fn waveq_simplenet5_session_is_bit_identical_to_legacy_execute_over_50_steps() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "2");
+    let legacy = run_legacy("train_waveq_simplenet5", 50, None);
+    let session = run_session("train_waveq_simplenet5", "eval_quant_simplenet5", 50, None);
+    std::env::remove_var("WAVEQ_THREADS");
+    assert_bits_eq(&legacy, &session, "waveq simplenet5 session vs legacy");
+}
+
+#[test]
+fn dorefa_mlp_session_is_bit_identical_to_legacy_execute() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "2");
+    let kw = Some(vec![7.0f32; 2]);
+    let legacy = run_legacy("train_dorefa_mlp", 20, kw.clone());
+    let session = run_session("train_dorefa_mlp", "eval_quant_mlp", 20, kw);
+    std::env::remove_var("WAVEQ_THREADS");
+    assert_bits_eq(&legacy, &session, "dorefa mlp session vs legacy");
+}
+
+#[test]
+fn session_state_is_bit_identical_across_1_2_4_threads() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "1");
+    let reference = run_session("train_waveq_simplenet5", "eval_quant_simplenet5", 50, None);
+    for threads in ["2", "4"] {
+        std::env::set_var("WAVEQ_THREADS", threads);
+        let got = run_session("train_waveq_simplenet5", "eval_quant_simplenet5", 50, None);
+        assert_bits_eq(&reference, &got, &format!("session at 1 vs {threads} threads"));
+    }
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+#[test]
+fn session_eval_matches_legacy_eval_bitwise() {
+    let rt = Runtime::native();
+    let mut session = Session::open(
+        &rt,
+        &SessionCfg {
+            train_program: "train_waveq_mlp".into(),
+            eval_program: "eval_quant_mlp".into(),
+            seed: 11,
+            beta_init: 4.0,
+            preset_kw: None,
+        },
+    )
+    .unwrap();
+    let model = session.model().clone();
+    let (x, y) = fixed_batch(&model, 11);
+    session.step(&x, &y, &knobs()).unwrap();
+    let kw = vec![15.0f32; model.num_qlayers];
+    let (sl, sa) = session.eval(&x, &y, Some(&kw), 255.0).unwrap();
+    // Legacy: same params through the stringly-typed path.
+    let mut args: Vec<Buffer> = session.state().params.to_vec();
+    args.push(buffer_f32(&x, &[model.batch, 8, 8, 3]).unwrap());
+    args.push(buffer_f32(&y, &[model.batch, model.num_classes]).unwrap());
+    args.push(buffer_f32(&kw, &[kw.len()]).unwrap());
+    args.push(scalar_f32(255.0));
+    let outs = rt.execute("eval_quant_mlp", &args).unwrap();
+    assert_eq!(sl.to_bits(), outs[0].data[0].to_bits(), "eval loss differs");
+    assert_eq!(sa.to_bits(), outs[1].data[0].to_bits(), "eval acc differs");
+}
+
+#[test]
+fn prepare_unknown_program_is_a_clean_error() {
+    let rt = Runtime::native();
+    let err = rt.prepare("train_waveq_resnet99").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("train_waveq_resnet99"), "{msg}");
+}
+
+#[test]
+fn call_into_rejects_mismatched_output_buffers() {
+    let rt = Runtime::native();
+    let prog = rt.prepare("eval_fp32_mlp").unwrap();
+    let model = rt.manifest.model("mlp").unwrap().clone();
+    let state = SessionState::init(&model, 3, 4.0).unwrap();
+    let (x, y) = fixed_batch(&model, 3);
+    let xb = buffer_f32(&x, &[model.batch, 8, 8, 3]).unwrap();
+    let yb = buffer_f32(&y, &[model.batch, model.num_classes]).unwrap();
+    let mut args: Vec<&Buffer> = state.params.iter().collect();
+    args.push(&xb);
+    args.push(&yb);
+
+    // Wrong output count.
+    let mut short = vec![Buffer::scalar(0.0)];
+    let err = prog.call_into(&args, &mut short).unwrap_err();
+    assert!(format!("{err}").contains("output buffers"), "{err}");
+
+    // Wrong output shape.
+    let mut misshaped = vec![buffer_f32(&[0.0; 4], &[4]).unwrap(), Buffer::scalar(0.0)];
+    let err = prog.call_into(&args, &mut misshaped).unwrap_err();
+    assert!(format!("{err}").contains("shape"), "{err}");
+
+    // Correctly shaped buffers work and receive the results in place.
+    let mut outs = vec![Buffer::scalar(-1.0), Buffer::scalar(-1.0)];
+    prog.call_into(&args, &mut outs).unwrap();
+    assert!(outs[0].data[0].is_finite() && outs[0].data[0] >= 0.0);
+    assert!((0.0..=1.0).contains(&outs[1].data[0]));
+}
