@@ -78,6 +78,27 @@ def runtime_table(report: dict) -> None:
     print()
 
 
+def infer_table(report: dict) -> None:
+    print("## Inference bench (frozen low-bit artifacts, batch-polymorphic sessions)")
+    print()
+    print(f"threads available: {int(report.get('threads_available', 1))}, "
+          f"scale: {report.get('scale', '?')}")
+    print()
+    print("| model | bits | packed weights | vs f32 | batch | imgs/s |")
+    print("|---|---|---|---|---|---|")
+    for m in report.get("models", []):
+        bits = m.get("layer_bits", [])
+        bits_s = f"{int(min(bits))}" if bits and min(bits) == max(bits) else str(
+            [int(b) for b in bits])
+        size_s = f"{int(m['packed_weight_bytes'])} B"
+        red_s = f"{m['size_reduction']:.2f}x smaller"
+        for i, e in enumerate(m.get("entries", [])):
+            head = (f"| {m['model']} | {bits_s} | {size_s} | {red_s} "
+                    if i == 0 else "| | | | ")
+            print(f"{head}| {int(e['batch'])} | {e['imgs_per_s']:.1f} |")
+    print()
+
+
 def main() -> int:
     outdir = Path(sys.argv[1] if len(sys.argv) > 1 else ".")
     found = False
@@ -88,6 +109,10 @@ def main() -> int:
     runtime = outdir / "BENCH_runtime.json"
     if runtime.exists():
         runtime_table(json.loads(runtime.read_text()))
+        found = True
+    infer = outdir / "BENCH_infer.json"
+    if infer.exists():
+        infer_table(json.loads(infer.read_text()))
         found = True
     if not found:
         print(f"no BENCH_*.json reports under {outdir}", file=sys.stderr)

@@ -1,0 +1,87 @@
+//! Inference bench: throughput (imgs/s) of frozen-artifact
+//! [`InferenceSession`]s across batch sizes 1 / 8 / manifest, plus the
+//! artifact storage story (bit-packed weight bytes vs f32). Emits the
+//! machine-readable `BENCH_infer.json` consumed by the `perf-smoke` CI
+//! lane's step summary (`.github/scripts/bench_summary.py`).
+//!
+//! The sessions are frozen from He-initialized WaveQ states (beta 4.0 ->
+//! 4-bit codes everywhere): throughput and size depend only on shapes and
+//! bitwidths, not on how long the state trained.
+
+use waveq::bench_support::{header, row, steps, write_report, BenchRunner};
+use waveq::runtime::{InferenceSession, Runtime, Session, SessionCfg};
+use waveq::util::json::Json;
+use waveq::util::rng::Rng;
+
+fn main() {
+    waveq::util::logging::init();
+    header("infer");
+    let rt = Runtime::native();
+    let iters = steps(10, 60);
+    let mut models_json: Vec<Json> = Vec::new();
+    for base in ["simplenet5", "resnet20l", "mobilenetl"] {
+        let session = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: format!("train_waveq_{base}"),
+                eval_program: format!("eval_quant_{base}"),
+                seed: 42,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        let meta = session.model().clone();
+        let frozen = session.freeze(255.0).unwrap();
+        drop(session);
+        let packed = frozen.packed_weight_bytes();
+        let f32b = frozen.f32_weight_bytes();
+        let reduction = frozen.size_reduction().unwrap_or(1.0);
+        let mut infer = InferenceSession::open(&frozen, meta.batch).unwrap();
+        let pix: usize = meta.input_shape.iter().product();
+        let x = Rng::new(7).normal_vec(meta.batch * pix, 1.0);
+
+        let mut entries: Vec<Json> = Vec::new();
+        for &b in &[1usize, 8, meta.batch] {
+            if b > meta.batch {
+                continue;
+            }
+            let runner = BenchRunner::new(3, iters);
+            let stats = runner.bench(&format!("infer {base} batch={b}"), || {
+                let _ = infer.infer(&x[..b * pix], b).unwrap();
+            });
+            let imgs_per_s = b as f64 * stats.per_sec();
+            row(&["infer", base, &format!("batch={b}"), &format!("{imgs_per_s:.1} imgs/s")]);
+            entries.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("imgs_per_s", Json::Num(imgs_per_s)),
+                ("dispatch_mean_s", Json::Num(stats.mean.as_secs_f64())),
+            ]));
+        }
+        row(&[
+            "artifact",
+            base,
+            &format!("packed={packed}B f32={f32b}B ({reduction:.2}x smaller)"),
+        ]);
+        let bits: Vec<usize> = frozen.layer_bits().iter().map(|&b| b as usize).collect();
+        models_json.push(Json::obj(vec![
+            ("model", Json::Str(meta.name.clone())),
+            ("manifest_batch", Json::Num(meta.batch as f64)),
+            ("layer_bits", Json::arr_usize(&bits)),
+            ("packed_weight_bytes", Json::Num(packed as f64)),
+            ("f32_weight_bytes", Json::Num(f32b as f64)),
+            ("size_reduction", Json::Num(reduction)),
+            ("entries", Json::Arr(entries)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("bench", Json::Str("infer".into())),
+        (
+            "threads_available",
+            Json::Num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+        ),
+        ("scale", Json::Str(format!("{:?}", waveq::bench_support::scale()))),
+        ("models", Json::Arr(models_json)),
+    ]);
+    write_report("infer", &report).unwrap();
+}

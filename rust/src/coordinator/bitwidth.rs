@@ -59,9 +59,9 @@ impl BitAssignment {
     }
 }
 
-pub fn ceil_bits(beta: f32) -> u32 {
-    (beta.ceil() as i64).clamp(2, 8) as u32
-}
+/// Re-exported from the runtime kernels — the same mapping
+/// `Session::freeze` packs artifacts with (one definition, Eq. 2.4).
+pub use crate::runtime::native::kernels::ceil_bits;
 
 #[cfg(test)]
 mod tests {

@@ -1,144 +1,6 @@
-//! Binary checkpointing of train state (own format; no serde offline).
-//!
-//! Layout (little-endian):
-//!   magic "WVQCKPT1" | u32 n_tensors | per tensor:
-//!     u32 name_len | name bytes | u32 rank | u64 dims[rank] | f32 data[]
-//! plus a trailing beta section: u32 q | f32 beta[q] | f32 vbeta[q].
+//! Checkpointing moved into the runtime layer (`runtime::checkpoint`) so
+//! `Session::save_checkpoint` / `load_checkpoint` can use it without the
+//! runtime reaching up into the coordinator. This alias keeps the
+//! historical `coordinator::Checkpoint` path working.
 
-use std::io::{Read, Write};
-use std::path::Path;
-
-use anyhow::{anyhow, Context, Result};
-
-use crate::tensor::Tensor;
-
-const MAGIC: &[u8; 8] = b"WVQCKPT1";
-
-pub struct Checkpoint {
-    pub tensors: Vec<(String, Tensor)>,
-    pub beta: Vec<f32>,
-    pub vbeta: Vec<f32>,
-}
-
-impl Checkpoint {
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = std::io::BufWriter::new(
-            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-        );
-        f.write_all(MAGIC)?;
-        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
-        for (name, t) in &self.tensors {
-            f.write_all(&(name.len() as u32).to_le_bytes())?;
-            f.write_all(name.as_bytes())?;
-            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-            for &d in &t.shape {
-                f.write_all(&(d as u64).to_le_bytes())?;
-            }
-            for &v in &t.data {
-                f.write_all(&v.to_le_bytes())?;
-            }
-        }
-        f.write_all(&(self.beta.len() as u32).to_le_bytes())?;
-        for &v in self.beta.iter().chain(&self.vbeta) {
-            f.write_all(&v.to_le_bytes())?;
-        }
-        Ok(())
-    }
-
-    pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-        );
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            return Err(anyhow!("{} is not a waveq checkpoint", path.display()));
-        }
-        let n = read_u32(&mut f)? as usize;
-        let mut tensors = Vec::with_capacity(n);
-        for _ in 0..n {
-            let name_len = read_u32(&mut f)? as usize;
-            let mut name = vec![0u8; name_len];
-            f.read_exact(&mut name)?;
-            let rank = read_u32(&mut f)? as usize;
-            let mut shape = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                shape.push(read_u64(&mut f)? as usize);
-            }
-            let count: usize = shape.iter().product();
-            let mut data = vec![0f32; count];
-            read_f32s(&mut f, &mut data)?;
-            tensors.push((String::from_utf8(name)?, Tensor::new(shape, data)?));
-        }
-        let q = read_u32(&mut f)? as usize;
-        let mut beta = vec![0f32; q];
-        let mut vbeta = vec![0f32; q];
-        read_f32s(&mut f, &mut beta)?;
-        read_f32s(&mut f, &mut vbeta)?;
-        Ok(Checkpoint { tensors, beta, vbeta })
-    }
-}
-
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
-    let mut buf = vec![0u8; out.len() * 4];
-    r.read_exact(&mut buf)?;
-    for (i, chunk) in buf.chunks_exact(4).enumerate() {
-        out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
-    }
-    Ok(())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn round_trip() {
-        let ck = Checkpoint {
-            tensors: vec![
-                (
-                    "w1".into(),
-                    Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-9, -7.25]).unwrap(),
-                ),
-                ("b1".into(), Tensor::new(vec![3], vec![0.1, 0.2, 0.3]).unwrap()),
-                ("scalar".into(), Tensor::new(vec![], vec![42.0]).unwrap()),
-            ],
-            beta: vec![3.3, 4.7],
-            vbeta: vec![0.01, -0.02],
-        };
-        let path = std::env::temp_dir().join("waveq_ckpt_test.bin");
-        ck.save(&path).unwrap();
-        let back = Checkpoint::load(&path).unwrap();
-        assert_eq!(back.tensors.len(), 3);
-        for ((n1, t1), (n2, t2)) in ck.tensors.iter().zip(&back.tensors) {
-            assert_eq!(n1, n2);
-            assert_eq!(t1, t2);
-        }
-        assert_eq!(back.beta, ck.beta);
-        assert_eq!(back.vbeta, ck.vbeta);
-        std::fs::remove_file(&path).ok();
-    }
-
-    #[test]
-    fn rejects_non_checkpoint() {
-        let path = std::env::temp_dir().join("waveq_ckpt_garbage.bin");
-        std::fs::write(&path, b"not a checkpoint").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
-        std::fs::remove_file(&path).ok();
-    }
-}
+pub use crate::runtime::checkpoint::Checkpoint;

@@ -15,33 +15,60 @@ use crate::runtime::{buffer_f32, Buffer, ModelMeta, Runtime};
 
 /// Deterministic held-out batcher for a model (stream 1 never overlaps train).
 pub fn test_batcher(model: &ModelMeta, n_examples: usize, seed: u64) -> Batcher {
-    let dspec = spec_for_model(model);
-    let ds = Dataset::generate(dspec, n_examples, seed, 1);
-    Batcher::new(ds, model.batch, seed)
+    test_batcher_with_batch(model, n_examples, seed, model.batch)
 }
 
-/// Average a per-batch `(loss, acc)` eval over all full test batches —
-/// the accumulation shared by [`evaluate`] and the trainer's
-/// `Session`-based mid-training probes.
-pub fn eval_batches<F>(test: &Batcher, mut eval_batch: F) -> Result<(f32, f32)>
+/// [`test_batcher`] at a caller-chosen batch size (the `waveq infer` CLI
+/// serves frozen models at arbitrary batches). Stream id 1 is the
+/// held-out convention — keeping it here, in one place, is what
+/// guarantees every eval path scores data the training stream (id 0)
+/// never saw.
+pub fn test_batcher_with_batch(
+    model: &ModelMeta,
+    n_examples: usize,
+    seed: u64,
+    batch: usize,
+) -> Batcher {
+    let dspec = spec_for_model(model);
+    let ds = Dataset::generate(dspec, n_examples, seed, 1);
+    Batcher::new(ds, batch, seed)
+}
+
+/// Average a per-batch `(loss, acc)` eval over the held-out set, weighted
+/// by example count. With `include_tail` set, the ragged final batch is
+/// evaluated too, so the metrics cover *every* held-out example — pass the
+/// backend's batch-polymorphism capability (`Runtime::batch_polymorphic` /
+/// `Session::batch_polymorphic`; always true for `InferenceSession`).
+/// Fixed-shape backends pass `false` and keep the old drop-last behavior
+/// instead of dispatching a batch their compiled programs cannot take.
+/// Shared by [`evaluate`], the trainer's mid-training probes, and the
+/// `waveq infer` CLI.
+pub fn eval_batches<F>(test: &Batcher, include_tail: bool, mut eval_batch: F) -> Result<(f32, f32)>
 where
     F: FnMut(&Batch) -> Result<(f32, f32)>,
 {
-    let batches = test.sequential_batches();
+    let batches = if include_tail {
+        test.sequential_batches_all()
+    } else {
+        test.sequential_batches()
+    };
     if batches.is_empty() {
         return Err(anyhow!("test set smaller than one batch"));
     }
-    let (mut loss_sum, mut acc_sum) = (0f64, 0f64);
+    let (mut loss_sum, mut acc_sum, mut examples) = (0f64, 0f64, 0f64);
     for b in &batches {
         let (l, a) = eval_batch(b)?;
-        loss_sum += l as f64;
-        acc_sum += a as f64;
+        // y is (rows, n_classes): its length weighs the batch by rows.
+        let w = b.y.len() as f64;
+        loss_sum += l as f64 * w;
+        acc_sum += a as f64 * w;
+        examples += w;
     }
-    let n = batches.len() as f64;
-    Ok(((loss_sum / n) as f32, (acc_sum / n) as f32))
+    Ok(((loss_sum / examples) as f32, (acc_sum / examples) as f32))
 }
 
-/// Average (loss, acc) of `params` over all full test batches.
+/// Average (loss, acc) of `params` over the entire held-out set (full
+/// batches + ragged tail).
 ///
 /// `kw = None` selects the fp32 eval signature; otherwise the per-layer
 /// quantizer levels are fed to the quantized eval program.
@@ -81,13 +108,30 @@ pub fn evaluate(
     };
     let mut outs = vec![Buffer::scalar(0.0); prog.sig().outputs.len()];
 
-    eval_batches(test, |b| {
-        x.fill_from(&b.x)?;
-        y.fill_from(&b.y)?;
+    eval_batches(test, rt.batch_polymorphic(), |b| {
+        // Full batches reuse the preallocated slots; the ragged tail
+        // dispatches through fresh buffers at its true shape (the native
+        // backend resolves the batch from the buffer length).
+        let ragged: Option<(Buffer, Buffer)> = if b.x.len() == x.elem_count() {
+            x.fill_from(&b.x)?;
+            y.fill_from(&b.y)?;
+            None
+        } else {
+            let rows = b.y.len() / model.num_classes;
+            Some(model.batch_buffers(rows, &b.x, &b.y)?)
+        };
         let mut args: Vec<&Buffer> = Vec::with_capacity(params.len() + 4);
         args.extend(params.iter());
-        args.push(&x);
-        args.push(&y);
+        match &ragged {
+            Some((xb, yb)) => {
+                args.push(xb);
+                args.push(yb);
+            }
+            None => {
+                args.push(&x);
+                args.push(&y);
+            }
+        }
         if let Some((kwb, kab)) = &quant {
             args.push(kwb);
             args.push(kab);
@@ -95,4 +139,50 @@ pub fn evaluate(
         prog.call_into(&args, &mut outs)?;
         Ok((outs[out_loss].data[0], outs[out_acc].data[0]))
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Runtime, SessionState};
+
+    #[test]
+    fn eval_batches_visits_every_example_and_weights_by_count() {
+        // 100 mlp-lite examples at the manifest batch 64: one full batch
+        // plus a 36-example tail. A synthetic per-batch (loss, acc) shows
+        // the mean is example-weighted, not batch-weighted.
+        let rt = Runtime::native();
+        let model = rt.manifest.model("mlp").unwrap().clone();
+        let test = test_batcher(&model, 100, 7);
+        let mut sizes = Vec::new();
+        let (loss, acc) = eval_batches(&test, true, |b| {
+            let rows = b.y.len() / model.num_classes;
+            sizes.push(rows);
+            Ok((rows as f32, 1.0))
+        })
+        .unwrap();
+        assert_eq!(sizes, vec![64, 36], "tail batch must be visited");
+        let want = (64.0 * 64.0 + 36.0 * 36.0) / 100.0;
+        assert!((loss - want).abs() < 1e-4, "weighted mean {loss} vs {want}");
+        assert!((acc - 1.0).abs() < 1e-6);
+        // Fixed-shape backends opt out: drop-last semantics, full batches only.
+        let mut sizes = Vec::new();
+        eval_batches(&test, false, |b| {
+            sizes.push(b.y.len() / model.num_classes);
+            Ok((0.0, 0.0))
+        })
+        .unwrap();
+        assert_eq!(sizes, vec![64], "include_tail = false must drop the tail");
+    }
+
+    #[test]
+    fn evaluate_serves_the_ragged_tail_through_the_eval_program() {
+        let rt = Runtime::native();
+        let model = rt.manifest.model("mlp").unwrap().clone();
+        let state = SessionState::init(&model, 3, 4.0).unwrap();
+        let test = test_batcher(&model, 100, 7);
+        let (loss, acc) =
+            evaluate(&rt, "eval_fp32_mlp", &model, &state.params, None, 255.0, &test).unwrap();
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+    }
 }

@@ -16,7 +16,9 @@ pub mod trainer;
 
 pub use bitwidth::{ceil_bits, BitAssignment};
 pub use checkpoint::Checkpoint;
-pub use evaluator::{evaluate, test_batcher};
+pub use evaluator::{eval_batches, evaluate, test_batcher, test_batcher_with_batch};
 pub use metrics::MetricsRecorder;
 pub use state::TrainState;
-pub use trainer::{Snapshot, TrackKind, TrackRequest, TrainOptions, TrainOutcome, Trainer};
+pub use trainer::{
+    session_cfg, Snapshot, TrackKind, TrackRequest, TrainOptions, TrainOutcome, Trainer,
+};

@@ -72,6 +72,25 @@ pub struct TrainOutcome {
     pub state: TrainState,
 }
 
+/// The algo -> session mapping: WaveqPreset pins beta at the requested
+/// bits, DoReFa/WRPN preset `kw = levels(bits)` per quantized layer. The
+/// single definition shared by [`Trainer::run`] and the `waveq freeze`
+/// CLI, so a checkpoint always reopens under exactly the session shape it
+/// trained in.
+pub fn session_cfg(cfg: &RunConfig, num_qlayers: usize) -> SessionCfg {
+    SessionCfg {
+        train_program: cfg.algo.train_program(&cfg.model),
+        eval_program: cfg.algo.eval_program(&cfg.model),
+        seed: cfg.seed,
+        beta_init: match cfg.algo {
+            Algo::WaveqPreset => cfg.weight_bits as f32,
+            _ => cfg.beta_init,
+        },
+        preset_kw: matches!(cfg.algo, Algo::Dorefa | Algo::Wrpn)
+            .then(|| vec![levels(cfg.weight_bits); num_qlayers]),
+    }
+}
+
 pub struct Trainer<'a> {
     rt: &'a Runtime,
     pub cfg: RunConfig,
@@ -91,30 +110,23 @@ impl<'a> Trainer<'a> {
         let cfg = self.cfg.clone();
         let model_key = cfg.algo.model_key(&cfg.model);
         let model = self.rt.manifest.model(&model_key)?.clone();
-        let train_prog = cfg.algo.train_program(&cfg.model);
-        let eval_prog = cfg.algo.eval_program(&cfg.model);
 
         // ---- open the session (signature resolution + state init) --------
         let is_waveq = matches!(cfg.algo, Algo::WaveqPreset | Algo::WaveqLearned);
-        let beta_init = match cfg.algo {
-            Algo::WaveqPreset => cfg.weight_bits as f32,
-            _ => cfg.beta_init,
-        };
-        let preset_kw = matches!(cfg.algo, Algo::Dorefa | Algo::Wrpn)
-            .then(|| vec![levels(cfg.weight_bits); model.num_qlayers]);
-        let mut session = Session::open(
-            self.rt,
-            &SessionCfg {
-                train_program: train_prog.clone(),
-                eval_program: eval_prog,
-                seed: cfg.seed,
-                beta_init,
-                preset_kw,
-            },
-        )?;
+        let scfg = session_cfg(&cfg, model.num_qlayers);
+        let train_prog = scfg.train_program.clone();
+        let mut session = Session::open(self.rt, &scfg)?;
         if let Some(path) = &self.opts.init_from {
             let ck = Checkpoint::load(std::path::Path::new(path))
                 .with_context(|| format!("loading init checkpoint {path}"))?;
+            // v2 checkpoints carry the model name — refuse a mismatched
+            // fine-tune (v1 files have no name and load as before).
+            if !ck.model.is_empty() && ck.model != model_key {
+                return Err(anyhow!(
+                    "init checkpoint {path} is for model '{}', run wants '{model_key}'",
+                    ck.model
+                ));
+            }
             let tensors: Vec<_> = ck.tensors.into_iter().map(|(_, t)| t).collect();
             session.state_mut().set_params(&tensors)?;
         }
@@ -292,6 +304,7 @@ impl<'a> Trainer<'a> {
             _ => Some(vec![levels(cfg.weight_bits); session.model().num_qlayers]),
         };
         let test = test_batcher(session.model(), cfg.test_examples, cfg.seed);
-        eval_batches(&test, |b| session.eval(&b.x, &b.y, kw.as_deref(), cfg.ka()))
+        let tail = session.batch_polymorphic();
+        eval_batches(&test, tail, |b| session.eval(&b.x, &b.y, kw.as_deref(), cfg.ka()))
     }
 }

@@ -72,22 +72,36 @@ impl Batcher {
         Batch { x, y, epoch: self.epoch }
     }
 
-    /// All full batches of the dataset in index order (evaluation).
+    /// All full batches of the dataset in index order (drop-last).
     pub fn sequential_batches(&self) -> Vec<Batch> {
+        let full = (self.ds.n / self.batch) * self.batch;
+        self.sequential_rows(full)
+    }
+
+    /// Every batch of the dataset in index order, *including* the final
+    /// ragged batch when the dataset size is not a batch multiple — the
+    /// batch-polymorphic evaluation paths serve the tail at its true size
+    /// so reported metrics cover every held-out example.
+    pub fn sequential_batches_all(&self) -> Vec<Batch> {
+        self.sequential_rows(self.ds.n)
+    }
+
+    fn sequential_rows(&self, n: usize) -> Vec<Batch> {
         let pix = self.ds.pixels();
         let ncls = self.ds.spec.n_classes;
         let mut out = Vec::new();
         let mut start = 0;
-        while start + self.batch <= self.ds.n {
-            let mut x = vec![0.0f32; self.batch * pix];
-            let mut y = vec![0.0f32; self.batch * ncls];
-            for bi in 0..self.batch {
+        while start < n {
+            let rows = self.batch.min(n - start);
+            let mut x = vec![0.0f32; rows * pix];
+            let mut y = vec![0.0f32; rows * ncls];
+            for bi in 0..rows {
                 let idx = start + bi;
                 x[bi * pix..(bi + 1) * pix].copy_from_slice(self.ds.image(idx));
                 y[bi * ncls + self.ds.labels[idx] as usize] = 1.0;
             }
             out.push(Batch { x, y, epoch: 0 });
-            start += self.batch;
+            start += rows;
         }
         out
     }
@@ -265,5 +279,25 @@ mod tests {
         for (i, &l) in labels[..16].iter().enumerate() {
             assert_eq!(batches[0].y[i * 10 + l as usize], 1.0);
         }
+    }
+
+    #[test]
+    fn sequential_batches_all_includes_the_ragged_tail() {
+        // 40 examples at batch 16: two full batches + an 8-example tail.
+        let ds = Dataset::generate(spec("mlp-lite"), 40, 1, 0);
+        let labels = ds.labels.clone();
+        let b = Batcher::new(ds, 16, 0);
+        assert_eq!(b.sequential_batches().len(), 2, "drop-last path unchanged");
+        let all = b.sequential_batches_all();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[2].x.len(), 8 * 8 * 8 * 3);
+        assert_eq!(all[2].y.len(), 8 * 10);
+        // The tail holds examples 32..40 in order.
+        for (i, &l) in labels[32..40].iter().enumerate() {
+            assert_eq!(all[2].y[i * 10 + l as usize], 1.0);
+        }
+        // An exact multiple produces no tail.
+        let b = Batcher::new(small_ds(), 16, 0);
+        assert_eq!(b.sequential_batches_all().len(), 4);
     }
 }

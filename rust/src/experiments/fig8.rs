@@ -44,18 +44,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         let meta = ctx.rt.manifest.model(&pre.model_key)?.clone();
         let ck_path = ctx.out("fig8", &format!("{model}_fp32.ckpt"));
         std::fs::create_dir_all(ck_path.parent().unwrap())?;
-        Checkpoint {
-            tensors: pre
-                .state
-                .all_params(&meta)?
-                .into_iter()
-                .zip(&meta.params)
-                .map(|(t, p)| (p.name.clone(), t))
-                .collect(),
-            beta: pre.state.beta.clone(),
-            vbeta: pre.state.vbeta.clone(),
-        }
-        .save(&ck_path)?;
+        Checkpoint::from_state(&meta, &pre.state)?.save(&ck_path)?;
 
         // Fine-tune with WaveQ engaged.
         let opts = TrainOptions {

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   smoke                      end-to-end stack check (short WaveQ run)
 //!   train       [flags]        one training run (any model/algo/bits)
+//!   freeze      [flags]        pack a checkpoint into a low-bit artifact
+//!   infer       [flags]        serve a frozen artifact (acc + imgs/s)
 //!   experiment  <id|all>       regenerate a paper table/figure (results/)
 //!   energy      [flags]        Stripes energy report for an assignment
 //!   info                       list artifacts, models, programs
@@ -10,22 +12,25 @@
 //! Common flags: --artifacts DIR --config FILE --seed N --scale smoke|full
 //! Train flags:  --model M --algo A --bits B --act-bits A --steps N --lr F
 //!               --lr-beta F --eval-every N --save CKPT
+//! Freeze flags: --init CKPT --out ART --model M --algo A --bits B --act-bits A
+//! Infer flags:  --artifact ART --batch N --max-batch N --test-examples N
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use waveq::config::RunConfig;
-use waveq::coordinator::{Checkpoint, Trainer};
+use waveq::config::{Algo, RunConfig};
+use waveq::coordinator::{eval_batches, session_cfg, test_batcher_with_batch, Checkpoint, Trainer};
 use waveq::energy::Stripes;
 use waveq::experiments::{self, ExpContext, Scale};
-use waveq::runtime::Runtime;
+use waveq::runtime::{FrozenModel, InferenceSession, NativeModel, Runtime, Session};
 use waveq::util::argparse::{ArgSpec, Args};
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "config", "seed", "scale", "model", "algo", "bits", "act-bits",
     "steps", "lr", "momentum", "lr-beta", "eval-every", "save", "train-examples",
-    "test-examples", "beta-init", "out", "init",
+    "test-examples", "beta-init", "out", "init", "artifact", "batch", "max-batch",
 ];
 const SWITCH_FLAGS: &[&str] = &["quiet", "help"];
 
@@ -107,25 +112,91 @@ fn run(argv: &[String]) -> Result<()> {
             );
             if let Some(path) = args.get("save") {
                 let model = rt.manifest.model(&outcome.model_key)?;
-                let tensors = outcome
-                    .state
-                    .all_params(model)?
-                    .into_iter()
-                    .zip(&model.params)
-                    .map(|(t, p)| (p.name.clone(), t))
-                    .collect();
-                Checkpoint {
-                    tensors,
-                    beta: outcome.state.beta.clone(),
-                    vbeta: outcome.state.vbeta.clone(),
-                }
-                .save(std::path::Path::new(path))?;
-                println!("saved checkpoint to {path}");
+                Checkpoint::from_state(model, &outcome.state)?.save(Path::new(path))?;
+                println!("saved checkpoint to {path} (step {})", outcome.state.step);
             }
             if let Some(out) = args.get("out") {
                 outcome.metrics.save_csv(std::path::Path::new(out))?;
                 println!("saved metrics to {out}");
             }
+            Ok(())
+        }
+        "freeze" => {
+            let rt = Runtime::open(&artifacts)?;
+            let cfg = RunConfig::load(args.get("config"), &args)?;
+            let init = args.get("init").ok_or_else(|| {
+                anyhow!("freeze needs --init <ckpt.bin> (waveq train --save writes one)")
+            })?;
+            let out = args
+                .get("out")
+                .ok_or_else(|| anyhow!("freeze needs --out <artifact.wqm>"))?;
+            // Preset-quantized runs are frozen at the preset k, but the
+            // checkpoint does not record it — demand an explicit --bits
+            // instead of silently re-quantizing at the default.
+            if matches!(cfg.algo, Algo::Dorefa | Algo::Wrpn) && args.get("bits").is_none() {
+                return Err(anyhow!(
+                    "freezing a {} run needs an explicit --bits matching the trained \
+                     bitwidth (checkpoints do not record the preset)",
+                    cfg.algo.name()
+                ));
+            }
+            let model_key = cfg.algo.model_key(&cfg.model);
+            let model = rt.manifest.model(&model_key)?.clone();
+            // The same algo -> session mapping Trainer::run opens with, so
+            // the checkpoint reopens under the shape it trained in.
+            let mut session = Session::open(&rt, &session_cfg(&cfg, model.num_qlayers))?;
+            session.load_checkpoint(Path::new(init))?;
+            let frozen = session.freeze(cfg.ka())?;
+            frozen.save(Path::new(out))?;
+            let file_bytes = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
+            println!(
+                "froze {model_key} (step {}) -> {out}\n  quantized layers: bits {:?}\n  \
+                 packed weights: {} B vs {} B f32 ({})\n  artifact file: {file_bytes} B",
+                session.state().step,
+                frozen.layer_bits(),
+                frozen.packed_weight_bytes(),
+                frozen.f32_weight_bytes(),
+                reduction_label(&frozen),
+            );
+            Ok(())
+        }
+        "infer" => {
+            let path = args
+                .get("artifact")
+                .ok_or_else(|| anyhow!("infer needs --artifact <artifact.wqm>"))?;
+            let frozen = FrozenModel::load(Path::new(path))?;
+            let nm = NativeModel::by_name(&frozen.base, frozen.width_mult)
+                .ok_or_else(|| anyhow!("artifact names unknown model '{}'", frozen.base))?;
+            let meta = nm.meta();
+            let examples = args.get_usize("test-examples", 1024)?;
+            if examples == 0 {
+                return Err(anyhow!("--test-examples must be > 0"));
+            }
+            let batch = args.get_usize("batch", meta.batch)?.clamp(1, examples);
+            // The arena is sized once at max_batch; nothing in this loop
+            // dispatches more than --batch rows, so that is the default.
+            let max_batch = args.get_usize("max-batch", batch)?.max(batch);
+            let seed = args.get_u64("seed", 42)?;
+            let mut session = InferenceSession::open(&frozen, max_batch)?;
+            let test = test_batcher_with_batch(&meta, examples, seed, batch);
+            let t0 = Instant::now();
+            let (loss, acc) = eval_batches(&test, true, |b| {
+                let rows = b.y.len() / meta.num_classes;
+                session.eval(&b.x, &b.y, rows)
+            })?;
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "served {} ({examples} examples, batch {batch}, max_batch {max_batch}) in \
+                 {secs:.3}s\n  \
+                 test_loss={loss:.4} test_acc={acc:.4}  throughput={:.1} imgs/s\n  \
+                 bits {:?}  packed weights {} B vs {} B f32 ({})",
+                meta.name,
+                examples as f64 / secs,
+                frozen.layer_bits(),
+                frozen.packed_weight_bytes(),
+                frozen.f32_weight_bytes(),
+                reduction_label(&frozen),
+            );
             Ok(())
         }
         "energy" => {
@@ -155,6 +226,14 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Human label for an artifact's packed-vs-f32 size story.
+fn reduction_label(frozen: &FrozenModel) -> String {
+    match frozen.size_reduction() {
+        Some(r) => format!("{r:.2}x smaller"),
+        None => "no packed layers".to_string(),
+    }
+}
+
 fn exp_context<'a>(rt: &'a Runtime, args: &Args) -> Result<ExpContext<'a>> {
     let scale = match args.get_or("scale", "full") {
         "smoke" => Scale::Smoke,
@@ -179,6 +258,12 @@ SUBCOMMANDS:
   train                 one run: --model M --algo fp32|dorefa|wrpn|waveq-preset|waveq
                         --bits B --act-bits A --steps N --lr F --lr-beta F
                         [--config FILE] [--save ckpt.bin] [--out metrics.csv]
+  freeze                pack a trained checkpoint into a bit-packed low-bit
+                        artifact: --init ckpt.bin --out model.wqm
+                        --model M --algo A [--bits B] [--act-bits A]
+  infer                 serve a frozen artifact over the held-out stream:
+                        --artifact model.wqm [--batch N] [--max-batch N]
+                        [--test-examples N]
   experiment <id|all>   regenerate a paper artifact: {}
   energy                Stripes report: --model M --bits B --act-bits A
   info                  list artifacts/models/programs

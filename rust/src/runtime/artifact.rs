@@ -1,0 +1,429 @@
+//! Frozen-model artifacts: the deployable product of a WaveQ training run.
+//!
+//! A [`FrozenModel`] is a self-describing binary holding the graph identity
+//! (zoo base name + width multiplier, which deterministically rebuilds the
+//! op graph via `NativeModel::by_name`) plus every parameter tensor — each
+//! *quantized* layer stored as bit-packed integer codes at its learned
+//! bitwidth (2–8 bit codes + the DoReFa/WRPN layer scale), and f32 raw data
+//! only for the non-quantized parameters (biases, affine scales/shifts, and
+//! the first/last compute layers the paper keeps at full precision).
+//!
+//! Layout (little-endian):
+//!
+//!   magic "WVQFRZN1"
+//!   u32 base_len | base bytes          (zoo base name, e.g. "simplenet5")
+//!   u32 width_mult
+//!   u8  has_act | f32 act_levels?      (activation quantizer level count)
+//!   u32 n_params | per parameter:
+//!     u32 name_len | name bytes
+//!     u32 rank | u64 dims[rank]
+//!     u8 tag                           (0 = raw f32, 1 = packed codes)
+//!     tag 0: f32 data[count]
+//!     tag 1: u8 bits | f32 scale | u8 packed[ceil(count * bits / 8)]
+//!
+//! The **exact-unpack contract**: decoding a packed parameter reproduces
+//! the f32 grid values the quantizer (`kernels::dorefa_quantize` /
+//! `wrpn_quantize`) computes from the live weights *bit-for-bit* — see
+//! [`super::native::kernels::decode_codes_into`]. That is what makes a
+//! frozen [`super::infer::InferenceSession`] bitwise identical to
+//! evaluating the live training state.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::io::{read_count, read_f32, read_f32s, read_shape, read_string, read_u32};
+use super::native::kernels as kn;
+
+pub const FROZEN_MAGIC: &[u8; 8] = b"WVQFRZN1";
+
+/// How one parameter tensor is stored in the artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamStorage {
+    /// Raw f32 (non-quantized parameters).
+    F32(Vec<f32>),
+    /// Bit-packed quantizer codes at the layer's learned bitwidth, plus
+    /// the quantizer scale (DoReFa: max|tanh W|; WRPN: max|W|).
+    Packed { bits: u8, scale: f32, codes: Vec<u16> },
+}
+
+/// One parameter tensor of a frozen model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrozenParam {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub storage: ParamStorage,
+}
+
+impl FrozenParam {
+    pub fn count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Decode to the f32 values the forward pass consumes: packed params
+    /// land on the quantizer grid (bitwise — the exact-unpack contract),
+    /// f32 params are returned verbatim.
+    pub fn decode(&self) -> Vec<f32> {
+        match &self.storage {
+            ParamStorage::F32(data) => data.clone(),
+            ParamStorage::Packed { bits, scale, codes } => {
+                let k = (2u32.pow(*bits as u32) - 1) as f32;
+                let mut out = vec![0.0f32; codes.len()];
+                kn::decode_codes_into(codes, k, *scale, &mut out);
+                out
+            }
+        }
+    }
+}
+
+/// A frozen, deployable model: graph identity + packed parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrozenModel {
+    /// Zoo base name (`NativeModel::by_name` key).
+    pub base: String,
+    pub width_mult: usize,
+    /// Activation fake-quant level count (`ka`); `None` = fp32 activations.
+    pub act_levels: Option<f32>,
+    /// Parameters in the model's manifest order.
+    pub params: Vec<FrozenParam>,
+}
+
+impl FrozenModel {
+    /// Bytes of bit-packed weight payload: `sum(ceil(n_l * b_l / 8))` over
+    /// the quantized layers — the storage the learned assignment earns.
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .filter_map(|p| match &p.storage {
+                ParamStorage::Packed { bits, codes, .. } => {
+                    Some((codes.len() * *bits as usize).div_ceil(8))
+                }
+                ParamStorage::F32(_) => None,
+            })
+            .sum()
+    }
+
+    /// What the same quantized layers would occupy as raw f32.
+    pub fn f32_weight_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .filter(|p| matches!(p.storage, ParamStorage::Packed { .. }))
+            .map(|p| 4 * p.count())
+            .sum()
+    }
+
+    /// How many times smaller the packed layers are than their f32 form
+    /// (`None` when nothing is packed, e.g. an fp32 freeze) — the single
+    /// definition of the size headline the CLI and benches report.
+    pub fn size_reduction(&self) -> Option<f64> {
+        let packed = self.packed_weight_bytes();
+        if packed == 0 {
+            return None;
+        }
+        Some(self.f32_weight_bytes() as f64 / packed as f64)
+    }
+
+    /// Per-quantized-layer bitwidths, in parameter order.
+    pub fn layer_bits(&self) -> Vec<u32> {
+        self.params
+            .iter()
+            .filter_map(|p| match &p.storage {
+                ParamStorage::Packed { bits, .. } => Some(*bits as u32),
+                ParamStorage::F32(_) => None,
+            })
+            .collect()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(FROZEN_MAGIC)?;
+        f.write_all(&(self.base.len() as u32).to_le_bytes())?;
+        f.write_all(self.base.as_bytes())?;
+        f.write_all(&(self.width_mult as u32).to_le_bytes())?;
+        match self.act_levels {
+            Some(ka) => {
+                f.write_all(&[1u8])?;
+                f.write_all(&ka.to_le_bytes())?;
+            }
+            None => f.write_all(&[0u8])?,
+        }
+        f.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for p in &self.params {
+            f.write_all(&(p.name.len() as u32).to_le_bytes())?;
+            f.write_all(p.name.as_bytes())?;
+            f.write_all(&(p.shape.len() as u32).to_le_bytes())?;
+            for &d in &p.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match &p.storage {
+                ParamStorage::F32(data) => {
+                    if data.len() != p.count() {
+                        return Err(anyhow!(
+                            "frozen param {}: {} f32 values for shape {:?}",
+                            p.name,
+                            data.len(),
+                            p.shape
+                        ));
+                    }
+                    f.write_all(&[0u8])?;
+                    for &v in data {
+                        f.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                ParamStorage::Packed { bits, scale, codes } => {
+                    if codes.len() != p.count() {
+                        return Err(anyhow!(
+                            "frozen param {}: {} codes for shape {:?}",
+                            p.name,
+                            codes.len(),
+                            p.shape
+                        ));
+                    }
+                    if !(2..=8).contains(bits) {
+                        return Err(anyhow!("frozen param {}: {bits}-bit codes", p.name));
+                    }
+                    f.write_all(&[1u8])?;
+                    f.write_all(&[*bits])?;
+                    f.write_all(&scale.to_le_bytes())?;
+                    f.write_all(&pack_codes(codes, *bits)?)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<FrozenModel> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != FROZEN_MAGIC {
+            return Err(anyhow!("{} is not a waveq frozen-model artifact", path.display()));
+        }
+        let base = read_string(&mut f)?;
+        let width_mult = read_u32(&mut f)? as usize;
+        let mut has_act = [0u8; 1];
+        f.read_exact(&mut has_act)?;
+        let act_levels = match has_act[0] {
+            0 => None,
+            1 => Some(read_f32(&mut f)?),
+            other => return Err(anyhow!("bad act-levels flag {other}")),
+        };
+        let n = read_count(&mut f, "param")?;
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_string(&mut f)?;
+            let (shape, count) = read_shape(&mut f)?;
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let storage = match tag[0] {
+                0 => {
+                    let mut data = vec![0f32; count];
+                    read_f32s(&mut f, &mut data)?;
+                    ParamStorage::F32(data)
+                }
+                1 => {
+                    let mut head = [0u8; 1];
+                    f.read_exact(&mut head)?;
+                    let bits = head[0];
+                    if !(2..=8).contains(&bits) {
+                        return Err(anyhow!("param {name}: {bits}-bit codes out of range"));
+                    }
+                    let scale = read_f32(&mut f)?;
+                    let mut packed = vec![0u8; (count * bits as usize).div_ceil(8)];
+                    f.read_exact(&mut packed)?;
+                    let codes = unpack_codes(&packed, bits, count)?;
+                    ParamStorage::Packed { bits, scale, codes }
+                }
+                other => return Err(anyhow!("param {name}: unknown storage tag {other}")),
+            };
+            params.push(FrozenParam { name, shape, storage });
+        }
+        Ok(FrozenModel { base, width_mult, act_levels, params })
+    }
+}
+
+// ---- bit packing -----------------------------------------------------------
+
+/// Pack integer codes at `bits` per code into an LSB-first bitstream of
+/// exactly `ceil(n * bits / 8)` bytes.
+pub fn pack_codes(codes: &[u16], bits: u8) -> Result<Vec<u8>> {
+    if !(1..=16).contains(&bits) {
+        return Err(anyhow!("pack_codes: bits {bits} out of range"));
+    }
+    let limit = 1u32 << bits;
+    let mut out = Vec::with_capacity((codes.len() * bits as usize).div_ceil(8));
+    let mut acc = 0u32;
+    let mut nbits = 0u32;
+    for &c in codes {
+        if (c as u32) >= limit {
+            return Err(anyhow!("pack_codes: code {c} does not fit {bits} bits"));
+        }
+        acc |= (c as u32) << nbits;
+        nbits += bits as u32;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_codes`]: read `n` codes of `bits` each.
+pub fn unpack_codes(bytes: &[u8], bits: u8, n: usize) -> Result<Vec<u16>> {
+    if !(1..=16).contains(&bits) {
+        return Err(anyhow!("unpack_codes: bits {bits} out of range"));
+    }
+    let want = (n * bits as usize).div_ceil(8);
+    if bytes.len() < want {
+        return Err(anyhow!("unpack_codes: {} bytes, need {want} for {n} codes", bytes.len()));
+    }
+    let mask = (1u32 << bits) - 1;
+    let mut out = Vec::with_capacity(n);
+    let mut acc = 0u32;
+    let mut nbits = 0u32;
+    let mut i = 0usize;
+    for _ in 0..n {
+        while nbits < bits as u32 {
+            acc |= (bytes[i] as u32) << nbits;
+            i += 1;
+            nbits += 8;
+        }
+        out.push((acc & mask) as u16);
+        acc >>= bits;
+        nbits -= bits as u32;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_unpack_round_trips_every_bitwidth_and_tail_length() {
+        let mut rng = Rng::new(7);
+        for bits in 2..=8u8 {
+            for &n in &[0usize, 1, 2, 3, 5, 7, 8, 9, 13, 64, 100, 257] {
+                let codes: Vec<u16> = (0..n).map(|_| rng.below(1u64 << bits) as u16).collect();
+                let packed = pack_codes(&codes, bits).unwrap();
+                assert_eq!(packed.len(), (n * bits as usize).div_ceil(8), "b={bits} n={n}");
+                assert_eq!(unpack_codes(&packed, bits, n).unwrap(), codes, "b={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_rejects_out_of_range_codes() {
+        assert!(pack_codes(&[4], 2).is_err());
+        assert!(pack_codes(&[3], 2).is_ok());
+        assert!(pack_codes(&[0], 0).is_err());
+        assert!(unpack_codes(&[0xFF], 8, 2).is_err(), "short byte stream");
+    }
+
+    #[test]
+    fn artifact_round_trips_and_rejects_corrupt_magic() {
+        let model = FrozenModel {
+            base: "simplenet5".into(),
+            width_mult: 1,
+            act_levels: Some(255.0),
+            params: vec![
+                FrozenParam {
+                    name: "conv1".into(),
+                    shape: vec![3, 3, 3, 4],
+                    storage: ParamStorage::F32((0..108).map(|i| i as f32 * 0.25).collect()),
+                },
+                FrozenParam {
+                    name: "conv2".into(),
+                    shape: vec![2, 5],
+                    storage: ParamStorage::Packed {
+                        bits: 3,
+                        scale: 0.7,
+                        codes: vec![0, 7, 3, 1, 6, 2, 5, 4, 7, 0],
+                    },
+                },
+            ],
+        };
+        let path = std::env::temp_dir().join("waveq_frozen_test.bin");
+        model.save(&path).unwrap();
+        let back = FrozenModel::load(&path).unwrap();
+        assert_eq!(back, model);
+        assert_eq!(back.packed_weight_bytes(), (10 * 3usize).div_ceil(8));
+        assert_eq!(back.f32_weight_bytes(), 40);
+        assert_eq!(back.size_reduction(), Some(10.0));
+        assert_eq!(back.layer_bits(), vec![3]);
+
+        // Corrupt magic -> clean rejection.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = FrozenModel::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("not a waveq frozen-model artifact"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_shape_fields_error_instead_of_allocating() {
+        let model = FrozenModel {
+            base: "mlp".into(),
+            width_mult: 1,
+            act_levels: None,
+            params: vec![FrozenParam {
+                name: "w".into(),
+                shape: vec![2, 3],
+                storage: ParamStorage::F32(vec![0.0; 6]),
+            }],
+        };
+        let path = std::env::temp_dir().join("waveq_frozen_corrupt_dim.bin");
+        model.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Layout: magic 8 | base_len 4 | "mlp" 3 | width 4 | has_act 1
+        //         | n_params 4 | name_len 4 | "w" 1 | rank 4 | dims...
+        let dim0 = 8 + 4 + 3 + 4 + 1 + 4 + 4 + 1 + 4;
+        assert_eq!(
+            u64::from_le_bytes(bytes[dim0..dim0 + 8].try_into().unwrap()),
+            2,
+            "dim offset drifted; update this test alongside the layout"
+        );
+        // One flipped dim demanding ~2^64 elements must error cleanly,
+        // not abort the process on a giant allocation.
+        let mut corrupt = bytes.clone();
+        corrupt[dim0..dim0 + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &corrupt).unwrap();
+        let err = FrozenModel::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("implausible"), "{err}");
+        // Same for a corrupt rank field.
+        let rank_off = dim0 - 4;
+        let mut corrupt = bytes;
+        corrupt[rank_off..rank_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &corrupt).unwrap();
+        let err = FrozenModel::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("implausible"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn decode_lands_on_the_quantizer_grid() {
+        let p = FrozenParam {
+            name: "w".into(),
+            shape: vec![4],
+            storage: ParamStorage::Packed { bits: 2, scale: 1.5, codes: vec![0, 1, 2, 3] },
+        };
+        // k = 3: grid m * (2c/3 - 1) for c in 0..=3.
+        let got = p.decode();
+        let want: Vec<f32> = (0..4).map(|c| 1.5 * (2.0 * (c as f32 / 3.0) - 1.0)).collect();
+        assert_eq!(got, want);
+    }
+}

@@ -85,6 +85,15 @@ pub trait Backend {
     /// Prepare a program for execution (idempotent; cheap when cached).
     fn compile(&self, sig: &ProgramSig) -> Result<()>;
 
+    /// Whether this backend serves a program at batch sizes other than the
+    /// manifest shape (resolving the batch from the buffer lengths). The
+    /// native backend does; AOT-compiled backends (pjrt) execute fixed
+    /// shapes and keep the default `false` — callers with ragged batches
+    /// (the held-out tail) must check this before dispatching them.
+    fn batch_polymorphic(&self) -> bool {
+        false
+    }
+
     /// Execute a program on host buffers; one buffer per named output, in
     /// the manifest's output order.
     fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>>;
@@ -137,6 +146,12 @@ pub struct Program<'rt> {
 impl Program<'_> {
     pub fn name(&self) -> &str {
         &self.sig.name
+    }
+
+    /// Whether the owning backend serves this program at non-manifest
+    /// batch sizes (see [`Backend::batch_polymorphic`]).
+    pub fn batch_polymorphic(&self) -> bool {
+        self.backend.batch_polymorphic()
     }
 
     /// The resolved positional signature (inputs and output names).
@@ -227,6 +242,12 @@ impl Runtime {
 
     pub fn stats(&self) -> RuntimeStats {
         self.backend.stats()
+    }
+
+    /// Whether the backend serves non-manifest batch sizes (see
+    /// [`Backend::batch_polymorphic`]).
+    pub fn batch_polymorphic(&self) -> bool {
+        self.backend.batch_polymorphic()
     }
 
     pub fn sig(&self, program: &str) -> Result<&ProgramSig> {

@@ -1,0 +1,198 @@
+//! Binary checkpointing of train state (own format; no serde offline).
+//!
+//! v2 layout (little-endian), magic `WVQCKPT2`:
+//!   magic | u32 n_tensors | per tensor:
+//!     u32 name_len | name bytes | u32 rank | u64 dims[rank] | f32 data[]
+//!   | u32 q | f32 beta[q] | f32 vbeta[q]
+//!   | u64 step | u32 model_len | model bytes
+//!
+//! The trailer (step counter + model name) is what v1 (`WVQCKPT1`) lacked:
+//! a restored run could not resume its schedule position, and nothing
+//! stopped a vgg checkpoint from being loaded into a resnet session. v1
+//! files still load (step = 0, empty model name); `save` always writes v2.
+//!
+//! Lives in the runtime layer so [`super::session::Session`] can offer
+//! `save_checkpoint` / `load_checkpoint` without reaching up into the
+//! coordinator; `coordinator::checkpoint` re-exports [`Checkpoint`] for
+//! existing call sites.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::io::{read_count, read_f32s, read_shape, read_string, read_u64};
+use super::manifest::ModelMeta;
+use super::session::SessionState;
+use crate::tensor::Tensor;
+
+const MAGIC_V1: &[u8; 8] = b"WVQCKPT1";
+const MAGIC_V2: &[u8; 8] = b"WVQCKPT2";
+
+pub struct Checkpoint {
+    pub tensors: Vec<(String, Tensor)>,
+    pub beta: Vec<f32>,
+    pub vbeta: Vec<f32>,
+    /// Step counter at save time (0 for v1 files, which did not record it).
+    pub step: usize,
+    /// Model the state belongs to (empty for v1 files).
+    pub model: String,
+}
+
+impl Checkpoint {
+    /// Snapshot a session's live state: parameters named by the model's
+    /// manifest layout, plus beta/vbeta and the v2 trailer.
+    pub fn from_state(model: &ModelMeta, state: &SessionState) -> Result<Checkpoint> {
+        let tensors = state
+            .all_params(model)?
+            .into_iter()
+            .zip(&model.params)
+            .map(|(t, p)| (p.name.clone(), t))
+            .collect();
+        Ok(Checkpoint {
+            tensors,
+            beta: state.beta.clone(),
+            vbeta: state.vbeta.clone(),
+            step: state.step,
+            model: model.name.clone(),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(MAGIC_V2)?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in &t.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        f.write_all(&(self.beta.len() as u32).to_le_bytes())?;
+        for &v in self.beta.iter().chain(&self.vbeta) {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        f.write_all(&(self.step as u64).to_le_bytes())?;
+        f.write_all(&(self.model.len() as u32).to_le_bytes())?;
+        f.write_all(self.model.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        let v2 = match &magic {
+            m if m == MAGIC_V2 => true,
+            m if m == MAGIC_V1 => false,
+            _ => return Err(anyhow!("{} is not a waveq checkpoint", path.display())),
+        };
+        let n = read_count(&mut f, "tensor")?;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_string(&mut f)?;
+            let (shape, count) = read_shape(&mut f)?;
+            let mut data = vec![0f32; count];
+            read_f32s(&mut f, &mut data)?;
+            tensors.push((name, Tensor::new(shape, data)?));
+        }
+        let q = read_count(&mut f, "beta slot")?;
+        let mut beta = vec![0f32; q];
+        let mut vbeta = vec![0f32; q];
+        read_f32s(&mut f, &mut beta)?;
+        read_f32s(&mut f, &mut vbeta)?;
+        let (step, model) = if v2 {
+            (read_u64(&mut f)? as usize, read_string(&mut f)?)
+        } else {
+            (0, String::new())
+        };
+        Ok(Checkpoint { tensors, beta, vbeta, step, model })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            tensors: vec![
+                (
+                    "w1".into(),
+                    Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-9, -7.25]).unwrap(),
+                ),
+                ("b1".into(), Tensor::new(vec![3], vec![0.1, 0.2, 0.3]).unwrap()),
+                ("scalar".into(), Tensor::new(vec![], vec![42.0]).unwrap()),
+            ],
+            beta: vec![3.3, 4.7],
+            vbeta: vec![0.01, -0.02],
+            step: 412,
+            model: "simplenet5".into(),
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_tensors_and_trailer() {
+        let ck = sample();
+        let path = std::env::temp_dir().join("waveq_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 3);
+        for ((n1, t1), (n2, t2)) in ck.tensors.iter().zip(&back.tensors) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        assert_eq!(back.beta, ck.beta);
+        assert_eq!(back.vbeta, ck.vbeta);
+        assert_eq!(back.step, 412);
+        assert_eq!(back.model, "simplenet5");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_checkpoints_still_load_with_empty_trailer() {
+        // Hand-assemble the v1 byte layout (what the pre-v2 writer emitted):
+        // one (1,)-tensor "w", q = 1 beta section, no trailer.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"WVQCKPT1");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_tensors
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.extend_from_slice(b"w");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rank
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // dim
+        bytes.extend_from_slice(&2.5f32.to_le_bytes()); // data
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // q
+        bytes.extend_from_slice(&4.0f32.to_le_bytes()); // beta
+        bytes.extend_from_slice(&0.5f32.to_le_bytes()); // vbeta
+        let path = std::env::temp_dir().join("waveq_ckpt_v1_test.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.tensors.len(), 1);
+        assert_eq!(ck.tensors[0].0, "w");
+        assert_eq!(ck.tensors[0].1.data, vec![2.5]);
+        assert_eq!(ck.beta, vec![4.0f32]);
+        assert_eq!(ck.vbeta, vec![0.5f32]);
+        assert_eq!((ck.step, ck.model.as_str()), (0, ""));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let path = std::env::temp_dir().join("waveq_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

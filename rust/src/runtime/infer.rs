@@ -1,0 +1,331 @@
+//! Forward-only inference sessions over frozen artifacts — the third
+//! lifecycle stage of the runtime after `prepare` (programs) and `Session`
+//! (training): **freeze and serve**.
+//!
+//! An [`InferenceSession`] opens a [`FrozenModel`] (bit-packed low-bit
+//! weights, see [`super::artifact`]) and serves logits with none of the
+//! training path's baggage:
+//!
+//! * **no backward buffers, no optimizer state** — the op graph is walked
+//!   forward-only; nothing is taped;
+//! * **no steady-state allocation** — intermediates live in a shape-planned
+//!   arena ([`NativeModel::infer_plan`]) sized once at `max_batch`, and
+//!   weights are decoded *and GEMM-packed* once at open, so a dispatch is
+//!   pure kernel work over preallocated storage;
+//! * **batch-size polymorphic** — `infer(&x, batch)` serves any batch in
+//!   `1..=max_batch` through the same persistent worker pool; the arena is
+//!   sliced to the live batch, never reallocated.
+//!
+//! Bit-identity contract: decoded weights reproduce the quantizer grid
+//! bit-for-bit (the artifact's exact-unpack contract) and every kernel the
+//! walk dispatches is the *same* kernel (same tiles, same shard minimums,
+//! same reduction order) the native backend's eval programs run — so the
+//! logits are bitwise identical to evaluating the live training state, at
+//! any `WAVEQ_THREADS` and any batch. `tests/infer.rs` asserts this across
+//! the whole model zoo.
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::{FrozenModel, ParamStorage};
+use super::manifest::ModelMeta;
+use super::native::kernels as kn;
+use super::native::models::OpNode;
+use super::native::{pool, relu_quant, NativeModel};
+
+/// A forward-only, batch-polymorphic serving session over a frozen model.
+pub struct InferenceSession {
+    model: NativeModel,
+    meta: ModelMeta,
+    max_batch: usize,
+    act_levels: Option<f32>,
+    /// Decoded f32 weights per parameter, manifest order (quantized layers
+    /// land exactly on their fake-quant grid). Slots that dispatch through
+    /// a [`kn::PackedB`] are emptied after packing — the packed panels are
+    /// the only resident copy of the big GEMM weights, so the session's
+    /// footprint stays at one copy per weight, not two.
+    weights: Vec<Vec<f32>>,
+    /// Pre-packed GEMM right operands for conv / projection / fc weights,
+    /// indexed by parameter slot.
+    packed: Vec<Option<kn::PackedB>>,
+    /// Ping-pong activation arena (each side holds `plan.act * max_batch`).
+    bufs: [Vec<f32>; 2],
+    /// im2col scratch, residual save stack, projected-shortcut scratch.
+    cols: Vec<f32>,
+    skip: Vec<f32>,
+    shortcut: Vec<f32>,
+}
+
+impl InferenceSession {
+    /// Rebuild the op graph from the artifact's identity, decode + pack
+    /// every weight once, and size the arena for `max_batch`.
+    pub fn open(frozen: &FrozenModel, max_batch: usize) -> Result<InferenceSession> {
+        if max_batch == 0 {
+            return Err(anyhow!("InferenceSession: max_batch must be >= 1"));
+        }
+        if frozen.width_mult == 0 {
+            return Err(anyhow!("artifact has width_mult 0"));
+        }
+        let model = NativeModel::by_name(&frozen.base, frozen.width_mult)
+            .ok_or_else(|| anyhow!("artifact names unknown model '{}'", frozen.base))?;
+        if frozen.params.len() != model.params.len() {
+            return Err(anyhow!(
+                "artifact carries {} params, model '{}' has {}",
+                frozen.params.len(),
+                model.name,
+                model.params.len()
+            ));
+        }
+        let mut weights = Vec::with_capacity(model.params.len());
+        for (p, fp) in model.params.iter().zip(&frozen.params) {
+            if fp.name != p.name || fp.shape != p.shape {
+                return Err(anyhow!(
+                    "artifact param '{}' {:?} does not match model param '{}' {:?}",
+                    fp.name,
+                    fp.shape,
+                    p.name,
+                    p.shape
+                ));
+            }
+            if matches!(fp.storage, ParamStorage::Packed { .. }) && p.qidx.is_none() {
+                return Err(anyhow!(
+                    "artifact stores non-quantized param '{}' as packed codes",
+                    fp.name
+                ));
+            }
+            weights.push(fp.decode());
+        }
+
+        // Pack the GEMM weights once (conv / projection / fc); depthwise
+        // convs and the small per-channel params dispatch unpacked.
+        let mut packed: Vec<Option<kn::PackedB>> = model.params.iter().map(|_| None).collect();
+        for op in &model.ops {
+            match op {
+                OpNode::Conv { geom, pidx } if !geom.depthwise => {
+                    packed[*pidx] =
+                        Some(kn::PackedB::pack(&weights[*pidx], geom.kdim(), geom.cout));
+                }
+                OpNode::SkipProj { geom, pidx } => {
+                    packed[*pidx] =
+                        Some(kn::PackedB::pack(&weights[*pidx], geom.kdim(), geom.cout));
+                }
+                OpNode::Fc { din, dout, widx, .. } => {
+                    packed[*widx] = Some(kn::PackedB::pack(&weights[*widx], *din, *dout));
+                }
+                _ => {}
+            }
+        }
+
+        // The GEMM slots are only ever read through their packed panels:
+        // drop the decoded f32 copy so the big weights exist once.
+        for (w, pb) in weights.iter_mut().zip(&packed) {
+            if pb.is_some() {
+                *w = Vec::new();
+            }
+        }
+
+        let plan = model.infer_plan();
+        pool::ensure_started();
+        let meta = model.meta();
+        Ok(InferenceSession {
+            bufs: [vec![0.0; plan.act * max_batch], vec![0.0; plan.act * max_batch]],
+            cols: vec![0.0; plan.cols * max_batch],
+            skip: vec![0.0; plan.skip * max_batch],
+            shortcut: vec![0.0; plan.shortcut * max_batch],
+            model,
+            meta,
+            max_batch,
+            act_levels: frozen.act_levels,
+            weights,
+            packed,
+        })
+    }
+
+    /// The manifest-side description of the served model.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Activation fake-quant level count the session applies (`None` =
+    /// fp32 activations), as captured at freeze time.
+    pub fn act_levels(&self) -> Option<f32> {
+        self.act_levels
+    }
+
+    /// Run the forward pass on `batch` examples (`1..=max_batch`; `x` is
+    /// NHWC-flattened, `batch * pixels` long) and return the logits slice
+    /// (`batch * num_classes`). No allocation; any `WAVEQ_THREADS`.
+    pub fn infer(&mut self, x: &[f32], batch: usize) -> Result<&[f32]> {
+        if batch == 0 || batch > self.max_batch {
+            return Err(anyhow!(
+                "infer: batch {batch} outside this session's 1..={}",
+                self.max_batch
+            ));
+        }
+        let pix = self.model.pixels();
+        if x.len() != batch * pix {
+            return Err(anyhow!(
+                "infer: x has {} elems, batch {batch} of {} needs {}",
+                x.len(),
+                self.model.name,
+                batch * pix
+            ));
+        }
+        let InferenceSession {
+            model, act_levels, weights, packed, bufs, cols, skip, shortcut, ..
+        } = self;
+        let [buf_a, buf_b] = bufs;
+        let act_ka = *act_levels;
+
+        buf_a[..x.len()].copy_from_slice(x);
+        let mut in_a = true; // which side holds the live activation
+        let mut cur_len = x.len();
+        // Residual bookkeeping: (offset, len) of saved activations in the
+        // skip arena (a stack), plus the pending projected shortcut.
+        let mut saves: Vec<(usize, usize)> = Vec::new();
+        let mut skip_top = 0usize;
+        let mut shortcut_len: Option<usize> = None;
+
+        for op in &model.ops {
+            match op {
+                OpNode::Conv { geom, pidx } => {
+                    let out_len = geom.rows(batch) * geom.cout;
+                    let (s, d) = pick(buf_a, buf_b, in_a);
+                    if geom.depthwise {
+                        kn::dwconv_fwd_into(
+                            &s[..cur_len],
+                            &weights[*pidx],
+                            batch,
+                            geom,
+                            &mut d[..out_len],
+                        );
+                    } else {
+                        let rows = geom.rows(batch);
+                        let ccols = &mut cols[..rows * geom.kdim()];
+                        kn::im2col_into(&s[..cur_len], batch, geom, ccols);
+                        let pb = packed[*pidx].as_ref().expect("conv weight packed at open");
+                        kn::matmul_packed_into(ccols, pb, rows, None, &mut d[..out_len]);
+                    }
+                    cur_len = out_len;
+                    in_a = !in_a;
+                }
+                OpNode::Fc { din, dout, widx, bidx } => {
+                    debug_assert_eq!(cur_len, batch * din);
+                    let (s, d) = pick(buf_a, buf_b, in_a);
+                    let pb = packed[*widx].as_ref().expect("fc weight packed at open");
+                    kn::matmul_packed_into(
+                        &s[..cur_len],
+                        pb,
+                        batch,
+                        Some(&weights[*bidx]),
+                        &mut d[..batch * dout],
+                    );
+                    cur_len = batch * dout;
+                    in_a = !in_a;
+                }
+                OpNode::Affine { c, hw, sidx, bidx } => {
+                    let (s, d) = pick(buf_a, buf_b, in_a);
+                    kn::affine_fwd_into(
+                        &s[..cur_len],
+                        &weights[*sidx],
+                        &weights[*bidx],
+                        batch * hw,
+                        *c,
+                        &mut d[..cur_len],
+                    );
+                    in_a = !in_a;
+                }
+                OpNode::Relu => {
+                    let cur = if in_a { &mut *buf_a } else { &mut *buf_b };
+                    let _ = relu_quant(&mut cur[..cur_len], act_ka, false);
+                }
+                OpNode::MaxPool { h, w, c, size } => {
+                    let out_len = batch * (h / size) * (w / size) * c;
+                    let (s, d) = pick(buf_a, buf_b, in_a);
+                    kn::maxpool_infer_into(
+                        &s[..cur_len],
+                        batch,
+                        *h,
+                        *w,
+                        *c,
+                        *size,
+                        &mut d[..out_len],
+                    );
+                    cur_len = out_len;
+                    in_a = !in_a;
+                }
+                OpNode::GlobalAvgPool { h, w, c } => {
+                    let out_len = batch * c;
+                    let (s, d) = pick(buf_a, buf_b, in_a);
+                    kn::gap_fwd_into(&s[..cur_len], batch, *h, *w, *c, &mut d[..out_len]);
+                    cur_len = out_len;
+                    in_a = !in_a;
+                }
+                OpNode::Flatten => {}
+                OpNode::SkipSave => {
+                    let cur = if in_a { &*buf_a } else { &*buf_b };
+                    skip[skip_top..skip_top + cur_len].copy_from_slice(&cur[..cur_len]);
+                    saves.push((skip_top, cur_len));
+                    skip_top += cur_len;
+                }
+                OpNode::SkipProj { geom, pidx } => {
+                    let &(off, len) = saves.last().expect("SkipProj without SkipSave");
+                    let rows = geom.rows(batch);
+                    let out_len = rows * geom.cout;
+                    let ccols = &mut cols[..rows * geom.kdim()];
+                    kn::im2col_into(&skip[off..off + len], batch, geom, ccols);
+                    let pb = packed[*pidx].as_ref().expect("proj weight packed at open");
+                    kn::matmul_packed_into(ccols, pb, rows, None, &mut shortcut[..out_len]);
+                    shortcut_len = Some(out_len);
+                }
+                OpNode::SkipAdd => {
+                    let (off, len) = saves.pop().expect("SkipAdd without SkipSave");
+                    skip_top = off;
+                    let add: &[f32] = match shortcut_len.take() {
+                        Some(sl) => &shortcut[..sl],
+                        None => &skip[off..off + len],
+                    };
+                    let cur = if in_a { &mut *buf_a } else { &mut *buf_b };
+                    debug_assert_eq!(cur_len, add.len());
+                    for (hv, &sv) in cur[..cur_len].iter_mut().zip(add.iter()) {
+                        *hv += sv;
+                    }
+                    let _ = relu_quant(&mut cur[..cur_len], act_ka, false);
+                }
+            }
+        }
+        debug_assert_eq!(cur_len, batch * model.num_classes);
+        Ok(if in_a { &buf_a[..cur_len] } else { &buf_b[..cur_len] })
+    }
+
+    /// Convenience: logits -> (mean cross-entropy, accuracy) against a
+    /// one-hot `y` (`batch * num_classes`) — the same `softmax_ce` the
+    /// backend's eval programs run, so the scalars are bitwise comparable
+    /// to `Session::eval`.
+    pub fn eval(&mut self, x: &[f32], y: &[f32], batch: usize) -> Result<(f32, f32)> {
+        let nc = self.model.num_classes;
+        if y.len() != batch * nc {
+            return Err(anyhow!(
+                "eval: y has {} elems, batch {batch} needs {}",
+                y.len(),
+                batch * nc
+            ));
+        }
+        let logits = self.infer(x, batch)?;
+        let (loss, acc, _dlogits) = kn::softmax_ce(logits, y, batch, nc);
+        Ok((loss, acc))
+    }
+}
+
+/// Ping-pong selector: (source slice, destination slice) of the two arena
+/// sides, by which side currently holds the live activation.
+fn pick<'a>(a: &'a mut [f32], b: &'a mut [f32], in_a: bool) -> (&'a [f32], &'a mut [f32]) {
+    if in_a {
+        (&*a, b)
+    } else {
+        (&*b, a)
+    }
+}

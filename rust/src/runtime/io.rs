@@ -1,0 +1,126 @@
+//! Little-endian binary readers shared by the runtime's on-disk formats
+//! (`checkpoint` / `artifact`): one definition, so corruption guards and
+//! bounds policy cannot drift between the two.
+
+use std::io::Read;
+
+use anyhow::{anyhow, Result};
+
+pub(crate) fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub(crate) fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub(crate) fn read_f32<R: Read>(r: &mut R) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+pub(crate) fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 4];
+    r.read_exact(&mut buf)?;
+    for (o, chunk) in out.iter_mut().zip(buf.chunks_exact(4)) {
+        *o = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+    Ok(())
+}
+
+/// A length-prefixed UTF-8 string, with an allocation bound so a corrupt
+/// length field cannot demand gigabytes.
+pub(crate) fn read_string<R: Read>(r: &mut R) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 1 << 20 {
+        return Err(anyhow!("string length {len} is implausible (corrupt file?)"));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+/// Most elements a single stored tensor may claim (2^28 = 1 GiB of f32);
+/// the largest real zoo tensor is ~10^7 elements, so anything past this is
+/// a corrupt dim field, not data.
+pub(crate) const MAX_TENSOR_ELEMS: usize = 1 << 28;
+
+/// Most entries a stored collection (params, tensors, beta slots) may
+/// claim; bounds the `Vec::with_capacity` a corrupt count field drives.
+pub(crate) const MAX_ENTRIES: usize = 1 << 16;
+
+/// A tensor shape (u32 rank + u64 dims), bounded against corruption:
+/// a flipped rank or dim byte errors cleanly instead of demanding huge
+/// allocations (or overflowing the element-count product downstream).
+/// Returns `(shape, element_count)`.
+pub(crate) fn read_shape<R: Read>(r: &mut R) -> Result<(Vec<usize>, usize)> {
+    let rank = read_u32(r)? as usize;
+    if rank > 8 {
+        return Err(anyhow!("tensor rank {rank} is implausible (corrupt file?)"));
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        shape.push(read_u64(r)? as usize);
+    }
+    let mut count = 1usize;
+    for &d in &shape {
+        count = count
+            .checked_mul(d)
+            .filter(|&c| c <= MAX_TENSOR_ELEMS)
+            .ok_or_else(|| anyhow!("tensor shape {shape:?} is implausible (corrupt file?)"))?;
+    }
+    Ok((shape, count))
+}
+
+/// A u32 collection count, bounded by [`MAX_ENTRIES`].
+pub(crate) fn read_count<R: Read>(r: &mut R, what: &str) -> Result<usize> {
+    let n = read_u32(r)? as usize;
+    if n > MAX_ENTRIES {
+        return Err(anyhow!("{what} count {n} is implausible (corrupt file?)"));
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape_bytes(dims: &[u64]) -> Vec<u8> {
+        let mut b = (dims.len() as u32).to_le_bytes().to_vec();
+        for d in dims {
+            b.extend_from_slice(&d.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn read_shape_bounds_rank_and_element_count() {
+        let good = shape_bytes(&[3, 3, 16, 32]);
+        let (shape, count) = read_shape(&mut good.as_slice()).unwrap();
+        assert_eq!((shape, count), (vec![3, 3, 16, 32], 4608));
+        assert_eq!(read_shape(&mut shape_bytes(&[]).as_slice()).unwrap(), (vec![], 1));
+
+        // Corrupt rank field.
+        let bad_rank = u32::MAX.to_le_bytes().to_vec();
+        assert!(read_shape(&mut bad_rank.as_slice()).is_err());
+        // One flipped dim demanding ~2^64 elements.
+        let bad_dim = shape_bytes(&[3, u64::MAX]);
+        assert!(read_shape(&mut bad_dim.as_slice()).is_err());
+        // Product overflowing usize via individually-plausible dims.
+        let overflow = shape_bytes(&[1 << 32, 1 << 32]);
+        assert!(read_shape(&mut overflow.as_slice()).is_err());
+    }
+
+    #[test]
+    fn read_count_bounds_collection_sizes() {
+        let ok = 12u32.to_le_bytes();
+        assert_eq!(read_count(&mut ok.as_slice(), "param").unwrap(), 12);
+        let bad = u32::MAX.to_le_bytes();
+        assert!(read_count(&mut bad.as_slice(), "param").is_err());
+    }
+}

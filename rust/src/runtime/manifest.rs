@@ -10,6 +10,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::buffer::Buffer;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
@@ -102,6 +103,18 @@ impl ModelMeta {
             }
         }
         v
+    }
+
+    /// Build x/y buffers shaped for `rows` examples of this model — the
+    /// single definition of the ragged-batch dispatch shape, shared by
+    /// `Session::eval` and the coordinator's `evaluate` so the two paths
+    /// cannot drift.
+    pub fn batch_buffers(&self, rows: usize, x: &[f32], y: &[f32]) -> Result<(Buffer, Buffer)> {
+        let is = self.input_shape;
+        Ok((
+            Buffer::new(vec![rows, is[0], is[1], is[2]], x.to_vec())?,
+            Buffer::new(vec![rows, self.num_classes], y.to_vec())?,
+        ))
     }
 
     /// Param indices of quantizable layers in qidx order.

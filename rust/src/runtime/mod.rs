@@ -1,25 +1,38 @@
 //! L3 runtime: manifest-described programs behind a pluggable backend.
 //!
-//! `manifest` — the python→rust contract (signatures, layouts, MACs).
-//! `buffer`   — the backend-neutral host buffer type + helpers.
-//! `backend`  — the `Backend` trait, the `Runtime` facade, and the typed
-//!              `Program` handles `Runtime::prepare` returns.
-//! `session`  — stateful training sessions: backend-resident state +
-//!              zero-alloc steady-state stepping over prepared handles.
-//! `native`   — hermetic pure-Rust reference backend (always available).
-//! `pjrt`     — PJRT load/compile/execute over AOT HLO artifacts
-//!              (behind the non-default `pjrt` cargo feature).
+//! `manifest`   — the python→rust contract (signatures, layouts, MACs).
+//! `buffer`     — the backend-neutral host buffer type + helpers.
+//! `backend`    — the `Backend` trait, the `Runtime` facade, and the typed
+//!                `Program` handles `Runtime::prepare` returns.
+//! `session`    — stateful training sessions: backend-resident state +
+//!                zero-alloc steady-state stepping over prepared handles.
+//! `checkpoint` — binary training snapshots (`WVQCKPT2`, step + model
+//!                aware; loads the v1 format too).
+//! `artifact`   — frozen-model artifacts: bit-packed low-bit weights with
+//!                an exact-unpack (bitwise) decode contract.
+//! `infer`      — forward-only, batch-polymorphic serving sessions over
+//!                frozen artifacts (the freeze-and-serve stage).
+//! `native`     — hermetic pure-Rust reference backend (always available).
+//! `pjrt`       — PJRT load/compile/execute over AOT HLO artifacts
+//!                (behind the non-default `pjrt` cargo feature).
 
+pub mod artifact;
 pub mod backend;
 pub mod buffer;
+pub mod checkpoint;
+pub mod infer;
+pub(crate) mod io;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod session;
 
+pub use artifact::{FrozenModel, FrozenParam, ParamStorage};
 pub use backend::{Backend, Program, ProgramStats, Runtime, RuntimeStats};
 pub use buffer::{buffer_f32, scalar_f32, to_scalar_f32, to_vec_f32, Buffer};
+pub use checkpoint::Checkpoint;
+pub use infer::InferenceSession;
 pub use manifest::{ArgSpec, Manifest, ModelMeta, ParamMeta, ProgramSig};
 pub use native::{NativeBackend, NativeModel};
 pub use session::{Session, SessionCfg, SessionState, StepKnobs, StepMetrics};

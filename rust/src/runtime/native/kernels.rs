@@ -38,6 +38,13 @@ pub fn max_abs_tanh(w: &[f32]) -> f32 {
     w.iter().fold(0.0f32, |m, &x| m.max(x.tanh().abs())).max(1e-8)
 }
 
+/// Per-layer WRPN scale: max|W| with the same floor. One definition shared
+/// by [`wrpn_quantize`] and [`wrpn_codes`] — the artifact exact-unpack
+/// contract needs the freeze-time and eval-time scales bit-identical.
+pub fn max_abs(w: &[f32]) -> f32 {
+    w.iter().fold(0.0f32, |acc, &x| acc.max(x.abs())).max(1e-8)
+}
+
 /// DoReFa weight fake-quantization (STE backward).
 ///
 /// Returns `(wq, ste, m)`: the quantized weights, the per-element STE
@@ -70,7 +77,7 @@ pub fn dorefa_quantize_full(w: &[f32], k: f32) -> (Vec<f32>, Vec<f32>, Vec<f32>,
 /// c = max|W|. With that scale the clip never bites, so the STE backward
 /// is the identity (see `python/compile/kernels/wrpn.py`).
 pub fn wrpn_quantize(w: &[f32], k: f32) -> (Vec<f32>, f32) {
-    let m = w.iter().fold(0.0f32, |acc, &x| acc.max(x.abs())).max(1e-8);
+    let m = max_abs(w);
     let wq = w
         .iter()
         .map(|&x| {
@@ -88,6 +95,47 @@ pub fn act_quantize(a: &mut [f32], ka: f32) {
     let m = a.iter().fold(0.0f32, |acc, &x| acc.max(x)).max(1e-6);
     for x in a.iter_mut() {
         *x = m * quantize_k((*x / m).clamp(0.0, 1.0), ka);
+    }
+}
+
+// ---- frozen-artifact quantizer codes (runtime::artifact pack contract) -----
+
+/// Integer codes of the DoReFa quantizer grid: `c_j = round(v_j * k)` with
+/// `v_j = tanh(w_j) / (2m) + 1/2` and `m = max|tanh(W)|` — exactly the
+/// `quantize_k` numerator inside [`dorefa_quantize`], so `c_j` lies in
+/// `[0, k]` and fits the `b = log2(k + 1)` bits of the layer's assignment.
+/// Returns `(codes, m)`; [`decode_codes_into`] reproduces the quantizer's
+/// f32 grid values from them bit-for-bit.
+pub fn dorefa_codes(w: &[f32], k: f32) -> (Vec<u16>, f32) {
+    let m = max_abs_tanh(w);
+    let codes = w
+        .iter()
+        .map(|&x| ((x.tanh() / (2.0 * m) + 0.5) * k).round() as u16)
+        .collect();
+    (codes, m)
+}
+
+/// Integer codes of the WRPN quantizer grid (scale `m = max|W|`, clip that
+/// never bites) — the [`wrpn_quantize`] counterpart of [`dorefa_codes`].
+pub fn wrpn_codes(w: &[f32], k: f32) -> (Vec<u16>, f32) {
+    let m = max_abs(w);
+    let codes = w
+        .iter()
+        .map(|&x| ((x.clamp(-m, m) / (2.0 * m) + 0.5) * k).round() as u16)
+        .collect();
+    (codes, m)
+}
+
+/// Decode quantizer codes back onto the f32 grid: `w_q = m * (2 c/k - 1)`.
+/// `c as f32` is exact (codes are <= 255) and the expression evaluates the
+/// same operations in the same order as the `quantize_k`-based quantizers,
+/// so the decoded weights are **bitwise identical** to the fake-quantized
+/// weights the train/eval programs compute from the live f32 parameters —
+/// the exact-unpack contract `runtime::artifact` is built on.
+pub fn decode_codes_into(codes: &[u16], k: f32, m: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes.iter()) {
+        *o = m * (2.0 * (c as f32 / k) - 1.0);
     }
 }
 
@@ -242,12 +290,29 @@ pub fn conv_geom(
 /// `conv = matmul(cols, w_flat)`. Images are split across the worker pool;
 /// each image's rows are written by exactly one worker.
 pub fn im2col(x: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let mut cols = vec![0.0f32; batch * g.h_out * g.w_out * g.kdim()];
+    // Freshly zeroed allocation: skip the in-shard clear (training hot path).
+    im2col_body(x, batch, g, &mut cols, false);
+    cols
+}
+
+/// [`im2col`] into a caller-owned slice (the inference arena). Each shard
+/// is zeroed before the patch copy, so a reused buffer produces the same
+/// bits as the freshly-allocated path — including the padded borders.
+pub fn im2col_into(x: &[f32], batch: usize, g: &ConvGeom, cols: &mut [f32]) {
+    im2col_body(x, batch, g, cols, true);
+}
+
+fn im2col_body(x: &[f32], batch: usize, g: &ConvGeom, cols: &mut [f32], zero_shards: bool) {
     let k = g.ksize;
     let kk = g.kdim();
     let plane = g.h_in * g.w_in * g.cin;
     let width = g.h_out * g.w_out * kk;
-    let mut cols = vec![0.0f32; batch * width];
-    pool::run_rows(&mut cols, batch, width, CONV_MIN_BATCH, |b0, shard| {
+    debug_assert_eq!(cols.len(), batch * width);
+    pool::run_rows(cols, batch, width, CONV_MIN_BATCH, |b0, shard| {
+        if zero_shards {
+            shard.fill(0.0);
+        }
         for (bi, dst) in shard.chunks_mut(width).enumerate() {
             let xb = &x[(b0 + bi) * plane..(b0 + bi + 1) * plane];
             for oh in 0..g.h_out {
@@ -272,7 +337,6 @@ pub fn im2col(x: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
             }
         }
     });
-    cols
 }
 
 /// Transpose of [`im2col`]: scatter-add patch-row gradients back onto the
@@ -317,11 +381,34 @@ pub fn col2im(dcols: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
 /// Depthwise conv forward: out(b, oh, ow, c) += x(b, ih, iw, c) * w(kh, kw, 0, c).
 /// Images are split across the worker pool (one image per output shard).
 pub fn dwconv_fwd(x: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * g.h_out * g.w_out * g.cout];
+    // Freshly zeroed allocation: skip the in-shard clear (training hot path).
+    dwconv_fwd_body(x, w, batch, g, &mut out, false);
+    out
+}
+
+/// [`dwconv_fwd`] into a caller-owned slice (the inference arena); shards
+/// are zeroed before the accumulation, matching the allocating path's bits.
+pub fn dwconv_fwd_into(x: &[f32], w: &[f32], batch: usize, g: &ConvGeom, out: &mut [f32]) {
+    dwconv_fwd_body(x, w, batch, g, out, true);
+}
+
+fn dwconv_fwd_body(
+    x: &[f32],
+    w: &[f32],
+    batch: usize,
+    g: &ConvGeom,
+    out: &mut [f32],
+    zero_shards: bool,
+) {
     let (k, c) = (g.ksize, g.cout);
     let plane_in = g.h_in * g.w_in * c;
     let width = g.h_out * g.w_out * c;
-    let mut out = vec![0.0f32; batch * width];
-    pool::run_rows(&mut out, batch, width, CONV_MIN_BATCH, |b0, shard| {
+    debug_assert_eq!(out.len(), batch * width);
+    pool::run_rows(out, batch, width, CONV_MIN_BATCH, |b0, shard| {
+        if zero_shards {
+            shard.fill(0.0);
+        }
         for (bi, ob) in shard.chunks_mut(width).enumerate() {
             let xb = &x[(b0 + bi) * plane_in..(b0 + bi + 1) * plane_in];
             for oh in 0..g.h_out {
@@ -348,7 +435,6 @@ pub fn dwconv_fwd(x: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> 
             }
         }
     });
-    out
 }
 
 /// Depthwise conv weight gradient: dW(kh, kw, 0, c) = sum x * dz.
@@ -481,6 +567,41 @@ pub fn maxpool_fwd(
     (out, arg)
 }
 
+/// Forward-only max pooling into a caller-owned slice: the same
+/// element-visit order and comparisons as [`maxpool_fwd`] without the
+/// argmax bookkeeping (inference runs no backward scatter), so the pooled
+/// values are bitwise identical to the training path.
+pub fn maxpool_infer_into(
+    x: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    size: usize,
+    out: &mut [f32],
+) {
+    let (ho, wo) = (h / size, w / size);
+    debug_assert_eq!(out.len(), batch * ho * wo * c);
+    for b in 0..batch {
+        for oh in 0..ho {
+            for ow in 0..wo {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    for kh in 0..size {
+                        for kw in 0..size {
+                            let idx = ((b * h + oh * size + kh) * w + ow * size + kw) * c + ch;
+                            if x[idx] > best {
+                                best = x[idx];
+                            }
+                        }
+                    }
+                    out[((b * ho + oh) * wo + ow) * c + ch] = best;
+                }
+            }
+        }
+    }
+}
+
 /// Max pooling backward: route each output gradient to its argmax input.
 pub fn maxpool_bwd(dz: &[f32], argmax: &[u32], in_len: usize) -> Vec<f32> {
     let mut dx = vec![0.0f32; in_len];
@@ -492,11 +613,19 @@ pub fn maxpool_bwd(dz: &[f32], argmax: &[u32], in_len: usize) -> Vec<f32> {
 
 /// Global average pool over the spatial dims: (b, h, w, c) -> (b, c).
 pub fn gap_fwd(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
-    let hw = h * w;
     let mut out = vec![0.0f32; batch * c];
+    gap_fwd_into(x, batch, h, w, c, &mut out);
+    out
+}
+
+/// [`gap_fwd`] into a caller-owned slice (rows are zeroed before the sum).
+pub fn gap_fwd_into(x: &[f32], batch: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    let hw = h * w;
+    debug_assert_eq!(out.len(), batch * c);
     for b in 0..batch {
         let xb = &x[b * hw * c..(b + 1) * hw * c];
         let orow = &mut out[b * c..(b + 1) * c];
+        orow.fill(0.0);
         for p in 0..hw {
             for ch in 0..c {
                 orow[ch] += xb[p * c + ch];
@@ -506,7 +635,6 @@ pub fn gap_fwd(x: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32
             *v /= hw as f32;
         }
     }
-    out
 }
 
 /// Global average pool backward: broadcast dz / (h * w) over the plane.
@@ -529,6 +657,13 @@ pub fn gap_bwd(dz: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f3
 /// Per-channel affine ("BN-lite"): out = x * s + b over (rows, c).
 pub fn affine_fwd(x: &[f32], s: &[f32], b: &[f32], rows: usize, c: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; rows * c];
+    affine_fwd_into(x, s, b, rows, c, &mut out);
+    out
+}
+
+/// [`affine_fwd`] into a caller-owned slice (pure overwrite).
+pub fn affine_fwd_into(x: &[f32], s: &[f32], b: &[f32], rows: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), rows * c);
     for r in 0..rows {
         let xrow = &x[r * c..(r + 1) * c];
         let orow = &mut out[r * c..(r + 1) * c];
@@ -536,7 +671,6 @@ pub fn affine_fwd(x: &[f32], s: &[f32], b: &[f32], rows: usize, c: usize) -> Vec
             orow[ch] = xrow[ch] * s[ch] + b[ch];
         }
     }
-    out
 }
 
 /// Affine backward: (dx = dz * s, ds = sum x * dz, db = sum dz).
@@ -725,6 +859,48 @@ fn gemm_packed(
             r += mr;
         }
     });
+}
+
+/// A GEMM right operand packed *once* into the NR-wide panel layout of
+/// `pack_b`. Frozen-model weights are packed at [`super::super::infer`]
+/// load time, so the steady-state inference dispatch skips the per-call
+/// pack the training kernels pay on every step.
+pub struct PackedB {
+    panels: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedB {
+    /// Pack a row-major (k x n) matrix.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> PackedB {
+        debug_assert_eq!(b.len(), k * n);
+        PackedB { panels: pack_b(b, k, n), k, n }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// out(r, j) = bias(j) + sum_k x(r, k) * B(k, j) over a pre-packed right
+/// operand, written into a caller-owned slice. Dispatches the exact
+/// `gemm_packed` call (tiles, shard minimum, packed layout) that
+/// [`matmul`] / [`matmul_bias`] make, so the output bits are identical to
+/// those kernels for any thread count.
+pub fn matmul_packed_into(
+    x: &[f32],
+    pb: &PackedB,
+    rows: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * pb.n);
+    gemm_packed(x, pb.k, 1, rows, pb.k, pb.n, &pb.panels, bias, GEMM_MIN_ROWS, out);
 }
 
 /// out(r, o) = x(r, i) @ w(i, o)   (no bias; conv-via-im2col path)
@@ -955,6 +1131,14 @@ pub fn sgd_momentum(
 /// Keep beta in (1, 8] so b = ceil(beta) lands in [2, 8] (optim.clip_beta).
 pub fn clip_beta(beta: f32) -> f32 {
     beta.clamp(1.0 + 1e-3, 8.0)
+}
+
+/// Eq. 2.4 bitwidth from a continuous beta: b = ceil(beta), clamped to
+/// [2, 8]. The single definition shared by the coordinator's
+/// `BitAssignment` and `Session::freeze`, so a frozen artifact's packed
+/// bitwidths always match the assignment the coordinator reports.
+pub fn ceil_bits(beta: f32) -> u32 {
+    (beta.ceil() as i64).clamp(2, 8) as u32
 }
 
 #[cfg(test)]
@@ -1467,5 +1651,95 @@ mod tests {
         assert_eq!(a.1, b.1, "col2im bits differ across thread counts");
         assert_eq!(a.2, b.2, "dwconv_fwd bits differ across thread counts");
         assert_eq!(a.3, b.3, "dwconv_grad_x bits differ across thread counts");
+    }
+
+    // ---- frozen-artifact codes + inference-arena kernel variants ------------
+
+    #[test]
+    fn quantizer_codes_decode_bitwise_to_the_fake_quantized_grid() {
+        // The exact-unpack contract: decode(codes(w)) must reproduce the
+        // quantizer's f32 output bit-for-bit, for every bitwidth and for
+        // scales from tiny to huge (where tanh saturates).
+        for bits in 2..=8u32 {
+            let k = (2u32.pow(bits) - 1) as f32;
+            for (seed, scale) in [(1u64, 1e-6f32), (2, 0.01), (3, 0.4), (4, 1.0), (5, 50.0)] {
+                let w: Vec<f32> = prand(97, seed).iter().map(|v| v * scale).collect();
+                let (wq, _ste, m) = dorefa_quantize(&w, k);
+                let (codes, mc) = dorefa_codes(&w, k);
+                assert_eq!(m.to_bits(), mc.to_bits(), "dorefa scale b={bits}");
+                assert!(codes.iter().all(|&c| (c as u32) < 2u32.pow(bits)), "b={bits}");
+                let mut dec = vec![0.0f32; w.len()];
+                decode_codes_into(&codes, k, m, &mut dec);
+                for (i, (&d, &q)) in dec.iter().zip(&wq).enumerate() {
+                    assert_eq!(d.to_bits(), q.to_bits(), "dorefa b={bits} elem {i}: {d} vs {q}");
+                }
+
+                let (wq, mw) = wrpn_quantize(&w, k);
+                let (codes, mc) = wrpn_codes(&w, k);
+                assert_eq!(mw.to_bits(), mc.to_bits(), "wrpn scale b={bits}");
+                assert!(codes.iter().all(|&c| (c as u32) < 2u32.pow(bits)), "b={bits}");
+                let mut dec = vec![0.0f32; w.len()];
+                decode_codes_into(&codes, k, mw, &mut dec);
+                for (i, (&d, &q)) in dec.iter().zip(&wq).enumerate() {
+                    assert_eq!(d.to_bits(), q.to_bits(), "wrpn b={bits} elem {i}: {d} vs {q}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matmul_is_bitwise_identical_to_matmul() {
+        for &(rows, din, dout) in GEMM_SHAPES {
+            let x = prand(rows * din, 21);
+            let w = prand(din * dout, 22);
+            let bias = prand(dout, 23);
+            let pb = PackedB::pack(&w, din, dout);
+            assert_eq!((pb.k(), pb.n()), (din, dout));
+            let mut got = vec![f32::NAN; rows * dout];
+            matmul_packed_into(&x, &pb, rows, None, &mut got);
+            let want = matmul(&x, &w, rows, din, dout);
+            let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+            assert_eq!(bits(&got), bits(&want), "packed matmul ({rows},{din},{dout})");
+            matmul_packed_into(&x, &pb, rows, Some(&bias), &mut got);
+            let want = matmul_bias(&x, &w, &bias, rows, din, dout);
+            assert_eq!(bits(&got), bits(&want), "packed matmul_bias ({rows},{din},{dout})");
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_kernels_on_dirty_buffers() {
+        // The arena reuses buffers across dispatches: every _into variant
+        // must produce the allocating kernel's exact bits over a buffer
+        // full of garbage (stale values, NaNs).
+        let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+        let g = conv_geom(9, 7, 3, 5, 3, 2, false);
+        let batch = 6usize;
+        let x = prand(batch * 9 * 7 * 3, 31);
+        let mut dirty = vec![f32::NAN; g.rows(batch) * g.kdim()];
+        im2col_into(&x, batch, &g, &mut dirty);
+        assert_eq!(bits(&dirty), bits(&im2col(&x, batch, &g)), "im2col_into");
+
+        let gd = conv_geom(6, 6, 4, 4, 3, 2, true);
+        let xd = prand(batch * 6 * 6 * 4, 32);
+        let wd = prand(3 * 3 * 4, 33);
+        let mut dirty = vec![f32::NAN; gd.rows(batch) * 4];
+        dwconv_fwd_into(&xd, &wd, batch, &gd, &mut dirty);
+        assert_eq!(bits(&dirty), bits(&dwconv_fwd(&xd, &wd, batch, &gd)), "dwconv_fwd_into");
+
+        let xp = prand(batch * 8 * 6 * 3, 34);
+        let mut dirty = vec![f32::NAN; batch * 4 * 3 * 3];
+        maxpool_infer_into(&xp, batch, 8, 6, 3, 2, &mut dirty);
+        let (want, _arg) = maxpool_fwd(&xp, batch, 8, 6, 3, 2);
+        assert_eq!(bits(&dirty), bits(&want), "maxpool_infer_into");
+
+        let mut dirty = vec![f32::NAN; batch * 3];
+        gap_fwd_into(&xp, batch, 8, 6, 3, &mut dirty);
+        assert_eq!(bits(&dirty), bits(&gap_fwd(&xp, batch, 8, 6, 3)), "gap_fwd_into");
+
+        let (s, b) = (prand(3, 35), prand(3, 36));
+        let mut dirty = vec![f32::NAN; batch * 8 * 6 * 3];
+        affine_fwd_into(&xp, &s, &b, batch * 8 * 6, 3, &mut dirty);
+        let want = affine_fwd(&xp, &s, &b, batch * 8 * 6, 3);
+        assert_eq!(bits(&dirty), bits(&want), "affine_fwd_into");
     }
 }

@@ -334,6 +334,12 @@ impl Backend for NativeBackend {
         Ok(())
     }
 
+    /// The native executor resolves the batch from the x/y buffer lengths
+    /// (`batch_of`), so any batch size dispatches through one program.
+    fn batch_polymorphic(&self) -> bool {
+        true
+    }
+
     fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>> {
         let kind = self.kind_of(&sig.name)?;
         let mut outs = self.output_template(&kind, args)?;
@@ -496,7 +502,9 @@ struct GraphForward {
 /// ReLU in place, recording the mask when a backward pass will need it,
 /// then optional activation fake-quant (`act_ka = None` means fp32
 /// activations). Returns an empty mask when `record` is off.
-fn relu_quant(h: &mut [f32], act_ka: Option<f32>, record: bool) -> Vec<f32> {
+/// `pub(crate)` so `runtime::infer`'s forward-only path runs the *same*
+/// code (bitwise, including -0.0 handling) as this backend's eval pass.
+pub(crate) fn relu_quant(h: &mut [f32], act_ka: Option<f32>, record: bool) -> Vec<f32> {
     let mut mask = if record { vec![0.0f32; h.len()] } else { Vec::new() };
     if record {
         for (zi, mi) in h.iter_mut().zip(mask.iter_mut()) {

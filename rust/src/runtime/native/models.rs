@@ -121,6 +121,47 @@ impl NativeModel {
             .collect()
     }
 
+    /// Per-example buffer demands of a forward-only pass over this op
+    /// graph — the shape plan `runtime::infer`'s arena is sized from, in
+    /// f32 elements *per example* (the session multiplies by `max_batch`):
+    /// `act` bounds every op input/output activation, `cols` the largest
+    /// im2col patch matrix, `skip` the deepest concurrently-live residual
+    /// save stack, and `shortcut` the largest projected shortcut.
+    pub fn infer_plan(&self) -> InferPlan {
+        let mut cur = self.pixels();
+        let mut plan = InferPlan { act: cur, cols: 0, skip: 0, shortcut: 0 };
+        let mut live_skip = 0usize;
+        let mut saves: Vec<usize> = Vec::new();
+        for op in &self.ops {
+            match op {
+                OpNode::Conv { geom, .. } => {
+                    if !geom.depthwise {
+                        plan.cols = plan.cols.max(geom.h_out * geom.w_out * geom.kdim());
+                    }
+                    cur = geom.h_out * geom.w_out * geom.cout;
+                }
+                OpNode::Fc { dout, .. } => cur = *dout,
+                OpNode::Affine { .. } | OpNode::Relu | OpNode::Flatten => {}
+                OpNode::MaxPool { h, w, c, size } => cur = (h / size) * (w / size) * c,
+                OpNode::GlobalAvgPool { c, .. } => cur = *c,
+                OpNode::SkipSave => {
+                    live_skip += cur;
+                    plan.skip = plan.skip.max(live_skip);
+                    saves.push(cur);
+                }
+                OpNode::SkipProj { geom, .. } => {
+                    plan.cols = plan.cols.max(geom.h_out * geom.w_out * geom.kdim());
+                    plan.shortcut = plan.shortcut.max(geom.h_out * geom.w_out * geom.cout);
+                }
+                OpNode::SkipAdd => {
+                    live_skip -= saves.pop().expect("SkipAdd without SkipSave");
+                }
+            }
+            plan.act = plan.act.max(cur);
+        }
+        plan
+    }
+
     // ---- zoo constructors (mirror python/compile/models.py) ----------------
 
     /// The WaveQ test MLP on mlp-lite (8x8x3 -> 10).
@@ -318,6 +359,20 @@ impl NativeModel {
             _ => return None,
         })
     }
+}
+
+/// Per-example arena demands of a forward-only pass (see
+/// [`NativeModel::infer_plan`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InferPlan {
+    /// Largest activation entering or leaving any op.
+    pub act: usize,
+    /// Largest im2col patch matrix (standard convs + projections).
+    pub cols: usize,
+    /// Deepest concurrently-live residual save stack.
+    pub skip: usize,
+    /// Largest projected-shortcut activation.
+    pub shortcut: usize,
 }
 
 /// Base names of every zoo member, in registration order.
@@ -652,6 +707,29 @@ mod tests {
         assert!(shapes.iter().all(|&(r, k, c)| r > 0 && k > 0 && c > 0));
         // Pure-FC models have no conv matmuls.
         assert!(NativeModel::mlp(1).conv_matmul_shapes(32).is_empty());
+    }
+
+    #[test]
+    fn infer_plan_bounds_every_buffer_the_forward_pass_touches() {
+        // mlp: pure FC ladder — input 192 is the largest activation, no
+        // im2col, no residual machinery.
+        let plan = NativeModel::mlp(1).infer_plan();
+        assert_eq!(plan, InferPlan { act: 192, cols: 0, skip: 0, shortcut: 0 });
+        // simplenet5: conv1 output 16*16*16 dominates activations; conv2's
+        // patches 8*8*(3*3*16) dominate the cols scratch.
+        let plan = NativeModel::simplenet5(1).infer_plan();
+        assert_eq!(plan.act, 16 * 16 * 16);
+        assert_eq!(plan.cols, 8 * 8 * 9 * 16);
+        assert_eq!((plan.skip, plan.shortcut), (0, 0));
+        // resnet20l: stage-1 blocks save the 16x16x8 stem activation; the
+        // projections emit at most 8*8*16 (stage 2 entry).
+        let plan = NativeModel::resnet20l(1).infer_plan();
+        assert_eq!(plan.skip, 16 * 16 * 8);
+        assert_eq!(plan.shortcut, 8 * 8 * 16);
+        // Depthwise convs don't use the cols scratch, but mobilenet's 1x1
+        // pointwise convs do; every bound is positive.
+        let plan = NativeModel::mobilenetl(1).infer_plan();
+        assert!(plan.act > 0 && plan.cols > 0);
     }
 
     #[test]

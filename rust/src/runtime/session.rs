@@ -66,11 +66,16 @@
 //! assert!(eval_loss.is_finite() && (0.0..=1.0).contains(&eval_acc));
 //! ```
 
+use std::path::Path;
+
 use anyhow::{anyhow, Result};
 
+use super::artifact::{FrozenModel, FrozenParam, ParamStorage};
 use super::backend::{Program, Runtime};
 use super::buffer::{buffer_f32, to_vec_f32, Buffer};
+use super::checkpoint::Checkpoint;
 use super::manifest::ModelMeta;
+use super::native::kernels as kn;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -437,6 +442,13 @@ impl<'rt> Session<'rt> {
         self.train.name()
     }
 
+    /// Whether this session's backend serves [`Session::eval`] at
+    /// non-manifest batch sizes (the held-out ragged tail). True on the
+    /// native backend; false on AOT fixed-shape backends.
+    pub fn batch_polymorphic(&self) -> bool {
+        self.eval.batch_polymorphic()
+    }
+
     /// The live training state (read-only).
     pub fn state(&self) -> &SessionState {
         &self.state
@@ -542,6 +554,11 @@ impl<'rt> Session<'rt> {
     /// eval program. Quantized eval programs need the per-layer level
     /// counts `kw` (e.g. `BitAssignment::kw()`) and the activation level
     /// count `ka`; fp32 eval ignores both.
+    ///
+    /// Batch-polymorphic: a batch at the manifest shape flows through the
+    /// preallocated zero-alloc slots; any other size (the held-out ragged
+    /// tail) dispatches through fresh x/y buffers at the live shape — the
+    /// native backend resolves the batch from the buffer length.
     pub fn eval(
         &mut self,
         x: &[f32],
@@ -549,9 +566,27 @@ impl<'rt> Session<'rt> {
         kw: Option<&[f32]>,
         ka: f32,
     ) -> Result<(f32, f32)> {
+        let pix: usize = self.model.input_shape.iter().product();
+        if x.is_empty() || x.len() % pix != 0 {
+            return Err(anyhow!(
+                "{}: x has {} elems, not a multiple of {pix}",
+                self.eval.name(),
+                x.len()
+            ));
+        }
+        let batch = x.len() / pix;
+        if y.len() != batch * self.model.num_classes {
+            return Err(anyhow!(
+                "{}: y has {} elems, batch {batch} needs {}",
+                self.eval.name(),
+                y.len(),
+                batch * self.model.num_classes
+            ));
+        }
         let (eval_out_loss, eval_out_acc) = (self.eval_out_loss, self.eval_out_acc);
         let Session {
             eval,
+            model,
             state,
             bufs,
             eval_outs,
@@ -562,8 +597,20 @@ impl<'rt> Session<'rt> {
             eval_quant,
             ..
         } = self;
-        bufs[*x_idx].fill_from(x)?;
-        bufs[*y_idx].fill_from(y)?;
+        let ragged: Option<(Buffer, Buffer)> = if batch == model.batch {
+            bufs[*x_idx].fill_from(x)?;
+            bufs[*y_idx].fill_from(y)?;
+            None
+        } else {
+            if !eval.batch_polymorphic() {
+                return Err(anyhow!(
+                    "{}: backend executes fixed shapes; batch {batch} != manifest {}",
+                    eval.name(),
+                    model.batch
+                ));
+            }
+            Some(model.batch_buffers(batch, x, y)?)
+        };
         if *eval_quant {
             let kw = kw.ok_or_else(|| anyhow!("{}: quantized eval needs kw", eval.name()))?;
             eval_kw_buf.fill_from(kw)?;
@@ -571,14 +618,174 @@ impl<'rt> Session<'rt> {
         }
         let mut args: Vec<&Buffer> = Vec::with_capacity(state.params.len() + 4);
         args.extend(state.params.iter());
-        args.push(&bufs[*x_idx]);
-        args.push(&bufs[*y_idx]);
+        match &ragged {
+            Some((xb, yb)) => {
+                args.push(xb);
+                args.push(yb);
+            }
+            None => {
+                args.push(&bufs[*x_idx]);
+                args.push(&bufs[*y_idx]);
+            }
+        }
         if *eval_quant {
             args.push(eval_kw_buf);
             args.push(eval_ka_buf);
         }
         eval.call_into(&args, eval_outs)?;
         Ok((eval_outs[eval_out_loss].data[0], eval_outs[eval_out_acc].data[0]))
+    }
+
+    /// Freeze the current state into a deployable [`FrozenModel`]: every
+    /// quantized layer's weights become bit-packed integer codes at the
+    /// layer's bitwidth (learned from beta for waveq programs, the preset
+    /// `kw` for dorefa/wrpn), plus the DoReFa/WRPN scale; everything else
+    /// stays f32. `ka` is the activation level count captured into the
+    /// artifact (ignored — no act fake-quant — for fp32 programs).
+    ///
+    /// The packed codes satisfy the exact-unpack contract: decoding them
+    /// reproduces the fake-quantized weights the eval program computes from
+    /// this state bit-for-bit, so a frozen `InferenceSession` serves logits
+    /// bitwise identical to [`Session::eval`] at the same `kw`/`ka`.
+    pub fn freeze(&self, ka: f32) -> Result<FrozenModel> {
+        #[derive(PartialEq)]
+        enum FreezeQuant {
+            None,
+            Dorefa,
+            Wrpn,
+        }
+        let prog = self.train.name();
+        let (quant, kw): (FreezeQuant, Vec<f32>) = if prog.starts_with("train_fp32_") {
+            (FreezeQuant::None, Vec::new())
+        } else if prog.starts_with("train_waveq_") {
+            // Eq. 2.4 at the current beta (the same `ceil_bits` mapping the
+            // coordinator's BitAssignment applies), so freezing mid-training
+            // or post-snap both land on integer bits.
+            let kw = self
+                .state
+                .beta
+                .iter()
+                .map(|&b| (2u32.pow(kn::ceil_bits(b)) - 1) as f32)
+                .collect();
+            (FreezeQuant::Dorefa, kw)
+        } else if prog.starts_with("train_dorefa_") || prog.starts_with("train_wrpn_") {
+            let kw = self
+                .slots
+                .iter()
+                .enumerate()
+                .find_map(|(i, s)| match s {
+                    Slot::KwVec => Some(self.bufs[i].data.clone()),
+                    _ => None,
+                })
+                .ok_or_else(|| anyhow!("{prog}: program has no kw input to freeze from"))?;
+            let q = if prog.starts_with("train_wrpn_") {
+                FreezeQuant::Wrpn
+            } else {
+                FreezeQuant::Dorefa
+            };
+            (q, kw)
+        } else {
+            return Err(anyhow!("{prog}: unknown program family; cannot freeze"));
+        };
+
+        // Bitwidths from the level counts: k must be 2^b - 1 with b in
+        // [2, 8] for the codes to bit-pack (a >8-bit preset has no packed
+        // representation — keep serving it from the live f32 state).
+        let mut layer_bits = vec![0u8; kw.len()];
+        for (q, &k) in kw.iter().enumerate() {
+            let levels = k as f64;
+            let b = (levels + 1.0).log2();
+            let bi = b.round() as i64;
+            if levels.fract() != 0.0 || (b - bi as f64).abs() > 1e-9 || !(2..=8).contains(&bi) {
+                return Err(anyhow!(
+                    "{prog}: qlayer {q} has k = {k}; freeze needs k = 2^b - 1 with b in [2, 8]"
+                ));
+            }
+            layer_bits[q] = bi as u8;
+        }
+
+        let mut params = Vec::with_capacity(self.model.params.len());
+        for (p, buf) in self.model.params.iter().zip(self.state.params.iter()) {
+            let storage = match (p.qidx, &quant) {
+                (Some(q), FreezeQuant::Dorefa) => {
+                    let (codes, scale) = kn::dorefa_codes(&buf.data, kw[q]);
+                    ParamStorage::Packed { bits: layer_bits[q], scale, codes }
+                }
+                (Some(q), FreezeQuant::Wrpn) => {
+                    let (codes, scale) = kn::wrpn_codes(&buf.data, kw[q]);
+                    ParamStorage::Packed { bits: layer_bits[q], scale, codes }
+                }
+                _ => ParamStorage::F32(buf.data.clone()),
+            };
+            params.push(FrozenParam { name: p.name.clone(), shape: p.shape.clone(), storage });
+        }
+        let wm = self.model.width_mult.max(1);
+        let base = match self.model.name.strip_suffix(&format!("_w{wm}")) {
+            Some(b) if wm > 1 => b.to_string(),
+            _ => self.model.name.clone(),
+        };
+        Ok(FrozenModel {
+            base,
+            width_mult: wm,
+            act_levels: if quant == FreezeQuant::None { None } else { Some(ka) },
+            params,
+        })
+    }
+
+    /// Snapshot the live state to a v2 checkpoint (params named by the
+    /// manifest layout, beta/vbeta, step counter, model name).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        Checkpoint::from_state(&self.model, &self.state)?.save(path)
+    }
+
+    /// Restore a checkpoint into this session: validates the model name
+    /// (v2) and every tensor name/shape against the manifest layout, then
+    /// replaces params, beta/vbeta, and the step counter. Momenta are not
+    /// checkpointed — velocities restart at zero.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let ck = Checkpoint::load(path)?;
+        if !ck.model.is_empty() && ck.model != self.model.name {
+            return Err(anyhow!(
+                "checkpoint is for model '{}', session trains '{}'",
+                ck.model,
+                self.model.name
+            ));
+        }
+        if ck.tensors.len() != self.model.params.len() {
+            return Err(anyhow!(
+                "checkpoint has {} tensors, model '{}' wants {}",
+                ck.tensors.len(),
+                self.model.name,
+                self.model.params.len()
+            ));
+        }
+        for ((name, t), p) in ck.tensors.iter().zip(self.model.params.iter()) {
+            if name != &p.name || t.shape != p.shape {
+                return Err(anyhow!(
+                    "checkpoint tensor '{name}' {:?} does not match model param '{}' {:?}",
+                    t.shape,
+                    p.name,
+                    p.shape
+                ));
+            }
+        }
+        if ck.beta.len() != self.model.num_qlayers || ck.vbeta.len() != self.model.num_qlayers {
+            return Err(anyhow!(
+                "checkpoint beta/vbeta have {}/{} entries, model wants {}",
+                ck.beta.len(),
+                ck.vbeta.len(),
+                self.model.num_qlayers
+            ));
+        }
+        let tensors: Vec<Tensor> = ck.tensors.into_iter().map(|(_, t)| t).collect();
+        self.state.set_params(&tensors)?;
+        for v in &mut self.state.vels {
+            v.data.fill(0.0);
+        }
+        self.state.beta = ck.beta;
+        self.state.vbeta = ck.vbeta;
+        self.state.step = ck.step;
+        Ok(())
     }
 }
 
@@ -696,6 +903,168 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err}").contains("v inputs"), "{err}");
+    }
+
+    #[test]
+    fn eval_serves_ragged_batches_through_the_same_program() {
+        // A 7-example batch (not the manifest 64) must evaluate cleanly and
+        // agree bitwise with the legacy stringly-typed dispatch at the same
+        // ragged shape.
+        let rt = Runtime::native();
+        let mut s = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_waveq_mlp".into(),
+                eval_program: "eval_quant_mlp".into(),
+                seed: 5,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        let m = s.model().clone();
+        let pix: usize = m.input_shape.iter().product();
+        let batch = 7usize;
+        let x: Vec<f32> = (0..batch * pix).map(|i| ((i as f32) * 0.13).sin()).collect();
+        let mut y = vec![0.0f32; batch * m.num_classes];
+        for r in 0..batch {
+            y[r * m.num_classes + r % m.num_classes] = 1.0;
+        }
+        let kw = vec![15.0f32; m.num_qlayers];
+        let (l, a) = s.eval(&x, &y, Some(&kw), 255.0).unwrap();
+        let mut args: Vec<Buffer> = s.state().params.to_vec();
+        args.push(buffer_f32(&x, &[batch, 8, 8, 3]).unwrap());
+        args.push(buffer_f32(&y, &[batch, m.num_classes]).unwrap());
+        args.push(buffer_f32(&kw, &[kw.len()]).unwrap());
+        args.push(Buffer::scalar(255.0));
+        let outs = rt.execute("eval_quant_mlp", &args).unwrap();
+        assert_eq!(l.to_bits(), outs[0].data[0].to_bits(), "ragged eval loss");
+        assert_eq!(a.to_bits(), outs[1].data[0].to_bits(), "ragged eval acc");
+        // Not a pixel multiple -> clean error; manifest batch still works.
+        assert!(s.eval(&x[..10], &y, Some(&kw), 255.0).is_err());
+        let (x, y) = batch_for(&m);
+        assert!(s.eval(&x, &y, Some(&kw), 255.0).is_ok());
+    }
+
+    #[test]
+    fn freeze_packs_exactly_the_quantized_layers() {
+        let rt = Runtime::native();
+        let s = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_waveq_simplenet5".into(),
+                eval_program: "eval_quant_simplenet5".into(),
+                seed: 9,
+                beta_init: 3.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        let frozen = s.freeze(255.0).unwrap();
+        assert_eq!(frozen.base, "simplenet5");
+        assert_eq!(frozen.width_mult, 1);
+        assert_eq!(frozen.act_levels, Some(255.0));
+        assert_eq!(frozen.params.len(), s.model().params.len());
+        // beta_init 3.0 -> every learned layer freezes at 3 bits.
+        assert_eq!(frozen.layer_bits(), vec![3; s.model().num_qlayers]);
+        // Packed layers are exactly the qidx slots; the rest stay f32.
+        for (fp, p) in frozen.params.iter().zip(&s.model().params) {
+            assert_eq!(
+                matches!(fp.storage, ParamStorage::Packed { .. }),
+                p.qidx.is_some(),
+                "{}",
+                p.name
+            );
+        }
+        // Byte accounting: sum(ceil(n_l * b_l / 8)), >= 4x under f32.
+        let want: usize = s
+            .model()
+            .params
+            .iter()
+            .filter(|p| p.qidx.is_some())
+            .map(|p| (p.shape.iter().product::<usize>() * 3).div_ceil(8))
+            .sum();
+        assert_eq!(frozen.packed_weight_bytes(), want);
+        assert!(frozen.f32_weight_bytes() >= 4 * frozen.packed_weight_bytes());
+    }
+
+    #[test]
+    fn freeze_rejects_unpackable_presets() {
+        let rt = Runtime::native();
+        // A 16-bit preset (k = 65535) has no 2..=8-bit packed form.
+        let s = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_dorefa_mlp".into(),
+                eval_program: "eval_quant_mlp".into(),
+                seed: 1,
+                beta_init: 4.0,
+                preset_kw: Some(vec![65535.0; 2]),
+            },
+        )
+        .unwrap();
+        let err = s.freeze(255.0).unwrap_err();
+        assert!(format!("{err}").contains("k = 2^b - 1"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_round_trips_through_the_session_helpers() {
+        let rt = Runtime::native();
+        let mut s = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_waveq_mlp".into(),
+                eval_program: "eval_quant_mlp".into(),
+                seed: 13,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        let (x, y) = batch_for(&s.model().clone());
+        s.step(&x, &y, &knobs()).unwrap();
+        s.step(&x, &y, &knobs()).unwrap();
+        let path = std::env::temp_dir().join("waveq_session_ckpt_test.bin");
+        s.save_checkpoint(&path).unwrap();
+        let want_params: Vec<Vec<f32>> = s.state().params.iter().map(|b| b.data.clone()).collect();
+        let want_beta = s.state().beta.clone();
+
+        // Restore into a *fresh* session: params/beta/step come back, the
+        // momenta restart at zero.
+        let mut fresh = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_waveq_mlp".into(),
+                eval_program: "eval_quant_mlp".into(),
+                seed: 999,
+                beta_init: 6.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        fresh.load_checkpoint(&path).unwrap();
+        for (got, want) in fresh.state().params.iter().zip(&want_params) {
+            assert_eq!(&got.data, want);
+        }
+        assert_eq!(fresh.state().beta, want_beta);
+        assert_eq!(fresh.state().step, 2);
+        assert!(fresh.state().vels.iter().all(|v| v.data.iter().all(|&x| x == 0.0)));
+
+        // A different model rejects the checkpoint by name.
+        let mut other = Session::open(
+            &rt,
+            &SessionCfg {
+                train_program: "train_waveq_simplenet5".into(),
+                eval_program: "eval_quant_simplenet5".into(),
+                seed: 1,
+                beta_init: 4.0,
+                preset_kw: None,
+            },
+        )
+        .unwrap();
+        let err = other.load_checkpoint(&path).unwrap_err();
+        assert!(format!("{err}").contains("is for model"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

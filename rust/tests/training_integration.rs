@@ -129,20 +129,7 @@ fn checkpoint_fine_tune_round_trip() {
     let out = Trainer::new(&rt, quick_cfg(Algo::Fp32, 60)).run().unwrap();
     let model = rt.manifest.model(&out.model_key).unwrap();
     let path = std::env::temp_dir().join("waveq_it_ckpt.bin");
-    Checkpoint {
-        tensors: out
-            .state
-            .all_params(model)
-            .unwrap()
-            .into_iter()
-            .zip(&model.params)
-            .map(|(t, p)| (p.name.clone(), t))
-            .collect(),
-        beta: out.state.beta.clone(),
-        vbeta: out.state.vbeta.clone(),
-    }
-    .save(&path)
-    .unwrap();
+    Checkpoint::from_state(model, &out.state).unwrap().save(&path).unwrap();
 
     // Fine-tune from the checkpoint: the warm start must beat a cold start
     // at the very first recorded training accuracy.
