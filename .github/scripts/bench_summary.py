@@ -5,8 +5,10 @@ Usage: bench_summary.py <dir-with-BENCH_jsons>
 
 Consumes the machine-readable reports the `cargo bench` binaries emit
 (`bench_support::write_report`): BENCH_kernels.json (blocked vs scalar
-matmul/grad kernels, thread scaling) and BENCH_runtime.json (per-program
-step latency across the model zoo). Prints markdown to stdout; the
+matmul/grad kernels, thread scaling), BENCH_runtime.json (per-program
+step latency across the model zoo), BENCH_infer.json (frozen-artifact
+serving throughput) and BENCH_serve.json (concurrent `waveq serve`
+latency/throughput vs batch-1 serial). Prints markdown to stdout; the
 perf-smoke CI job appends it to $GITHUB_STEP_SUMMARY.
 """
 
@@ -99,6 +101,29 @@ def infer_table(report: dict) -> None:
     print()
 
 
+def serve_table(report: dict) -> None:
+    print("## Serving bench (`waveq serve`: cross-request batching over TCP loopback)")
+    print()
+    serial = report.get("serial_batch1_imgs_per_s")
+    print(f"model: {report.get('model', '?')}, workers: {int(report.get('workers', 0))}, "
+          f"max_batch: {int(report.get('max_batch', 0))}, "
+          f"deadline: {report.get('deadline_us', 0):.0f} µs, "
+          f"threads available: {int(report.get('threads_available', 1))}")
+    print()
+    if serial is not None:
+        print(f"- batch-1 serial baseline (no server stack): **{serial:.1f} imgs/s**")
+        print()
+    print("| clients | requests | imgs/s | vs serial | p50 | p99 | mean batch fill |")
+    print("|---|---|---|---|---|---|---|")
+    for lane in report.get("lanes", []):
+        imgs = lane["imgs_per_s"]
+        vs = f"{imgs / serial:.2f}x" if serial else "-"
+        print(f"| {int(lane['clients'])} | {int(lane['requests'])} | {imgs:.1f} | {vs} | "
+              f"{lane['p50_us'] / 1e3:.2f} ms | {lane['p99_us'] / 1e3:.2f} ms | "
+              f"{lane['mean_batch_fill']:.2f} |")
+    print()
+
+
 def main() -> int:
     outdir = Path(sys.argv[1] if len(sys.argv) > 1 else ".")
     found = False
@@ -113,6 +138,10 @@ def main() -> int:
     infer = outdir / "BENCH_infer.json"
     if infer.exists():
         infer_table(json.loads(infer.read_text()))
+        found = True
+    serve = outdir / "BENCH_serve.json"
+    if serve.exists():
+        serve_table(json.loads(serve.read_text()))
         found = True
     if not found:
         print(f"no BENCH_*.json reports under {outdir}", file=sys.stderr)

@@ -20,7 +20,7 @@ fn main() {
 
     // Batcher throughput.
     let ds = Dataset::generate(spec("cifar-lite"), 8192, 1, 0);
-    let mut b = Batcher::new(ds, 64, 1);
+    let mut b = Batcher::new(ds, 64, 1).unwrap();
     let s = BenchRunner::new(5, 100).bench("batcher 64 cifar-lite", || {
         let _ = b.next_batch();
     });
@@ -29,7 +29,7 @@ fn main() {
     // Prefetch overlap: consumer that "works" 2ms per batch should see ~zero
     // wait when the producer runs ahead.
     let ds = Dataset::generate(spec("cifar-lite"), 8192, 1, 0);
-    let batcher = Batcher::new(ds, 64, 1);
+    let batcher = Batcher::new(ds, 64, 1).unwrap();
     let mut pf = Prefetcher::spawn(batcher, 4, 100);
     let mut waits = Vec::new();
     for _ in 0..100 {

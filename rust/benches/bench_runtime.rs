@@ -44,7 +44,7 @@ fn main() {
 
     // --- data pipeline --------------------------------------------------------
     let ds = Dataset::generate(spec("cifar-lite"), 4096, 1, 0);
-    let mut batcher = Batcher::new(ds, 64, 1);
+    let mut batcher = Batcher::new(ds, 64, 1).unwrap();
     let s = runner.bench("batcher next_batch (64x16x16x3)", || {
         let _ = batcher.next_batch();
     });

@@ -1,0 +1,100 @@
+//! Serving bench: the concurrent `waveq serve` stack (request queue +
+//! cross-request batching + TCP loopback) vs a batch-1 serial session —
+//! p50/p99 round-trip latency and imgs/s at 1 / 4 / 8 concurrent clients.
+//! Emits the machine-readable `BENCH_serve.json` consumed by the
+//! `perf-smoke` CI lane's step summary (`.github/scripts/bench_summary.py`).
+//!
+//! The model is frozen from a He-initialized WaveQ state (throughput
+//! depends only on shapes and bitwidths, not on training). The serial
+//! baseline is the same `InferenceSession` driven one example at a time in
+//! process — what a naive request-at-a-time server would sustain; the
+//! serve lanes add the full stack (framing, queueing, batching) on top, so
+//! a batched win here is a real win.
+
+use std::time::{Duration, Instant};
+
+use waveq::bench_support::{header, row, steps, write_report};
+use waveq::data::{spec_for_model, Dataset};
+use waveq::runtime::serve::loopback_bench;
+use waveq::runtime::{InferenceSession, Runtime, ServeCfg, Server, Session, SessionCfg};
+use waveq::util::json::Json;
+
+fn main() {
+    waveq::util::logging::init();
+    header("serve");
+    let rt = Runtime::native();
+    let base = "simplenet5";
+    let session = Session::open(
+        &rt,
+        &SessionCfg {
+            train_program: format!("train_waveq_{base}"),
+            eval_program: format!("eval_quant_{base}"),
+            seed: 42,
+            beta_init: 4.0,
+            preset_kw: None,
+        },
+    )
+    .unwrap();
+    let meta = session.model().clone();
+    let frozen = session.freeze(255.0).unwrap();
+    drop(session);
+    let pix: usize = meta.input_shape.iter().product();
+    let ds = Dataset::generate(spec_for_model(&meta), 64, 7, 1);
+    let xs: Vec<Vec<f32>> = (0..ds.n).map(|i| ds.images[i * pix..(i + 1) * pix].to_vec()).collect();
+    let per_client = steps(30, 200);
+
+    // --- batch-1 serial baseline --------------------------------------------
+    let mut one = InferenceSession::open(&frozen, 1).unwrap();
+    for x in xs.iter().take(8) {
+        let _ = one.infer(x, 1).unwrap(); // warm the kernels + arena
+    }
+    let serial_reqs = 2 * per_client;
+    let t0 = Instant::now();
+    for i in 0..serial_reqs {
+        let _ = one.infer(&xs[i % xs.len()], 1).unwrap();
+    }
+    let serial_secs = t0.elapsed().as_secs_f64();
+    let serial_imgs_per_s = serial_reqs as f64 / serial_secs;
+    row(&["serve", base, "serial batch-1", &format!("{serial_imgs_per_s:.1} imgs/s")]);
+
+    // --- concurrent serve lanes ---------------------------------------------
+    let cfg = ServeCfg { workers: 2, max_batch: 8, deadline: Duration::from_millis(1) };
+    let server = Server::start(&frozen, &cfg).unwrap();
+    let mut lanes: Vec<Json> = Vec::new();
+    for &clients in &[1usize, 4, 8] {
+        let rep = loopback_bench(&server, clients, per_client, &xs).unwrap();
+        row(&[
+            "serve",
+            base,
+            &format!("clients={clients}"),
+            &format!("{:.1} imgs/s", rep.imgs_per_s()),
+            &format!("p50={:.3?} p99={:.3?}", rep.lat.p50, rep.lat.p99),
+            &format!("fill={:.2}", rep.mean_fill),
+        ]);
+        lanes.push(Json::obj(vec![
+            ("clients", Json::Num(clients as f64)),
+            ("requests", Json::Num(rep.requests as f64)),
+            ("imgs_per_s", Json::Num(rep.imgs_per_s())),
+            ("p50_us", Json::Num(rep.lat.p50.as_secs_f64() * 1e6)),
+            ("p99_us", Json::Num(rep.lat.p99.as_secs_f64() * 1e6)),
+            ("mean_batch_fill", Json::Num(rep.mean_fill)),
+        ]));
+    }
+    server.shutdown();
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("serve".into())),
+        ("model", Json::Str(meta.name.clone())),
+        (
+            "threads_available",
+            Json::Num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+        ),
+        ("scale", Json::Str(format!("{:?}", waveq::bench_support::scale()))),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("max_batch", Json::Num(cfg.max_batch as f64)),
+        ("deadline_us", Json::Num(cfg.deadline.as_secs_f64() * 1e6)),
+        ("serial_batch1_imgs_per_s", Json::Num(serial_imgs_per_s)),
+        ("lanes", Json::Arr(lanes)),
+    ]);
+    write_report("serve", &report).expect("write BENCH_serve.json");
+}

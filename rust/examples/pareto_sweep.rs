@@ -32,7 +32,7 @@ fn main() -> Result<()> {
 
     // Enumerate {2..8}^Q and evaluate each assignment.
     let stripes = Stripes::default();
-    let test = test_batcher(&meta, 256, cfg.seed);
+    let test = test_batcher(&meta, 256, cfg.seed)?;
     let space = enumerate_assignments(meta.num_qlayers, 2, 8);
     println!("evaluating {} assignments over {} qlayers...", space.len(), meta.num_qlayers);
     let mut points = Vec::new();

@@ -10,11 +10,12 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::data::{spec_for_model, Batch, Batcher, Dataset};
+use crate::data::{spec_for_model, Batch, Batcher, Dataset, SequentialBatches};
 use crate::runtime::{buffer_f32, Buffer, ModelMeta, Runtime};
 
-/// Deterministic held-out batcher for a model (stream 1 never overlaps train).
-pub fn test_batcher(model: &ModelMeta, n_examples: usize, seed: u64) -> Batcher {
+/// Deterministic held-out batcher for a model (stream 1 never overlaps
+/// train). Errors when the model's manifest batch exceeds `n_examples`.
+pub fn test_batcher(model: &ModelMeta, n_examples: usize, seed: u64) -> Result<Batcher> {
     test_batcher_with_batch(model, n_examples, seed, model.batch)
 }
 
@@ -22,16 +23,18 @@ pub fn test_batcher(model: &ModelMeta, n_examples: usize, seed: u64) -> Batcher 
 /// serves frozen models at arbitrary batches). Stream id 1 is the
 /// held-out convention — keeping it here, in one place, is what
 /// guarantees every eval path scores data the training stream (id 0)
-/// never saw.
+/// never saw. A batch larger than the held-out set is a clean error, not
+/// a panic (both sizes come straight from CLI flags).
 pub fn test_batcher_with_batch(
     model: &ModelMeta,
     n_examples: usize,
     seed: u64,
     batch: usize,
-) -> Batcher {
+) -> Result<Batcher> {
     let dspec = spec_for_model(model);
     let ds = Dataset::generate(dspec, n_examples, seed, 1);
     Batcher::new(ds, batch, seed)
+        .map_err(|e| anyhow!("held-out stream for '{}': {e}", model.name))
 }
 
 /// Average a per-batch `(loss, acc)` eval over the held-out set, weighted
@@ -43,26 +46,32 @@ pub fn test_batcher_with_batch(
 /// instead of dispatching a batch their compiled programs cannot take.
 /// Shared by [`evaluate`], the trainer's mid-training probes, and the
 /// `waveq infer` CLI.
+///
+/// The batches stream *lazily* off the batcher ([`SequentialBatches`]):
+/// peak memory is one live batch, not a `Vec<Batch>` copy of the whole
+/// held-out set. The fold visits the same batches in the same order with
+/// the same f64 accumulation as the old eager path, so the
+/// example-weighted mean is bit-identical.
 pub fn eval_batches<F>(test: &Batcher, include_tail: bool, mut eval_batch: F) -> Result<(f32, f32)>
 where
     F: FnMut(&Batch) -> Result<(f32, f32)>,
 {
-    let batches = if include_tail {
+    let batches: SequentialBatches<'_> = if include_tail {
         test.sequential_batches_all()
     } else {
         test.sequential_batches()
     };
-    if batches.is_empty() {
-        return Err(anyhow!("test set smaller than one batch"));
-    }
     let (mut loss_sum, mut acc_sum, mut examples) = (0f64, 0f64, 0f64);
-    for b in &batches {
-        let (l, a) = eval_batch(b)?;
+    for b in batches {
+        let (l, a) = eval_batch(&b)?;
         // y is (rows, n_classes): its length weighs the batch by rows.
         let w = b.y.len() as f64;
         loss_sum += l as f64 * w;
         acc_sum += a as f64 * w;
         examples += w;
+    }
+    if examples == 0.0 {
+        return Err(anyhow!("test set smaller than one batch"));
     }
     Ok(((loss_sum / examples) as f32, (acc_sum / examples) as f32))
 }
@@ -153,7 +162,7 @@ mod tests {
         // the mean is example-weighted, not batch-weighted.
         let rt = Runtime::native();
         let model = rt.manifest.model("mlp").unwrap().clone();
-        let test = test_batcher(&model, 100, 7);
+        let test = test_batcher(&model, 100, 7).unwrap();
         let mut sizes = Vec::new();
         let (loss, acc) = eval_batches(&test, true, |b| {
             let rows = b.y.len() / model.num_classes;
@@ -180,9 +189,19 @@ mod tests {
         let rt = Runtime::native();
         let model = rt.manifest.model("mlp").unwrap().clone();
         let state = SessionState::init(&model, 3, 4.0).unwrap();
-        let test = test_batcher(&model, 100, 7);
+        let test = test_batcher(&model, 100, 7).unwrap();
         let (loss, acc) =
             evaluate(&rt, "eval_fp32_mlp", &model, &state.params, None, 255.0, &test).unwrap();
         assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn batch_larger_than_the_test_set_errors_instead_of_panicking() {
+        let rt = Runtime::native();
+        let model = rt.manifest.model("mlp").unwrap().clone();
+        let err = test_batcher_with_batch(&model, 10, 7, 64).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "unexpected error: {err}");
+        // The model-batch convenience wrapper hits the same guard.
+        assert!(test_batcher(&model, model.batch - 1, 7).is_err());
     }
 }

@@ -134,7 +134,9 @@ impl<'a> Trainer<'a> {
         // ---- data pipeline ------------------------------------------------
         let dspec = spec_for_model(&model);
         let train_ds = Dataset::generate(dspec.clone(), cfg.train_examples, cfg.seed, 0);
-        let batcher = Batcher::new(train_ds, model.batch, cfg.seed);
+        let batcher = Batcher::new(train_ds, model.batch, cfg.seed).map_err(|e| {
+            anyhow!("train stream for '{}': {e} (--train-examples too small?)", model.name)
+        })?;
         let mut prefetch = Prefetcher::spawn(batcher, 4, cfg.steps);
 
         let mut controller = PhaseController::new(cfg.schedule.clone());
@@ -303,7 +305,7 @@ impl<'a> Trainer<'a> {
             Algo::WaveqLearned => Some(BitAssignment::from_beta(&session.state().beta).kw()),
             _ => Some(vec![levels(cfg.weight_bits); session.model().num_qlayers]),
         };
-        let test = test_batcher(session.model(), cfg.test_examples, cfg.seed);
+        let test = test_batcher(session.model(), cfg.test_examples, cfg.seed)?;
         let tail = session.batch_polymorphic();
         eval_batches(&test, tail, |b| session.eval(&b.x, &b.y, kw.as_deref(), cfg.ka()))
     }

@@ -34,8 +34,20 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(ds: Dataset, batch: usize, seed: u64) -> Batcher {
-        assert!(batch <= ds.n, "batch {} > dataset {}", batch, ds.n);
+    /// Errors (instead of panicking) when `batch` is 0 or exceeds the
+    /// dataset — both are reachable from user-supplied CLI flags
+    /// (`--batch`, `--test-examples`, `--train-examples`).
+    pub fn new(ds: Dataset, batch: usize, seed: u64) -> Result<Batcher> {
+        if batch == 0 {
+            return Err(anyhow!("batch size must be >= 1"));
+        }
+        if batch > ds.n {
+            return Err(anyhow!(
+                "batch {} exceeds the dataset's {} examples",
+                batch,
+                ds.n
+            ));
+        }
         let mut b = Batcher {
             order: (0..ds.n as u32).collect(),
             ds,
@@ -45,7 +57,7 @@ impl Batcher {
             rng: Rng::new(seed).split(0xBA7C),
         };
         b.rng.shuffle(&mut b.order);
-        b
+        Ok(b)
     }
 
     pub fn batches_per_epoch(&self) -> usize {
@@ -72,40 +84,67 @@ impl Batcher {
         Batch { x, y, epoch: self.epoch }
     }
 
-    /// All full batches of the dataset in index order (drop-last).
-    pub fn sequential_batches(&self) -> Vec<Batch> {
+    /// All full batches of the dataset in index order (drop-last), as a
+    /// *lazy* iterator: each [`Batch`] is materialized only when the
+    /// consumer asks for it, so streaming evaluations peak at one batch of
+    /// f32 copies instead of the whole held-out set.
+    pub fn sequential_batches(&self) -> SequentialBatches<'_> {
         let full = (self.ds.n / self.batch) * self.batch;
-        self.sequential_rows(full)
+        SequentialBatches { batcher: self, n: full, start: 0 }
     }
 
     /// Every batch of the dataset in index order, *including* the final
     /// ragged batch when the dataset size is not a batch multiple — the
     /// batch-polymorphic evaluation paths serve the tail at its true size
-    /// so reported metrics cover every held-out example.
-    pub fn sequential_batches_all(&self) -> Vec<Batch> {
-        self.sequential_rows(self.ds.n)
-    }
-
-    fn sequential_rows(&self, n: usize) -> Vec<Batch> {
-        let pix = self.ds.pixels();
-        let ncls = self.ds.spec.n_classes;
-        let mut out = Vec::new();
-        let mut start = 0;
-        while start < n {
-            let rows = self.batch.min(n - start);
-            let mut x = vec![0.0f32; rows * pix];
-            let mut y = vec![0.0f32; rows * ncls];
-            for bi in 0..rows {
-                let idx = start + bi;
-                x[bi * pix..(bi + 1) * pix].copy_from_slice(self.ds.image(idx));
-                y[bi * ncls + self.ds.labels[idx] as usize] = 1.0;
-            }
-            out.push(Batch { x, y, epoch: 0 });
-            start += rows;
-        }
-        out
+    /// so reported metrics cover every held-out example. Lazy, like
+    /// [`Batcher::sequential_batches`].
+    pub fn sequential_batches_all(&self) -> SequentialBatches<'_> {
+        SequentialBatches { batcher: self, n: self.ds.n, start: 0 }
     }
 }
+
+/// Lazy iterator over a dataset's batches in index order (see
+/// [`Batcher::sequential_batches`]). Yields the same batches, in the same
+/// order, with the same contents as the eager `Vec<Batch>` it replaced —
+/// consumers that fold over it reproduce the old results bit-for-bit —
+/// but holds only the one live batch in memory.
+pub struct SequentialBatches<'a> {
+    batcher: &'a Batcher,
+    /// Total rows to serve (`ds.n` rounded down to a batch multiple for
+    /// drop-last, `ds.n` itself when the ragged tail is included).
+    n: usize,
+    start: usize,
+}
+
+impl Iterator for SequentialBatches<'_> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.start >= self.n {
+            return None;
+        }
+        let ds = &self.batcher.ds;
+        let pix = ds.pixels();
+        let ncls = ds.spec.n_classes;
+        let rows = self.batcher.batch.min(self.n - self.start);
+        let mut x = vec![0.0f32; rows * pix];
+        let mut y = vec![0.0f32; rows * ncls];
+        for bi in 0..rows {
+            let idx = self.start + bi;
+            x[bi * pix..(bi + 1) * pix].copy_from_slice(ds.image(idx));
+            y[bi * ncls + ds.labels[idx] as usize] = 1.0;
+        }
+        self.start += rows;
+        Some(Batch { x, y, epoch: 0 })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = (self.n - self.start).div_ceil(self.batcher.batch.max(1));
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for SequentialBatches<'_> {}
 
 /// Background prefetcher: producer thread + bounded channel.
 pub struct Prefetcher {
@@ -184,7 +223,7 @@ mod tests {
 
     #[test]
     fn batches_have_valid_onehots() {
-        let mut b = Batcher::new(small_ds(), 16, 0);
+        let mut b = Batcher::new(small_ds(), 16, 0).unwrap();
         for _ in 0..8 {
             let batch = b.next_batch();
             assert_eq!(batch.y.len(), 16 * 10);
@@ -200,7 +239,7 @@ mod tests {
     fn epoch_covers_every_sample_once() {
         let ds = small_ds();
         let n = ds.n;
-        let mut b = Batcher::new(ds, 16, 0);
+        let mut b = Batcher::new(ds, 16, 0).unwrap();
         let mut seen = vec![0usize; n];
         for _ in 0..b.batches_per_epoch() {
             let start = b.cursor;
@@ -215,11 +254,11 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let a: Vec<f32> = {
-            let mut b = Batcher::new(small_ds(), 16, 9);
+            let mut b = Batcher::new(small_ds(), 16, 9).unwrap();
             b.next_batch().x
         };
         let c: Vec<f32> = {
-            let mut b = Batcher::new(small_ds(), 16, 9);
+            let mut b = Batcher::new(small_ds(), 16, 9).unwrap();
             b.next_batch().x
         };
         assert_eq!(a, c);
@@ -227,7 +266,7 @@ mod tests {
 
     #[test]
     fn prefetcher_delivers_all_batches() {
-        let b = Batcher::new(small_ds(), 16, 0);
+        let b = Batcher::new(small_ds(), 16, 0).unwrap();
         let mut pf = Prefetcher::spawn(b, 2, 10);
         let mut count = 0;
         while let Some(batch) = pf.next().unwrap() {
@@ -244,7 +283,7 @@ mod tests {
         // A source that dies mid-stream: the delivered batches arrive, then
         // `next` must report the panic message instead of a silent end.
         let mut calls = 0usize;
-        let mut src_batcher = Batcher::new(small_ds(), 16, 0);
+        let mut src_batcher = Batcher::new(small_ds(), 16, 0).unwrap();
         let mut pf = Prefetcher::spawn_source(
             move || {
                 calls += 1;
@@ -269,16 +308,29 @@ mod tests {
     }
 
     #[test]
+    fn oversized_or_zero_batch_is_a_clean_error() {
+        // 64-example dataset: batch 65 must error, not abort the process
+        // (reachable from `waveq infer --batch N --test-examples M`, N > M).
+        let err = Batcher::new(small_ds(), 65, 0).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "unexpected error: {err}");
+        let err = Batcher::new(small_ds(), 0, 0).unwrap_err().to_string();
+        assert!(err.contains(">= 1"), "unexpected error: {err}");
+        assert!(Batcher::new(small_ds(), 64, 0).is_ok(), "batch == n is fine");
+    }
+
+    #[test]
     fn sequential_batches_cover_in_order() {
         let ds = small_ds();
         let labels = ds.labels.clone();
-        let b = Batcher::new(ds, 16, 0);
-        let batches = b.sequential_batches();
+        let b = Batcher::new(ds, 16, 0).unwrap();
+        let mut batches = b.sequential_batches();
         assert_eq!(batches.len(), 4);
         // first batch's one-hots match the first 16 labels
+        let first = batches.next().unwrap();
         for (i, &l) in labels[..16].iter().enumerate() {
-            assert_eq!(batches[0].y[i * 10 + l as usize], 1.0);
+            assert_eq!(first.y[i * 10 + l as usize], 1.0);
         }
+        assert_eq!(batches.count(), 3, "three batches follow the first");
     }
 
     #[test]
@@ -286,9 +338,9 @@ mod tests {
         // 40 examples at batch 16: two full batches + an 8-example tail.
         let ds = Dataset::generate(spec("mlp-lite"), 40, 1, 0);
         let labels = ds.labels.clone();
-        let b = Batcher::new(ds, 16, 0);
-        assert_eq!(b.sequential_batches().len(), 2, "drop-last path unchanged");
-        let all = b.sequential_batches_all();
+        let b = Batcher::new(ds, 16, 0).unwrap();
+        assert_eq!(b.sequential_batches().count(), 2, "drop-last path unchanged");
+        let all: Vec<Batch> = b.sequential_batches_all().collect();
         assert_eq!(all.len(), 3);
         assert_eq!(all[2].x.len(), 8 * 8 * 8 * 3);
         assert_eq!(all[2].y.len(), 8 * 10);
@@ -297,7 +349,22 @@ mod tests {
             assert_eq!(all[2].y[i * 10 + l as usize], 1.0);
         }
         // An exact multiple produces no tail.
-        let b = Batcher::new(small_ds(), 16, 0);
-        assert_eq!(b.sequential_batches_all().len(), 4);
+        let b = Batcher::new(small_ds(), 16, 0).unwrap();
+        assert_eq!(b.sequential_batches_all().count(), 4);
+    }
+
+    #[test]
+    fn sequential_iterator_reports_exact_len_as_it_advances() {
+        let ds = Dataset::generate(spec("mlp-lite"), 40, 1, 0);
+        let b = Batcher::new(ds, 16, 0).unwrap();
+        let mut it = b.sequential_batches_all();
+        assert_eq!(it.len(), 3);
+        it.next();
+        assert_eq!(it.len(), 2);
+        it.next();
+        assert_eq!(it.len(), 1, "the ragged tail still counts as one batch");
+        it.next();
+        assert_eq!(it.len(), 0);
+        assert!(it.next().is_none());
     }
 }

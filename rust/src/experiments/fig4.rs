@@ -74,7 +74,7 @@ fn run_model(ctx: &ExpContext, model: &str) -> Result<Vec<String>> {
 
     // 3) Evaluate each assignment against the trained state.
     let eval_prog = format!("eval_quant_{model}");
-    let test = test_batcher(&meta, if ctx.scale == Scale::Full { 512 } else { 256 }, ctx.seed);
+    let test = test_batcher(&meta, if ctx.scale == Scale::Full { 512 } else { 256 }, ctx.seed)?;
     let mut points = Vec::with_capacity(space.len());
     for bits in &space {
         let assign = BitAssignment { bits: bits.clone(), alpha: vec![1.0; q] };

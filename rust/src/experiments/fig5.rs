@@ -45,7 +45,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
 
         // Sensitivity: decrement one layer at a time, re-evaluate.
         let eval_prog = format!("eval_quant_{model}");
-        let test = test_batcher(&meta, cfg.test_examples, ctx.seed);
+        let test = test_batcher(&meta, cfg.test_examples, ctx.seed)?;
         let base_acc = outcome.test_acc;
         let mut drops = Vec::new();
         let mut sens_csv = String::from("layer,bits_after,acc,drop\n");

@@ -5,6 +5,8 @@
 //!   train       [flags]        one training run (any model/algo/bits)
 //!   freeze      [flags]        pack a checkpoint into a low-bit artifact
 //!   infer       [flags]        serve a frozen artifact (acc + imgs/s)
+//!   serve       [flags]        concurrent TCP serving with cross-request
+//!                              batching (or a self-driving loopback bench)
 //!   experiment  <id|all>       regenerate a paper table/figure (results/)
 //!   energy      [flags]        Stripes energy report for an assignment
 //!   info                       list artifacts, models, programs
@@ -14,25 +16,32 @@
 //!               --lr-beta F --eval-every N --save CKPT
 //! Freeze flags: --init CKPT --out ART --model M --algo A --bits B --act-bits A
 //! Infer flags:  --artifact ART --batch N --max-batch N --test-examples N
+//! Serve flags:  --artifact ART --workers N --max-batch N --deadline-us N
+//!               --listen ADDR | --loopback --clients N --requests N
 
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use waveq::config::{Algo, RunConfig};
 use waveq::coordinator::{eval_batches, session_cfg, test_batcher_with_batch, Checkpoint, Trainer};
+use waveq::data::{spec_for_model, Dataset};
 use waveq::energy::Stripes;
 use waveq::experiments::{self, ExpContext, Scale};
-use waveq::runtime::{FrozenModel, InferenceSession, NativeModel, Runtime, Session};
+use waveq::runtime::serve::{loopback_bench, serve_tcp};
+use waveq::runtime::{
+    FrozenModel, InferenceSession, ModelMeta, NativeModel, Runtime, ServeCfg, Server, Session,
+};
 use waveq::util::argparse::{ArgSpec, Args};
 
 const VALUE_FLAGS: &[&str] = &[
     "artifacts", "config", "seed", "scale", "model", "algo", "bits", "act-bits",
     "steps", "lr", "momentum", "lr-beta", "eval-every", "save", "train-examples",
     "test-examples", "beta-init", "out", "init", "artifact", "batch", "max-batch",
+    "workers", "deadline-us", "listen", "clients", "requests",
 ];
-const SWITCH_FLAGS: &[&str] = &["quiet", "help"];
+const SWITCH_FLAGS: &[&str] = &["quiet", "help", "loopback"];
 
 fn main() {
     waveq::util::logging::init();
@@ -172,13 +181,23 @@ fn run(argv: &[String]) -> Result<()> {
             if examples == 0 {
                 return Err(anyhow!("--test-examples must be > 0"));
             }
-            let batch = args.get_usize("batch", meta.batch)?.clamp(1, examples);
+            // An out-of-range batch is the user's mistake to hear about,
+            // not something to clamp silently (and deeper down it would
+            // have been a Batcher panic): refuse it with the fix spelled
+            // out.
+            let batch = args.get_usize("batch", meta.batch)?;
+            if batch == 0 || batch > examples {
+                return Err(anyhow!(
+                    "--batch {batch} must be in 1..={examples} (--test-examples); \
+                     pass a smaller --batch or more --test-examples"
+                ));
+            }
             // The arena is sized once at max_batch; nothing in this loop
             // dispatches more than --batch rows, so that is the default.
             let max_batch = args.get_usize("max-batch", batch)?.max(batch);
             let seed = args.get_u64("seed", 42)?;
             let mut session = InferenceSession::open(&frozen, max_batch)?;
-            let test = test_batcher_with_batch(&meta, examples, seed, batch);
+            let test = test_batcher_with_batch(&meta, examples, seed, batch)?;
             let t0 = Instant::now();
             let (loss, acc) = eval_batches(&test, true, |b| {
                 let rows = b.y.len() / meta.num_classes;
@@ -198,6 +217,50 @@ fn run(argv: &[String]) -> Result<()> {
                 reduction_label(&frozen),
             );
             Ok(())
+        }
+        "serve" => {
+            let path = args
+                .get("artifact")
+                .ok_or_else(|| anyhow!("serve needs --artifact <artifact.wqm>"))?;
+            let frozen = FrozenModel::load(Path::new(path))?;
+            let cfg = ServeCfg {
+                workers: args.get_usize("workers", 2)?.max(1),
+                max_batch: args.get_usize("max-batch", 8)?.max(1),
+                deadline: Duration::from_micros(args.get_u64("deadline-us", 1000)?),
+            };
+            let server = Server::start(&frozen, &cfg)?;
+            let meta = server.meta().clone();
+            println!(
+                "serving {} — workers={} max_batch={} deadline={:?}",
+                meta.name, cfg.workers, cfg.max_batch, cfg.deadline
+            );
+            if args.has("loopback") {
+                // Self-driving mode: spin up concurrent loopback TCP
+                // clients against our own listener and report latency /
+                // throughput — no external load generator needed.
+                let clients = args.get_usize("clients", 8)?.max(1);
+                let per_client = args.get_usize("requests", 50)?.max(1);
+                let xs = serve_inputs(&meta, 64, args.get_u64("seed", 42)?);
+                let rep = loopback_bench(&server, clients, per_client, &xs)?;
+                println!(
+                    "loopback: {clients} clients x {per_client} reqs -> {:.1} imgs/s  \
+                     p50={:.3?} p99={:.3?}  mean batch fill {:.2}",
+                    rep.imgs_per_s(),
+                    rep.lat.p50,
+                    rep.lat.p99,
+                    rep.mean_fill
+                );
+                server.shutdown();
+                Ok(())
+            } else {
+                let addr = args.get_or("listen", "127.0.0.1:7878").to_string();
+                let listener = std::net::TcpListener::bind(&addr)
+                    .map_err(|e| anyhow!("binding {addr}: {e}"))?;
+                println!("listening on {addr} (length-prefixed WQSV frames; ctrl-c to stop)");
+                serve_tcp(&server, listener, None)?;
+                server.shutdown();
+                Ok(())
+            }
         }
         "energy" => {
             let rt = Runtime::open(&artifacts)?;
@@ -224,6 +287,13 @@ fn run(argv: &[String]) -> Result<()> {
         }
         other => Err(anyhow!("unknown subcommand '{other}' (try --help)")),
     }
+}
+
+/// A pool of synthetic held-out examples for the loopback client mode.
+fn serve_inputs(meta: &ModelMeta, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let ds = Dataset::generate(spec_for_model(meta), n, seed, 1);
+    let pix = ds.pixels();
+    (0..n).map(|i| ds.images[i * pix..(i + 1) * pix].to_vec()).collect()
 }
 
 /// Human label for an artifact's packed-vs-f32 size story.
@@ -264,6 +334,11 @@ SUBCOMMANDS:
   infer                 serve a frozen artifact over the held-out stream:
                         --artifact model.wqm [--batch N] [--max-batch N]
                         [--test-examples N]
+  serve                 concurrent serving with cross-request batching:
+                        --artifact model.wqm [--workers N] [--max-batch N]
+                        [--deadline-us N] and either --listen HOST:PORT
+                        (length-prefixed TCP) or --loopback [--clients N]
+                        [--requests N] (self-driving latency/throughput run)
   experiment <id|all>   regenerate a paper artifact: {}
   energy                Stripes report: --model M --bits B --act-bits A
   info                  list artifacts/models/programs

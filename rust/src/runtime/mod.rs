@@ -12,6 +12,9 @@
 //!                an exact-unpack (bitwise) decode contract.
 //! `infer`      — forward-only, batch-polymorphic serving sessions over
 //!                frozen artifacts (the freeze-and-serve stage).
+//! `serve`      — concurrent serving: N session workers over a shared
+//!                request queue with cross-request batching, plus the
+//!                length-prefixed TCP front end (`waveq serve`).
 //! `native`     — hermetic pure-Rust reference backend (always available).
 //! `pjrt`       — PJRT load/compile/execute over AOT HLO artifacts
 //!                (behind the non-default `pjrt` cargo feature).
@@ -26,6 +29,7 @@ pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod serve;
 pub mod session;
 
 pub use artifact::{FrozenModel, FrozenParam, ParamStorage};
@@ -35,4 +39,5 @@ pub use checkpoint::Checkpoint;
 pub use infer::InferenceSession;
 pub use manifest::{ArgSpec, Manifest, ModelMeta, ParamMeta, ProgramSig};
 pub use native::{NativeBackend, NativeModel};
+pub use serve::{LoopbackReport, Server, ServeCfg, ServeClient, ServeSnapshot, TcpClient};
 pub use session::{Session, SessionCfg, SessionState, StepKnobs, StepMetrics};

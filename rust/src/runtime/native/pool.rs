@@ -21,10 +21,25 @@
 //! on the budget.
 //!
 //! Thread count resolution: the `WAVEQ_THREADS` env var when set to a
-//! positive integer, else [`std::thread::available_parallelism`]. The env
-//! var is re-read on every dispatch so tests (and operators) can change it
-//! at runtime without rebuilding; a budget larger than the worker count
-//! simply queues more shards than workers (still deterministic).
+//! positive integer, else [`std::thread::available_parallelism`]. The
+//! *worker complement* is fixed when the pool first starts and honors the
+//! override at that moment — `WAVEQ_THREADS=1 waveq …` parks one worker,
+//! not a full core count of idle threads, and an override *above* the
+//! core count gets that many real workers (capped at [`MAX_THREADS`]).
+//! The *per-dispatch shard budget* is still re-read on every dispatch so
+//! tests (and operators) can change it at runtime without rebuilding; a
+//! budget larger than the spawned worker count simply queues more shards
+//! than workers (served sequentially — still deterministic, because shard
+//! boundaries depend only on the budget, never on which worker runs them).
+//!
+//! Concurrent dispatchers: `run_rows` is safe to call from any number of
+//! threads at once — each dispatch owns a private completion latch, tasks
+//! from interleaved dispatches coexist on the shared queue, and workers
+//! never block on a latch (they only run tasks to completion), so there
+//! is no lock ordering between dispatches and no deadlock. This is what
+//! lets N serving sessions (`runtime::serve`) drive the one process-wide
+//! pool simultaneously; the concurrent-caller determinism tests assert
+//! the bits match the serial run.
 //!
 //! Safety: tasks carry raw pointers into the caller's stack (the closure,
 //! the output shard, the completion latch). [`run_rows`] blocks on the
@@ -85,7 +100,10 @@ impl Latch {
     }
 
     fn arrive(&self, panic: Option<PanicPayload>) {
-        let mut st = self.state.lock().unwrap();
+        // Poison-tolerant: the counter/payload pair stays consistent under
+        // a panicking peer, and an `arrive` that cannot complete would
+        // deadlock the dispatcher in `wait` forever.
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         st.0 -= 1;
         if st.1.is_none() {
             st.1 = panic;
@@ -97,9 +115,9 @@ impl Latch {
 
     /// Block until every shard arrived; returns the first panic payload.
     fn wait(&self) -> Option<PanicPayload> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         while st.0 > 0 {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         st.1.take()
     }
@@ -107,16 +125,22 @@ impl Latch {
 
 struct Pool {
     queue: Sender<Task>,
+    /// Worker threads actually spawned (the `WAVEQ_THREADS`-resolved
+    /// budget at first start). A later, larger per-dispatch budget queues
+    /// more shards than this — correct, just less parallel.
+    workers: usize,
 }
 
 static POOL: OnceLock<Pool> = OnceLock::new();
 
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
-        let workers = std::thread::available_parallelism()
-            .map(NonZeroUsize::get)
-            .unwrap_or(1)
-            .min(MAX_THREADS);
+        // Honor the WAVEQ_THREADS override for the spawned complement,
+        // not just the shard budget: `WAVEQ_THREADS=1` must not park a
+        // full core count of idle workers, and an override above the
+        // core count must get real threads. At least one worker always
+        // exists so shards queued by a *later* raised budget are served.
+        let workers = num_threads().max(1);
         let (tx, rx) = channel::<Task>();
         let rx = Arc::new(Mutex::new(rx));
         for i in 0..workers {
@@ -126,7 +150,7 @@ fn pool() -> &'static Pool {
                 .spawn(move || worker_loop(&rx))
                 .expect("spawning waveq pool worker");
         }
-        Pool { queue: tx }
+        Pool { queue: tx, workers }
     })
 }
 
@@ -136,12 +160,21 @@ pub fn ensure_started() {
     let _ = pool();
 }
 
+/// Number of persistent workers the pool spawned (fixed at first start;
+/// see the module docs for how this interacts with the per-dispatch
+/// budget). Starts the pool if it has not started yet.
+pub fn worker_count() -> usize {
+    pool().workers
+}
+
 fn worker_loop(rx: &Mutex<Receiver<Task>>) {
     loop {
         // Hold the receiver lock only for the dequeue; a worker parked in
         // `recv` wakes, releases the lock, and runs its task while the
-        // next worker parks.
-        let task = match rx.lock().unwrap().recv() {
+        // next worker parks. Poison-tolerant: `run_task` catches shard
+        // panics, so a poisoned receiver lock can only mean a panic in
+        // this dequeue path itself — the queue state is still sound.
+        let task = match rx.lock().unwrap_or_else(|e| e.into_inner()).recv() {
             Ok(t) => t,
             Err(_) => return, // channel closed (process teardown)
         };
@@ -355,6 +388,41 @@ mod tests {
         for (i, &v) in out.iter().enumerate() {
             assert_eq!(v, i as f32, "element {i}");
         }
+        std::env::remove_var("WAVEQ_THREADS");
+    }
+
+    #[test]
+    fn concurrent_dispatchers_share_the_pool_without_interference() {
+        let _guard = env_lock();
+        std::env::set_var("WAVEQ_THREADS", "4");
+        ensure_started();
+        // N threads each drive many dispatches at once. Tasks from the
+        // interleaved dispatches coexist on the one shared queue; every
+        // dispatch must still see exactly its own rows, exactly once —
+        // the property `runtime::serve` workers rely on.
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                s.spawn(move || {
+                    for round in 0..30usize {
+                        let (rows, width) = (24 + (t + round) % 9, 3);
+                        let mut out = vec![0.0f32; rows * width];
+                        let tag = (t * 1000 + round) as f32;
+                        run_rows(&mut out, rows, width, 1, |r0, shard| {
+                            for (i, v) in shard.iter_mut().enumerate() {
+                                *v = tag + (r0 * width + i) as f32;
+                            }
+                        });
+                        for (i, &v) in out.iter().enumerate() {
+                            assert_eq!(
+                                v,
+                                tag + i as f32,
+                                "dispatcher {t} round {round} element {i}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
         std::env::remove_var("WAVEQ_THREADS");
     }
 

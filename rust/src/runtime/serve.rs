@@ -1,0 +1,625 @@
+//! Concurrent serving over frozen artifacts — the `waveq serve` engine.
+//!
+//! [`Server::start`] opens N [`InferenceSession`]s over one [`FrozenModel`]
+//! (each session decodes and GEMM-packs its own weights; sessions share no
+//! mutable state) and parks each on a shared request queue. Clients submit
+//! single-example requests through cloned [`ServeClient`] handles; an idle
+//! worker gathers up to `max_batch` of them into its arena — waiting at
+//! most `deadline` after the first request lands — dispatches the batch
+//! once, and fans the per-example logit rows back to each requester.
+//!
+//! Identity contract: the native kernels compute every output element with
+//! a reduction order fixed by tile constants, independent of both thread
+//! count *and* batch size, and the per-example rows of a batched forward
+//! never mix (im2col rows, GEMM rows, pooling windows and the GAP/affine
+//! loops are all per-example). So the logits a request receives are
+//! **bitwise identical** whether it was served alone (batch 1) or packed
+//! into a full cross-request batch — `tests/serve.rs` asserts this through
+//! the TCP front end under concurrent load.
+//!
+//! Gathering happens *under the queue lock*, so exactly one worker fills a
+//! batch at a time; it releases the lock before the forward pass, letting
+//! the next worker gather while it computes. The kernel pool underneath
+//! (`native::pool`) is shared by every worker — concurrent `run_rows`
+//! dispatches are safe (each owns a private completion latch) and never
+//! change the bits (see the pool docs).
+//!
+//! Latency/throughput knobs: `deadline` trades single-stream latency for
+//! cross-stream batching (a lone synchronous client pays the deadline on
+//! every request; 8 concurrent clients fill batches long before it).
+//! `deadline == 0` disables waiting — the gatherer drains whatever is
+//! already queued and goes. `max_batch == 1` turns the server into plain
+//! request-at-a-time serving.
+//!
+//! Wire protocol ([`serve_tcp`]): length-prefixed little-endian frames.
+//! On accept the server writes a hello — magic `b"WQSV"`, u32 pixels, u32
+//! classes. Each request is `u32 count` (must equal pixels) + `count`
+//! f32s; each response is `u32 count == classes` + the logits, or the
+//! error marker `u32 0xFFFF_FFFF` + u32 length + a UTF-8 message. A
+//! `count == 0` request frame closes the connection cleanly.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::FrozenModel;
+use super::infer::InferenceSession;
+use super::manifest::ModelMeta;
+use crate::util::timer::BenchStats;
+
+/// Hello magic the TCP front end writes on accept.
+pub const MAGIC: &[u8; 4] = b"WQSV";
+/// Response-frame count value marking an error payload.
+const ERR_MARK: u32 = u32::MAX;
+
+/// Server shape: worker count, batch arena size, and the batching window.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Inference worker threads; each owns one `InferenceSession`.
+    pub workers: usize,
+    /// Cross-request batch capacity (the per-worker arena size).
+    pub max_batch: usize,
+    /// How long a gatherer waits for its batch to fill after the first
+    /// request arrives. Zero = dispatch whatever is already queued.
+    pub deadline: Duration,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg { workers: 2, max_batch: 8, deadline: Duration::from_millis(1) }
+    }
+}
+
+/// One queued inference request: a single example plus its reply channel.
+struct Request {
+    x: Vec<f32>,
+    resp: Sender<Response>,
+}
+
+/// Per-request reply: the example's logits, or a serve-side error message.
+type Response = std::result::Result<Vec<f32>, String>;
+
+/// Batching counters, updated by workers as batches dispatch.
+#[derive(Default)]
+pub struct ServeStats {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    full_batches: AtomicU64,
+}
+
+impl ServeStats {
+    fn record(&self, n: usize, max_batch: usize) {
+        self.requests.fetch_add(n as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        if n == max_batch {
+            self.full_batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        ServeSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            full_batches: self.full_batches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`ServeStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeSnapshot {
+    /// Examples served.
+    pub requests: u64,
+    /// Forward passes dispatched.
+    pub batches: u64,
+    /// Dispatches that filled the whole `max_batch` arena.
+    pub full_batches: u64,
+}
+
+impl ServeSnapshot {
+    /// Mean examples per dispatched batch (1.0 = no cross-request batching
+    /// happened, `max_batch` = every dispatch went out full).
+    pub fn mean_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// A running serve instance: N session workers over a shared request queue.
+pub struct Server {
+    queue: Sender<Request>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<ServeStats>,
+    meta: ModelMeta,
+    pix: usize,
+    cfg: ServeCfg,
+}
+
+impl Server {
+    /// Open `cfg.workers` inference sessions over `frozen` (errors surface
+    /// here, before any thread exists) and start the worker threads.
+    pub fn start(frozen: &FrozenModel, cfg: &ServeCfg) -> Result<Server> {
+        if cfg.workers == 0 {
+            return Err(anyhow!("serve: workers must be >= 1"));
+        }
+        let mut sessions = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            sessions.push(InferenceSession::open(frozen, cfg.max_batch)?);
+        }
+        let meta = sessions[0].meta().clone();
+        let pix: usize = meta.input_shape.iter().product();
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(ServeStats::default());
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for (i, session) in sessions.into_iter().enumerate() {
+            let rx = Arc::clone(&rx);
+            let stats = Arc::clone(&stats);
+            let deadline = cfg.deadline;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("waveq-serve-{i}"))
+                    .spawn(move || worker_loop(session, &rx, deadline, &stats))
+                    .map_err(|e| anyhow!("spawning serve worker {i}: {e}"))?,
+            );
+        }
+        Ok(Server { queue: tx, workers, stats, meta, pix, cfg: cfg.clone() })
+    }
+
+    /// A handle clients submit requests through. Cheap to clone; safe to
+    /// move to any thread (TCP connection handlers each own one).
+    pub fn client(&self) -> ServeClient {
+        let queue = self.queue.clone();
+        ServeClient { queue, pix: self.pix, num_classes: self.meta.num_classes }
+    }
+
+    /// The manifest-side description of the served model.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn cfg(&self) -> &ServeCfg {
+        &self.cfg
+    }
+
+    /// Batching counters so far (how full the dispatched batches ran).
+    pub fn stats(&self) -> ServeSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Stop accepting work and join the workers. Blocks until every
+    /// outstanding [`ServeClient`] is dropped — their queue handles keep
+    /// the workers alive until then.
+    pub fn shutdown(self) {
+        let Server { queue, workers, .. } = self;
+        drop(queue);
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Cloneable request-submission handle for a [`Server`].
+#[derive(Clone)]
+pub struct ServeClient {
+    queue: Sender<Request>,
+    pix: usize,
+    num_classes: usize,
+}
+
+impl ServeClient {
+    /// Flattened input length the model takes (`x.len()` for `infer_one`).
+    pub fn pixels(&self) -> usize {
+        self.pix
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Submit one example and block until its logits come back. The reply
+    /// is bitwise identical however the server batched the request.
+    pub fn infer_one(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.pix {
+            return Err(anyhow!(
+                "infer_one: x has {} values, the served model takes {}",
+                x.len(),
+                self.pix
+            ));
+        }
+        let (tx, rx) = channel();
+        self.queue
+            .send(Request { x: x.to_vec(), resp: tx })
+            .map_err(|_| anyhow!("server has shut down"))?;
+        match rx.recv() {
+            Ok(Ok(logits)) => Ok(logits),
+            Ok(Err(msg)) => Err(anyhow!("serve: {msg}")),
+            Err(_) => Err(anyhow!("server dropped the request (shutting down?)")),
+        }
+    }
+}
+
+/// One serve worker: gather a batch under the queue lock, release the
+/// lock, run the forward pass, fan the logit rows back out.
+fn worker_loop(
+    mut session: InferenceSession,
+    rx: &Mutex<Receiver<Request>>,
+    deadline: Duration,
+    stats: &ServeStats,
+) {
+    let pix: usize = session.meta().input_shape.iter().product();
+    let nc = session.meta().num_classes;
+    let max_batch = session.max_batch();
+    let mut arena = vec![0.0f32; max_batch * pix];
+    let mut pending: Vec<Sender<Response>> = Vec::with_capacity(max_batch);
+    loop {
+        pending.clear();
+        {
+            // Holding the lock across the whole gather means exactly one
+            // worker fills a batch at a time (no interleaved stealing);
+            // idle peers queue on the mutex and take over the moment this
+            // gatherer releases it to go compute.
+            let q = rx.lock().unwrap_or_else(|e| e.into_inner());
+            let first = match q.recv() {
+                Ok(r) => r,
+                Err(_) => return, // server shut down, queue drained
+            };
+            let t0 = Instant::now();
+            admit(&mut arena, &mut pending, first, pix);
+            while pending.len() < max_batch {
+                let req = match deadline.checked_sub(t0.elapsed()) {
+                    Some(left) if !left.is_zero() => match q.recv_timeout(left) {
+                        Ok(r) => r,
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    },
+                    // Deadline spent (or zero): drain without waiting.
+                    _ => match q.try_recv() {
+                        Ok(r) => r,
+                        Err(_) => break,
+                    },
+                };
+                admit(&mut arena, &mut pending, req, pix);
+            }
+        }
+        let n = pending.len();
+        if n == 0 {
+            continue; // every gathered request was malformed and answered
+        }
+        stats.record(n, max_batch);
+        match session.infer(&arena[..n * pix], n) {
+            Ok(logits) => {
+                // A dead responder (client gave up) is its own problem —
+                // the rest of the batch still gets its rows.
+                for (i, resp) in pending.drain(..).enumerate() {
+                    let _ = resp.send(Ok(logits[i * nc..(i + 1) * nc].to_vec()));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for resp in pending.drain(..) {
+                    let _ = resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Copy a request into its batch-arena slot, or answer it with an error
+/// right away when the payload length is wrong — a malformed request must
+/// not poison the batch it would have joined.
+fn admit(arena: &mut [f32], pending: &mut Vec<Sender<Response>>, req: Request, pix: usize) {
+    if req.x.len() != pix {
+        let msg = format!("request has {} values, the served model takes {pix}", req.x.len());
+        let _ = req.resp.send(Err(msg));
+        return;
+    }
+    let slot = pending.len();
+    arena[slot * pix..(slot + 1) * pix].copy_from_slice(&req.x);
+    pending.push(req.resp);
+}
+
+// --- TCP front end ---------------------------------------------------------
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&bytes)
+}
+
+fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> std::io::Result<()> {
+    let mut bytes = vec![0u8; out.len() * 4];
+    r.read_exact(&mut bytes)?;
+    for (v, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+/// Accept connections on `listener` and serve each on its own thread
+/// through a cloned [`ServeClient`]. `max_conns` bounds how many
+/// connections are accepted before returning (tests and the loopback
+/// bench); `None` accepts forever (the CLI). Joins every connection
+/// handler before returning.
+pub fn serve_tcp(server: &Server, listener: TcpListener, max_conns: Option<usize>) -> Result<()> {
+    let mut handles = Vec::new();
+    let mut accepted = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let client = server.client();
+        accepted += 1;
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("waveq-conn-{accepted}"))
+                .spawn(move || {
+                    let _ = serve_conn(stream, &client);
+                })
+                .map_err(|e| anyhow!("spawning connection handler: {e}"))?,
+        );
+        if max_conns.is_some_and(|m| accepted >= m) {
+            break;
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+/// Serve one connection: hello, then request/response frames until the
+/// client sends a zero-count frame or closes the socket.
+fn serve_conn(mut stream: TcpStream, client: &ServeClient) -> std::io::Result<()> {
+    let _ = stream.set_nodelay(true); // latency over throughput on this path
+    let pix = client.pixels();
+    stream.write_all(MAGIC)?;
+    write_u32(&mut stream, pix as u32)?;
+    write_u32(&mut stream, client.num_classes() as u32)?;
+    stream.flush()?;
+    let mut x = vec![0.0f32; pix];
+    loop {
+        let count = match read_u32(&mut stream) {
+            Ok(c) => c,
+            // A plain close instead of a zero-frame is a fine goodbye.
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        if count == 0 {
+            return Ok(());
+        }
+        if count as usize != pix {
+            // Protocol violation: report and drop the connection — the
+            // stream position is unknowable after a bad frame.
+            write_error(&mut stream, &format!("frame has {count} values, model takes {pix}"))?;
+            return Ok(());
+        }
+        read_f32s(&mut stream, &mut x)?;
+        match client.infer_one(&x) {
+            Ok(logits) => {
+                write_u32(&mut stream, logits.len() as u32)?;
+                write_f32s(&mut stream, &logits)?;
+            }
+            Err(e) => write_error(&mut stream, &format!("{e:#}"))?,
+        }
+        stream.flush()?;
+    }
+}
+
+fn write_error<W: Write>(w: &mut W, msg: &str) -> std::io::Result<()> {
+    write_u32(w, ERR_MARK)?;
+    write_u32(w, msg.len() as u32)?;
+    w.write_all(msg.as_bytes())?;
+    w.flush()
+}
+
+/// Client side of the wire protocol — used by the loopback bench, the CLI
+/// client mode, and the integration tests.
+pub struct TcpClient {
+    stream: TcpStream,
+    pix: usize,
+    num_classes: usize,
+}
+
+impl TcpClient {
+    /// Connect and read the hello (magic + model dims).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TcpClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let mut magic = [0u8; 4];
+        stream.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(anyhow!("not a waveq serve endpoint (bad hello magic {magic:?})"));
+        }
+        let pix = read_u32(&mut stream)? as usize;
+        let num_classes = read_u32(&mut stream)? as usize;
+        Ok(TcpClient { stream, pix, num_classes })
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.pix
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Send one example, block for its logits.
+    pub fn infer_one(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.pix {
+            return Err(anyhow!(
+                "infer_one: x has {} values, the served model takes {}",
+                x.len(),
+                self.pix
+            ));
+        }
+        write_u32(&mut self.stream, x.len() as u32)?;
+        write_f32s(&mut self.stream, x)?;
+        self.stream.flush()?;
+        let count = read_u32(&mut self.stream)?;
+        if count == ERR_MARK {
+            let len = read_u32(&mut self.stream)? as usize;
+            let mut msg = vec![0u8; len];
+            self.stream.read_exact(&mut msg)?;
+            return Err(anyhow!("server: {}", String::from_utf8_lossy(&msg)));
+        }
+        if count as usize != self.num_classes {
+            return Err(anyhow!(
+                "protocol error: response has {count} values, expected {}",
+                self.num_classes
+            ));
+        }
+        let mut logits = vec![0.0f32; self.num_classes];
+        read_f32s(&mut self.stream, &mut logits)?;
+        Ok(logits)
+    }
+
+    /// Close the connection with the protocol's goodbye frame.
+    pub fn close(mut self) -> Result<()> {
+        write_u32(&mut self.stream, 0)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+}
+
+// --- loopback bench driver --------------------------------------------------
+
+/// What [`loopback_bench`] measured: per-request latency percentiles and
+/// aggregate throughput for `clients` concurrent TCP clients.
+#[derive(Debug, Clone)]
+pub struct LoopbackReport {
+    pub clients: usize,
+    /// Total requests served (`clients * per_client`).
+    pub requests: usize,
+    /// Wall time from first request to last response.
+    pub secs: f64,
+    /// Per-request round-trip latency distribution (p50/p95/p99 inside).
+    pub lat: BenchStats,
+    /// Mean examples per dispatched batch during the run.
+    pub mean_fill: f64,
+}
+
+impl LoopbackReport {
+    pub fn imgs_per_s(&self) -> f64 {
+        self.requests as f64 / self.secs
+    }
+}
+
+/// Drive `server` over a 127.0.0.1 TCP loopback with `clients` concurrent
+/// connections, each issuing `per_client` single-example requests drawn
+/// round-robin from `xs`. Exercises the full stack — framing, queueing,
+/// cross-request batching — and reports latency/throughput.
+pub fn loopback_bench(
+    server: &Server,
+    clients: usize,
+    per_client: usize,
+    xs: &[Vec<f32>],
+) -> Result<LoopbackReport> {
+    if clients == 0 || per_client == 0 || xs.is_empty() {
+        return Err(anyhow!("loopback_bench: clients, per_client and xs must be non-empty"));
+    }
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let stats0 = server.stats();
+    let t0 = Instant::now();
+    let mut lats: Vec<Duration> = Vec::with_capacity(clients * per_client);
+    std::thread::scope(|s| -> Result<()> {
+        let acceptor = s.spawn(|| serve_tcp(server, listener, Some(clients)));
+        let mut joins = Vec::with_capacity(clients);
+        for c in 0..clients {
+            joins.push(s.spawn(move || -> Result<Vec<Duration>> {
+                let mut conn = TcpClient::connect(addr)?;
+                let mut out = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let x = &xs[(c * per_client + i) % xs.len()];
+                    let t = Instant::now();
+                    let _ = conn.infer_one(x)?;
+                    out.push(t.elapsed());
+                }
+                conn.close()?;
+                Ok(out)
+            }));
+        }
+        for j in joins {
+            lats.extend(j.join().expect("loopback client thread")?);
+        }
+        acceptor.join().expect("loopback acceptor thread")?;
+        Ok(())
+    })?;
+    let secs = t0.elapsed().as_secs_f64();
+    let stats1 = server.stats();
+    let delta = ServeSnapshot {
+        requests: stats1.requests - stats0.requests,
+        batches: stats1.batches - stats0.batches,
+        full_batches: stats1.full_batches - stats0.full_batches,
+    };
+    let name = format!("serve loopback x{clients}");
+    Ok(LoopbackReport {
+        clients,
+        requests: clients * per_client,
+        secs,
+        lat: BenchStats::from_samples(&name, lats),
+        mean_fill: delta.mean_fill(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_helpers_round_trip() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_u32(&mut buf, 0xDEAD_BEEF).unwrap();
+        write_f32s(&mut buf, &[1.5, -2.25, 0.0]).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_u32(&mut cur).unwrap(), 0xDEAD_BEEF);
+        let mut xs = [0.0f32; 3];
+        read_f32s(&mut cur, &mut xs).unwrap();
+        assert_eq!(xs, [1.5, -2.25, 0.0]);
+    }
+
+    #[test]
+    fn error_frames_carry_the_message() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_error(&mut buf, "bad things").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_u32(&mut cur).unwrap(), ERR_MARK);
+        let len = read_u32(&mut cur).unwrap() as usize;
+        let mut msg = vec![0u8; len];
+        cur.read_exact(&mut msg).unwrap();
+        assert_eq!(std::str::from_utf8(&msg).unwrap(), "bad things");
+    }
+
+    #[test]
+    fn snapshot_mean_fill() {
+        let s = ServeStats::default();
+        assert_eq!(s.snapshot().mean_fill(), 0.0);
+        s.record(4, 4);
+        s.record(2, 4);
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 6);
+        assert_eq!(snap.batches, 2);
+        assert_eq!(snap.full_batches, 1);
+        assert!((snap.mean_fill() - 3.0).abs() < 1e-12);
+    }
+}

@@ -234,7 +234,7 @@ fn prop_batcher_one_hot_validity_any_size() {
                 noise: 0.5, jitter: 1.0, gratings: 2, blobs: 1, class_sep: 0.5,
             };
             let ds = Dataset::generate(spec, n, seed, 0);
-            let mut b = Batcher::new(ds, batch, seed);
+            let mut b = Batcher::new(ds, batch, seed).map_err(|e| e.to_string())?;
             for _ in 0..4 {
                 let bt = b.next_batch();
                 if bt.x.len() != batch * 4 * 4 * 2 {

@@ -1,0 +1,227 @@
+//! Acceptance for the concurrent serving stack (`runtime::serve`):
+//!
+//! * responses through the server — cross-request batched, over the real
+//!   TCP front end, under >= 8 concurrent clients — are **bitwise
+//!   identical** to batch-1 serial `InferenceSession` serving;
+//! * cross-request batching actually happens (dispatched batches < total
+//!   requests when concurrent clients race);
+//! * independent `InferenceSession`s driven from many threads at once
+//!   (all sharing the one process-wide kernel pool) match the serial bits;
+//! * malformed requests and protocol violations error cleanly and leave
+//!   the server serving.
+
+use std::sync::Barrier;
+use std::time::Duration;
+
+use waveq::runtime::serve::{serve_tcp, TcpClient};
+use waveq::runtime::{
+    FrozenModel, InferenceSession, ModelMeta, Runtime, ServeCfg, Server, Session, SessionCfg,
+};
+use waveq::util::rng::Rng;
+
+/// Serializes the env-mutating tests in this binary (the test harness runs
+/// them on concurrent threads and `WAVEQ_THREADS` is process-global).
+fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Freeze a He-initialized WaveQ state for `base` (the serving contract is
+/// state-independent, so no training is needed).
+fn freeze(base: &str, seed: u64) -> (ModelMeta, FrozenModel) {
+    let rt = Runtime::native();
+    let session = Session::open(
+        &rt,
+        &SessionCfg {
+            train_program: format!("train_waveq_{base}"),
+            eval_program: format!("eval_quant_{base}"),
+            seed,
+            beta_init: 4.0,
+            preset_kw: None,
+        },
+    )
+    .unwrap();
+    let meta = session.model().clone();
+    let frozen = session.freeze(255.0).unwrap();
+    (meta, frozen)
+}
+
+/// `n` deterministic single-example inputs shaped for the model.
+fn inputs(meta: &ModelMeta, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let pix: usize = meta.input_shape.iter().product();
+    let mut rng = Rng::new(seed).split(0xF00D);
+    (0..n).map(|_| rng.normal_vec(pix, 1.0)).collect()
+}
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn concurrent_tcp_clients_get_bits_identical_to_batch1_serial() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "2");
+    let (meta, frozen) = freeze("simplenet5", 42);
+    let pix: usize = meta.input_shape.iter().product();
+    let xs = inputs(&meta, 16, 7);
+
+    // Ground truth: every input served alone through a batch-1 session.
+    let mut one = InferenceSession::open(&frozen, 1).unwrap();
+    let want: Vec<Vec<u32>> = xs.iter().map(|x| bits(one.infer(x, 1).unwrap())).collect();
+
+    let cfg = ServeCfg { workers: 2, max_batch: 4, deadline: Duration::from_millis(2) };
+    let server = Server::start(&frozen, &cfg).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (clients, per_client) = (8usize, 8usize);
+    std::thread::scope(|s| {
+        let acceptor = s.spawn(|| serve_tcp(&server, listener, Some(clients)));
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let (xs, want) = (&xs, &want);
+            joins.push(s.spawn(move || {
+                let mut conn = TcpClient::connect(addr).unwrap();
+                assert_eq!(conn.pixels(), pix);
+                for i in 0..per_client {
+                    let k = (c + i * clients) % xs.len();
+                    let got = bits(&conn.infer_one(&xs[k]).unwrap());
+                    assert_eq!(got, want[k], "client {c} request {i} (input {k}): bits differ");
+                }
+                conn.close().unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        acceptor.join().unwrap().unwrap();
+    });
+    let snap = server.stats();
+    assert_eq!(snap.requests, (clients * per_client) as u64);
+    assert!(snap.batches >= 1);
+    server.shutdown();
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+#[test]
+fn cross_request_batching_fills_batches_and_keeps_the_bits() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "2");
+    let (meta, frozen) = freeze("mlp", 3);
+    let xs = inputs(&meta, 8, 11);
+    let mut one = InferenceSession::open(&frozen, 1).unwrap();
+    let want: Vec<Vec<u32>> = xs.iter().map(|x| bits(one.infer(x, 1).unwrap())).collect();
+
+    // One worker, a roomy deadline, and 8 barrier-released clients: the
+    // gatherer must coalesce racing requests instead of serving each alone.
+    let cfg = ServeCfg { workers: 1, max_batch: 8, deadline: Duration::from_millis(200) };
+    let server = Server::start(&frozen, &cfg).unwrap();
+    let barrier = Barrier::new(xs.len());
+    std::thread::scope(|s| {
+        for (i, x) in xs.iter().enumerate() {
+            let client = server.client();
+            let (barrier, want) = (&barrier, &want);
+            s.spawn(move || {
+                barrier.wait();
+                let got = bits(&client.infer_one(x).unwrap());
+                assert_eq!(got, want[i], "request {i}: batched bits differ from serial");
+            });
+        }
+    });
+    let snap = server.stats();
+    assert_eq!(snap.requests, xs.len() as u64);
+    assert!(
+        snap.batches < snap.requests,
+        "no cross-request batching happened: {snap:?}"
+    );
+    assert!(snap.mean_fill() > 1.0, "mean fill {:.2}", snap.mean_fill());
+    server.shutdown();
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+#[test]
+fn concurrent_inference_sessions_match_the_serial_bits() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "4");
+    let (meta, frozen) = freeze("simplenet5", 5);
+    let pix: usize = meta.input_shape.iter().product();
+    let mut rng = Rng::new(9).split(0xBEEF);
+    let x = rng.normal_vec(4 * pix, 1.0);
+    let mut serial = InferenceSession::open(&frozen, 4).unwrap();
+    let want = bits(serial.infer(&x, 4).unwrap());
+
+    // Six threads each own a session over the same artifact and dispatch
+    // into the shared kernel pool simultaneously; every forward must
+    // reproduce the serial bits exactly.
+    std::thread::scope(|s| {
+        for t in 0..6usize {
+            let (frozen, x, want) = (&frozen, &x, &want);
+            s.spawn(move || {
+                let mut sess = InferenceSession::open(frozen, 4).unwrap();
+                for round in 0..5usize {
+                    let got = bits(sess.infer(x, 4).unwrap());
+                    assert_eq!(&got, want, "thread {t} round {round}: bits differ");
+                }
+            });
+        }
+    });
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+#[test]
+fn serve_error_paths_are_clean_and_the_server_survives() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "2");
+    let (meta, frozen) = freeze("mlp", 1);
+    let pix: usize = meta.input_shape.iter().product();
+
+    assert!(
+        Server::start(&frozen, &ServeCfg { workers: 0, ..Default::default() }).is_err(),
+        "workers=0 must be rejected"
+    );
+
+    let cfg = ServeCfg { workers: 1, max_batch: 2, deadline: Duration::ZERO };
+    let server = Server::start(&frozen, &cfg).unwrap();
+    let client = server.client();
+    assert_eq!(client.pixels(), pix);
+    // A wrong-length request errors without reaching the batch arena...
+    assert!(client.infer_one(&vec![0.0; pix + 1]).is_err());
+    // ...and the server keeps serving afterwards.
+    assert_eq!(client.infer_one(&vec![0.0; pix]).unwrap().len(), meta.num_classes);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        let acceptor = s.spawn(|| serve_tcp(&server, listener, Some(2)));
+        // Connection 1: a frame with the wrong value count gets the error
+        // marker + message, then the server drops the connection.
+        {
+            use std::io::{Read, Write};
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            let mut hello = [0u8; 12];
+            stream.read_exact(&mut hello).unwrap();
+            assert_eq!(&hello[..4], b"WQSV");
+            assert_eq!(u32::from_le_bytes(hello[4..8].try_into().unwrap()), pix as u32);
+            stream.write_all(&((pix + 1) as u32).to_le_bytes()).unwrap();
+            let mut marker = [0u8; 4];
+            stream.read_exact(&mut marker).unwrap();
+            assert_eq!(u32::from_le_bytes(marker), u32::MAX, "expected the error marker");
+            let mut len = [0u8; 4];
+            stream.read_exact(&mut len).unwrap();
+            let mut msg = vec![0u8; u32::from_le_bytes(len) as usize];
+            stream.read_exact(&mut msg).unwrap();
+            assert!(String::from_utf8_lossy(&msg).contains("values"));
+        }
+        // Connection 2: the server still serves after the bad client, and
+        // the goodbye frame closes cleanly.
+        {
+            let mut conn = TcpClient::connect(addr).unwrap();
+            let logits = conn.infer_one(&vec![0.0; pix]).unwrap();
+            assert_eq!(logits.len(), meta.num_classes);
+            conn.close().unwrap();
+        }
+        acceptor.join().unwrap().unwrap();
+    });
+    drop(client);
+    server.shutdown();
+    std::env::remove_var("WAVEQ_THREADS");
+}
