@@ -1,15 +1,17 @@
 #!/usr/bin/env python3
-"""Render the BENCH_*.json reports as GitHub step-summary markdown.
+"""Render the BENCH_*.json / AUDIT_report.json reports as step-summary markdown.
 
-Usage: bench_summary.py <dir-with-BENCH_jsons>
+Usage: bench_summary.py <dir-with-reports>
 
 Consumes the machine-readable reports the `cargo bench` binaries emit
 (`bench_support::write_report`): BENCH_kernels.json (blocked vs scalar
 matmul/grad kernels, thread scaling), BENCH_runtime.json (per-program
 step latency across the model zoo), BENCH_infer.json (frozen-artifact
 serving throughput) and BENCH_serve.json (concurrent `waveq serve`
-latency/throughput vs batch-1 serial). Prints markdown to stdout; the
-perf-smoke CI job appends it to $GITHUB_STEP_SUMMARY.
+latency/throughput vs batch-1 serial), plus AUDIT_report.json from
+`cargo run -p waveq-audit` (determinism/safety rules D1-D6 and the
+unsafe inventory). Prints markdown to stdout; the perf-smoke and lint
+CI jobs append it to $GITHUB_STEP_SUMMARY.
 """
 
 import json
@@ -124,9 +126,44 @@ def serve_table(report: dict) -> None:
     print()
 
 
+def audit_table(report: dict) -> None:
+    clean = report.get("clean", False)
+    verdict = "clean" if clean else "VIOLATIONS"
+    print(f"## waveq-audit (determinism/safety lint): {verdict}")
+    print()
+    print(f"{int(report.get('files_scanned', 0))} files scanned under "
+          f"`{report.get('root', '?')}`")
+    print()
+    print("| rule | invariant | violations | allowlisted |")
+    print("|---|---|---|---|")
+    for rule, info in report.get("rules", {}).items():
+        print(f"| {rule} | {info.get('summary', '?')} | "
+              f"{int(info.get('violations', 0))} | {int(info.get('allowed', 0))} |")
+    print()
+    for v in report.get("violations", []):
+        where = f"{v['file']}:{int(v['line'])}"
+        print(f"- **{v['rule']}** `{where}`: {v.get('message', v.get('pattern', ''))}")
+    stale = report.get("unused_allow_entries", [])
+    if stale:
+        print(f"- warning: {len(stale)} stale allowlist entries "
+              f"(lines {[int(e['allow_file_line']) for e in stale]})")
+    inv = report.get("unsafe_inventory", [])
+    justified = sum(1 for u in inv if u.get("justified"))
+    print(f"- unsafe inventory: {len(inv)} site(s), {justified} with a "
+          f"`// SAFETY:` justification")
+    for u in inv:
+        mark = "ok" if u.get("justified") else "MISSING SAFETY"
+        print(f"  - `{u['file']}:{int(u['line'])}` {u.get('kind', '?')} ({mark})")
+    print()
+
+
 def main() -> int:
     outdir = Path(sys.argv[1] if len(sys.argv) > 1 else ".")
     found = False
+    audit = outdir / "AUDIT_report.json"
+    if audit.exists():
+        audit_table(json.loads(audit.read_text()))
+        found = True
     kernels = outdir / "BENCH_kernels.json"
     if kernels.exists():
         kernels_table(json.loads(kernels.read_text()))
@@ -144,7 +181,8 @@ def main() -> int:
         serve_table(json.loads(serve.read_text()))
         found = True
     if not found:
-        print(f"no BENCH_*.json reports under {outdir}", file=sys.stderr)
+        print(f"no BENCH_*.json / AUDIT_report.json reports under {outdir}",
+              file=sys.stderr)
         return 1
     return 0
 

@@ -57,7 +57,7 @@ fn main() -> Result<()> {
             let mut m = 0f32;
             for wi in 0..N_W {
                 for bi in 0..N_B {
-                    if b[bi] >= lo && b[bi] <= hi {
+                    if (lo..=hi).contains(&b[bi]) {
                         m = m.max(d1[wi * N_B + bi].abs());
                     }
                 }

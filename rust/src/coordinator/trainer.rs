@@ -233,7 +233,7 @@ impl<'a> Trainer<'a> {
 
             // Observers (figure data).
             for req in &self.opts.track {
-                if req.every > 0 && step % req.every == 0 {
+                if req.every > 0 && step.is_multiple_of(req.every) {
                     let t = session.state().param_tensor(&model, req.param)?;
                     let snap = match &req.kind {
                         TrackKind::Weights { count } => Snapshot {
@@ -253,7 +253,7 @@ impl<'a> Trainer<'a> {
             }
 
             // Mid-training eval (Fig. 8 convergence curves).
-            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            if cfg.eval_every > 0 && (step + 1).is_multiple_of(cfg.eval_every) {
                 let (tl, tacc) = self.eval_now(&mut session)?;
                 metrics.add_f32(step, "test_loss", tl);
                 metrics.add_f32(step, "test_acc", tacc);

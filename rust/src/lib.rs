@@ -24,6 +24,13 @@
 //! time: `make artifacts` lowers every program to HLO text which
 //! `runtime::pjrt` loads through the PJRT C API.
 
+// Unsafe stays confined to the worker pool: `runtime::native::pool` opts
+// back in with a module-level `#![allow(unsafe_code)]` and carries a
+// `// SAFETY:` justification on every site (inventoried by waveq-audit,
+// rule D4). `deny` (not `forbid`) so exactly that one opt-out compiles.
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench_support;
 pub mod config;
 pub mod coordinator;

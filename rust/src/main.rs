@@ -19,6 +19,11 @@
 //! Serve flags:  --artifact ART --workers N --max-batch N --deadline-us N
 //!               --listen ADDR | --loopback --clients N --requests N
 
+// The CLI crate has no sanctioned unsafe at all (the pool's opt-out lives
+// in the library); `forbid` makes that unoverridable.
+#![forbid(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 

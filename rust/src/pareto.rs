@@ -144,7 +144,11 @@ pub fn accuracy_gap_to_frontier(p: &DesignPoint, points: &[DesignPoint]) -> f64 
 
 /// Serialize the space + frontier as CSV (compute, accuracy, on_frontier, bits).
 pub fn to_csv(points: &[DesignPoint], frontier: &[usize]) -> String {
-    let on: std::collections::HashSet<usize> = frontier.iter().copied().collect();
+    // BTreeSet, not HashSet: this feeds serialized output, and the audit's
+    // D2 rule keeps hash-ordered collections out of such paths entirely
+    // (membership tests are order-free, but the rule is written for the
+    // whole file so iteration can never creep in).
+    let on: std::collections::BTreeSet<usize> = frontier.iter().copied().collect();
     let mut s = String::from("compute,accuracy,on_frontier,bits\n");
     for (i, p) in points.iter().enumerate() {
         let bits: Vec<String> = p.bits.iter().map(|b| b.to_string()).collect();
@@ -183,7 +187,7 @@ mod tests {
         assert_eq!(v[0], vec![2, 2, 2]);
         assert_eq!(v[26], vec![4, 4, 4]);
         // all distinct
-        let set: std::collections::HashSet<Vec<u32>> = v.iter().cloned().collect();
+        let set: std::collections::BTreeSet<Vec<u32>> = v.iter().cloned().collect();
         assert_eq!(set.len(), 27);
     }
 

@@ -320,12 +320,12 @@ fn im2col_body(x: &[f32], batch: usize, g: &ConvGeom, cols: &mut [f32], zero_sha
                     let row = &mut dst[(oh * g.w_out + ow) * kk..][..kk];
                     for kh in 0..k {
                         let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                        if ih < 0 || ih >= g.h_in as isize {
+                        if !(0..g.h_in as isize).contains(&ih) {
                             continue;
                         }
                         for kw in 0..k {
                             let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                            if iw < 0 || iw >= g.w_in as isize {
+                            if !(0..g.w_in as isize).contains(&iw) {
                                 continue;
                             }
                             let src = ((ih as usize) * g.w_in + iw as usize) * g.cin;
@@ -356,12 +356,12 @@ pub fn col2im(dcols: &[f32], batch: usize, g: &ConvGeom) -> Vec<f32> {
                     let row = &dcols[((b * g.h_out + oh) * g.w_out + ow) * kk..][..kk];
                     for kh in 0..k {
                         let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                        if ih < 0 || ih >= g.h_in as isize {
+                        if !(0..g.h_in as isize).contains(&ih) {
                             continue;
                         }
                         for kw in 0..k {
                             let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                            if iw < 0 || iw >= g.w_in as isize {
+                            if !(0..g.w_in as isize).contains(&iw) {
                                 continue;
                             }
                             let dst = ((ih as usize) * g.w_in + iw as usize) * g.cin;
@@ -416,12 +416,12 @@ fn dwconv_fwd_body(
                     let orow = &mut ob[(oh * g.w_out + ow) * c..][..c];
                     for kh in 0..k {
                         let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                        if ih < 0 || ih >= g.h_in as isize {
+                        if !(0..g.h_in as isize).contains(&ih) {
                             continue;
                         }
                         for kw in 0..k {
                             let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                            if iw < 0 || iw >= g.w_in as isize {
+                            if !(0..g.w_in as isize).contains(&iw) {
                                 continue;
                             }
                             let xrow = &xb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
@@ -461,12 +461,12 @@ pub fn dwconv_grad_w(x: &[f32], dz: &[f32], batch: usize, g: &ConvGeom) -> Vec<f
                     let drow = &dz[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
                     for kh in 0..k {
                         let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                        if ih < 0 || ih >= g.h_in as isize {
+                        if !(0..g.h_in as isize).contains(&ih) {
                             continue;
                         }
                         for kw in 0..k {
                             let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                            if iw < 0 || iw >= g.w_in as isize {
+                            if !(0..g.w_in as isize).contains(&iw) {
                                 continue;
                             }
                             let xrow = &xb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
@@ -506,12 +506,12 @@ pub fn dwconv_grad_x(dz: &[f32], w: &[f32], batch: usize, g: &ConvGeom) -> Vec<f
                     let drow = &dz[((b * g.h_out + oh) * g.w_out + ow) * c..][..c];
                     for kh in 0..k {
                         let ih = (oh * g.stride + kh) as isize - g.pad_top as isize;
-                        if ih < 0 || ih >= g.h_in as isize {
+                        if !(0..g.h_in as isize).contains(&ih) {
                             continue;
                         }
                         for kw in 0..k {
                             let iw = (ow * g.stride + kw) as isize - g.pad_left as isize;
-                            if iw < 0 || iw >= g.w_in as isize {
+                            if !(0..g.w_in as isize).contains(&iw) {
                                 continue;
                             }
                             let xrow = &mut dxb[((ih as usize) * g.w_in + iw as usize) * c..][..c];
@@ -767,7 +767,7 @@ fn micro_tile(
     ldo: usize,
     nw: usize,
 ) {
-    debug_assert!(mr >= 1 && mr <= MR && nw >= 1 && nw <= NR);
+    debug_assert!((1..=MR).contains(&mr) && (1..=NR).contains(&nw));
     let mut acc = [[0.0f32; NR]; MR];
     for row in acc.iter_mut().take(mr) {
         *row = *init;
@@ -1347,7 +1347,9 @@ mod tests {
                             for kw in 0..k {
                                 let ih = (oh * s + kh) as isize - g.pad_top as isize;
                                 let iw = (ow * s + kw) as isize - g.pad_left as isize;
-                                if ih < 0 || ih >= h as isize || iw < 0 || iw >= w_ as isize {
+                                if !(0..h as isize).contains(&ih)
+                                    || !(0..w_ as isize).contains(&iw)
+                                {
                                     continue;
                                 }
                                 for ci in 0..cin {
@@ -1575,7 +1577,7 @@ mod tests {
         let (rows, din, dout) = (9, 21, 18);
         let mut x = prand(rows * din, 7);
         for (i, v) in x.iter_mut().enumerate() {
-            if i % 3 == 0 {
+            if i.is_multiple_of(3) {
                 *v = 0.0;
             }
         }
@@ -1620,6 +1622,23 @@ mod tests {
             }
         }
         std::env::remove_var("WAVEQ_THREADS");
+    }
+
+    /// Miri-sized end-to-end check: a blocked matmul big enough to split
+    /// into two pool shards (rows >= 2 * GEMM_MIN_ROWS at two threads),
+    /// checked against the scalar oracle. The CI sanitizers lane runs this
+    /// under `cargo miri test`, so the pool's raw-pointer Task plumbing is
+    /// exercised by the interpreter on every push in a few seconds.
+    #[test]
+    fn miri_smoke() {
+        let (rows, din, dout) = (2 * GEMM_MIN_ROWS, 5, 6);
+        let x = prand(rows * din, 21);
+        let w = prand(din * dout, 22);
+        let _guard = pool::env_lock();
+        std::env::set_var("WAVEQ_THREADS", "2");
+        let got = matmul(&x, &w, rows, din, dout);
+        std::env::remove_var("WAVEQ_THREADS");
+        assert_close(&got, &scalar::matmul(&x, &w, rows, din, dout), 1e-4, "miri-smoke-matmul");
     }
 
     #[test]

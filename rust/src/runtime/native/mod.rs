@@ -398,7 +398,7 @@ fn param_slices<'a>(
 /// Resolve batch size from the x/y buffers and validate consistency.
 fn batch_of(prog: &str, model: &NativeModel, x: &Buffer, y: &Buffer) -> Result<usize> {
     let pix = model.pixels();
-    if x.elem_count() == 0 || x.elem_count() % pix != 0 {
+    if x.elem_count() == 0 || !x.elem_count().is_multiple_of(pix) {
         return Err(anyhow!(
             "{prog}: x has {} elems, not a multiple of {} ({}x{}x{})",
             x.elem_count(),
@@ -817,45 +817,38 @@ fn run_train_into(
     let vels = param_slices(prog, model, args, np)?;
 
     // Tail inputs, positionally after [w*, v*] (train_step.py layouts).
+    // Tuple order: (beta_in, vbeta_in, x, y, lr, mom, lr_beta, ka, lam_w,
+    // lam_beta, beta_train) — families without a field bind its neutral
+    // value (empty beta vecs, lr_beta/lambdas 0, ka None).
     let tail = &args[2 * np..];
-    let beta_in: Vec<f32>;
-    let vbeta_in: Vec<f32>;
-    let x: &Buffer;
-    let y: &Buffer;
-    let lr: f32;
-    let mom: f32;
-    let lr_beta: f32;
-    let ka: Option<f32>;
-    let lam_w: f32;
-    let lam_beta: f32;
-    let beta_train: f32;
-    match quant {
-        QuantFamily::Fp32 => {
-            beta_in = Vec::new();
-            vbeta_in = Vec::new();
-            x = tail[0];
-            y = tail[1];
-            lr = scalar_arg(prog, "lr", tail[2])?;
-            mom = scalar_arg(prog, "mom", tail[3])?;
-            lr_beta = 0.0;
-            ka = None;
-            lam_w = 0.0;
-            lam_beta = 0.0;
-            beta_train = 0.0;
-        }
-        QuantFamily::Dorefa | QuantFamily::Wrpn => {
-            beta_in = Vec::new();
-            vbeta_in = Vec::new();
-            x = tail[0];
-            y = tail[1];
-            lr = scalar_arg(prog, "lr", tail[2])?;
-            mom = scalar_arg(prog, "mom", tail[3])?;
-            lr_beta = 0.0;
-            ka = Some(scalar_arg(prog, "ka", tail[5])?);
-            lam_w = 0.0;
-            lam_beta = 0.0;
-            beta_train = 0.0;
-        }
+    let (beta_in, vbeta_in, x, y, lr, mom, lr_beta, ka, lam_w, lam_beta, beta_train) = match quant
+    {
+        QuantFamily::Fp32 => (
+            Vec::new(),
+            Vec::new(),
+            tail[0],
+            tail[1],
+            scalar_arg(prog, "lr", tail[2])?,
+            scalar_arg(prog, "mom", tail[3])?,
+            0.0,
+            None,
+            0.0,
+            0.0,
+            0.0,
+        ),
+        QuantFamily::Dorefa | QuantFamily::Wrpn => (
+            Vec::new(),
+            Vec::new(),
+            tail[0],
+            tail[1],
+            scalar_arg(prog, "lr", tail[2])?,
+            scalar_arg(prog, "mom", tail[3])?,
+            0.0,
+            Some(scalar_arg(prog, "ka", tail[5])?),
+            0.0,
+            0.0,
+            0.0,
+        ),
         QuantFamily::Waveq => {
             if tail[0].elem_count() != nq || tail[1].elem_count() != nq {
                 return Err(anyhow!(
@@ -864,19 +857,21 @@ fn run_train_into(
                     tail[1].elem_count()
                 ));
             }
-            beta_in = tail[0].data.clone();
-            vbeta_in = tail[1].data.clone();
-            x = tail[2];
-            y = tail[3];
-            lr = scalar_arg(prog, "lr", tail[4])?;
-            mom = scalar_arg(prog, "mom", tail[5])?;
-            lr_beta = scalar_arg(prog, "lr_beta", tail[6])?;
-            ka = Some(scalar_arg(prog, "ka", tail[7])?);
-            lam_w = scalar_arg(prog, "lambda_w", tail[8])?;
-            lam_beta = scalar_arg(prog, "lambda_beta", tail[9])?;
-            beta_train = scalar_arg(prog, "beta_train", tail[10])?;
+            (
+                tail[0].data.clone(),
+                tail[1].data.clone(),
+                tail[2],
+                tail[3],
+                scalar_arg(prog, "lr", tail[4])?,
+                scalar_arg(prog, "mom", tail[5])?,
+                scalar_arg(prog, "lr_beta", tail[6])?,
+                Some(scalar_arg(prog, "ka", tail[7])?),
+                scalar_arg(prog, "lambda_w", tail[8])?,
+                scalar_arg(prog, "lambda_beta", tail[9])?,
+                scalar_arg(prog, "beta_train", tail[10])?,
+            )
         }
-    }
+    };
     let kw = match quant {
         QuantFamily::Dorefa | QuantFamily::Wrpn => kw_arg(prog, model, tail[4])?,
         _ => Vec::new(),

@@ -567,7 +567,7 @@ impl<'rt> Session<'rt> {
         ka: f32,
     ) -> Result<(f32, f32)> {
         let pix: usize = self.model.input_shape.iter().product();
-        if x.is_empty() || x.len() % pix != 0 {
+        if x.is_empty() || !x.len().is_multiple_of(pix) {
             return Err(anyhow!(
                 "{}: x has {} elems, not a multiple of {pix}",
                 self.eval.name(),

@@ -107,7 +107,8 @@ mod tests {
         let s = BenchStats::from_samples("t", samples);
         assert_eq!(s.min, Duration::from_micros(1));
         assert_eq!(s.max, Duration::from_micros(100));
-        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p50 <= s.p95);
+        assert!(s.p95 <= s.p99);
         assert_eq!(s.iters, 100);
     }
 

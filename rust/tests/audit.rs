@@ -1,0 +1,240 @@
+//! The repo audits itself: `waveq-audit` (the determinism/safety lint
+//! pass, `rust/tools/audit`) must report zero non-allowlisted violations
+//! over this crate's own sources, and each rule must catch planted
+//! violations in fixture snippets at the exact file/line it claims.
+//!
+//! Fixtures live in string literals — the audit lexer skips string
+//! contents, so this file stays clean under the self-audit it runs.
+
+use waveq_audit::{load_allow, run_audit, scan_source, Rule};
+
+/// The whole point of the tool: the tree it ships in passes it. Runs the
+/// real walker over `rust/` with the real allowlist, so any future
+/// violation (or stale allowlist line) fails `cargo test` before CI.
+#[test]
+fn repo_tree_is_clean_under_the_real_allowlist() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let allow = load_allow(&root.join("tools/audit/allow.toml")).expect("allowlist parses");
+    assert!(
+        !allow.is_empty(),
+        "allow.toml must document the sanctioned concurrency/reduction sites"
+    );
+    let outcome = run_audit(root, &allow).expect("walking the source tree");
+    assert!(
+        outcome.files_scanned > 50,
+        "walked only {} files — the walker lost a directory",
+        outcome.files_scanned
+    );
+    assert!(
+        outcome.violations.is_empty(),
+        "non-allowlisted violations in the tree:\n{:#?}",
+        outcome.violations
+    );
+    assert!(
+        outcome.unused_allow.is_empty(),
+        "stale allowlist entries (match nothing):\n{:#?}",
+        outcome.unused_allow
+    );
+    // The unsafe surface is exactly the pool's three sites, all justified.
+    assert_eq!(
+        outcome.unsafe_inventory.len(),
+        3,
+        "unsafe inventory changed:\n{:#?}",
+        outcome.unsafe_inventory
+    );
+    for site in &outcome.unsafe_inventory {
+        assert!(
+            site.file.ends_with("src/runtime/native/pool.rs"),
+            "unsafe outside the pool: {}:{}",
+            site.file,
+            site.line
+        );
+        assert!(
+            site.justified && !site.justification.is_empty(),
+            "unsafe site without a SAFETY justification: {}:{}",
+            site.file,
+            site.line
+        );
+    }
+}
+
+#[test]
+fn d1_flags_spawn_scope_and_builder_outside_the_pool() {
+    let src = "pub fn helper() {\n    std::thread::spawn(|| {});\n}\n\
+               pub fn scoped() {\n    std::thread::scope(|_s| {});\n}\n";
+    let f = scan_source("src/coordinator/trainer.rs", src);
+    assert_eq!(f.violations.len(), 2, "{:#?}", f.violations);
+    assert_eq!(f.violations[0].rule, Rule::D1);
+    assert_eq!(f.violations[0].line, 2);
+    assert_eq!(f.violations[0].pattern, "thread::spawn");
+    assert_eq!(f.violations[0].in_fn.as_deref(), Some("helper"));
+    assert_eq!(f.violations[1].line, 5);
+    assert_eq!(f.violations[1].pattern, "thread::scope");
+    assert_eq!(f.violations[1].in_fn.as_deref(), Some("scoped"));
+
+    let builder = "fn start() { std::thread::Builder::new(); }\n";
+    let f = scan_source("src/runtime/session.rs", builder);
+    assert_eq!(f.violations.len(), 1);
+    assert_eq!(f.violations[0].pattern, "thread::Builder");
+
+    // The parallelism root itself is exempt — it IS the audited machinery.
+    let f = scan_source("src/runtime/native/pool.rs", src);
+    assert!(f.violations.is_empty(), "pool.rs must be D1-exempt");
+}
+
+#[test]
+fn d2_flags_hash_collections_only_in_order_sensitive_files() {
+    let src = "fn ser() { let m = std::collections::HashMap::<u32, u32>::new(); drop(m); }\n";
+    let f = scan_source("src/util/json.rs", src);
+    assert_eq!(f.violations.len(), 1, "{:#?}", f.violations);
+    assert_eq!(f.violations[0].rule, Rule::D2);
+    assert_eq!(f.violations[0].line, 1);
+    assert_eq!(f.violations[0].pattern, "HashMap");
+    assert_eq!(f.violations[0].in_fn.as_deref(), Some("ser"));
+
+    // Outside the serialization/kernel file set a HashMap is fine.
+    let f = scan_source("src/config.rs", src);
+    assert!(f.violations.is_empty(), "{:#?}", f.violations);
+}
+
+#[test]
+fn d3_flags_float_reductions_in_kernels_but_not_their_tests() {
+    let src = "pub fn dot(a: &[f32], b: &[f32]) -> f32 {\n    \
+               a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>()\n}\n";
+    let f = scan_source("src/runtime/native/kernels.rs", src);
+    assert_eq!(f.violations.len(), 1, "{:#?}", f.violations);
+    assert_eq!(f.violations[0].rule, Rule::D3);
+    assert_eq!(f.violations[0].line, 2);
+    assert_eq!(f.violations[0].pattern, ".sum(");
+    assert_eq!(f.violations[0].in_fn.as_deref(), Some("dot"));
+
+    // The same reduction inside #[cfg(test)] is oracle code, not a kernel.
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn oracle(v: &[f32]) -> f32 \
+                    { v.iter().sum() }\n}\n";
+    let f = scan_source("src/runtime/native/kernels.rs", test_src);
+    assert!(f.violations.is_empty(), "{:#?}", f.violations);
+
+    // And in a non-kernel file it is not D3's business at all.
+    let f = scan_source("src/energy.rs", src);
+    assert!(f.violations.is_empty(), "{:#?}", f.violations);
+}
+
+#[test]
+fn d4_requires_safety_comments_and_inventories_every_unsafe() {
+    let bare = "pub fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+    let f = scan_source("src/tensor.rs", bare);
+    assert_eq!(f.violations.len(), 1, "{:#?}", f.violations);
+    assert_eq!(f.violations[0].rule, Rule::D4);
+    assert_eq!(f.violations[0].line, 2);
+    assert_eq!(f.unsafe_inventory.len(), 1);
+    assert!(!f.unsafe_inventory[0].justified);
+
+    let justified = "pub fn f(p: *const u32) -> u32 {\n    \
+                     // SAFETY: caller guarantees p is valid and aligned.\n    \
+                     unsafe { *p }\n}\n";
+    let f = scan_source("src/tensor.rs", justified);
+    assert!(f.violations.is_empty(), "{:#?}", f.violations);
+    assert_eq!(f.unsafe_inventory.len(), 1);
+    assert!(f.unsafe_inventory[0].justified);
+    assert!(f.unsafe_inventory[0].justification.contains("caller guarantees"));
+
+    // Re-enabling unsafe outside the pool is itself a violation.
+    let optout = "#![allow(unsafe_code)]\n";
+    let f = scan_source("src/lib.rs", optout);
+    assert_eq!(f.violations.len(), 1, "{:#?}", f.violations);
+    assert_eq!(f.violations[0].pattern, "allow(unsafe_code)");
+    let f = scan_source("src/runtime/native/pool.rs", optout);
+    assert!(f.violations.is_empty(), "the pool's opt-out is sanctioned");
+}
+
+#[test]
+fn d5_flags_panicking_lock_acquisition() {
+    let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+    let f = scan_source("src/schedule.rs", src);
+    assert_eq!(f.violations.len(), 1, "{:#?}", f.violations);
+    assert_eq!(f.violations[0].rule, Rule::D5);
+    assert_eq!(f.violations[0].line, 2);
+
+    let tolerant = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    \
+                    *m.lock().unwrap_or_else(|e| e.into_inner())\n}\n";
+    let f = scan_source("src/schedule.rs", tolerant);
+    assert!(f.violations.is_empty(), "poison-tolerant locking is the contract");
+}
+
+#[test]
+fn d6_flags_clocks_and_env_reads_in_kernel_code() {
+    let src = "pub fn shard() {\n    let _t = std::time::Instant::now();\n    \
+               let _v = std::env::var(\"WAVEQ_THREADS\");\n}\n";
+    let f = scan_source("src/runtime/native/models.rs", src);
+    assert_eq!(f.violations.len(), 2, "{:#?}", f.violations);
+    assert_eq!(f.violations[0].rule, Rule::D6);
+    assert_eq!(f.violations[0].line, 2);
+    assert_eq!(f.violations[0].pattern, "Instant::now");
+    assert_eq!(f.violations[1].line, 3);
+    assert_eq!(f.violations[1].pattern, "env::");
+
+    // Timing the serving loop (a non-kernel file) is fine.
+    let f = scan_source("src/runtime/serve.rs", src);
+    assert!(f.violations.is_empty(), "{:#?}", f.violations);
+}
+
+#[test]
+fn strings_and_comments_never_count_as_code() {
+    let src = "// thread::spawn, HashMap, .sum::<f32>() — all just prose\n\
+               const DOC: &str = \"thread::spawn inside a string\";\n\
+               const RAW: &str = r#\"unsafe { lock().unwrap() }\"#;\n";
+    for path in ["src/util/json.rs", "src/runtime/native/kernels.rs", "src/lib.rs"] {
+        let f = scan_source(path, src);
+        assert!(f.violations.is_empty(), "{path}: {:#?}", f.violations);
+        assert!(f.unsafe_inventory.is_empty(), "{path} inventoried a string literal");
+    }
+}
+
+#[test]
+fn clean_kernel_fixture_produces_no_findings() {
+    let src = "/// A fixed-order reduction: k runs serially, always.\n\
+               pub fn dot_fixed(a: &[f32], b: &[f32]) -> f32 {\n    \
+               let mut acc = 0.0f32;\n    \
+               for k in 0..a.len() {\n        acc += a[k] * b[k];\n    }\n    acc\n}\n";
+    let f = scan_source("src/runtime/native/kernels.rs", src);
+    assert!(f.violations.is_empty(), "{:#?}", f.violations);
+    assert!(f.unsafe_inventory.is_empty());
+}
+
+/// End-to-end allowlist round trip against a real on-disk tree: a planted
+/// violation is suppressed by a matching entry, a second entry that
+/// matches nothing is reported as unused, and removing the entry makes
+/// the violation reappear.
+#[test]
+fn allowlist_round_trips_over_a_real_tree() {
+    let dir = std::env::temp_dir().join(format!("waveq-audit-rt-{}", std::process::id()));
+    let src_dir = dir.join("src");
+    std::fs::create_dir_all(&src_dir).expect("temp tree");
+    std::fs::write(
+        src_dir.join("worker.rs"),
+        "pub fn kick() {\n    std::thread::spawn(|| {});\n}\n",
+    )
+    .expect("fixture write");
+
+    let allow_text = "rule=D1 file=src/worker.rs fn=kick pattern=thread::spawn \
+                      reason=\"fixture: sanctioned for the round-trip test\"\n\
+                      rule=D5 file=src/nowhere.rs reason=\"stale on purpose\"\n";
+    let entries = waveq_audit::allow::parse(allow_text).expect("allow parses");
+    let outcome = run_audit(&dir, &entries).expect("audit over temp tree");
+    assert_eq!(outcome.files_scanned, 1);
+    assert!(outcome.violations.is_empty(), "{:#?}", outcome.violations);
+    assert_eq!(outcome.allowed.len(), 1);
+    assert_eq!(outcome.allowed[0].0.pattern, "thread::spawn");
+    assert!(outcome.allowed[0].1.contains("round-trip"));
+    assert_eq!(outcome.unused_allow.len(), 1);
+    assert_eq!(outcome.unused_allow[0].file, "src/nowhere.rs");
+    assert!(outcome.clean(), "unused entries warn, they do not fail");
+
+    let outcome = run_audit(&dir, &[]).expect("audit without allowlist");
+    assert_eq!(outcome.violations.len(), 1);
+    assert_eq!(outcome.violations[0].rule, Rule::D1);
+    assert_eq!(outcome.violations[0].line, 2);
+    assert!(!outcome.clean());
+
+    std::fs::remove_dir_all(&dir).ok();
+}

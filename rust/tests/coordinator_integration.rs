@@ -152,7 +152,7 @@ fn metrics_csv_and_json_round_trip() {
     let mut m = MetricsRecorder::new();
     for step in 0..50 {
         m.add(step, "loss", 2.0 / (step + 1) as f64);
-        if step % 10 == 0 {
+        if step.is_multiple_of(10) {
             m.add(step, "test_acc", step as f64 / 50.0);
         }
     }

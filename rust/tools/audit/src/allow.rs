@@ -1,0 +1,208 @@
+//! The plain-text allowlist (`tools/audit/allow.toml`).
+//!
+//! One entry per line, `key=value` pairs separated by whitespace, values
+//! optionally double-quoted (required when they contain spaces). `#`
+//! starts a comment. Recognized keys:
+//!
+//! ```text
+//! rule=D1 file=src/runtime/serve.rs [line=545] [fn=loopback_bench]
+//!     [pattern=thread::scope] reason="why this site is sound"
+//! ```
+//!
+//! `rule`, `file` and `reason` are mandatory; `line`, `fn` and `pattern`
+//! narrow the match. `file` matches by path suffix so entries survive the
+//! tree being audited from different roots. Entries that match nothing
+//! are reported as *unused* (a warning, not a failure) so stale lines are
+//! visible instead of silently hiding future regressions.
+
+use crate::rules::{Rule, Violation};
+
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: Rule,
+    pub file: String,
+    pub line: Option<u32>,
+    pub func: Option<String>,
+    pub pattern: Option<String>,
+    pub reason: String,
+    /// 1-based line in the allow file (for diagnostics).
+    pub source_line: u32,
+}
+
+impl AllowEntry {
+    pub fn matches(&self, v: &Violation) -> bool {
+        self.rule == v.rule
+            && (v.file == self.file || v.file.ends_with(&self.file))
+            && self.line.is_none_or(|l| l == v.line)
+            && self.func.as_deref().is_none_or(|f| v.in_fn.as_deref() == Some(f))
+            && self.pattern.as_deref().is_none_or(|p| v.pattern == p)
+    }
+}
+
+fn parse_rule(s: &str) -> Option<Rule> {
+    match s {
+        "D1" => Some(Rule::D1),
+        "D2" => Some(Rule::D2),
+        "D3" => Some(Rule::D3),
+        "D4" => Some(Rule::D4),
+        "D5" => Some(Rule::D5),
+        "D6" => Some(Rule::D6),
+        _ => None,
+    }
+}
+
+/// Split one line into whitespace-separated fields, honoring double
+/// quotes (quotes may start mid-field, as in `reason="…"`).
+fn fields(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    for c in line.chars() {
+        if c == '"' {
+            in_quotes = !in_quotes;
+        } else if c.is_whitespace() && !in_quotes {
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+        } else {
+            cur.push(c);
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Parse the allow file text. Malformed lines are hard errors — a typo in
+/// the allowlist must not silently re-enable (or over-suppress) a rule.
+pub fn parse(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut entries = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx as u32 + 1;
+        // Truncate at the first `#` that sits outside double quotes (a
+        // `#` inside a quoted value, e.g. reason="issue #12", is data).
+        let mut in_quotes = false;
+        let mut cut = raw.len();
+        for (at, c) in raw.char_indices() {
+            if c == '"' {
+                in_quotes = !in_quotes;
+            } else if c == '#' && !in_quotes {
+                cut = at;
+                break;
+            }
+        }
+        let line = &raw[..cut];
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut rule = None;
+        let mut file = None;
+        let mut line_no = None;
+        let mut func = None;
+        let mut pattern = None;
+        let mut reason = None;
+        for field in fields(line) {
+            let (key, value) = field
+                .split_once('=')
+                .ok_or_else(|| format!("allow line {lineno}: `{field}` is not key=value"))?;
+            match key {
+                "rule" => {
+                    rule = Some(parse_rule(value).ok_or_else(|| {
+                        format!("allow line {lineno}: unknown rule `{value}`")
+                    })?);
+                }
+                "file" => file = Some(value.replace('\\', "/")),
+                "line" => {
+                    line_no = Some(value.parse::<u32>().map_err(|_| {
+                        format!("allow line {lineno}: line=`{value}` is not a number")
+                    })?);
+                }
+                "fn" => func = Some(value.to_string()),
+                "pattern" => pattern = Some(value.to_string()),
+                "reason" => reason = Some(value.to_string()),
+                _ => return Err(format!("allow line {lineno}: unknown key `{key}`")),
+            }
+        }
+        let rule = rule.ok_or_else(|| format!("allow line {lineno}: missing rule="))?;
+        let file = file.ok_or_else(|| format!("allow line {lineno}: missing file="))?;
+        let reason = reason.ok_or_else(|| format!("allow line {lineno}: missing reason="))?;
+        if reason.trim().is_empty() {
+            return Err(format!("allow line {lineno}: empty reason"));
+        }
+        entries.push(AllowEntry {
+            rule,
+            file,
+            line: line_no,
+            func,
+            pattern,
+            reason,
+            source_line: lineno,
+        });
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn violation(
+        rule: Rule,
+        file: &str,
+        line: u32,
+        pattern: &str,
+        in_fn: Option<&str>,
+    ) -> Violation {
+        Violation {
+            rule,
+            file: file.to_string(),
+            line,
+            pattern: pattern.to_string(),
+            in_fn: in_fn.map(str::to_string),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn parses_and_matches_by_suffix_fn_and_pattern() {
+        let text = "\
+# comment line
+rule=D1 file=src/runtime/serve.rs pattern=thread::scope reason=\"scoped bench clients\"
+rule=D3 file=src/runtime/native/kernels.rs fn=max_abs reason=\"serial per-layer scale\"
+";
+        let entries = parse(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        let v = violation(Rule::D1, "src/runtime/serve.rs", 545, "thread::scope", None);
+        assert!(entries[0].matches(&v));
+        let v2 = violation(Rule::D1, "src/runtime/serve.rs", 171, "thread::Builder", None);
+        assert!(!entries[0].matches(&v2), "pattern= must narrow the match");
+        let v3 =
+            violation(Rule::D3, "src/runtime/native/kernels.rs", 45, ".fold(", Some("max_abs"));
+        assert!(entries[1].matches(&v3));
+        let v4 =
+            violation(Rule::D3, "src/runtime/native/kernels.rs", 90, ".fold(", Some("other_fn"));
+        assert!(!entries[1].matches(&v4), "fn= must narrow the match");
+    }
+
+    #[test]
+    fn malformed_lines_are_hard_errors() {
+        assert!(parse("rule=D9 file=x.rs reason=\"r\"").is_err());
+        assert!(parse("file=x.rs reason=\"r\"").is_err());
+        assert!(parse("rule=D1 file=x.rs").is_err());
+        assert!(parse("rule=D1 file=x.rs reason=\"r\" bogus=1").is_err());
+        assert!(parse("rule=D1 file=x.rs line=abc reason=\"r\"").is_err());
+    }
+
+    #[test]
+    fn line_pin_and_hash_in_reason() {
+        let entries =
+            parse("rule=D5 file=a.rs line=7 reason=\"issue #12: legacy\" # trailing\n").unwrap();
+        assert_eq!(entries[0].line, Some(7));
+        assert_eq!(entries[0].reason, "issue #12: legacy");
+        let v = violation(Rule::D5, "src/a.rs", 7, ".lock().unwrap()", None);
+        assert!(entries[0].matches(&v));
+        let v8 = violation(Rule::D5, "src/a.rs", 8, ".lock().unwrap()", None);
+        assert!(!entries[0].matches(&v8));
+    }
+}

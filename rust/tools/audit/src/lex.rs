@@ -1,0 +1,411 @@
+//! A minimal `.rs` scanner: just enough lexical structure that the audit
+//! rules never match text inside comments, string/char literals, or raw
+//! strings — and so that `// SAFETY:` comment blocks can be tied to the
+//! `unsafe` token they justify.
+//!
+//! This is intentionally not a full Rust lexer. It produces a flat token
+//! stream of identifiers/numbers/single-character punctuation plus a
+//! per-line record of comment text and whether the line carries any code.
+//! That is sufficient for every rule in [`crate::rules`], and it keeps the
+//! tool at zero dependencies (no `syn`, no `proc-macro2`).
+
+/// One lexical token: an identifier/number, or a single punctuation char.
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// 1-based source line.
+    pub line: u32,
+    /// Identifier/number text, or a one-character punctuation string.
+    pub text: String,
+}
+
+/// Lexical summary of one source file.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub tokens: Vec<Token>,
+    /// Comment text per 1-based line (all comments touching that line,
+    /// concatenated). Lines without comments hold an empty string.
+    pub line_comment: Vec<String>,
+    /// Whether the 1-based line carries any non-comment token or literal.
+    pub line_has_code: Vec<bool>,
+}
+
+impl Scan {
+    fn grow_to(&mut self, line: u32) {
+        let need = line as usize + 1;
+        if self.line_comment.len() < need {
+            self.line_comment.resize(need, String::new());
+            self.line_has_code.resize(need, false);
+        }
+    }
+
+    fn note_comment(&mut self, line: u32, text: &str) {
+        self.grow_to(line);
+        let slot = &mut self.line_comment[line as usize];
+        if !slot.is_empty() {
+            slot.push(' ');
+        }
+        slot.push_str(text.trim());
+    }
+
+    fn note_code(&mut self, line: u32) {
+        self.grow_to(line);
+        self.line_has_code[line as usize] = true;
+    }
+
+    /// Comment text on `line`, or `""` (also for out-of-range lines).
+    pub fn comment_on(&self, line: u32) -> &str {
+        self.line_comment.get(line as usize).map_or("", |s| s.as_str())
+    }
+
+    /// Whether `line` carries code (out-of-range lines report `false`).
+    pub fn has_code(&self, line: u32) -> bool {
+        self.line_has_code.get(line as usize).copied().unwrap_or(false)
+    }
+
+    /// The contiguous comment block justifying a token on `line`: the
+    /// token's own line comment (if any) plus every comment-only line
+    /// immediately above, concatenated top-down. This is how a
+    /// `// SAFETY: …` block written above an `unsafe` site is recovered.
+    pub fn comment_block_above(&self, line: u32) -> String {
+        let mut parts: Vec<&str> = Vec::new();
+        let mut l = line.saturating_sub(1);
+        while l >= 1 && !self.has_code(l) && !self.comment_on(l).is_empty() {
+            parts.push(self.comment_on(l));
+            l -= 1;
+        }
+        parts.reverse();
+        if !self.comment_on(line).is_empty() {
+            parts.push(self.comment_on(line));
+        }
+        parts.join(" ")
+    }
+}
+
+struct Lexer<'a> {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    scan: &'a mut Scan,
+}
+
+impl Lexer<'_> {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied();
+        if let Some(c) = c {
+            self.i += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn emit(&mut self, line: u32, text: String) {
+        self.scan.note_code(line);
+        self.scan.tokens.push(Token { line, text });
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.scan.note_comment(line, &text);
+    }
+
+    fn block_comment(&mut self) {
+        // `self.i` sits on the `*` of `/*`. Nesting is honored; the
+        // comment text is attributed line by line so comment-only lines
+        // inside the block still count as comment lines.
+        self.bump(); // consume '*'
+        let mut depth = 1usize;
+        let mut text = String::new();
+        let mut line = self.line;
+        while depth > 0 {
+            match self.bump() {
+                None => break,
+                Some('*') if self.peek(0) == Some('/') => {
+                    self.bump();
+                    depth -= 1;
+                }
+                Some('/') if self.peek(0) == Some('*') => {
+                    self.bump();
+                    depth += 1;
+                }
+                Some('\n') => {
+                    self.scan.note_comment(line, &text);
+                    text.clear();
+                    line = self.line;
+                }
+                Some(c) => text.push(c),
+            }
+        }
+        self.scan.note_comment(line, &text);
+    }
+
+    fn string_literal(&mut self) {
+        // `self.i` sits just past the opening `"`.
+        self.scan.note_code(self.line);
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    self.bump();
+                }
+                '"' => return,
+                _ => {}
+            }
+        }
+    }
+
+    /// Raw (byte) string: `self.i` sits on the first `#` or the `"`.
+    fn raw_string(&mut self) {
+        self.scan.note_code(self.line);
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek(0) != Some('"') {
+            return; // not actually a raw string (e.g. `r#ident`); move on
+        }
+        self.bump();
+        loop {
+            match self.bump() {
+                None => return,
+                Some('"') => {
+                    let mut seen = 0usize;
+                    while seen < hashes && self.peek(0) == Some('#') {
+                        seen += 1;
+                        self.bump();
+                    }
+                    if seen == hashes {
+                        return;
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// `'` disambiguation: char literal vs lifetime.
+    fn quote(&mut self) {
+        self.scan.note_code(self.line);
+        match (self.peek(0), self.peek(1)) {
+            // 'x' — a plain one-character literal (covers '_' too, which
+            // would otherwise look like a lifetime).
+            (Some(_), Some('\'')) => {
+                self.bump();
+                self.bump();
+            }
+            // '\n', '\u{..}' — escaped char literal, scan to the close.
+            (Some('\\'), _) => {
+                while let Some(c) = self.bump() {
+                    if c == '\\' {
+                        self.bump();
+                    } else if c == '\'' {
+                        break;
+                    }
+                }
+            }
+            // 'static, 'a — a lifetime: consume the identifier, no token.
+            (Some(c), _) if c.is_alphanumeric() || c == '_' => {
+                while let Some(c) = self.peek(0) {
+                    if c.is_alphanumeric() || c == '_' {
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn ident(&mut self, first: char) {
+        let line = self.line;
+        let mut text = String::new();
+        text.push(first);
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        // r"…" / r#"…"# / b"…" / br#"…"# / b'…' prefixes.
+        match (text.as_str(), self.peek(0)) {
+            ("r" | "br" | "b", Some('"')) => {
+                self.bump();
+                if text == "b" {
+                    self.string_literal();
+                } else {
+                    // already consumed the quote; treat as 0-hash raw body
+                    self.raw_string_body(0);
+                }
+                return;
+            }
+            ("r" | "br", Some('#')) => {
+                self.raw_string();
+                return;
+            }
+            ("b", Some('\'')) => {
+                self.bump();
+                self.quote();
+                return;
+            }
+            _ => {}
+        }
+        self.emit(line, text);
+    }
+
+    /// Raw-string body after the opening quote was already consumed.
+    fn raw_string_body(&mut self, hashes: usize) {
+        loop {
+            match self.bump() {
+                None => return,
+                Some('"') => {
+                    let mut seen = 0usize;
+                    while seen < hashes && self.peek(0) == Some('#') {
+                        seen += 1;
+                        self.bump();
+                    }
+                    if seen == hashes {
+                        return;
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    fn number(&mut self, first: char) {
+        let line = self.line;
+        let mut text = String::new();
+        text.push(first);
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else if c == '.' && self.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+                text.push(c);
+                self.bump();
+            } else if (c == '+' || c == '-')
+                && (text.ends_with('e') || text.ends_with('E'))
+                && text.contains('.')
+            {
+                // float exponent sign: 1.5e-3
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.emit(line, text);
+    }
+
+    fn run(&mut self) {
+        while let Some(c) = self.peek(0) {
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.bump();
+                self.bump();
+                self.line_comment();
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.bump();
+                self.block_comment();
+            } else if c == '"' {
+                self.bump();
+                self.string_literal();
+            } else if c == '\'' {
+                self.bump();
+                self.quote();
+            } else if c.is_alphabetic() || c == '_' {
+                self.bump();
+                self.ident(c);
+            } else if c.is_ascii_digit() {
+                self.bump();
+                self.number(c);
+            } else {
+                let line = self.line;
+                self.bump();
+                self.emit(line, c.to_string());
+            }
+        }
+    }
+}
+
+/// Scan `src`, producing the token stream + comment map the rules run on.
+pub fn scan(src: &str) -> Scan {
+    let mut out = Scan::default();
+    let mut lexer = Lexer { chars: src.chars().collect(), i: 0, line: 1, scan: &mut out };
+    lexer.run();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        scan(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_tokens() {
+        let src = "let a = \"thread::spawn\"; // thread::scope\nlet b = 1;";
+        let toks = texts(src);
+        assert_eq!(toks, ["let", "a", "=", ";", "let", "b", "1", ";"]);
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_skipped() {
+        let src = "let s = r#\"unsafe { \"x\" }\"#; let c = 'u'; let lt: &'static str = \"\";";
+        let toks = texts(src);
+        assert!(!toks.contains(&"unsafe".to_string()));
+        assert!(!toks.contains(&"static".to_string()), "lifetime must not tokenize");
+    }
+
+    #[test]
+    fn block_comments_nest_and_mark_lines() {
+        let src = "/* a /* b */ c */ let x = 1;\n// tail\nlet y = 2;";
+        let s = scan(src);
+        assert!(s.has_code(1));
+        assert!(!s.has_code(2));
+        assert!(s.comment_on(2).contains("tail"));
+        let toks: Vec<_> = s.tokens.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(toks, ["let", "x", "=", "1", ";", "let", "y", "=", "2", ";"]);
+    }
+
+    #[test]
+    fn comment_block_above_collects_contiguous_lines() {
+        let src = "let a = 1;\n// SAFETY: part one\n// part two\nunsafe { x() };\n";
+        let s = scan(src);
+        let block = s.comment_block_above(4);
+        assert!(block.contains("SAFETY: part one part two"), "got: {block}");
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_method_calls() {
+        let toks = texts("let x = 2f64.powf(beta) - 1.0e-3; let y = 1.max(2);");
+        assert!(toks.contains(&"powf".to_string()));
+        assert!(toks.contains(&"max".to_string()));
+    }
+
+    #[test]
+    fn lines_are_tracked_per_token() {
+        let s = scan("a\nb\n\nc");
+        let lines: Vec<u32> = s.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, [1, 2, 4]);
+    }
+}

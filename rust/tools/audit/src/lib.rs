@@ -1,0 +1,115 @@
+//! `waveq-audit` — a zero-dependency determinism/safety lint pass for the
+//! WaveQ repo.
+//!
+//! The repo's headline guarantee — every result is bitwise identical at
+//! any `WAVEQ_THREADS`, across train/freeze/serve — rests on a handful of
+//! conventions: all parallelism goes through the audited pool, every
+//! reduction keeps a fixed sequential-k chain, serialization never walks
+//! a hash map, `unsafe` stays confined and justified. This tool turns
+//! those conventions into machine-checked invariants (rules D1–D6, see
+//! [`rules::Rule`]) the build must respect: it walks `src`, `benches`,
+//! `tests` and `examples` under the crate root, applies each rule over a
+//! comment/string-aware token stream, filters hits through the plain-text
+//! allowlist (`tools/audit/allow.toml`), and exits nonzero on any
+//! non-allowlisted violation. An inventory of every `unsafe` site (with
+//! its `// SAFETY:` justification) is emitted in `AUDIT_report.json`.
+
+// The lint tool holds itself to the strictest form of its own rule D4.
+#![forbid(unsafe_code)]
+
+pub mod allow;
+pub mod lex;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use allow::AllowEntry;
+pub use report::Outcome;
+pub use rules::{check_file, FileFindings, Rule, UnsafeSite, Violation};
+
+/// Directories walked under the audit root, in deterministic order.
+pub const WALKED_DIRS: &[&str] = &["src", "benches", "tests", "examples"];
+
+/// Scan one in-memory source file: lex + all rules. `rel_path` decides
+/// rule scoping (it is matched by suffix against the rule file sets), so
+/// tests can exercise scoping with synthetic paths.
+pub fn scan_source(rel_path: &str, src: &str) -> FileFindings {
+    rules::check_file(rel_path, &lex::scan(src))
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    // Sorted walk => deterministic violation order => stable reports.
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Walk `root` and apply every rule, filtering through the allow entries.
+pub fn run_audit(root: &Path, allow_entries: &[AllowEntry]) -> io::Result<Outcome> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in WALKED_DIRS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            walk_rs(&d, &mut files)?;
+        }
+    }
+    let mut violations = Vec::new();
+    let mut allowed = Vec::new();
+    let mut unsafe_inventory = Vec::new();
+    let mut used = vec![false; allow_entries.len()];
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(path)?;
+        let findings = scan_source(&rel, &src);
+        unsafe_inventory.extend(findings.unsafe_sites);
+        for v in findings.violations {
+            match allow_entries.iter().position(|e| e.matches(&v)) {
+                Some(i) => {
+                    used[i] = true;
+                    allowed.push((v, allow_entries[i].reason.clone()));
+                }
+                None => violations.push(v),
+            }
+        }
+    }
+    let unused_allow = allow_entries
+        .iter()
+        .zip(used.iter())
+        .filter(|(_, u)| !**u)
+        .map(|(e, _)| e.clone())
+        .collect();
+    Ok(Outcome {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        violations,
+        allowed,
+        unused_allow,
+        unsafe_inventory,
+    })
+}
+
+/// Load and parse the allow file; a missing file is an empty allowlist.
+pub fn load_allow(path: &Path) -> Result<Vec<AllowEntry>, String> {
+    match fs::read_to_string(path) {
+        Ok(text) => allow::parse(&text),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(Vec::new()),
+        Err(e) => Err(format!("reading {}: {e}", path.display())),
+    }
+}

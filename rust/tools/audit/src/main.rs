@@ -1,0 +1,81 @@
+//! CLI for the WaveQ determinism/safety audit.
+//!
+//! ```text
+//! waveq-audit [--root DIR] [--allow FILE] [--json FILE] [--no-json]
+//! ```
+//!
+//! Defaults: `--root` auto-detects (`.` when it holds a `src/` dir, else
+//! `rust/` — so the tool runs from either the workspace root or `rust/`);
+//! `--allow` is `<root>/tools/audit/allow.toml`; the JSON report lands in
+//! `AUDIT_report.json` in the current directory. Exits 1 on any
+//! non-allowlisted violation, 2 on usage/config errors.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ! {
+    eprintln!("usage: waveq-audit [--root DIR] [--allow FILE] [--json FILE] [--no-json]");
+    std::process::exit(2);
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut allow_path: Option<PathBuf> = None;
+    let mut json_path: Option<PathBuf> = Some(PathBuf::from("AUDIT_report.json"));
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = Some(PathBuf::from(args.next().unwrap_or_else(|| usage()))),
+            "--allow" => {
+                allow_path = Some(PathBuf::from(args.next().unwrap_or_else(|| usage())));
+            }
+            "--json" => {
+                json_path = Some(PathBuf::from(args.next().unwrap_or_else(|| usage())));
+            }
+            "--no-json" => json_path = None,
+            _ => usage(),
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        if PathBuf::from("src").is_dir() {
+            PathBuf::from(".")
+        } else {
+            PathBuf::from("rust")
+        }
+    });
+    if !root.is_dir() {
+        eprintln!("waveq-audit: root `{}` is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    let allow_path = allow_path.unwrap_or_else(|| root.join("tools/audit/allow.toml"));
+    let entries = match waveq_audit::load_allow(&allow_path) {
+        Ok(entries) => entries,
+        Err(e) => {
+            eprintln!("waveq-audit: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let outcome = match waveq_audit::run_audit(&root, &entries) {
+        Ok(outcome) => outcome,
+        Err(e) => {
+            eprintln!("waveq-audit: walking {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", waveq_audit::report::to_table(&outcome));
+    if let Some(path) = json_path {
+        let json = waveq_audit::report::to_json(&outcome);
+        if let Err(e) = std::fs::write(&path, json) {
+            eprintln!("waveq-audit: writing {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        println!("report: {}", path.display());
+    }
+    if outcome.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

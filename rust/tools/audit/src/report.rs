@@ -1,0 +1,203 @@
+//! Human-readable table + machine-readable `AUDIT_report.json`.
+//!
+//! The JSON is hand-serialized (the tool is zero-dependency); the schema
+//! is consumed by `.github/scripts/bench_summary.py` and by anyone asking
+//! "what unsafe does this crate contain and why is it sound".
+
+use crate::allow::AllowEntry;
+use crate::rules::{Rule, UnsafeSite, Violation};
+
+/// Full outcome of one audit run.
+#[derive(Debug)]
+pub struct Outcome {
+    /// Root the walk ran over (display only).
+    pub root: String,
+    pub files_scanned: usize,
+    /// Violations NOT covered by the allowlist — nonzero means exit 1.
+    pub violations: Vec<Violation>,
+    /// Violations suppressed by an allowlist entry, with the entry's
+    /// reason (the documented sanctioned surface).
+    pub allowed: Vec<(Violation, String)>,
+    /// Allow entries that matched nothing this run (stale lines).
+    pub unused_allow: Vec<AllowEntry>,
+    /// Every `unsafe` occurrence, justified or not.
+    pub unsafe_inventory: Vec<UnsafeSite>,
+}
+
+impl Outcome {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn violation_json(v: &Violation, reason: Option<&str>) -> String {
+    let mut s = format!(
+        "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"pattern\":\"{}\"",
+        v.rule.as_str(),
+        esc(&v.file),
+        v.line,
+        esc(&v.pattern)
+    );
+    if let Some(f) = &v.in_fn {
+        s.push_str(&format!(",\"fn\":\"{}\"", esc(f)));
+    }
+    s.push_str(&format!(",\"message\":\"{}\"", esc(&v.message)));
+    if let Some(r) = reason {
+        s.push_str(&format!(",\"allowed_because\":\"{}\"", esc(r)));
+    }
+    s.push('}');
+    s
+}
+
+/// Serialize the outcome as a stable, pretty-enough JSON document.
+pub fn to_json(out: &Outcome) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"root\": \"{}\",\n", esc(&out.root)));
+    s.push_str(&format!("  \"files_scanned\": {},\n", out.files_scanned));
+    s.push_str(&format!("  \"clean\": {},\n", out.clean()));
+
+    let rules = [Rule::D1, Rule::D2, Rule::D3, Rule::D4, Rule::D5, Rule::D6];
+    s.push_str("  \"rules\": {\n");
+    for (i, r) in rules.iter().enumerate() {
+        let viol = out.violations.iter().filter(|v| v.rule == *r).count();
+        let allow = out.allowed.iter().filter(|(v, _)| v.rule == *r).count();
+        s.push_str(&format!(
+            "    \"{}\": {{\"summary\": \"{}\", \"violations\": {}, \"allowed\": {}}}{}\n",
+            r.as_str(),
+            esc(r.summary()),
+            viol,
+            allow,
+            if i + 1 < rules.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  },\n");
+
+    s.push_str("  \"violations\": [\n");
+    for (i, v) in out.violations.iter().enumerate() {
+        let sep = if i + 1 < out.violations.len() { "," } else { "" };
+        s.push_str(&format!("    {}{}\n", violation_json(v, None), sep));
+    }
+    s.push_str("  ],\n");
+
+    s.push_str("  \"allowed\": [\n");
+    for (i, (v, reason)) in out.allowed.iter().enumerate() {
+        let sep = if i + 1 < out.allowed.len() { "," } else { "" };
+        s.push_str(&format!("    {}{}\n", violation_json(v, Some(reason)), sep));
+    }
+    s.push_str("  ],\n");
+
+    s.push_str("  \"unused_allow_entries\": [\n");
+    for (i, e) in out.unused_allow.iter().enumerate() {
+        let sep = if i + 1 < out.unused_allow.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"rule\":\"{}\",\"file\":\"{}\",\"allow_file_line\":{}}}{}\n",
+            e.rule.as_str(),
+            esc(&e.file),
+            e.source_line,
+            sep
+        ));
+    }
+    s.push_str("  ],\n");
+
+    s.push_str("  \"unsafe_inventory\": [\n");
+    for (i, u) in out.unsafe_inventory.iter().enumerate() {
+        let sep = if i + 1 < out.unsafe_inventory.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"file\":\"{}\",\"line\":{},\"kind\":\"{}\",\"justified\":{},\
+             \"justification\":\"{}\"}}{}\n",
+            esc(&u.file),
+            u.line,
+            esc(&u.kind),
+            u.justified,
+            esc(&u.justification),
+            sep
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Render the human-facing summary table (printed to stdout by the CLI).
+pub fn to_table(out: &Outcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "waveq-audit: {} files scanned under {}\n",
+        out.files_scanned, out.root
+    ));
+    if out.violations.is_empty() {
+        s.push_str("no violations");
+    } else {
+        s.push_str(&format!("{} violation(s):\n\n", out.violations.len()));
+        s.push_str("  rule  location                                      finding\n");
+        s.push_str("  ----  --------------------------------------------  -------\n");
+        for v in &out.violations {
+            let loc = format!("{}:{}", v.file, v.line);
+            s.push_str(&format!("  {}    {:<44}  {}\n", v.rule.as_str(), loc, v.message));
+        }
+    }
+    s.push_str(&format!(
+        "\n{} allowlisted site(s), {} unsafe site(s) ({} justified)",
+        out.allowed.len(),
+        out.unsafe_inventory.len(),
+        out.unsafe_inventory.iter().filter(|u| u.justified).count()
+    ));
+    if !out.unused_allow.is_empty() {
+        s.push_str(&format!("\nwarning: {} unused allowlist entries:", out.unused_allow.len()));
+        for e in &out.unused_allow {
+            s.push_str(&format!(
+                "\n  allow.toml:{} ({} {}) matched nothing — delete or fix it",
+                e.source_line,
+                e.rule.as_str(),
+                e.file
+            ));
+        }
+    }
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_and_balances() {
+        let out = Outcome {
+            root: "rust".to_string(),
+            files_scanned: 2,
+            violations: vec![Violation {
+                rule: Rule::D5,
+                file: "src/a \"b\".rs".to_string(),
+                line: 3,
+                pattern: ".lock().unwrap()".to_string(),
+                in_fn: Some("f".to_string()),
+                message: "line1\nline2".to_string(),
+            }],
+            allowed: Vec::new(),
+            unused_allow: Vec::new(),
+            unsafe_inventory: Vec::new(),
+        };
+        let js = to_json(&out);
+        assert!(js.contains("\\\"b\\\""));
+        assert!(js.contains("line1\\nline2"));
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        assert!(js.contains("\"clean\": false"));
+    }
+}

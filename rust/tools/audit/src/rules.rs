@@ -1,0 +1,445 @@
+//! The repo-specific determinism/safety rules (D1–D6).
+//!
+//! Every rule is lexical: it runs over the token stream from [`crate::lex`]
+//! (so comments and string literals can never match) plus a little derived
+//! context — the innermost enclosing `fn` name and whether the token sits
+//! inside a `#[cfg(test)] mod …` block. The rules deliberately
+//! over-approximate (e.g. D2 flags any `HashMap` *use* in serialization
+//! files, not only iteration): a false positive costs one documented
+//! allowlist line, while a false negative silently breaks the bitwise
+//! determinism contract the whole repo is built on.
+
+use crate::lex::{Scan, Token};
+
+/// The audited invariants. See `tools/audit/allow.toml` and the README's
+/// "Static analysis & the determinism contract" section for the rationale
+/// behind each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// All parallelism goes through audited entry points: no
+    /// `thread::spawn` / `thread::scope` / `thread::Builder` / rayon /
+    /// crossbeam outside `runtime/native/pool.rs` (intrinsic) and
+    /// explicitly allowlisted sites.
+    D1,
+    /// No `HashMap`/`HashSet` in serialization/kernel/reduction files —
+    /// iteration order is nondeterministic; use `BTreeMap`/`BTreeSet`.
+    D2,
+    /// No float `.sum()` / `.product()` / `.fold()` in kernel files
+    /// outside the named fixed-order reduction helpers.
+    D3,
+    /// Every `unsafe` carries a `// SAFETY:` justification, and
+    /// `allow(unsafe_code)` appears only in `runtime/native/pool.rs`.
+    D4,
+    /// No `.lock().unwrap()` / `.lock().expect(…)` — locks must be
+    /// poison-tolerant (`unwrap_or_else(|e| e.into_inner())`) so a
+    /// panicking peer cannot wedge the pool/serve machinery.
+    D5,
+    /// No clocks (`Instant::now`, `SystemTime`) or environment reads
+    /// inside kernel code — shard closures must be pure functions of
+    /// their inputs or results stop being replayable.
+    D6,
+}
+
+impl Rule {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Rule::D1 => "D1",
+            Rule::D2 => "D2",
+            Rule::D3 => "D3",
+            Rule::D4 => "D4",
+            Rule::D5 => "D5",
+            Rule::D6 => "D6",
+        }
+    }
+
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::D1 => "parallelism outside audited entry points",
+            Rule::D2 => "hash-order nondeterminism in serialization/kernel code",
+            Rule::D3 => "float reduction outside fixed-order helpers",
+            Rule::D4 => "unsafe without a SAFETY justification",
+            Rule::D5 => "poison-propagating lock unwrap",
+            Rule::D6 => "clock/env read in kernel code",
+        }
+    }
+}
+
+/// One rule hit, before allowlist filtering.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: Rule,
+    /// Path relative to the audited root, `/`-separated.
+    pub file: String,
+    pub line: u32,
+    /// Canonical matched pattern (what `pattern=` allow entries match).
+    pub pattern: String,
+    /// Innermost enclosing `fn` (what `fn=` allow entries match).
+    pub in_fn: Option<String>,
+    pub message: String,
+}
+
+/// One `unsafe` occurrence (reported even when justified — the audit's
+/// JSON report is the crate's unsafe inventory).
+#[derive(Debug, Clone)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: u32,
+    /// "unsafe impl" / "unsafe fn" / "unsafe block" / "unsafe trait".
+    pub kind: String,
+    pub justified: bool,
+    /// Text following `SAFETY:` in the adjoining comment block.
+    pub justification: String,
+}
+
+/// Files whose *existence* of pool-style concurrency is the audited
+/// design itself; D1 and the `allow(unsafe_code)` check are intrinsic
+/// there. Everything else — including `runtime/serve.rs` and
+/// `data/batcher.rs` — must carry an explicit allowlist entry, so the
+/// allow file documents the full sanctioned concurrency surface.
+const PARALLELISM_ROOT: &str = "src/runtime/native/pool.rs";
+
+/// Serialization / kernel / reduction files in scope for D2 (hash-order
+/// nondeterminism). These are the files whose output bytes or arithmetic
+/// must be replayable bit-for-bit.
+const ORDER_SENSITIVE_FILES: &[&str] = &[
+    "src/util/json.rs",
+    "src/runtime/io.rs",
+    "src/runtime/artifact.rs",
+    "src/runtime/checkpoint.rs",
+    "src/runtime/manifest.rs",
+    "src/runtime/native/mod.rs",
+    "src/runtime/native/kernels.rs",
+    "src/runtime/native/models.rs",
+    "src/bench_support.rs",
+    "src/pareto.rs",
+];
+
+/// Kernel files in scope for D3 (reduction order) and D6 (clocks/env).
+const KERNEL_FILES: &[&str] =
+    &["src/runtime/native/kernels.rs", "src/runtime/native/models.rs"];
+
+fn in_file_set(file: &str, set: &[&str]) -> bool {
+    set.iter().any(|s| file == *s || file.ends_with(s))
+}
+
+/// Per-token derived context (parallel to the token stream).
+struct TokenCtx {
+    fn_name: Option<String>,
+    in_test: bool,
+}
+
+enum Ctx {
+    Fn(String),
+    TestMod,
+    Other,
+}
+
+/// One pass over the tokens computing, for each token, the innermost
+/// enclosing `fn` and whether it sits inside a `#[cfg(test)] mod`.
+/// Brace tracking is approximate (struct literals and closures push
+/// anonymous scopes) but exact enough for top-level items, which is all
+/// the rules consult it for.
+fn contexts(tokens: &[Token]) -> Vec<TokenCtx> {
+    let mut stack: Vec<Ctx> = Vec::new();
+    let mut pending: Option<Ctx> = None;
+    let mut out = Vec::with_capacity(tokens.len());
+    let snapshot = |stack: &[Ctx]| {
+        let fn_name = stack.iter().rev().find_map(|c| match c {
+            Ctx::Fn(name) => Some(name.clone()),
+            _ => None,
+        });
+        let in_test = stack.iter().any(|c| matches!(c, Ctx::TestMod));
+        TokenCtx { fn_name, in_test }
+    };
+    for (i, t) in tokens.iter().enumerate() {
+        match t.text.as_str() {
+            "{" => {
+                stack.push(pending.take().unwrap_or(Ctx::Other));
+                out.push(snapshot(&stack));
+            }
+            "}" => {
+                out.push(snapshot(&stack));
+                stack.pop();
+            }
+            ";" => {
+                pending = None;
+                out.push(snapshot(&stack));
+            }
+            "fn" => {
+                if let Some(name) = tokens.get(i + 1) {
+                    pending = Some(Ctx::Fn(name.text.clone()));
+                }
+                out.push(snapshot(&stack));
+            }
+            "mod" => {
+                // `#[cfg(test)]` lookback: the attribute tokens sit within
+                // a few tokens of the `mod` keyword.
+                let lo = i.saturating_sub(8);
+                let test = tokens[lo..i]
+                    .windows(3)
+                    .any(|w| w[0].text == "cfg" && w[1].text == "(" && w[2].text == "test");
+                pending = Some(if test { Ctx::TestMod } else { Ctx::Other });
+                out.push(snapshot(&stack));
+            }
+            _ => out.push(snapshot(&stack)),
+        }
+    }
+    out
+}
+
+fn seq_at(tokens: &[Token], i: usize, pat: &[&str]) -> bool {
+    tokens.len() - i >= pat.len() && pat.iter().enumerate().all(|(j, p)| tokens[i + j].text == *p)
+}
+
+/// Everything the rules produce for one file.
+#[derive(Debug, Default)]
+pub struct FileFindings {
+    pub violations: Vec<Violation>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+}
+
+/// Run every rule over one scanned file. `file` is the root-relative,
+/// `/`-separated path; scoping decisions key off its suffix.
+pub fn check_file(file: &str, scan: &Scan) -> FileFindings {
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut unsafe_sites: Vec<UnsafeSite> = Vec::new();
+    let tokens = &scan.tokens;
+    let ctx = contexts(tokens);
+    let is_pool = file == PARALLELISM_ROOT || file.ends_with(PARALLELISM_ROOT);
+    let order_sensitive = in_file_set(file, ORDER_SENSITIVE_FILES);
+    let kernel_file = in_file_set(file, KERNEL_FILES);
+
+    let mut push = |rule: Rule, line: u32, pattern: &str, in_fn: Option<String>, msg: String| {
+        violations.push(Violation {
+            rule,
+            file: file.to_string(),
+            line,
+            pattern: pattern.to_string(),
+            in_fn,
+            message: msg,
+        });
+    };
+
+    for (i, t) in tokens.iter().enumerate() {
+        let text = t.text.as_str();
+        let line = t.line;
+
+        // ---- D1: parallelism through audited entry points ----------------
+        // (the lexer emits `::` as two `:` tokens, hence the split paths)
+        if !is_pool {
+            let d1_hit = if seq_at(tokens, i, &["thread", ":", ":", "spawn"]) {
+                Some("thread::spawn")
+            } else if seq_at(tokens, i, &["thread", ":", ":", "scope"]) {
+                Some("thread::scope")
+            } else if seq_at(tokens, i, &["thread", ":", ":", "Builder"]) {
+                Some("thread::Builder")
+            } else if text == "rayon" || text == "crossbeam" {
+                Some("external thread pool")
+            } else {
+                None
+            };
+            if let Some(pat) = d1_hit {
+                let pat = if pat == "external thread pool" { text } else { pat };
+                push(
+                    Rule::D1,
+                    line,
+                    pat,
+                    ctx[i].fn_name.clone(),
+                    format!(
+                        "`{pat}` outside runtime/native/pool.rs — route the work through \
+                         pool::run_rows or add a justified allowlist entry"
+                    ),
+                );
+            }
+        }
+
+        // ---- D2: hash-order nondeterminism -------------------------------
+        if order_sensitive && (text == "HashMap" || text == "HashSet") {
+            push(
+                Rule::D2,
+                line,
+                text,
+                ctx[i].fn_name.clone(),
+                format!(
+                    "`{text}` in an order-sensitive file — iteration order varies per \
+                     process; use BTreeMap/BTreeSet or add a justified allowlist entry"
+                ),
+            );
+        }
+
+        // ---- D3: fixed-order float reductions ----------------------------
+        if kernel_file && !ctx[i].in_test && text == "." {
+            if let Some(next) = tokens.get(i + 1) {
+                let name = next.text.as_str();
+                if (name == "sum" || name == "product" || name == "fold")
+                    && tokens.get(i + 2).is_some_and(|t| t.text == "(" || t.text == ":")
+                {
+                    let pat = format!(".{name}(");
+                    let in_fn = ctx[i].fn_name.clone();
+                    let fn_label = in_fn.as_deref().unwrap_or("?").to_string();
+                    push(
+                        Rule::D3,
+                        line,
+                        &pat,
+                        in_fn,
+                        format!(
+                            "iterator reduction `{pat}` in kernel fn `{fn_label}` — only the \
+                             named fixed-order helpers may reduce (allowlist fn= entries)"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // ---- D4: SAFETY-justified unsafe + confined allow(unsafe_code) ---
+        if text == "unsafe" {
+            let kind = match tokens.get(i + 1).map(|t| t.text.as_str()) {
+                Some("impl") => "unsafe impl",
+                Some("fn") => "unsafe fn",
+                Some("trait") => "unsafe trait",
+                Some("{") => "unsafe block",
+                _ => "unsafe",
+            };
+            let block = scan.comment_block_above(line);
+            let justified = block.contains("SAFETY:");
+            let justification = match block.find("SAFETY:") {
+                Some(at) => block[at + "SAFETY:".len()..].trim().to_string(),
+                None => String::new(),
+            };
+            unsafe_sites.push(UnsafeSite {
+                file: file.to_string(),
+                line,
+                kind: kind.to_string(),
+                justified,
+                justification,
+            });
+            if !justified {
+                push(
+                    Rule::D4,
+                    line,
+                    kind,
+                    ctx[i].fn_name.clone(),
+                    format!(
+                        "`{kind}` without a `// SAFETY:` comment on the preceding lines — \
+                         state why the erased lifetimes/aliasing are sound"
+                    ),
+                );
+            }
+        }
+        if !is_pool && seq_at(tokens, i, &["allow", "(", "unsafe_code", ")"]) {
+            push(
+                Rule::D4,
+                line,
+                "allow(unsafe_code)",
+                ctx[i].fn_name.clone(),
+                "`allow(unsafe_code)` outside runtime/native/pool.rs — the unsafe surface \
+                 must not grow silently"
+                    .to_string(),
+            );
+        }
+
+        // ---- D5: poison-tolerant locks -----------------------------------
+        if seq_at(tokens, i, &[".", "lock", "(", ")", ".", "unwrap", "("]) {
+            push(
+                Rule::D5,
+                line,
+                ".lock().unwrap()",
+                ctx[i].fn_name.clone(),
+                "`.lock().unwrap()` propagates poison — use \
+                 `.lock().unwrap_or_else(|e| e.into_inner())` so a panicking peer cannot \
+                 wedge the lock"
+                    .to_string(),
+            );
+        } else if seq_at(tokens, i, &[".", "lock", "(", ")", ".", "expect", "("]) {
+            push(
+                Rule::D5,
+                line,
+                ".lock().expect(",
+                ctx[i].fn_name.clone(),
+                "`.lock().expect(…)` propagates poison — use \
+                 `.lock().unwrap_or_else(|e| e.into_inner())`"
+                    .to_string(),
+            );
+        }
+
+        // ---- D6: no clocks/env in kernel code ----------------------------
+        if kernel_file && !ctx[i].in_test {
+            let d6_hit = if seq_at(tokens, i, &["Instant", ":", ":", "now"]) {
+                Some("Instant::now")
+            } else if text == "SystemTime" {
+                Some("SystemTime")
+            } else if seq_at(tokens, i, &["env", ":", ":"]) {
+                Some("env::")
+            } else {
+                None
+            };
+            if let Some(pat) = d6_hit {
+                push(
+                    Rule::D6,
+                    line,
+                    pat,
+                    ctx[i].fn_name.clone(),
+                    format!(
+                        "`{pat}` in kernel code — shard closures must be pure functions of \
+                         their inputs (clocks/env make results non-replayable)"
+                    ),
+                );
+            }
+        }
+    }
+    drop(push);
+    FileFindings { violations, unsafe_sites }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::scan;
+
+    fn violations(file: &str, src: &str) -> Vec<Violation> {
+        check_file(file, &scan(src)).violations
+    }
+
+    #[test]
+    fn contexts_track_fns_and_test_mods() {
+        let src = "fn alpha() { x(); }\n#[cfg(test)]\nmod tests {\n fn beta() { y(); } }\n";
+        let s = scan(src);
+        let ctx = contexts(&s.tokens);
+        let x_at = s.tokens.iter().position(|t| t.text == "x").unwrap();
+        let y_at = s.tokens.iter().position(|t| t.text == "y").unwrap();
+        assert_eq!(ctx[x_at].fn_name.as_deref(), Some("alpha"));
+        assert!(!ctx[x_at].in_test);
+        assert_eq!(ctx[y_at].fn_name.as_deref(), Some("beta"));
+        assert!(ctx[y_at].in_test);
+    }
+
+    #[test]
+    fn d1_is_intrinsic_in_pool() {
+        let src = "fn go() { std::thread::spawn(|| {}); }";
+        assert!(violations("src/runtime/native/pool.rs", src).is_empty());
+        let hits = violations("src/data/loader.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, Rule::D1);
+        assert_eq!(hits[0].pattern, "thread::spawn");
+    }
+
+    #[test]
+    fn d3_skips_test_modules() {
+        let src = "#[cfg(test)]\nmod tests {\n fn t() { let s: f32 = v.iter().sum(); } }\n";
+        assert!(violations("src/runtime/native/kernels.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d4_classifies_and_requires_safety() {
+        let src = "// SAFETY: latch-guarded.\nunsafe impl Send for T {}\nunsafe { go() };\n";
+        let f = check_file("src/runtime/native/pool.rs", &scan(src));
+        assert_eq!(f.unsafe_sites.len(), 2);
+        assert_eq!(f.unsafe_sites[0].kind, "unsafe impl");
+        assert!(f.unsafe_sites[0].justified);
+        assert_eq!(f.unsafe_sites[0].justification, "latch-guarded.");
+        assert_eq!(f.unsafe_sites[1].kind, "unsafe block");
+        assert!(!f.unsafe_sites[1].justified);
+        assert_eq!(f.violations.len(), 1);
+        assert_eq!(f.violations[0].line, 3);
+    }
+}
