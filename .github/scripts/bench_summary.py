@@ -32,6 +32,7 @@ def kernels_table(report: dict) -> None:
         ("matmul_scaling_tmax_vs_t1", "matmul thread scaling (tmax vs t1)"),
         ("grad_weight_speedup_t1", "grad_weight speedup, 1 thread"),
         ("grad_input_speedup_t1", "grad_input speedup, 1 thread"),
+        ("int8_speedup_vs_f32_t1", "int8 GEMM vs blocked f32, 1 thread"),
         ("matmul_max_rel_err", "blocked-vs-scalar max rel err"),
     ]:
         if key in summary:
@@ -88,18 +89,22 @@ def infer_table(report: dict) -> None:
     print(f"threads available: {int(report.get('threads_available', 1))}, "
           f"scale: {report.get('scale', '?')}")
     print()
-    print("| model | bits | packed weights | vs f32 | batch | imgs/s |")
-    print("|---|---|---|---|---|---|")
+    print("| model | bits | packed weights | vs f32 | precision | batch | imgs/s |")
+    print("|---|---|---|---|---|---|---|")
     for m in report.get("models", []):
         bits = m.get("layer_bits", [])
         bits_s = f"{int(min(bits))}" if bits and min(bits) == max(bits) else str(
             [int(b) for b in bits])
         size_s = f"{int(m['packed_weight_bytes'])} B"
         red_s = f"{m['size_reduction']:.2f}x smaller"
+        int_layers = m.get("int_gemm_layers")
         for i, e in enumerate(m.get("entries", [])):
             head = (f"| {m['model']} | {bits_s} | {size_s} | {red_s} "
                     if i == 0 else "| | | | ")
-            print(f"{head}| {int(e['batch'])} | {e['imgs_per_s']:.1f} |")
+            prec = e.get("precision", "exact")
+            if prec == "int8" and int_layers is not None:
+                prec = f"int8 ({int(int_layers)} int GEMM layers)"
+            print(f"{head}| {prec} | {int(e['batch'])} | {e['imgs_per_s']:.1f} |")
     print()
 
 

@@ -1,15 +1,16 @@
 //! Inference bench: throughput (imgs/s) of frozen-artifact
-//! [`InferenceSession`]s across batch sizes 1 / 8 / manifest, plus the
-//! artifact storage story (bit-packed weight bytes vs f32). Emits the
-//! machine-readable `BENCH_infer.json` consumed by the `perf-smoke` CI
-//! lane's step summary (`.github/scripts/bench_summary.py`).
+//! [`InferenceSession`]s across batch sizes 1 / 8 / manifest and both
+//! precision tiers (`exact` f32 GEMM vs `int8` integer GEMM over packed
+//! codes), plus the artifact storage story (bit-packed weight bytes vs
+//! f32). Emits the machine-readable `BENCH_infer.json` consumed by the
+//! `perf-smoke` CI lane's step summary (`.github/scripts/bench_summary.py`).
 //!
 //! The sessions are frozen from He-initialized WaveQ states (beta 4.0 ->
 //! 4-bit codes everywhere): throughput and size depend only on shapes and
 //! bitwidths, not on how long the state trained.
 
 use waveq::bench_support::{header, row, steps, write_report, BenchRunner};
-use waveq::runtime::{InferenceSession, Runtime, Session, SessionCfg};
+use waveq::runtime::{InferCfg, InferenceSession, Precision, Runtime, Session, SessionCfg};
 use waveq::util::json::Json;
 use waveq::util::rng::Rng;
 
@@ -37,37 +38,53 @@ fn main() {
         let packed = frozen.packed_weight_bytes();
         let f32b = frozen.f32_weight_bytes();
         let reduction = frozen.size_reduction().unwrap_or(1.0);
-        let mut infer = InferenceSession::open(&frozen, meta.batch).unwrap();
         let pix: usize = meta.input_shape.iter().product();
         let x = Rng::new(7).normal_vec(meta.batch * pix, 1.0);
 
         let mut entries: Vec<Json> = Vec::new();
-        for &b in &[1usize, 8, meta.batch] {
-            if b > meta.batch {
-                continue;
+        let mut int_gemm_layers = 0usize;
+        for precision in [Precision::Exact, Precision::Int8] {
+            let icfg = InferCfg { max_batch: meta.batch, precision };
+            let mut infer = InferenceSession::open(&frozen, &icfg).unwrap();
+            if precision == Precision::Int8 {
+                int_gemm_layers = infer.int_gemm_layers();
             }
-            let runner = BenchRunner::new(3, iters);
-            let stats = runner.bench(&format!("infer {base} batch={b}"), || {
-                let _ = infer.infer(&x[..b * pix], b).unwrap();
-            });
-            let imgs_per_s = b as f64 * stats.per_sec();
-            row(&["infer", base, &format!("batch={b}"), &format!("{imgs_per_s:.1} imgs/s")]);
-            entries.push(Json::obj(vec![
-                ("batch", Json::Num(b as f64)),
-                ("imgs_per_s", Json::Num(imgs_per_s)),
-                ("dispatch_mean_s", Json::Num(stats.mean.as_secs_f64())),
-            ]));
+            for &b in &[1usize, 8, meta.batch] {
+                if b > meta.batch {
+                    continue;
+                }
+                let runner = BenchRunner::new(3, iters);
+                let stats = runner.bench(&format!("infer {base} {precision} batch={b}"), || {
+                    let _ = infer.infer(&x[..b * pix], b).unwrap();
+                });
+                let imgs_per_s = b as f64 * stats.per_sec();
+                row(&[
+                    "infer",
+                    base,
+                    precision.as_str(),
+                    &format!("batch={b}"),
+                    &format!("{imgs_per_s:.1} imgs/s"),
+                ]);
+                entries.push(Json::obj(vec![
+                    ("precision", Json::Str(precision.as_str().into())),
+                    ("batch", Json::Num(b as f64)),
+                    ("imgs_per_s", Json::Num(imgs_per_s)),
+                    ("dispatch_mean_s", Json::Num(stats.mean.as_secs_f64())),
+                ]));
+            }
         }
         row(&[
             "artifact",
             base,
             &format!("packed={packed}B f32={f32b}B ({reduction:.2}x smaller)"),
+            &format!("int8 GEMM layers {int_gemm_layers}"),
         ]);
         let bits: Vec<usize> = frozen.layer_bits().iter().map(|&b| b as usize).collect();
         models_json.push(Json::obj(vec![
             ("model", Json::Str(meta.name.clone())),
             ("manifest_batch", Json::Num(meta.batch as f64)),
             ("layer_bits", Json::arr_usize(&bits)),
+            ("int_gemm_layers", Json::Num(int_gemm_layers as f64)),
             ("packed_weight_bytes", Json::Num(packed as f64)),
             ("f32_weight_bytes", Json::Num(f32b as f64)),
             ("size_reduction", Json::Num(reduction)),

@@ -1,10 +1,12 @@
 //! Kernel microbench: the blocked multi-threaded matmul/grad kernels
 //! against the seed's scalar reference (`kernels::scalar`), on zoo-shaped
-//! problems. Emits the machine-readable `BENCH_kernels.json` the
-//! `perf-smoke` CI lane uploads and renders: per-shape timings, GFLOP/s,
-//! single-thread speedup over the scalar kernel, thread-scaling entries
-//! (`WAVEQ_THREADS` = 1/2/4/max), and a blocked-vs-scalar max relative
-//! error as an in-bench numerics guard.
+//! problems, plus the int8 integer GEMM (`matmul_quant_into` over packed
+//! codes, including the per-call activation quantization) against the
+//! blocked f32 GEMM it replaces. Emits the machine-readable
+//! `BENCH_kernels.json` the `perf-smoke` CI lane uploads and renders:
+//! per-shape timings, GOP/s, single-thread speedup over the scalar kernel,
+//! thread-scaling entries (`WAVEQ_THREADS` = 1/2/4/max), and a
+//! blocked-vs-scalar max relative error as an in-bench numerics guard.
 
 use waveq::bench_support::{header, row, scale, steps, write_report, BenchRunner};
 use waveq::runtime::native::kernels::{self as kn, scalar};
@@ -223,6 +225,89 @@ fn bench_shape(
     }
 }
 
+/// The integer serving path vs the f32 GEMM it replaces, on one shape:
+/// the same frozen-style weight codes flow through `PackedB::pack_codes`
+/// (fused-dequant f32 panels) and `PackedQuant::pack_codes` (i8 panels),
+/// and the int8 lane is timed end to end — activation-range scan,
+/// u8 code quantization, and the i32-accumulating GEMM — because that is
+/// the per-call cost an `Int8` session actually pays.
+#[allow(clippy::too_many_arguments)]
+fn bench_int8_shape(
+    label: &str,
+    rows: usize,
+    din: usize,
+    dout: usize,
+    bits: u32,
+    floor: bool,
+    entries: &mut Vec<Entry>,
+    summary: &mut Vec<(&'static str, Json)>,
+) {
+    let k_levels = (1u32 << bits) - 1;
+    let ka = 255.0f32;
+    // Frozen-style codes on the DoReFa grid; post-relu_quant activations
+    // (non-negative, on the ka grid scaled by their batch max).
+    let codes: Vec<u16> = fill(din * dout, 2)
+        .iter()
+        .map(|&v| (((v.clamp(-1.0, 1.0) + 1.0) / 2.0) * k_levels as f32).round() as u16)
+        .collect();
+    let m_w = 0.9f32;
+    let x: Vec<f32> = fill(rows * din, 1).iter().map(|&v| v.abs().min(1.0)).collect();
+    let flops = 2.0 * rows as f64 * din as f64 * dout as f64;
+    let shape = (rows, din, dout);
+    let runner = BenchRunner::new(2, steps(7, 30));
+    std::env::set_var("WAVEQ_THREADS", "1");
+
+    let pb = kn::PackedB::pack_codes(&codes, k_levels as f32, m_w, din, dout);
+    let mut out = vec![0.0f32; rows * dout];
+    let (f_ns, f_gf) = time(&runner, &format!("{label} matmul f32-packed t1"), flops, || {
+        kn::matmul_packed_into(&x, &pb, rows, None, &mut out);
+    });
+    entries.push(Entry {
+        kernel: "matmul_int8",
+        shape,
+        variant: "f32-packed".into(),
+        threads: 1,
+        mean_ns: f_ns,
+        gflops: f_gf,
+        speedup_vs_scalar: None,
+    });
+
+    let pq = kn::PackedQuant::pack_codes(&codes, k_levels, m_w, din, dout);
+    let mut qcodes = vec![0u8; rows * din];
+    let (i_ns, i_gf) = time(&runner, &format!("{label} matmul int8 t1"), flops, || {
+        let m = kn::act_scale(&x);
+        kn::act_codes_into(&x, m, ka, &mut qcodes);
+        kn::matmul_quant_into(&qcodes, &pq, rows, m / ka, None, &mut out);
+    });
+    entries.push(Entry {
+        kernel: "matmul_int8",
+        shape,
+        variant: "int8".into(),
+        threads: 1,
+        mean_ns: i_ns,
+        gflops: i_gf,
+        speedup_vs_scalar: None,
+    });
+    row(&[
+        label,
+        &format!("matmul_int8 w{bits}"),
+        &format!("f32-packed {:.1} GFLOP/s", f_gf),
+        &format!("int8 {:.1} GOP/s", i_gf),
+        &format!("int8_vs_f32 {:.2}x", f_ns / i_ns),
+    ]);
+    if floor {
+        summary.push(("int8_speedup_vs_f32_t1", Json::Num(f_ns / i_ns)));
+        // Acceptance floor: the integer path must not lose to the f32 GEMM
+        // it replaces on the acceptance shape — a loss means the i8 panels
+        // or the quantization pre-pass regressed into the GEMM's budget.
+        assert!(
+            f_ns / i_ns >= 1.0,
+            "{label}: int8 GEMM lost to the blocked f32 path ({:.2}x < 1x)",
+            f_ns / i_ns
+        );
+    }
+}
+
 fn main() {
     waveq::util::logging::init();
     header("kernels");
@@ -252,12 +337,14 @@ fn main() {
     sweep.retain(|&t| t <= avail);
     let big = "resnet20l_w2-stage3-b256";
     bench_shape(big, rows, din, dout, true, &sweep, &mut entries, &mut summary);
+    bench_int8_shape(big, rows, din, dout, 2, true, &mut entries, &mut summary);
 
     // A stem-shaped conv (wide rows, shallow k) and an FC-shaped matmul.
     let r20 = NativeModel::resnet20l(1);
     let &(srows, sdin, sdout) = r20.conv_matmul_shapes(64).first().expect("resnet20l stem");
     bench_shape("resnet20l-stem-b64", srows, sdin, sdout, false, &[], &mut entries, &mut summary);
     bench_shape("mlp-fc-b64", 64, 192, 128, false, &[], &mut entries, &mut summary);
+    bench_int8_shape("mlp-fc-b64", 64, 192, 128, 4, false, &mut entries, &mut summary);
 
     match preset {
         Some(v) => std::env::set_var("WAVEQ_THREADS", v),

@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use waveq::bench_support::{header, row, steps, write_report};
 use waveq::data::{spec_for_model, Dataset};
 use waveq::runtime::serve::loopback_bench;
-use waveq::runtime::{InferenceSession, Runtime, ServeCfg, Server, Session, SessionCfg};
+use waveq::runtime::{InferCfg, InferenceSession, Runtime, ServeCfg, Server, Session, SessionCfg};
 use waveq::util::json::Json;
 
 fn main() {
@@ -44,7 +44,7 @@ fn main() {
     let per_client = steps(30, 200);
 
     // --- batch-1 serial baseline --------------------------------------------
-    let mut one = InferenceSession::open(&frozen, 1).unwrap();
+    let mut one = InferenceSession::open(&frozen, &InferCfg::default()).unwrap();
     for x in xs.iter().take(8) {
         let _ = one.infer(x, 1).unwrap(); // warm the kernels + arena
     }
@@ -58,7 +58,12 @@ fn main() {
     row(&["serve", base, "serial batch-1", &format!("{serial_imgs_per_s:.1} imgs/s")]);
 
     // --- concurrent serve lanes ---------------------------------------------
-    let cfg = ServeCfg { workers: 2, max_batch: 8, deadline: Duration::from_millis(1) };
+    let cfg = ServeCfg {
+        workers: 2,
+        max_batch: 8,
+        deadline: Duration::from_millis(1),
+        ..Default::default()
+    };
     let server = Server::start(&frozen, &cfg).unwrap();
     let mut lanes: Vec<Json> = Vec::new();
     for &clients in &[1usize, 4, 8] {

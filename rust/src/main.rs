@@ -16,7 +16,9 @@
 //!               --lr-beta F --eval-every N --save CKPT
 //! Freeze flags: --init CKPT --out ART --model M --algo A --bits B --act-bits A
 //! Infer flags:  --artifact ART --batch N --max-batch N --test-examples N
+//!               --precision exact|int8
 //! Serve flags:  --artifact ART --workers N --max-batch N --deadline-us N
+//!               --precision exact|int8
 //!               --listen ADDR | --loopback --clients N --requests N
 
 // The CLI crate has no sanctioned unsafe at all (the pool's opt-out lives
@@ -36,7 +38,8 @@ use waveq::energy::Stripes;
 use waveq::experiments::{self, ExpContext, Scale};
 use waveq::runtime::serve::{loopback_bench, serve_tcp};
 use waveq::runtime::{
-    FrozenModel, InferenceSession, ModelMeta, NativeModel, Runtime, ServeCfg, Server, Session,
+    FrozenModel, InferCfg, InferenceSession, ModelMeta, NativeModel, Precision, Runtime, ServeCfg,
+    Server, Session,
 };
 use waveq::util::argparse::{ArgSpec, Args};
 
@@ -44,7 +47,7 @@ const VALUE_FLAGS: &[&str] = &[
     "artifacts", "config", "seed", "scale", "model", "algo", "bits", "act-bits",
     "steps", "lr", "momentum", "lr-beta", "eval-every", "save", "train-examples",
     "test-examples", "beta-init", "out", "init", "artifact", "batch", "max-batch",
-    "workers", "deadline-us", "listen", "clients", "requests",
+    "workers", "deadline-us", "listen", "clients", "requests", "precision",
 ];
 const SWITCH_FLAGS: &[&str] = &["quiet", "help", "loopback"];
 
@@ -201,7 +204,10 @@ fn run(argv: &[String]) -> Result<()> {
             // dispatches more than --batch rows, so that is the default.
             let max_batch = args.get_usize("max-batch", batch)?.max(batch);
             let seed = args.get_u64("seed", 42)?;
-            let mut session = InferenceSession::open(&frozen, max_batch)?;
+            let precision = parse_precision(&args)?;
+            let icfg = InferCfg { max_batch, precision };
+            let mut session = InferenceSession::open(&frozen, &icfg)?;
+            let int_layers = session.int_gemm_layers();
             let test = test_batcher_with_batch(&meta, examples, seed, batch)?;
             let t0 = Instant::now();
             let (loss, acc) = eval_batches(&test, true, |b| {
@@ -210,10 +216,11 @@ fn run(argv: &[String]) -> Result<()> {
             })?;
             let secs = t0.elapsed().as_secs_f64();
             println!(
-                "served {} ({examples} examples, batch {batch}, max_batch {max_batch}) in \
-                 {secs:.3}s\n  \
+                "served {} ({examples} examples, batch {batch}, max_batch {max_batch}, \
+                 precision {precision}) in {secs:.3}s\n  \
                  test_loss={loss:.4} test_acc={acc:.4}  throughput={:.1} imgs/s\n  \
-                 bits {:?}  packed weights {} B vs {} B f32 ({})",
+                 bits {:?}  int8 GEMM layers {int_layers}\n  \
+                 packed weights {} B vs {} B f32 ({})",
                 meta.name,
                 examples as f64 / secs,
                 frozen.layer_bits(),
@@ -232,12 +239,21 @@ fn run(argv: &[String]) -> Result<()> {
                 workers: args.get_usize("workers", 2)?.max(1),
                 max_batch: args.get_usize("max-batch", 8)?.max(1),
                 deadline: Duration::from_micros(args.get_u64("deadline-us", 1000)?),
+                precision: parse_precision(&args)?,
             };
             let server = Server::start(&frozen, &cfg)?;
             let meta = server.meta().clone();
+            let id = server.identity();
             println!(
-                "serving {} — workers={} max_batch={} deadline={:?}",
-                meta.name, cfg.workers, cfg.max_batch, cfg.deadline
+                "serving {} — workers={} max_batch={} deadline={:?} precision={} \
+                 (int8 GEMM layers {}/{})",
+                meta.name,
+                cfg.workers,
+                cfg.max_batch,
+                cfg.deadline,
+                id.precision,
+                id.int_gemm_layers,
+                id.layer_bits.len(),
             );
             if args.has("loopback") {
                 // Self-driving mode: spin up concurrent loopback TCP
@@ -294,6 +310,13 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
+/// `--precision exact|int8` (default exact: bitwise-identical serving).
+fn parse_precision(args: &Args) -> Result<Precision> {
+    let s = args.get_or("precision", "exact");
+    Precision::parse(s)
+        .ok_or_else(|| anyhow!("--precision must be exact|int8, got '{s}'"))
+}
+
 /// A pool of synthetic held-out examples for the loopback client mode.
 fn serve_inputs(meta: &ModelMeta, n: usize, seed: u64) -> Vec<Vec<f32>> {
     let ds = Dataset::generate(spec_for_model(meta), n, seed, 1);
@@ -338,12 +361,12 @@ SUBCOMMANDS:
                         --model M --algo A [--bits B] [--act-bits A]
   infer                 serve a frozen artifact over the held-out stream:
                         --artifact model.wqm [--batch N] [--max-batch N]
-                        [--test-examples N]
+                        [--test-examples N] [--precision exact|int8]
   serve                 concurrent serving with cross-request batching:
                         --artifact model.wqm [--workers N] [--max-batch N]
-                        [--deadline-us N] and either --listen HOST:PORT
-                        (length-prefixed TCP) or --loopback [--clients N]
-                        [--requests N] (self-driving latency/throughput run)
+                        [--deadline-us N] [--precision exact|int8] and either
+                        --listen HOST:PORT (length-prefixed TCP) or --loopback
+                        [--clients N] [--requests N] (self-driving run)
   experiment <id|all>   regenerate a paper artifact: {}
   energy                Stripes report: --model M --bits B --act-bits A
   info                  list artifacts/models/programs

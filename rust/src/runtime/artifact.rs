@@ -27,6 +27,12 @@
 //! [`super::native::kernels::decode_codes_into`]. That is what makes a
 //! frozen [`super::infer::InferenceSession`] bitwise identical to
 //! evaluating the live training state.
+//!
+//! The in-memory `codes` stay integral end to end: an `InferenceSession`
+//! packs them straight into GEMM panels — fused element-wise decode for
+//! the f32 path (`kernels::PackedB::pack_codes`), recentred i8 codes for
+//! the int8 path (`kernels::PackedQuant`) — so no full-size decoded f32
+//! copy of a packed weight ever needs to be resident.
 
 use std::io::{Read, Write};
 use std::path::Path;

@@ -3,26 +3,50 @@
 //! (training): **freeze and serve**.
 //!
 //! An [`InferenceSession`] opens a [`FrozenModel`] (bit-packed low-bit
-//! weights, see [`super::artifact`]) and serves logits with none of the
-//! training path's baggage:
+//! weights, see [`super::artifact`]) under an [`InferCfg`] and serves
+//! logits with none of the training path's baggage:
 //!
 //! * **no backward buffers, no optimizer state** — the op graph is walked
 //!   forward-only; nothing is taped;
 //! * **no steady-state allocation** — intermediates live in a shape-planned
 //!   arena ([`NativeModel::infer_plan`]) sized once at `max_batch`, and
-//!   weights are decoded *and GEMM-packed* once at open, so a dispatch is
-//!   pure kernel work over preallocated storage;
+//!   weights are GEMM-packed once at open, so a dispatch is pure kernel
+//!   work over preallocated storage;
 //! * **batch-size polymorphic** — `infer(&x, batch)` serves any batch in
 //!   `1..=max_batch` through the same persistent worker pool; the arena is
 //!   sliced to the live batch, never reallocated.
 //!
-//! Bit-identity contract: decoded weights reproduce the quantizer grid
-//! bit-for-bit (the artifact's exact-unpack contract) and every kernel the
-//! walk dispatches is the *same* kernel (same tiles, same shard minimums,
-//! same reduction order) the native backend's eval programs run — so the
-//! logits are bitwise identical to evaluating the live training state, at
-//! any `WAVEQ_THREADS` and any batch. `tests/infer.rs` asserts this across
-//! the whole model zoo.
+//! # The two-tier precision contract
+//!
+//! Precision is a first-class type, not a flag, because the two tiers make
+//! different promises:
+//!
+//! * [`Precision::Exact`] (the default) — **bitwise identity**. GEMM
+//!   weights are decoded *into their panels* ([`kn::PackedB::pack_codes`],
+//!   the fused dequantize-into-panel path — the decoded f32 copy of a
+//!   packed GEMM weight is never resident) and every kernel the walk
+//!   dispatches is the *same* kernel (same tiles, same shard minimums,
+//!   same reduction order) the native backend's eval programs run — so the
+//!   logits are bitwise identical to evaluating the live training state,
+//!   at any `WAVEQ_THREADS` and any batch. `tests/infer.rs` asserts this
+//!   across the whole model zoo.
+//!
+//! * [`Precision::Int8`] (opt-in) — **bounded error, integer compute**.
+//!   Layers whose weights are packed at <= 7 bits *and* whose input
+//!   activations sit on the act-quant grid dispatch through
+//!   [`kn::matmul_quant_into`]: the frozen codes stay integral end-to-end
+//!   (recentred to i8 at open), activations are recovered as their exact
+//!   u8 quantizer codes (`kn::act_codes_into` — no second quantization),
+//!   products accumulate in i32 along the same fixed sequential-k chain,
+//!   and one f32 rescale lands the output. Per logit the path stays within
+//!   `2e-4 * (1 + sum_k |a_k||w_k|)` of the Exact logits (property-tested
+//!   in `kernels.rs` over the GEMM shape grid; in practice the gap is the
+//!   f32 GEMM's own rounding, ~1e-5 relative) and is bit-deterministic at
+//!   any `WAVEQ_THREADS`. Layers the contract cannot cover — the first
+//!   conv (raw f32 input), f32-stored params, 8-bit weight grids, float
+//!   activations — fall back to the Exact kernels, so a session mixes
+//!   paths per layer and `int_gemm_layers()` reports how many went
+//!   integer.
 
 use anyhow::{anyhow, Result};
 
@@ -32,33 +56,110 @@ use super::native::kernels as kn;
 use super::native::models::OpNode;
 use super::native::{pool, relu_quant, NativeModel};
 
+/// The numeric contract an inference session (or server) operates under.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Bitwise-identical to evaluating the live training state on the
+    /// fake-quant grid — the contract every existing test pins.
+    #[default]
+    Exact,
+    /// Integer GEMM over the packed codes where the artifact permits,
+    /// within the documented per-logit error bound; Exact fallback per
+    /// layer otherwise.
+    Int8,
+}
+
+impl Precision {
+    /// Parse the CLI / config spelling.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "exact" => Some(Precision::Exact),
+            "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::Exact => "exact",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Wire encoding in the serve hello frame (v2).
+    pub fn wire_code(self) -> u8 {
+        match self {
+            Precision::Exact => 0,
+            Precision::Int8 => 1,
+        }
+    }
+
+    pub fn from_wire(code: u8) -> Option<Precision> {
+        match code {
+            0 => Some(Precision::Exact),
+            1 => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How to open an [`InferenceSession`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InferCfg {
+    /// Largest batch one dispatch serves; the arena is sized to it.
+    pub max_batch: usize,
+    /// Numeric tier; see the module docs for the two contracts.
+    pub precision: Precision,
+}
+
+impl Default for InferCfg {
+    fn default() -> InferCfg {
+        InferCfg { max_batch: 1, precision: Precision::Exact }
+    }
+}
+
 /// A forward-only, batch-polymorphic serving session over a frozen model.
 pub struct InferenceSession {
     model: NativeModel,
     meta: ModelMeta,
     max_batch: usize,
+    precision: Precision,
     act_levels: Option<f32>,
-    /// Decoded f32 weights per parameter, manifest order (quantized layers
-    /// land exactly on their fake-quant grid). Slots that dispatch through
-    /// a [`kn::PackedB`] are emptied after packing — the packed panels are
-    /// the only resident copy of the big GEMM weights, so the session's
-    /// footprint stays at one copy per weight, not two.
+    /// Decoded f32 params in manifest order — depthwise filters, affine
+    /// scales, biases. GEMM slots stay empty: their only resident forms
+    /// are the packed panels below.
     weights: Vec<Vec<f32>>,
-    /// Pre-packed GEMM right operands for conv / projection / fc weights,
-    /// indexed by parameter slot.
+    /// Pre-packed f32 GEMM right operands (conv / projection / fc),
+    /// indexed by parameter slot — decoded straight into panels from the
+    /// frozen codes, or packed from the artifact's raw f32.
     packed: Vec<Option<kn::PackedB>>,
+    /// The integer twins: recentred i8 code panels for slots the Int8
+    /// contract covers. All `None` under `Precision::Exact`.
+    quant: Vec<Option<kn::PackedQuant>>,
     /// Ping-pong activation arena (each side holds `plan.act * max_batch`).
     bufs: [Vec<f32>; 2],
     /// im2col scratch, residual save stack, projected-shortcut scratch.
     cols: Vec<f32>,
     skip: Vec<f32>,
     shortcut: Vec<f32>,
+    /// u8 activation-code scratch for the integer GEMMs (empty when no
+    /// layer dispatches integer).
+    qcodes: Vec<u8>,
 }
 
 impl InferenceSession {
-    /// Rebuild the op graph from the artifact's identity, decode + pack
-    /// every weight once, and size the arena for `max_batch`.
-    pub fn open(frozen: &FrozenModel, max_batch: usize) -> Result<InferenceSession> {
+    /// Rebuild the op graph from the artifact's identity, pack every GEMM
+    /// weight once (f32 panels always; i8 code panels for the layers
+    /// `cfg.precision` lets go integer), and size the arena for
+    /// `cfg.max_batch`.
+    pub fn open(frozen: &FrozenModel, cfg: &InferCfg) -> Result<InferenceSession> {
+        let max_batch = cfg.max_batch;
         if max_batch == 0 {
             return Err(anyhow!("InferenceSession: max_batch must be >= 1"));
         }
@@ -75,7 +176,6 @@ impl InferenceSession {
                 model.params.len()
             ));
         }
-        let mut weights = Vec::with_capacity(model.params.len());
         for (p, fp) in model.params.iter().zip(&frozen.params) {
             if fp.name != p.name || fp.shape != p.shape {
                 return Err(anyhow!(
@@ -92,38 +192,98 @@ impl InferenceSession {
                     fp.name
                 ));
             }
-            weights.push(fp.decode());
         }
 
-        // Pack the GEMM weights once (conv / projection / fc); depthwise
-        // convs and the small per-channel params dispatch unpacked.
+        // Which GEMM slots the Int8 contract covers: the weight must be
+        // packed codes on an i8-representable grid (bits <= 7) and the
+        // layer's input must sit on the act-quant grid — a static fact of
+        // the op graph, decided by walking it with an "on the grid" flag.
+        // Raw input starts float; Relu (and the post-add Relu inside
+        // SkipAdd) puts the activation on the grid when the artifact
+        // carries act levels; conv/fc/affine/GAP outputs leave it; maxpool
+        // and flatten preserve it (max-pooling keeps the buffer max, so
+        // even the recovered scale is bit-identical).
+        let act_ok = matches!(frozen.act_levels, Some(ka) if ka <= 255.0);
+        let mut int_ok = vec![false; model.params.len()];
+        if cfg.precision == Precision::Int8 {
+            let mut on_grid = false;
+            let mut saves_grid: Vec<bool> = Vec::new();
+            let storage_ok = |idx: usize| {
+                matches!(&frozen.params[idx].storage,
+                    ParamStorage::Packed { bits, .. } if *bits <= 7)
+            };
+            for op in &model.ops {
+                match op {
+                    OpNode::Conv { geom, pidx } => {
+                        if !geom.depthwise {
+                            int_ok[*pidx] = act_ok && on_grid && storage_ok(*pidx);
+                        }
+                        on_grid = false;
+                    }
+                    OpNode::Fc { widx, .. } => {
+                        int_ok[*widx] = act_ok && on_grid && storage_ok(*widx);
+                        on_grid = false;
+                    }
+                    OpNode::Affine { .. } | OpNode::GlobalAvgPool { .. } => on_grid = false,
+                    OpNode::Relu => on_grid = act_ok,
+                    OpNode::MaxPool { .. } | OpNode::Flatten => {}
+                    OpNode::SkipSave => saves_grid.push(on_grid),
+                    OpNode::SkipProj { pidx, .. } => {
+                        let g = *saves_grid.last().expect("SkipProj without SkipSave");
+                        int_ok[*pidx] = act_ok && g && storage_ok(*pidx);
+                    }
+                    OpNode::SkipAdd => {
+                        saves_grid.pop().expect("SkipAdd without SkipSave");
+                        on_grid = act_ok;
+                    }
+                }
+            }
+        }
+
+        // Pack the GEMM weights once (conv / projection / fc): f32 panels
+        // decoded straight from the codes (bitwise = pack(decode), with no
+        // intermediate f32 tensor), plus i8 code panels where int_ok.
         let mut packed: Vec<Option<kn::PackedB>> = model.params.iter().map(|_| None).collect();
+        let mut quant: Vec<Option<kn::PackedQuant>> = model.params.iter().map(|_| None).collect();
+        let mut pack_slot = |idx: usize, kdim: usize, n: usize| {
+            if packed[idx].is_some() {
+                return;
+            }
+            match &frozen.params[idx].storage {
+                ParamStorage::F32(data) => packed[idx] = Some(kn::PackedB::pack(data, kdim, n)),
+                ParamStorage::Packed { bits, scale, codes } => {
+                    let k_levels = 2u32.pow(*bits as u32) - 1;
+                    packed[idx] =
+                        Some(kn::PackedB::pack_codes(codes, k_levels as f32, *scale, kdim, n));
+                    if int_ok[idx] {
+                        quant[idx] =
+                            Some(kn::PackedQuant::pack_codes(codes, k_levels, *scale, kdim, n));
+                    }
+                }
+            }
+        };
         for op in &model.ops {
             match op {
                 OpNode::Conv { geom, pidx } if !geom.depthwise => {
-                    packed[*pidx] =
-                        Some(kn::PackedB::pack(&weights[*pidx], geom.kdim(), geom.cout));
+                    pack_slot(*pidx, geom.kdim(), geom.cout);
                 }
-                OpNode::SkipProj { geom, pidx } => {
-                    packed[*pidx] =
-                        Some(kn::PackedB::pack(&weights[*pidx], geom.kdim(), geom.cout));
-                }
-                OpNode::Fc { din, dout, widx, .. } => {
-                    packed[*widx] = Some(kn::PackedB::pack(&weights[*widx], *din, *dout));
-                }
+                OpNode::SkipProj { geom, pidx } => pack_slot(*pidx, geom.kdim(), geom.cout),
+                OpNode::Fc { din, dout, widx, .. } => pack_slot(*widx, *din, *dout),
                 _ => {}
             }
         }
 
-        // The GEMM slots are only ever read through their packed panels:
-        // drop the decoded f32 copy so the big weights exist once.
-        for (w, pb) in weights.iter_mut().zip(&packed) {
-            if pb.is_some() {
-                *w = Vec::new();
-            }
-        }
+        // Decode the non-GEMM params (depthwise filters, affine, biases);
+        // GEMM slots live only as panels.
+        let weights: Vec<Vec<f32>> = frozen
+            .params
+            .iter()
+            .zip(&packed)
+            .map(|(fp, pb)| if pb.is_some() { Vec::new() } else { fp.decode() })
+            .collect();
 
         let plan = model.infer_plan();
+        let any_int = quant.iter().any(Option::is_some);
         pool::ensure_started();
         let meta = model.meta();
         Ok(InferenceSession {
@@ -131,12 +291,15 @@ impl InferenceSession {
             cols: vec![0.0; plan.cols * max_batch],
             skip: vec![0.0; plan.skip * max_batch],
             shortcut: vec![0.0; plan.shortcut * max_batch],
+            qcodes: vec![0u8; if any_int { plan.quant * max_batch } else { 0 }],
             model,
             meta,
             max_batch,
+            precision: cfg.precision,
             act_levels: frozen.act_levels,
             weights,
             packed,
+            quant,
         })
     }
 
@@ -147,6 +310,18 @@ impl InferenceSession {
 
     pub fn max_batch(&self) -> usize {
         self.max_batch
+    }
+
+    /// The numeric tier this session was opened under.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// How many GEMM layers dispatch through the integer path (0 under
+    /// `Precision::Exact`, and for artifacts the Int8 contract cannot
+    /// cover — fp32 activations, 8-bit weight grids).
+    pub fn int_gemm_layers(&self) -> usize {
+        self.quant.iter().filter(|q| q.is_some()).count()
     }
 
     /// Activation fake-quant level count the session applies (`None` =
@@ -175,7 +350,7 @@ impl InferenceSession {
             ));
         }
         let InferenceSession {
-            model, act_levels, weights, packed, bufs, cols, skip, shortcut, ..
+            model, act_levels, weights, packed, quant, bufs, cols, skip, shortcut, qcodes, ..
         } = self;
         let [buf_a, buf_b] = bufs;
         let act_ka = *act_levels;
@@ -206,8 +381,24 @@ impl InferenceSession {
                         let rows = geom.rows(batch);
                         let ccols = &mut cols[..rows * geom.kdim()];
                         kn::im2col_into(&s[..cur_len], batch, geom, ccols);
-                        let pb = packed[*pidx].as_ref().expect("conv weight packed at open");
-                        kn::matmul_packed_into(ccols, pb, rows, None, &mut d[..out_len]);
+                        match quant[*pidx].as_ref() {
+                            Some(pq) => {
+                                // The scale comes from the *source*
+                                // activation: a strided patch matrix can
+                                // miss the buffer max, the buffer can't.
+                                let ka = act_ka.expect("int slot without act levels");
+                                let m = kn::act_scale(&s[..cur_len]);
+                                let qc = &mut qcodes[..rows * geom.kdim()];
+                                kn::act_codes_into(ccols, m, ka, qc);
+                                let scale = m / ka;
+                                kn::matmul_quant_into(qc, pq, rows, scale, None, &mut d[..out_len]);
+                            }
+                            None => {
+                                let pb =
+                                    packed[*pidx].as_ref().expect("conv weight packed at open");
+                                kn::matmul_packed_into(ccols, pb, rows, None, &mut d[..out_len]);
+                            }
+                        }
                     }
                     cur_len = out_len;
                     in_a = !in_a;
@@ -215,14 +406,32 @@ impl InferenceSession {
                 OpNode::Fc { din, dout, widx, bidx } => {
                     debug_assert_eq!(cur_len, batch * din);
                     let (s, d) = pick(buf_a, buf_b, in_a);
-                    let pb = packed[*widx].as_ref().expect("fc weight packed at open");
-                    kn::matmul_packed_into(
-                        &s[..cur_len],
-                        pb,
-                        batch,
-                        Some(&weights[*bidx]),
-                        &mut d[..batch * dout],
-                    );
+                    match quant[*widx].as_ref() {
+                        Some(pq) => {
+                            let ka = act_ka.expect("int slot without act levels");
+                            let m = kn::act_scale(&s[..cur_len]);
+                            let qc = &mut qcodes[..cur_len];
+                            kn::act_codes_into(&s[..cur_len], m, ka, qc);
+                            kn::matmul_quant_into(
+                                qc,
+                                pq,
+                                batch,
+                                m / ka,
+                                Some(&weights[*bidx]),
+                                &mut d[..batch * dout],
+                            );
+                        }
+                        None => {
+                            let pb = packed[*widx].as_ref().expect("fc weight packed at open");
+                            kn::matmul_packed_into(
+                                &s[..cur_len],
+                                pb,
+                                batch,
+                                Some(&weights[*bidx]),
+                                &mut d[..batch * dout],
+                            );
+                        }
+                    }
                     cur_len = batch * dout;
                     in_a = !in_a;
                 }
@@ -277,8 +486,20 @@ impl InferenceSession {
                     let out_len = rows * geom.cout;
                     let ccols = &mut cols[..rows * geom.kdim()];
                     kn::im2col_into(&skip[off..off + len], batch, geom, ccols);
-                    let pb = packed[*pidx].as_ref().expect("proj weight packed at open");
-                    kn::matmul_packed_into(ccols, pb, rows, None, &mut shortcut[..out_len]);
+                    match quant[*pidx].as_ref() {
+                        Some(pq) => {
+                            let ka = act_ka.expect("int slot without act levels");
+                            let m = kn::act_scale(&skip[off..off + len]);
+                            let qc = &mut qcodes[..rows * geom.kdim()];
+                            kn::act_codes_into(ccols, m, ka, qc);
+                            let out = &mut shortcut[..out_len];
+                            kn::matmul_quant_into(qc, pq, rows, m / ka, None, out);
+                        }
+                        None => {
+                            let pb = packed[*pidx].as_ref().expect("proj weight packed at open");
+                            kn::matmul_packed_into(ccols, pb, rows, None, &mut shortcut[..out_len]);
+                        }
+                    }
                     shortcut_len = Some(out_len);
                 }
                 OpNode::SkipAdd => {

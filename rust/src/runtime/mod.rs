@@ -36,8 +36,11 @@ pub use artifact::{FrozenModel, FrozenParam, ParamStorage};
 pub use backend::{Backend, Program, ProgramStats, Runtime, RuntimeStats};
 pub use buffer::{buffer_f32, scalar_f32, to_scalar_f32, to_vec_f32, Buffer};
 pub use checkpoint::Checkpoint;
-pub use infer::InferenceSession;
+pub use infer::{InferCfg, InferenceSession, Precision};
 pub use manifest::{ArgSpec, Manifest, ModelMeta, ParamMeta, ProgramSig};
 pub use native::{NativeBackend, NativeModel};
-pub use serve::{LoopbackReport, Server, ServeCfg, ServeClient, ServeSnapshot, TcpClient};
+pub use serve::{
+    LoopbackReport, Server, ServeCfg, ServeClient, ServeIdentity, ServeSnapshot, TcpClient,
+    HELLO_VERSION,
+};
 pub use session::{Session, SessionCfg, SessionState, StepKnobs, StepMetrics};

@@ -88,13 +88,39 @@ pub fn wrpn_quantize(w: &[f32], k: f32) -> (Vec<f32>, f32) {
     (wq, m)
 }
 
+/// Activation-range scale: max over the buffer with the act-quant floor.
+/// One definition shared by [`act_quantize`] (fake-quant path) and the
+/// integer inference path ([`act_codes_into`] callers), so both paths see
+/// the bit-identical scale for the same buffer. Serial fold in element
+/// order — the fixed-order reduction contract (audit rule D3).
+pub fn act_scale(a: &[f32]) -> f32 {
+    a.iter().fold(0.0f32, |acc, &x| acc.max(x)).max(1e-6)
+}
+
 /// DoReFa activation fake-quantization in units of the batch max, applied
 /// in place to post-ReLU activations: a_q = m * quantize_k(clip(a/m, 0, 1)).
 /// Backward is the ReLU mask (the [0, 1] STE window always contains a/m).
 pub fn act_quantize(a: &mut [f32], ka: f32) {
-    let m = a.iter().fold(0.0f32, |acc, &x| acc.max(x)).max(1e-6);
+    let m = act_scale(a);
     for x in a.iter_mut() {
         *x = m * quantize_k((*x / m).clamp(0.0, 1.0), ka);
+    }
+}
+
+/// Recover u8 activation codes on the scale-`m` grid:
+/// `j = round(clip(a/m, 0, 1) * ka)`, the `quantize_k` numerator.
+///
+/// For a buffer that [`act_quantize`] produced (values `m * j/ka` with the
+/// same `m`), the recovered codes are *exactly* the quantizer's: `j <= ka
+/// <= 255` keeps the float round trip well inside the 0.5 rounding margin,
+/// and `act_scale` of such a buffer reproduces `m` bit-for-bit (the max
+/// element maps through `quantize_k(1.0, ka) = 1.0` untouched). Requires
+/// `ka <= 255`; callers gate wider act grids back to the f32 path.
+pub fn act_codes_into(a: &[f32], m: f32, ka: f32, codes: &mut [u8]) {
+    debug_assert_eq!(a.len(), codes.len());
+    debug_assert!(ka <= 255.0);
+    for (c, &x) in codes.iter_mut().zip(a.iter()) {
+        *c = ((x / m).clamp(0.0, 1.0) * ka).round() as u8;
     }
 }
 
@@ -878,6 +904,30 @@ impl PackedB {
         PackedB { panels: pack_b(b, k, n), k, n }
     }
 
+    /// Pack straight from frozen quantizer codes, decoding each element
+    /// with the exact [`decode_codes_into`] expression while writing its
+    /// panel slot. Bitwise identical to `PackedB::pack(&decoded, k, n)` —
+    /// but the decoded f32 copy of the weight is never materialized, so
+    /// the resident footprint of a packed layer is the panels plus the
+    /// integral codes, not a third full-size f32 tensor.
+    pub fn pack_codes(codes: &[u16], k_levels: f32, m: f32, kdim: usize, n: usize) -> PackedB {
+        debug_assert_eq!(codes.len(), kdim * n);
+        let npanels = n.div_ceil(NR);
+        let mut packed = vec![0.0f32; npanels * kdim * NR];
+        for j in 0..npanels {
+            let n0 = j * NR;
+            let nw = NR.min(n - n0);
+            let dst = &mut packed[j * kdim * NR..(j + 1) * kdim * NR];
+            for kk in 0..kdim {
+                let src = &codes[kk * n + n0..kk * n + n0 + nw];
+                for (ni, &c) in src.iter().enumerate() {
+                    dst[kk * NR + ni] = m * (2.0 * (c as f32 / k_levels) - 1.0);
+                }
+            }
+        }
+        PackedB { panels: packed, k: kdim, n }
+    }
+
     pub fn k(&self) -> usize {
         self.k
     }
@@ -901,6 +951,148 @@ pub fn matmul_packed_into(
 ) {
     debug_assert_eq!(out.len(), rows * pb.n);
     gemm_packed(x, pb.k, 1, rows, pb.k, pb.n, &pb.panels, bias, GEMM_MIN_ROWS, out);
+}
+
+// ---- integer GEMM (u8 activation codes x i8 weight codes -> i32) -----------
+//
+// The `Precision::Int8` inference path: frozen weight codes are recentred
+// onto the signed grid `q = 2c - k` (the DoReFa/WRPN level index around
+// zero, |q| <= k <= 127 for bit widths <= 7) and packed once into i8
+// panels; activations arrive as the u8 `quantize_k` numerators
+// (`act_codes_into`). Products accumulate in i32 — integer adds are
+// associative, but the kernel still reduces every output element over k in
+// a single in-order chain with the exact tile constants and pool sharding
+// of the f32 GEMM, so the path is bit-deterministic at any `WAVEQ_THREADS`
+// by the same argument (and by the stronger integer one). A single f32
+// rescale `(m_w / k_w) * (m_a / k_a)` plus the bias is applied per output
+// element at the end. Not bitwise-f32: the error contract lives with
+// `Precision` in `runtime::infer`.
+
+/// A GEMM right operand held as recentred i8 quantizer codes in the
+/// NR-wide k-major panel layout of [`PackedB`], plus the per-layer weight
+/// rescale `m / k` — the integer twin packed at `runtime::infer` load time
+/// for layers the int8 path can execute.
+pub struct PackedQuant {
+    panels: Vec<i8>,
+    k: usize,
+    n: usize,
+    w_scale: f32,
+}
+
+impl PackedQuant {
+    /// Pack frozen codes `c in [0, k_levels]` as `q = 2c - k_levels`.
+    ///
+    /// Requires `k_levels <= 127` (bit widths 2..=7) so `q` fits i8, and
+    /// `kdim < 66_000` so the worst-case `sum_k |q * j| <= kdim * 127 * 255`
+    /// stays inside i32 — both are static per-layer facts the caller gates
+    /// on, not data-dependent conditions.
+    pub fn pack_codes(codes: &[u16], k_levels: u32, m: f32, kdim: usize, n: usize) -> PackedQuant {
+        assert!((1..=127).contains(&k_levels), "k_levels {k_levels} exceeds the i8 grid");
+        assert!(kdim < 66_000, "kdim {kdim} could overflow the i32 accumulator");
+        debug_assert_eq!(codes.len(), kdim * n);
+        let npanels = n.div_ceil(NR);
+        let mut panels = vec![0i8; npanels * kdim * NR];
+        for j in 0..npanels {
+            let n0 = j * NR;
+            let nw = NR.min(n - n0);
+            let dst = &mut panels[j * kdim * NR..(j + 1) * kdim * NR];
+            for kk in 0..kdim {
+                let src = &codes[kk * n + n0..kk * n + n0 + nw];
+                for (ni, &c) in src.iter().enumerate() {
+                    dst[kk * NR + ni] = (2 * c as i32 - k_levels as i32) as i8;
+                }
+            }
+        }
+        PackedQuant { panels, k: kdim, n, w_scale: m / k_levels as f32 }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The weight grid step `m / k_levels`; the dispatch-time rescale is
+    /// this times the activation grid step.
+    pub fn w_scale(&self) -> f32 {
+        self.w_scale
+    }
+}
+
+/// One MR x NR integer register tile:
+/// `out[m][..nw] = init + scale * sum_k a(m, k) * P(k, ..)` with the sum
+/// in i32. Same fixed increasing-k chain per output element as
+/// [`micro_tile`]; the single f32 multiply-add happens after the integer
+/// reduction completes.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_tile_quant(
+    a: &[u8],
+    lda: usize,
+    mr: usize,
+    k: usize,
+    panel: &[i8],
+    init: &[f32; NR],
+    scale: f32,
+    out: &mut [f32],
+    ldo: usize,
+    nw: usize,
+) {
+    debug_assert!((1..=MR).contains(&mr) && (1..=NR).contains(&nw));
+    let mut acc = [[0i32; NR]; MR];
+    for kk in 0..k {
+        let prow = &panel[kk * NR..kk * NR + NR];
+        for (m, row) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[m * lda + kk] as i32;
+            for (ac, &pv) in row.iter_mut().zip(prow.iter()) {
+                *ac += av * pv as i32;
+            }
+        }
+    }
+    for (m, row) in acc.iter().enumerate().take(mr) {
+        let orow = &mut out[m * ldo..m * ldo + nw];
+        for ((o, &ac), &iv) in orow.iter_mut().zip(row.iter()).zip(init.iter()) {
+            *o = fma(scale, ac as f32, iv);
+        }
+    }
+}
+
+/// out(r, j) = bias(j) + scale * sum_k codes(r, k) * Q(k, j) over the
+/// recentred i8 panels, written into a caller-owned slice. Row sharding
+/// and tile walk mirror [`matmul_packed_into`] exactly.
+pub fn matmul_quant_into(
+    acodes: &[u8],
+    pq: &PackedQuant,
+    rows: usize,
+    a_scale: f32,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * pq.n);
+    let (k, n) = (pq.k, pq.n);
+    let scale = pq.w_scale * a_scale;
+    let npanels = n.div_ceil(NR);
+    pool::run_rows(out, rows, n, GEMM_MIN_ROWS, |r0, shard| {
+        let nrows = shard.len() / n;
+        let mut r = 0;
+        while r < nrows {
+            let mr = MR.min(nrows - r);
+            let a = &acodes[(r0 + r) * k..];
+            for j in 0..npanels {
+                let n0 = j * NR;
+                let nw = NR.min(n - n0);
+                let mut init = [0.0f32; NR];
+                if let Some(bv) = bias {
+                    init[..nw].copy_from_slice(&bv[n0..n0 + nw]);
+                }
+                let panel = &pq.panels[j * k * NR..(j + 1) * k * NR];
+                micro_tile_quant(a, k, mr, k, panel, &init, scale, &mut shard[r * n + n0..], n, nw);
+            }
+            r += mr;
+        }
+    });
 }
 
 /// out(r, o) = x(r, i) @ w(i, o)   (no bias; conv-via-im2col path)
@@ -1760,5 +1952,139 @@ mod tests {
         affine_fwd_into(&xp, &s, &b, batch * 8 * 6, 3, &mut dirty);
         let want = affine_fwd(&xp, &s, &b, batch * 8 * 6, 3);
         assert_eq!(bits(&dirty), bits(&want), "affine_fwd_into");
+    }
+
+    // ---- integer GEMM (the Precision::Int8 inference path) ------------------
+
+    #[test]
+    fn act_codes_recover_the_quantizer_grid_exactly() {
+        // Re-quantizing a buffer act_quantize already wrote must recover
+        // the original scale bit-for-bit and the exact integer codes: the
+        // int8 inference path leans on this to avoid double quantization.
+        for ka in [3.0f32, 15.0, 255.0] {
+            let mut a: Vec<f32> = prand(257, 41).iter().map(|v| v.abs()).collect();
+            a[0] = 0.0;
+            let m_pre = act_scale(&a);
+            let expect: Vec<u8> =
+                a.iter().map(|&x| ((x / m_pre).clamp(0.0, 1.0) * ka).round() as u8).collect();
+            act_quantize(&mut a, ka);
+            let m = act_scale(&a);
+            assert_eq!(m.to_bits(), m_pre.to_bits(), "ka={ka}: scale not recovered");
+            let mut codes = vec![0u8; a.len()];
+            act_codes_into(&a, m, ka, &mut codes);
+            assert_eq!(codes, expect, "ka={ka}: codes not recovered");
+            for (i, (&c, &v)) in codes.iter().zip(a.iter()).enumerate() {
+                let dec = m * (c as f32 / ka);
+                assert_eq!(dec.to_bits(), v.to_bits(), "ka={ka} elem {i}: {dec} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_codes_matches_packing_the_decoded_weights_bitwise() {
+        // The fused dequantize-into-panel constructor is the Exact path's
+        // way of never materializing the decoded f32 weights: its panels
+        // must equal pack(decode(codes)) bit-for-bit.
+        let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+        for &(_, din, dout) in GEMM_SHAPES {
+            for b in [2u32, 5, 8] {
+                let k = (2u32.pow(b) - 1) as f32;
+                let w = prand(din * dout, 43 + b as u64);
+                let (codes, m) = dorefa_codes(&w, k);
+                let mut dec = vec![0.0f32; w.len()];
+                decode_codes_into(&codes, k, m, &mut dec);
+                let via_f32 = PackedB::pack(&dec, din, dout);
+                let fused = PackedB::pack_codes(&codes, k, m, din, dout);
+                assert_eq!((fused.k(), fused.n()), (din, dout));
+                assert_eq!(
+                    bits(&via_f32.panels),
+                    bits(&fused.panels),
+                    "pack_codes panels drifted (k={din}, n={dout}, b={b})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_matmul_tracks_the_f32_grid_path_within_the_documented_bound() {
+        // The Precision::Int8 error contract: per output element,
+        // |int8 - f32| <= 2e-4 * (1 + sum_k |a_k| |w_kj|). The int side is
+        // exact integer arithmetic plus one rescale; the slack is almost
+        // entirely the f32 GEMM's own rounding chain.
+        for &(rows, din, dout) in GEMM_SHAPES {
+            for (b, ka) in [(3u32, 15.0f32), (7, 255.0)] {
+                let k_levels = 2u32.pow(b) - 1;
+                let kw = k_levels as f32;
+                let w = prand(din * dout, 51 + b as u64);
+                let (codes, mw) = dorefa_codes(&w, kw);
+                let bias = prand(dout, 52);
+                let mut a: Vec<f32> = prand(rows * din, 53).iter().map(|v| v.abs()).collect();
+                act_quantize(&mut a, ka);
+
+                let pb = PackedB::pack_codes(&codes, kw, mw, din, dout);
+                let mut f32_out = vec![f32::NAN; rows * dout];
+                matmul_packed_into(&a, &pb, rows, Some(&bias), &mut f32_out);
+
+                let pq = PackedQuant::pack_codes(&codes, k_levels, mw, din, dout);
+                assert_eq!((pq.k(), pq.n()), (din, dout));
+                let ma = act_scale(&a);
+                let mut acodes = vec![0u8; rows * din];
+                act_codes_into(&a, ma, ka, &mut acodes);
+                let mut int_out = vec![f32::NAN; rows * dout];
+                matmul_quant_into(&acodes, &pq, rows, ma / ka, Some(&bias), &mut int_out);
+
+                let mut dec = vec![0.0f32; w.len()];
+                decode_codes_into(&codes, kw, mw, &mut dec);
+                for r in 0..rows {
+                    for j in 0..dout {
+                        let mut mag = 0.0f64;
+                        for kk in 0..din {
+                            mag += (a[r * din + kk].abs() * dec[kk * dout + j].abs()) as f64;
+                        }
+                        let diff = (int_out[r * dout + j] - f32_out[r * dout + j]).abs() as f64;
+                        assert!(
+                            diff <= 2e-4 * (1.0 + mag),
+                            "({rows},{din},{dout}) b={b} out[{r},{j}]: |{}-{}| > bound {mag}",
+                            int_out[r * dout + j],
+                            f32_out[r * dout + j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_matmul_is_bitwise_deterministic_across_thread_counts() {
+        // Same contract as the f32 GEMM, with a stronger argument: the i32
+        // accumulation is exactly associative, and the rescale is applied
+        // per element after the reduction completes.
+        let (rows, din, dout) = (97, 66, 35);
+        let kw = 127u32;
+        let w = prand(din * dout, 61);
+        let (codes, mw) = dorefa_codes(&w, kw as f32);
+        let pq = PackedQuant::pack_codes(&codes, kw, mw, din, dout);
+        let bias = prand(dout, 62);
+        let mut a: Vec<f32> = prand(rows * din, 63).iter().map(|v| v.abs()).collect();
+        act_quantize(&mut a, 255.0);
+        let ma = act_scale(&a);
+        let mut acodes = vec![0u8; rows * din];
+        act_codes_into(&a, ma, 255.0, &mut acodes);
+        let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+        let mut reference: Option<Vec<u32>> = None;
+        let _guard = pool::env_lock();
+        for threads in ["1", "2", "4"] {
+            std::env::set_var("WAVEQ_THREADS", threads);
+            let mut out = vec![f32::NAN; rows * dout];
+            matmul_quant_into(&acodes, &pq, rows, ma / 255.0, Some(&bias), &mut out);
+            let got = bits(&out);
+            match &reference {
+                None => reference = Some(got),
+                Some(r) => {
+                    assert_eq!(r, &got, "quant matmul bits differ at WAVEQ_THREADS={threads}")
+                }
+            }
+        }
+        std::env::remove_var("WAVEQ_THREADS");
     }
 }

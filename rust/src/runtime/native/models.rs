@@ -129,7 +129,7 @@ impl NativeModel {
     /// save stack, and `shortcut` the largest projected shortcut.
     pub fn infer_plan(&self) -> InferPlan {
         let mut cur = self.pixels();
-        let mut plan = InferPlan { act: cur, cols: 0, skip: 0, shortcut: 0 };
+        let mut plan = InferPlan { act: cur, cols: 0, quant: 0, skip: 0, shortcut: 0 };
         let mut live_skip = 0usize;
         let mut saves: Vec<usize> = Vec::new();
         for op in &self.ops {
@@ -137,10 +137,14 @@ impl NativeModel {
                 OpNode::Conv { geom, .. } => {
                     if !geom.depthwise {
                         plan.cols = plan.cols.max(geom.h_out * geom.w_out * geom.kdim());
+                        plan.quant = plan.quant.max(geom.h_out * geom.w_out * geom.kdim());
                     }
                     cur = geom.h_out * geom.w_out * geom.cout;
                 }
-                OpNode::Fc { dout, .. } => cur = *dout,
+                OpNode::Fc { din, dout, .. } => {
+                    plan.quant = plan.quant.max(*din);
+                    cur = *dout;
+                }
                 OpNode::Affine { .. } | OpNode::Relu | OpNode::Flatten => {}
                 OpNode::MaxPool { h, w, c, size } => cur = (h / size) * (w / size) * c,
                 OpNode::GlobalAvgPool { c, .. } => cur = *c,
@@ -151,6 +155,7 @@ impl NativeModel {
                 }
                 OpNode::SkipProj { geom, .. } => {
                     plan.cols = plan.cols.max(geom.h_out * geom.w_out * geom.kdim());
+                    plan.quant = plan.quant.max(geom.h_out * geom.w_out * geom.kdim());
                     plan.shortcut = plan.shortcut.max(geom.h_out * geom.w_out * geom.cout);
                 }
                 OpNode::SkipAdd => {
@@ -369,6 +374,10 @@ pub struct InferPlan {
     pub act: usize,
     /// Largest im2col patch matrix (standard convs + projections).
     pub cols: usize,
+    /// Largest u8 activation-code buffer the `Precision::Int8` path can
+    /// quantize a GEMM left operand into: the patch matrices again, plus
+    /// the FC input widths (quantized straight from the activation).
+    pub quant: usize,
     /// Deepest concurrently-live residual save stack.
     pub skip: usize,
     /// Largest projected-shortcut activation.
@@ -714,12 +723,15 @@ mod tests {
         // mlp: pure FC ladder — input 192 is the largest activation, no
         // im2col, no residual machinery.
         let plan = NativeModel::mlp(1).infer_plan();
-        assert_eq!(plan, InferPlan { act: 192, cols: 0, skip: 0, shortcut: 0 });
+        // quant: the widest FC input (the flattened 192-pixel input).
+        assert_eq!(plan, InferPlan { act: 192, cols: 0, quant: 192, skip: 0, shortcut: 0 });
         // simplenet5: conv1 output 16*16*16 dominates activations; conv2's
-        // patches 8*8*(3*3*16) dominate the cols scratch.
+        // patches 8*8*(3*3*16) dominate the cols scratch and (over the FC
+        // input widths) the int8 code scratch too.
         let plan = NativeModel::simplenet5(1).infer_plan();
         assert_eq!(plan.act, 16 * 16 * 16);
         assert_eq!(plan.cols, 8 * 8 * 9 * 16);
+        assert_eq!(plan.quant, plan.cols);
         assert_eq!((plan.skip, plan.shortcut), (0, 0));
         // resnet20l: stage-1 blocks save the 16x16x8 stem activation; the
         // projections emit at most 8*8*16 (stage 2 entry).

@@ -32,11 +32,15 @@
 //! request-at-a-time serving.
 //!
 //! Wire protocol ([`serve_tcp`]): length-prefixed little-endian frames.
-//! On accept the server writes a hello — magic `b"WQSV"`, u32 pixels, u32
-//! classes. Each request is `u32 count` (must equal pixels) + `count`
-//! f32s; each response is `u32 count == classes` + the logits, or the
-//! error marker `u32 0xFFFF_FFFF` + u32 length + a UTF-8 message. A
-//! `count == 0` request frame closes the connection cleanly.
+//! On accept the server writes a versioned hello (v2): magic `b"WQSV"`,
+//! u32 version, u32 pixels, u32 classes, then what the server *is* — a u8
+//! [`Precision`] code, the artifact identity (u32 length + base name,
+//! u32 width_mult), and the per-quantized-layer bit assignment (u32 count
+//! + that many u8s) — so a client can verify what it is talking to before
+//! sending a single example. Each request is `u32 count` (must equal
+//! pixels) + `count` f32s; each response is `u32 count == classes` + the
+//! logits, or the error marker `u32 0xFFFF_FFFF` + u32 length + a UTF-8
+//! message. A `count == 0` request frame closes the connection cleanly.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -49,16 +53,20 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::artifact::FrozenModel;
-use super::infer::InferenceSession;
+use super::infer::{InferCfg, InferenceSession, Precision};
 use super::manifest::ModelMeta;
 use crate::util::timer::BenchStats;
 
 /// Hello magic the TCP front end writes on accept.
 pub const MAGIC: &[u8; 4] = b"WQSV";
+/// Hello frame version this build speaks (see the module docs). v1 had no
+/// version field; v2 added it along with precision + artifact identity.
+pub const HELLO_VERSION: u32 = 2;
 /// Response-frame count value marking an error payload.
 const ERR_MARK: u32 = u32::MAX;
 
-/// Server shape: worker count, batch arena size, and the batching window.
+/// Server shape: worker count, batch arena size, the batching window, and
+/// the numeric tier every worker session opens under.
 #[derive(Debug, Clone)]
 pub struct ServeCfg {
     /// Inference worker threads; each owns one `InferenceSession`.
@@ -68,11 +76,44 @@ pub struct ServeCfg {
     /// How long a gatherer waits for its batch to fill after the first
     /// request arrives. Zero = dispatch whatever is already queued.
     pub deadline: Duration,
+    /// Numeric contract of every worker session (see `runtime::infer`);
+    /// advertised to clients in the hello frame and in [`ServeSnapshot`].
+    pub precision: Precision,
 }
 
 impl Default for ServeCfg {
     fn default() -> ServeCfg {
-        ServeCfg { workers: 2, max_batch: 8, deadline: Duration::from_millis(1) }
+        ServeCfg {
+            workers: 2,
+            max_batch: 8,
+            deadline: Duration::from_millis(1),
+            precision: Precision::Exact,
+        }
+    }
+}
+
+/// What a serve instance *is*: the artifact identity plus the active
+/// numeric tier — advertised in the hello frame, embedded in every
+/// [`ServeSnapshot`], and printed by `waveq serve` stats output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeIdentity {
+    /// Zoo base name of the served artifact.
+    pub base: String,
+    pub width_mult: usize,
+    /// The numeric tier every worker session runs at.
+    pub precision: Precision,
+    /// Per-quantized-layer bitwidths in parameter order (the artifact's
+    /// `layer_bits`, narrowed to u8 — bits are 2..=8).
+    pub layer_bits: Vec<u8>,
+    /// How many GEMM layers actually dispatch through the integer path in
+    /// each worker (0 under `Precision::Exact`).
+    pub int_gemm_layers: usize,
+}
+
+impl ServeIdentity {
+    /// `base` x `width_mult` in the zoo's display spelling.
+    pub fn model_label(&self) -> String {
+        format!("{}_w{}", self.base, self.width_mult)
     }
 }
 
@@ -102,17 +143,19 @@ impl ServeStats {
         }
     }
 
-    pub fn snapshot(&self) -> ServeSnapshot {
+    pub fn snapshot(&self, identity: &ServeIdentity) -> ServeSnapshot {
         ServeSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             full_batches: self.full_batches.load(Ordering::Relaxed),
+            identity: identity.clone(),
         }
     }
 }
 
-/// Point-in-time copy of [`ServeStats`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Point-in-time copy of [`ServeStats`], stamped with the server's
+/// identity so a stats reader can verify what it is talking to.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServeSnapshot {
     /// Examples served.
     pub requests: u64,
@@ -120,6 +163,8 @@ pub struct ServeSnapshot {
     pub batches: u64,
     /// Dispatches that filled the whole `max_batch` arena.
     pub full_batches: u64,
+    /// Artifact identity + active precision of the serving instance.
+    pub identity: ServeIdentity,
 }
 
 impl ServeSnapshot {
@@ -142,19 +187,29 @@ pub struct Server {
     meta: ModelMeta,
     pix: usize,
     cfg: ServeCfg,
+    identity: Arc<ServeIdentity>,
 }
 
 impl Server {
     /// Open `cfg.workers` inference sessions over `frozen` (errors surface
-    /// here, before any thread exists) and start the worker threads.
+    /// here, before any thread exists) and start the worker threads. Every
+    /// worker session opens at `cfg.precision`.
     pub fn start(frozen: &FrozenModel, cfg: &ServeCfg) -> Result<Server> {
         if cfg.workers == 0 {
             return Err(anyhow!("serve: workers must be >= 1"));
         }
+        let icfg = InferCfg { max_batch: cfg.max_batch, precision: cfg.precision };
         let mut sessions = Vec::with_capacity(cfg.workers);
         for _ in 0..cfg.workers {
-            sessions.push(InferenceSession::open(frozen, cfg.max_batch)?);
+            sessions.push(InferenceSession::open(frozen, &icfg)?);
         }
+        let identity = Arc::new(ServeIdentity {
+            base: frozen.base.clone(),
+            width_mult: frozen.width_mult,
+            precision: cfg.precision,
+            layer_bits: frozen.layer_bits().iter().map(|&b| b as u8).collect(),
+            int_gemm_layers: sessions[0].int_gemm_layers(),
+        });
         let meta = sessions[0].meta().clone();
         let pix: usize = meta.input_shape.iter().product();
         let (tx, rx) = channel::<Request>();
@@ -172,14 +227,19 @@ impl Server {
                     .map_err(|e| anyhow!("spawning serve worker {i}: {e}"))?,
             );
         }
-        Ok(Server { queue: tx, workers, stats, meta, pix, cfg: cfg.clone() })
+        Ok(Server { queue: tx, workers, stats, meta, pix, cfg: cfg.clone(), identity })
     }
 
     /// A handle clients submit requests through. Cheap to clone; safe to
     /// move to any thread (TCP connection handlers each own one).
     pub fn client(&self) -> ServeClient {
         let queue = self.queue.clone();
-        ServeClient { queue, pix: self.pix, num_classes: self.meta.num_classes }
+        ServeClient {
+            queue,
+            pix: self.pix,
+            num_classes: self.meta.num_classes,
+            identity: Arc::clone(&self.identity),
+        }
     }
 
     /// The manifest-side description of the served model.
@@ -191,9 +251,15 @@ impl Server {
         &self.cfg
     }
 
-    /// Batching counters so far (how full the dispatched batches ran).
+    /// Artifact identity + active precision, as advertised to clients.
+    pub fn identity(&self) -> &ServeIdentity {
+        &self.identity
+    }
+
+    /// Batching counters so far (how full the dispatched batches ran),
+    /// stamped with the server's identity.
     pub fn stats(&self) -> ServeSnapshot {
-        self.stats.snapshot()
+        self.stats.snapshot(&self.identity)
     }
 
     /// Stop accepting work and join the workers. Blocks until every
@@ -214,6 +280,7 @@ pub struct ServeClient {
     queue: Sender<Request>,
     pix: usize,
     num_classes: usize,
+    identity: Arc<ServeIdentity>,
 }
 
 impl ServeClient {
@@ -224,6 +291,11 @@ impl ServeClient {
 
     pub fn num_classes(&self) -> usize {
         self.num_classes
+    }
+
+    /// The server's advertised identity (written into the hello frame).
+    pub fn identity(&self) -> &ServeIdentity {
+        &self.identity
     }
 
     /// Submit one example and block until its logits come back. The reply
@@ -387,15 +459,34 @@ pub fn serve_tcp(server: &Server, listener: TcpListener, max_conns: Option<usize
     Ok(())
 }
 
+/// Write the v2 hello: magic, version, model dims, then the server's
+/// identity (precision code, artifact base + width_mult, per-layer bits).
+fn write_hello<W: Write>(
+    w: &mut W,
+    pix: usize,
+    num_classes: usize,
+    id: &ServeIdentity,
+) -> std::io::Result<()> {
+    w.write_all(MAGIC)?;
+    write_u32(w, HELLO_VERSION)?;
+    write_u32(w, pix as u32)?;
+    write_u32(w, num_classes as u32)?;
+    w.write_all(&[id.precision.wire_code()])?;
+    write_u32(w, id.base.len() as u32)?;
+    w.write_all(id.base.as_bytes())?;
+    write_u32(w, id.width_mult as u32)?;
+    write_u32(w, id.layer_bits.len() as u32)?;
+    w.write_all(&id.layer_bits)?;
+    write_u32(w, id.int_gemm_layers as u32)?;
+    w.flush()
+}
+
 /// Serve one connection: hello, then request/response frames until the
 /// client sends a zero-count frame or closes the socket.
 fn serve_conn(mut stream: TcpStream, client: &ServeClient) -> std::io::Result<()> {
     let _ = stream.set_nodelay(true); // latency over throughput on this path
     let pix = client.pixels();
-    stream.write_all(MAGIC)?;
-    write_u32(&mut stream, pix as u32)?;
-    write_u32(&mut stream, client.num_classes() as u32)?;
-    stream.flush()?;
+    write_hello(&mut stream, pix, client.num_classes(), client.identity())?;
     let mut x = vec![0.0f32; pix];
     loop {
         let count = match read_u32(&mut stream) {
@@ -438,10 +529,13 @@ pub struct TcpClient {
     stream: TcpStream,
     pix: usize,
     num_classes: usize,
+    identity: ServeIdentity,
 }
 
 impl TcpClient {
-    /// Connect and read the hello (magic + model dims).
+    /// Connect and read the v2 hello (magic, version, model dims, then the
+    /// server's precision + artifact identity + per-layer bits). Rejects
+    /// endpoints speaking any other hello version.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TcpClient> {
         let mut stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
@@ -450,9 +544,36 @@ impl TcpClient {
         if &magic != MAGIC {
             return Err(anyhow!("not a waveq serve endpoint (bad hello magic {magic:?})"));
         }
+        let version = read_u32(&mut stream)?;
+        if version != HELLO_VERSION {
+            return Err(anyhow!(
+                "serve endpoint speaks hello v{version}, this client speaks v{HELLO_VERSION}"
+            ));
+        }
         let pix = read_u32(&mut stream)? as usize;
         let num_classes = read_u32(&mut stream)? as usize;
-        Ok(TcpClient { stream, pix, num_classes })
+        let mut pcode = [0u8; 1];
+        stream.read_exact(&mut pcode)?;
+        let precision = Precision::from_wire(pcode[0])
+            .ok_or_else(|| anyhow!("hello carries unknown precision code {}", pcode[0]))?;
+        let base_len = read_u32(&mut stream)? as usize;
+        if base_len > 4096 {
+            return Err(anyhow!("hello carries an implausible {base_len}-byte model name"));
+        }
+        let mut base = vec![0u8; base_len];
+        stream.read_exact(&mut base)?;
+        let base = String::from_utf8(base)
+            .map_err(|_| anyhow!("hello model name is not UTF-8"))?;
+        let width_mult = read_u32(&mut stream)? as usize;
+        let nbits = read_u32(&mut stream)? as usize;
+        if nbits > 1 << 20 {
+            return Err(anyhow!("hello carries an implausible {nbits}-layer bit assignment"));
+        }
+        let mut layer_bits = vec![0u8; nbits];
+        stream.read_exact(&mut layer_bits)?;
+        let int_gemm_layers = read_u32(&mut stream)? as usize;
+        let identity = ServeIdentity { base, width_mult, precision, layer_bits, int_gemm_layers };
+        Ok(TcpClient { stream, pix, num_classes, identity })
     }
 
     pub fn pixels(&self) -> usize {
@@ -461,6 +582,16 @@ impl TcpClient {
 
     pub fn num_classes(&self) -> usize {
         self.num_classes
+    }
+
+    /// The precision the server advertised in its hello.
+    pub fn precision(&self) -> Precision {
+        self.identity.precision
+    }
+
+    /// The full advertised identity (artifact base/width, per-layer bits).
+    pub fn identity(&self) -> &ServeIdentity {
+        &self.identity
     }
 
     /// Send one example, block for its logits.
@@ -571,6 +702,7 @@ pub fn loopback_bench(
         requests: stats1.requests - stats0.requests,
         batches: stats1.batches - stats0.batches,
         full_batches: stats1.full_batches - stats0.full_batches,
+        identity: stats1.identity,
     };
     let name = format!("serve loopback x{clients}");
     Ok(LoopbackReport {
@@ -610,16 +742,62 @@ mod tests {
         assert_eq!(std::str::from_utf8(&msg).unwrap(), "bad things");
     }
 
+    fn test_identity() -> ServeIdentity {
+        ServeIdentity {
+            base: "test".into(),
+            width_mult: 1,
+            precision: Precision::Exact,
+            layer_bits: vec![32, 2, 2, 32],
+            int_gemm_layers: 0,
+        }
+    }
+
     #[test]
     fn snapshot_mean_fill() {
         let s = ServeStats::default();
-        assert_eq!(s.snapshot().mean_fill(), 0.0);
+        let id = test_identity();
+        assert_eq!(s.snapshot(&id).mean_fill(), 0.0);
         s.record(4, 4);
         s.record(2, 4);
-        let snap = s.snapshot();
+        let snap = s.snapshot(&id);
         assert_eq!(snap.requests, 6);
         assert_eq!(snap.batches, 2);
         assert_eq!(snap.full_batches, 1);
         assert!((snap.mean_fill() - 3.0).abs() < 1e-12);
+        assert_eq!(snap.identity, id);
+    }
+
+    #[test]
+    fn hello_frame_round_trips_the_identity() {
+        let id = ServeIdentity {
+            base: "resnet20l".into(),
+            width_mult: 2,
+            precision: Precision::Int8,
+            layer_bits: vec![32, 2, 3, 2, 32],
+            int_gemm_layers: 3,
+        };
+        let mut buf: Vec<u8> = Vec::new();
+        write_hello(&mut buf, 1024, 10, &id).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        let mut magic = [0u8; 4];
+        cur.read_exact(&mut magic).unwrap();
+        assert_eq!(&magic, MAGIC);
+        assert_eq!(read_u32(&mut cur).unwrap(), HELLO_VERSION);
+        assert_eq!(read_u32(&mut cur).unwrap(), 1024);
+        assert_eq!(read_u32(&mut cur).unwrap(), 10);
+        let mut prec = [0u8; 1];
+        cur.read_exact(&mut prec).unwrap();
+        assert_eq!(Precision::from_wire(prec[0]).unwrap(), Precision::Int8);
+        let base_len = read_u32(&mut cur).unwrap() as usize;
+        let mut base = vec![0u8; base_len];
+        cur.read_exact(&mut base).unwrap();
+        assert_eq!(std::str::from_utf8(&base).unwrap(), "resnet20l");
+        assert_eq!(read_u32(&mut cur).unwrap(), 2);
+        let nbits = read_u32(&mut cur).unwrap() as usize;
+        let mut bits = vec![0u8; nbits];
+        cur.read_exact(&mut bits).unwrap();
+        assert_eq!(bits, id.layer_bits);
+        assert_eq!(read_u32(&mut cur).unwrap(), 3);
+        assert_eq!(id.model_label(), "resnet20l_w2");
     }
 }

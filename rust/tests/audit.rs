@@ -119,6 +119,31 @@ fn d3_flags_float_reductions_in_kernels_but_not_their_tests() {
     assert!(f.violations.is_empty(), "{:#?}", f.violations);
 }
 
+/// D3 is type-blind on purpose: the int8 GEMM accumulates in i32, and an
+/// anonymous integer fold in kernel code dodges the overflow/order
+/// discipline the named helpers pin down just as surely as a float sum
+/// dodges association order.
+#[test]
+fn d3_flags_integer_accumulation_outside_named_helpers() {
+    let src = "pub fn idot(a: &[u8], w: &[i8]) -> i32 {\n    \
+               a.iter().zip(w).fold(0i32, |acc, (&x, &y)| acc + x as i32 * y as i32)\n}\n";
+    let f = scan_source("src/runtime/native/kernels.rs", src);
+    assert_eq!(f.violations.len(), 1, "{:#?}", f.violations);
+    assert_eq!(f.violations[0].rule, Rule::D3);
+    assert_eq!(f.violations[0].line, 2);
+    assert_eq!(f.violations[0].pattern, ".fold(");
+    assert_eq!(f.violations[0].in_fn.as_deref(), Some("idot"));
+    assert!(f.violations[0].message.contains("i32/i64"), "{}", f.violations[0].message);
+
+    // The explicit-loop i32 accumulator the real microkernel uses is clean.
+    let loop_src = "pub fn idot_fixed(a: &[u8], w: &[i8]) -> i32 {\n    \
+                    let mut acc = 0i32;\n    \
+                    for k in 0..a.len() {\n        acc += a[k] as i32 * w[k] as i32;\n    }\n    \
+                    acc\n}\n";
+    let f = scan_source("src/runtime/native/kernels.rs", loop_src);
+    assert!(f.violations.is_empty(), "{:#?}", f.violations);
+}
+
 #[test]
 fn d4_requires_safety_comments_and_inventories_every_unsafe() {
     let bare = "pub fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";

@@ -7,9 +7,20 @@
 
 use waveq::runtime::native::models::ZOO_NAMES;
 use waveq::runtime::{
-    FrozenModel, InferenceSession, ModelMeta, Runtime, Session, SessionCfg, StepKnobs,
+    FrozenModel, InferCfg, InferenceSession, ModelMeta, Precision, Runtime, Session, SessionCfg,
+    StepKnobs,
 };
 use waveq::util::rng::Rng;
+
+/// `InferCfg` at the default (bitwise-exact) precision tier.
+fn exact(max_batch: usize) -> InferCfg {
+    InferCfg { max_batch, precision: Precision::Exact }
+}
+
+/// `InferCfg` on the opt-in int8 integer-GEMM tier.
+fn int8(max_batch: usize) -> InferCfg {
+    InferCfg { max_batch, precision: Precision::Int8 }
+}
 
 /// Serializes the env-mutating tests in this binary (the test harness runs
 /// them on concurrent threads and `WAVEQ_THREADS` is process-global).
@@ -131,7 +142,7 @@ fn frozen_waveq_serving_is_bitwise_identical_across_the_zoo() {
         std::fs::remove_file(&path).ok();
 
         let kw = vec![15.0f32; model.num_qlayers];
-        let mut infer = InferenceSession::open(&frozen, model.batch).unwrap();
+        let mut infer = InferenceSession::open(&frozen, &exact(model.batch)).unwrap();
         assert_serving_bit_identity(&mut session, &mut infer, Some(&kw), ka, base);
     }
 }
@@ -162,7 +173,7 @@ fn frozen_dorefa_and_wrpn_presets_serve_bitwise() {
         assert_eq!((frozen.base.as_str(), frozen.width_mult), ("mlp", width), "{train}");
         assert_eq!(frozen.layer_bits(), vec![bits as u32; 2], "{train}");
         let kw = vec![kw_val; model.num_qlayers];
-        let mut infer = InferenceSession::open(&frozen, model.batch).unwrap();
+        let mut infer = InferenceSession::open(&frozen, &exact(model.batch)).unwrap();
         assert_serving_bit_identity(&mut session, &mut infer, Some(&kw), 255.0, train);
     }
 }
@@ -190,7 +201,7 @@ fn frozen_fp32_models_serve_raw_weights_bitwise() {
     assert_eq!(frozen.packed_weight_bytes(), 0);
     assert_eq!(frozen.size_reduction(), None);
     assert!(frozen.layer_bits().is_empty());
-    let mut infer = InferenceSession::open(&frozen, model.batch).unwrap();
+    let mut infer = InferenceSession::open(&frozen, &exact(model.batch)).unwrap();
     assert_serving_bit_identity(&mut session, &mut infer, None, 0.0, "fp32 simplenet5");
 }
 
@@ -218,11 +229,11 @@ fn arena_capacity_never_changes_the_bits() {
     let pix: usize = model.input_shape.iter().product();
     let (x_all, _y) = batch_data(&model, model.batch, 9);
 
-    let mut small = InferenceSession::open(&frozen, 7).unwrap();
+    let mut small = InferenceSession::open(&frozen, &exact(7)).unwrap();
     let want: Vec<u32> =
         small.infer(&x_all[..7 * pix], 7).unwrap().iter().map(|v| v.to_bits()).collect();
 
-    let mut big = InferenceSession::open(&frozen, model.batch).unwrap();
+    let mut big = InferenceSession::open(&frozen, &exact(model.batch)).unwrap();
     // Interleave other batch sizes so the arena is dirty before the probe.
     big.infer(&x_all[..pix], 1).unwrap();
     big.infer(&x_all, model.batch).unwrap();
@@ -253,8 +264,8 @@ fn inference_session_guards_its_contract() {
     let frozen = session.freeze(255.0).unwrap();
     let pix: usize = model.input_shape.iter().product();
 
-    assert!(InferenceSession::open(&frozen, 0).is_err(), "max_batch 0");
-    let mut infer = InferenceSession::open(&frozen, 8).unwrap();
+    assert!(InferenceSession::open(&frozen, &exact(0)).is_err(), "max_batch 0");
+    let mut infer = InferenceSession::open(&frozen, &exact(8)).unwrap();
     assert_eq!(infer.max_batch(), 8);
     assert_eq!(infer.meta().name, "mlp");
     assert_eq!(infer.act_levels(), Some(255.0));
@@ -267,10 +278,160 @@ fn inference_session_guards_its_contract() {
     // A truncated artifact (missing params) is rejected at open.
     let mut chopped = frozen.clone();
     chopped.params.pop();
-    let err = InferenceSession::open(&chopped, 1).unwrap_err();
+    let err = InferenceSession::open(&chopped, &exact(1)).unwrap_err();
     assert!(format!("{err}").contains("params"), "{err}");
     // An artifact naming an unknown graph is rejected.
     let mut renamed = frozen.clone();
     renamed.base = "resnet99".into();
-    assert!(InferenceSession::open(&renamed, 1).is_err());
+    assert!(InferenceSession::open(&renamed, &exact(1)).is_err());
+}
+
+/// Freeze a zoo model from a WaveQ session (beta pinned at `beta_init`,
+/// act levels 255) and round-trip the artifact through disk — the Int8
+/// tests serve exactly what a deployment would load.
+fn frozen_from_disk(rt: &Runtime, base: &str, seed: u64) -> FrozenModel {
+    let session = Session::open(
+        rt,
+        &SessionCfg {
+            train_program: format!("train_waveq_{base}"),
+            eval_program: format!("eval_quant_{base}"),
+            seed,
+            beta_init: 4.0,
+            preset_kw: None,
+        },
+    )
+    .unwrap();
+    let frozen = session.freeze(255.0).unwrap();
+    let path = std::env::temp_dir().join(format!("waveq_int8_{base}_{}.bin", std::process::id()));
+    frozen.save(&path).unwrap();
+    let frozen = FrozenModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    frozen
+}
+
+/// The Int8 tier's accuracy contract on whole networks: over lite
+/// held-out sets the integer-GEMM logits track the exact tier within a
+/// small fraction of the logit scale, and the predicted class agrees on
+/// >= 99% of examples (drift is dominated by single activation-grid code
+/// flips, which re-snap at every relu_quant layer and cannot compound
+/// into systematic argmax churn).
+#[test]
+fn int8_serving_agrees_with_exact_on_held_out_argmax() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "2");
+    let rt = Runtime::native();
+    for base in ["simplenet5", "resnet20l"] {
+        let frozen = frozen_from_disk(&rt, base, 42);
+        let mut ex = InferenceSession::open(&frozen, &exact(16)).unwrap();
+        let model = ex.meta().clone();
+        let mut iq = InferenceSession::open(&frozen, &int8(16)).unwrap();
+        assert_eq!(iq.precision(), Precision::Int8);
+        assert!(
+            iq.int_gemm_layers() > 0,
+            "{base}: the Int8 session must route at least one GEMM through integer codes"
+        );
+        assert_eq!(ex.int_gemm_layers(), 0, "{base}: Exact must never use the integer path");
+
+        let b = 16usize;
+        let (mut total, mut agree) = (0usize, 0usize);
+        let mut worst = 0.0f32;
+        let mut scale = 0.0f32;
+        for seed in 0..8u64 {
+            let (x, _y) = batch_data(&model, b, 100 + seed);
+            let le: Vec<f32> = ex.infer(&x, b).unwrap().to_vec();
+            let li: Vec<f32> = iq.infer(&x, b).unwrap().to_vec();
+            for v in &le {
+                scale = scale.max(v.abs());
+            }
+            for (a, b) in le.iter().zip(li.iter()) {
+                worst = worst.max((a - b).abs());
+            }
+            for r in 0..b {
+                let row_e = &le[r * model.num_classes..(r + 1) * model.num_classes];
+                let row_i = &li[r * model.num_classes..(r + 1) * model.num_classes];
+                let am = |row: &[f32]| {
+                    row.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0
+                };
+                total += 1;
+                if am(row_e) == am(row_i) {
+                    agree += 1;
+                }
+            }
+        }
+        // Logit drift stays a small fraction of the logit scale (code
+        // flips are one grid step; the GEMM's own error is ~1e-4 rel).
+        assert!(
+            worst <= 2e-2 * (1.0 + scale),
+            "{base}: int8 logits drifted {worst} vs exact scale {scale}"
+        );
+        let rate = agree as f64 / total as f64;
+        assert!(
+            rate >= 0.99,
+            "{base}: int8 argmax agreement {agree}/{total} = {rate:.4} < 0.99"
+        );
+    }
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+/// The integer path keeps the repo's bit-determinism contract: the exact
+/// same logits (to the bit) at `WAVEQ_THREADS` 1, 2, and 4, because the
+/// i32 accumulation chain is sequential in k inside every row shard.
+#[test]
+fn int8_serving_is_bitwise_deterministic_across_thread_counts() {
+    let _guard = env_lock();
+    let rt = Runtime::native();
+    let frozen = frozen_from_disk(&rt, "simplenet5", 6);
+    let mut iq = InferenceSession::open(&frozen, &int8(16)).unwrap();
+    assert!(iq.int_gemm_layers() > 0, "int path must be active for this test to mean anything");
+    let model = iq.meta().clone();
+    let pix: usize = model.input_shape.iter().product();
+    let (x, _y) = batch_data(&model, 16, 13);
+
+    std::env::set_var("WAVEQ_THREADS", "1");
+    let want: Vec<u32> =
+        iq.infer(&x[..16 * pix], 16).unwrap().iter().map(|v| v.to_bits()).collect();
+    for threads in ["2", "4"] {
+        std::env::set_var("WAVEQ_THREADS", threads);
+        let got: Vec<u32> =
+            iq.infer(&x[..16 * pix], 16).unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "int8 logits changed at WAVEQ_THREADS={threads}");
+    }
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+/// `InferCfg`'s default is the two-tier contract's safe end: Exact
+/// precision, and fp32 artifacts (no act grid) open under Int8 but route
+/// zero layers through the integer GEMM — the fallback tier is total.
+#[test]
+fn int8_on_an_fp32_artifact_falls_back_to_the_exact_path() {
+    let _guard = env_lock();
+    let rt = Runtime::native();
+    assert_eq!(InferCfg::default(), exact(1));
+    let session = Session::open(
+        &rt,
+        &SessionCfg {
+            train_program: "train_fp32_mlp".into(),
+            eval_program: "eval_fp32_mlp".into(),
+            seed: 9,
+            beta_init: 4.0,
+            preset_kw: None,
+        },
+    )
+    .unwrap();
+    let model = session.model().clone();
+    let frozen = session.freeze(255.0).unwrap();
+    assert_eq!(frozen.act_levels, None);
+    let mut iq = InferenceSession::open(&frozen, &int8(4)).unwrap();
+    assert_eq!(iq.precision(), Precision::Int8, "requested tier is recorded");
+    assert_eq!(iq.int_gemm_layers(), 0, "no act grid -> no integer-eligible layer");
+    let mut ex = InferenceSession::open(&frozen, &exact(4)).unwrap();
+    let pix: usize = model.input_shape.iter().product();
+    let (x, _y) = batch_data(&model, 4, 3);
+    let a: Vec<u32> = ex.infer(&x, 4).unwrap().iter().map(|v| v.to_bits()).collect();
+    let b: Vec<u32> = iq.infer(&x, 4).unwrap().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(a, b, "with zero eligible layers the tiers must agree bitwise");
 }

@@ -15,7 +15,8 @@ use std::time::Duration;
 
 use waveq::runtime::serve::{serve_tcp, TcpClient};
 use waveq::runtime::{
-    FrozenModel, InferenceSession, ModelMeta, Runtime, ServeCfg, Server, Session, SessionCfg,
+    FrozenModel, InferCfg, InferenceSession, ModelMeta, Precision, Runtime, ServeCfg, Server,
+    Session, SessionCfg,
 };
 use waveq::util::rng::Rng;
 
@@ -66,10 +67,15 @@ fn concurrent_tcp_clients_get_bits_identical_to_batch1_serial() {
     let xs = inputs(&meta, 16, 7);
 
     // Ground truth: every input served alone through a batch-1 session.
-    let mut one = InferenceSession::open(&frozen, 1).unwrap();
+    let mut one = InferenceSession::open(&frozen, &InferCfg::default()).unwrap();
     let want: Vec<Vec<u32>> = xs.iter().map(|x| bits(one.infer(x, 1).unwrap())).collect();
 
-    let cfg = ServeCfg { workers: 2, max_batch: 4, deadline: Duration::from_millis(2) };
+    let cfg = ServeCfg {
+        workers: 2,
+        max_batch: 4,
+        deadline: Duration::from_millis(2),
+        ..Default::default()
+    };
     let server = Server::start(&frozen, &cfg).unwrap();
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -82,6 +88,8 @@ fn concurrent_tcp_clients_get_bits_identical_to_batch1_serial() {
             joins.push(s.spawn(move || {
                 let mut conn = TcpClient::connect(addr).unwrap();
                 assert_eq!(conn.pixels(), pix);
+                assert_eq!(conn.precision(), Precision::Exact);
+                assert_eq!(conn.identity().model_label(), "simplenet5_w1");
                 for i in 0..per_client {
                     let k = (c + i * clients) % xs.len();
                     let got = bits(&conn.infer_one(&xs[k]).unwrap());
@@ -108,12 +116,17 @@ fn cross_request_batching_fills_batches_and_keeps_the_bits() {
     std::env::set_var("WAVEQ_THREADS", "2");
     let (meta, frozen) = freeze("mlp", 3);
     let xs = inputs(&meta, 8, 11);
-    let mut one = InferenceSession::open(&frozen, 1).unwrap();
+    let mut one = InferenceSession::open(&frozen, &InferCfg::default()).unwrap();
     let want: Vec<Vec<u32>> = xs.iter().map(|x| bits(one.infer(x, 1).unwrap())).collect();
 
     // One worker, a roomy deadline, and 8 barrier-released clients: the
     // gatherer must coalesce racing requests instead of serving each alone.
-    let cfg = ServeCfg { workers: 1, max_batch: 8, deadline: Duration::from_millis(200) };
+    let cfg = ServeCfg {
+        workers: 1,
+        max_batch: 8,
+        deadline: Duration::from_millis(200),
+        ..Default::default()
+    };
     let server = Server::start(&frozen, &cfg).unwrap();
     let barrier = Barrier::new(xs.len());
     std::thread::scope(|s| {
@@ -146,7 +159,8 @@ fn concurrent_inference_sessions_match_the_serial_bits() {
     let pix: usize = meta.input_shape.iter().product();
     let mut rng = Rng::new(9).split(0xBEEF);
     let x = rng.normal_vec(4 * pix, 1.0);
-    let mut serial = InferenceSession::open(&frozen, 4).unwrap();
+    let mut serial =
+        InferenceSession::open(&frozen, &InferCfg { max_batch: 4, ..Default::default() }).unwrap();
     let want = bits(serial.infer(&x, 4).unwrap());
 
     // Six threads each own a session over the same artifact and dispatch
@@ -156,7 +170,9 @@ fn concurrent_inference_sessions_match_the_serial_bits() {
         for t in 0..6usize {
             let (frozen, x, want) = (&frozen, &x, &want);
             s.spawn(move || {
-                let mut sess = InferenceSession::open(frozen, 4).unwrap();
+                let mut sess =
+                    InferenceSession::open(frozen, &InferCfg { max_batch: 4, ..Default::default() })
+                        .unwrap();
                 for round in 0..5usize {
                     let got = bits(sess.infer(x, 4).unwrap());
                     assert_eq!(&got, want, "thread {t} round {round}: bits differ");
@@ -179,7 +195,7 @@ fn serve_error_paths_are_clean_and_the_server_survives() {
         "workers=0 must be rejected"
     );
 
-    let cfg = ServeCfg { workers: 1, max_batch: 2, deadline: Duration::ZERO };
+    let cfg = ServeCfg { workers: 1, max_batch: 2, deadline: Duration::ZERO, ..Default::default() };
     let server = Server::start(&frozen, &cfg).unwrap();
     let client = server.client();
     assert_eq!(client.pixels(), pix);
@@ -197,10 +213,34 @@ fn serve_error_paths_are_clean_and_the_server_survives() {
         {
             use std::io::{Read, Write};
             let mut stream = std::net::TcpStream::connect(addr).unwrap();
-            let mut hello = [0u8; 12];
-            stream.read_exact(&mut hello).unwrap();
-            assert_eq!(&hello[..4], b"WQSV");
-            assert_eq!(u32::from_le_bytes(hello[4..8].try_into().unwrap()), pix as u32);
+            // The v2 hello, parsed raw: magic, version, pix, classes,
+            // precision byte, base name, width_mult, per-layer bits,
+            // int-GEMM layer count.
+            let mut fixed = [0u8; 17];
+            stream.read_exact(&mut fixed).unwrap();
+            let u32_at = |b: &[u8]| u32::from_le_bytes(b.try_into().unwrap());
+            assert_eq!(&fixed[..4], b"WQSV");
+            assert_eq!(u32_at(&fixed[4..8]), 2, "hello version");
+            assert_eq!(u32_at(&fixed[8..12]), pix as u32);
+            assert_eq!(u32_at(&fixed[12..16]) as usize, meta.num_classes);
+            assert_eq!(fixed[16], 0, "precision wire code: Exact");
+            let mut len4 = [0u8; 4];
+            stream.read_exact(&mut len4).unwrap();
+            let mut base = vec![0u8; u32_at(&len4) as usize];
+            stream.read_exact(&mut base).unwrap();
+            assert_eq!(std::str::from_utf8(&base).unwrap(), frozen.base);
+            let mut tail = [0u8; 8];
+            stream.read_exact(&mut tail).unwrap();
+            assert_eq!(u32_at(&tail[..4]) as usize, frozen.width_mult);
+            let mut layer_bits = vec![0u8; u32_at(&tail[4..8]) as usize];
+            stream.read_exact(&mut layer_bits).unwrap();
+            assert_eq!(
+                layer_bits,
+                frozen.layer_bits().iter().map(|&b| b as u8).collect::<Vec<u8>>()
+            );
+            let mut int_layers = [0u8; 4];
+            stream.read_exact(&mut int_layers).unwrap();
+            assert_eq!(u32_at(&int_layers), 0, "Exact serving advertises zero int GEMM layers");
             stream.write_all(&((pix + 1) as u32).to_le_bytes()).unwrap();
             let mut marker = [0u8; 4];
             stream.read_exact(&mut marker).unwrap();
@@ -222,6 +262,68 @@ fn serve_error_paths_are_clean_and_the_server_survives() {
         acceptor.join().unwrap().unwrap();
     });
     drop(client);
+    server.shutdown();
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+/// Int8 serving end to end: the server opens its workers on the integer
+/// tier, advertises that in the hello (clients see precision + the
+/// artifact's bit assignment + live int-GEMM layer count), and concurrent
+/// TCP responses are bitwise identical to a batch-1 serial Int8 session —
+/// the integer path keeps the same determinism contract as Exact.
+#[test]
+fn int8_tcp_serving_matches_the_int8_serial_bits() {
+    let _guard = env_lock();
+    std::env::set_var("WAVEQ_THREADS", "2");
+    let (meta, frozen) = freeze("simplenet5", 17);
+    let xs = inputs(&meta, 8, 23);
+
+    let icfg = InferCfg { max_batch: 1, precision: Precision::Int8 };
+    let mut one = InferenceSession::open(&frozen, &icfg).unwrap();
+    assert!(one.int_gemm_layers() > 0, "int path inactive — the test would prove nothing");
+    let want: Vec<Vec<u32>> = xs.iter().map(|x| bits(one.infer(x, 1).unwrap())).collect();
+
+    let cfg = ServeCfg {
+        workers: 2,
+        max_batch: 4,
+        deadline: Duration::from_millis(2),
+        precision: Precision::Int8,
+    };
+    let server = Server::start(&frozen, &cfg).unwrap();
+    assert_eq!(server.identity().precision, Precision::Int8);
+    assert_eq!(server.identity().int_gemm_layers, one.int_gemm_layers());
+    assert_eq!(
+        server.identity().layer_bits,
+        frozen.layer_bits().iter().map(|&b| b as u8).collect::<Vec<u8>>()
+    );
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (clients, per_client) = (4usize, 6usize);
+    std::thread::scope(|s| {
+        let acceptor = s.spawn(|| serve_tcp(&server, listener, Some(clients)));
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let (xs, want, server) = (&xs, &want, &server);
+            joins.push(s.spawn(move || {
+                let mut conn = TcpClient::connect(addr).unwrap();
+                assert_eq!(conn.precision(), Precision::Int8);
+                assert_eq!(conn.identity(), server.identity());
+                for i in 0..per_client {
+                    let k = (c + i * clients) % xs.len();
+                    let got = bits(&conn.infer_one(&xs[k]).unwrap());
+                    assert_eq!(got, want[k], "client {c} request {i} (input {k}): int8 bits");
+                }
+                conn.close().unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        acceptor.join().unwrap().unwrap();
+    });
+    let snap = server.stats();
+    assert_eq!(snap.requests, (clients * per_client) as u64);
+    assert_eq!(snap.identity.precision, Precision::Int8);
     server.shutdown();
     std::env::remove_var("WAVEQ_THREADS");
 }

@@ -24,8 +24,12 @@ pub enum Rule {
     /// No `HashMap`/`HashSet` in serialization/kernel/reduction files —
     /// iteration order is nondeterministic; use `BTreeMap`/`BTreeSet`.
     D2,
-    /// No float `.sum()` / `.product()` / `.fold()` in kernel files
-    /// outside the named fixed-order reduction helpers.
+    /// No `.sum()` / `.product()` / `.fold()` in kernel files outside the
+    /// named fixed-order reduction helpers — float reductions for
+    /// association order, integer reductions (the int8 GEMM's i32/i64
+    /// accumulation chains) for overflow/order discipline: every
+    /// accumulation order must be pinned by a named helper, not an
+    /// anonymous iterator chain.
     D3,
     /// Every `unsafe` carries a `// SAFETY:` justification, and
     /// `allow(unsafe_code)` appears only in `runtime/native/pool.rs`.
@@ -56,7 +60,7 @@ impl Rule {
         match self {
             Rule::D1 => "parallelism outside audited entry points",
             Rule::D2 => "hash-order nondeterminism in serialization/kernel code",
-            Rule::D3 => "float reduction outside fixed-order helpers",
+            Rule::D3 => "float/integer reduction outside fixed-order helpers",
             Rule::D4 => "unsafe without a SAFETY justification",
             Rule::D5 => "poison-propagating lock unwrap",
             Rule::D6 => "clock/env read in kernel code",
@@ -267,7 +271,7 @@ pub fn check_file(file: &str, scan: &Scan) -> FileFindings {
             );
         }
 
-        // ---- D3: fixed-order float reductions ----------------------------
+        // ---- D3: fixed-order reductions (float AND integer accumulators) -
         if kernel_file && !ctx[i].in_test && text == "." {
             if let Some(next) = tokens.get(i + 1) {
                 let name = next.text.as_str();
@@ -284,7 +288,9 @@ pub fn check_file(file: &str, scan: &Scan) -> FileFindings {
                         in_fn,
                         format!(
                             "iterator reduction `{pat}` in kernel fn `{fn_label}` — only the \
-                             named fixed-order helpers may reduce (allowlist fn= entries)"
+                             named fixed-order helpers may reduce, whether the accumulator \
+                             is float (association order) or i32/i64 (the int8 GEMM's \
+                             overflow/order discipline); allowlist fn= entries"
                         ),
                     );
                 }
