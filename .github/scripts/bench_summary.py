@@ -7,8 +7,9 @@ Consumes the machine-readable reports the `cargo bench` binaries emit
 (`bench_support::write_report`): BENCH_kernels.json (blocked vs scalar
 matmul/grad kernels, thread scaling), BENCH_runtime.json (per-program
 step latency across the model zoo), BENCH_infer.json (frozen-artifact
-serving throughput) and BENCH_serve.json (concurrent `waveq serve`
-latency/throughput vs batch-1 serial), plus AUDIT_report.json from
+serving throughput), BENCH_serve.json (concurrent `waveq serve`
+latency/throughput vs batch-1 serial) and BENCH_dist.json (distributed
+training: worker scaling + all-reduce cost), plus AUDIT_report.json from
 `cargo run -p waveq-audit` (determinism/safety rules D1-D6 and the
 unsafe inventory). Prints markdown to stdout; the perf-smoke and lint
 CI jobs append it to $GITHUB_STEP_SUMMARY.
@@ -131,6 +132,27 @@ def serve_table(report: dict) -> None:
     print()
 
 
+def dist_table(report: dict) -> None:
+    print("## Distributed training bench (tick coordinator, fixed-order all-reduce)")
+    print()
+    fused = report.get("fused_steps_per_s")
+    print(f"model: {report.get('model', '?')}, steps: {int(report.get('steps', 0))}, "
+          f"round_len: {int(report.get('round_len', 0))}, "
+          f"threads available: {int(report.get('threads_available', 1))} "
+          f"(WAVEQ_THREADS=1: parallelism is worker replicas, not kernel shards)")
+    print()
+    if fused is not None:
+        print(f"- fused single-process baseline: **{fused:.2f} steps/s**")
+        print()
+    print("| workers | steps/s | scaling vs 1 worker | all-reduce µs/step | replays |")
+    print("|---|---|---|---|---|")
+    for lane in report.get("lanes", []):
+        print(f"| {int(lane['workers'])} | {lane['steps_per_s']:.2f} | "
+              f"{lane['scaling_x']:.2f}x | {lane['allreduce_us_per_step']:.0f} | "
+              f"{int(lane.get('replays', 0))} |")
+    print()
+
+
 def audit_table(report: dict) -> None:
     clean = report.get("clean", False)
     verdict = "clean" if clean else "VIOLATIONS"
@@ -184,6 +206,10 @@ def main() -> int:
     serve = outdir / "BENCH_serve.json"
     if serve.exists():
         serve_table(json.loads(serve.read_text()))
+        found = True
+    dist = outdir / "BENCH_dist.json"
+    if dist.exists():
+        dist_table(json.loads(dist.read_text()))
         found = True
     if not found:
         print(f"no BENCH_*.json / AUDIT_report.json reports under {outdir}",

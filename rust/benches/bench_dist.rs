@@ -1,0 +1,112 @@
+//! Distributed training bench: the tick coordinator at 1 / 2 / 4 workers
+//! vs the fused single-process step — steps/s, scaling vs 1 worker, and
+//! the all-reduce cost per step. Emits `BENCH_dist.json` for the
+//! `perf-smoke` CI lane's step summary (`.github/scripts/bench_summary.py`).
+//!
+//! `WAVEQ_THREADS=1` is pinned *before* the first runtime comes up so the
+//! kernel pool shards stay on each calling thread: every dist worker then
+//! computes its chunk shard serially on its own replica thread, and the
+//! measured speedup is real data parallelism (coordinator fan-out), not
+//! the kernel pool's row sharding. The bit-identity contract makes the
+//! arithmetic identical across lanes — only the wall clock may differ.
+
+use std::time::Instant;
+
+use waveq::bench_support::{header, row, steps, write_report};
+use waveq::config::{Algo, RunConfig};
+use waveq::coordinator::{run_distributed, session_cfg, DistCfg, KnobPlan};
+use waveq::data::{spec_for_model, Batcher, Dataset, Prefetcher};
+use waveq::runtime::{Runtime, Session, StepKnobs};
+use waveq::util::json::Json;
+
+fn main() {
+    waveq::util::logging::init();
+    std::env::set_var("WAVEQ_THREADS", "1");
+    header("dist");
+    let rt = Runtime::native();
+    let n_steps = steps(40, 200);
+    let mut cfg = RunConfig {
+        model: "simplenet5".into(),
+        algo: Algo::WaveqLearned,
+        weight_bits: 4,
+        act_bits: 32,
+        steps: n_steps,
+        train_examples: 1024,
+        test_examples: 128,
+        lr: 0.05,
+        lr_beta: 0.05,
+        seed: 42,
+        ..Default::default()
+    };
+    cfg.schedule.total_steps = n_steps;
+    let knobs = StepKnobs {
+        lr: 0.05,
+        momentum: 0.9,
+        lr_beta: 0.01,
+        ka: 255.0,
+        lambda_w: 0.1,
+        lambda_beta: 0.01,
+        beta_train: 1.0,
+    };
+
+    // --- fused single-process baseline --------------------------------------
+    let model = rt.manifest.model(&cfg.algo.model_key(&cfg.model)).unwrap().clone();
+    let mut session = Session::open(&rt, &session_cfg(&cfg, model.num_qlayers)).unwrap();
+    let ds = Dataset::generate(spec_for_model(&model), cfg.train_examples, cfg.seed, 0);
+    let batcher = Batcher::new(ds, model.batch, cfg.seed).unwrap();
+    let mut prefetch = Prefetcher::spawn(batcher, 4, cfg.steps);
+    let t0 = Instant::now();
+    for _ in 0..cfg.steps {
+        let batch = prefetch.next().unwrap().unwrap();
+        session.step(&batch.x, &batch.y, &knobs).unwrap();
+    }
+    let fused_steps_per_s = cfg.steps as f64 / t0.elapsed().as_secs_f64();
+    drop(session);
+    row(&["dist", &cfg.model, "fused 1-process", &format!("{fused_steps_per_s:.2} steps/s")]);
+
+    // --- coordinator lanes ---------------------------------------------------
+    let mut lanes: Vec<Json> = Vec::new();
+    let mut base_steps_per_s = 0.0f64;
+    for &workers in &[1usize, 2, 4] {
+        let mut dcfg = DistCfg::new(workers);
+        dcfg.knobs = KnobPlan::Fixed(knobs.clone());
+        dcfg.quiet = true;
+        let out = run_distributed(&rt, &cfg, &dcfg).unwrap();
+        let steps_per_s = out.steps as f64 / out.train_secs;
+        if workers == 1 {
+            base_steps_per_s = steps_per_s;
+        }
+        let scaling = steps_per_s / base_steps_per_s;
+        let allreduce_us = out.allreduce_secs / out.steps as f64 * 1e6;
+        row(&[
+            "dist",
+            &cfg.model,
+            &format!("workers={workers}"),
+            &format!("{steps_per_s:.2} steps/s"),
+            &format!("{scaling:.2}x vs 1 worker"),
+            &format!("allreduce {allreduce_us:.0} us/step"),
+        ]);
+        lanes.push(Json::obj(vec![
+            ("workers", Json::Num(workers as f64)),
+            ("steps_per_s", Json::Num(steps_per_s)),
+            ("scaling_x", Json::Num(scaling)),
+            ("allreduce_us_per_step", Json::Num(allreduce_us)),
+            ("replays", Json::Num(out.replays as f64)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("dist".into())),
+        ("model", Json::Str(cfg.model.clone())),
+        (
+            "threads_available",
+            Json::Num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+        ),
+        ("scale", Json::Str(format!("{:?}", waveq::bench_support::scale()))),
+        ("steps", Json::Num(cfg.steps as f64)),
+        ("round_len", Json::Num(DistCfg::new(1).round_len as f64)),
+        ("fused_steps_per_s", Json::Num(fused_steps_per_s)),
+        ("lanes", Json::Arr(lanes)),
+    ]);
+    write_report("dist", &report).expect("write BENCH_dist.json");
+}

@@ -1,0 +1,775 @@
+//! Distributed data-parallel training: a tick-based coordinator over N
+//! in-process worker replicas with a bit-identical fixed-order all-reduce.
+//!
+//! ## Contract
+//!
+//! An N-worker run produces **exactly the bits** of the 1-worker run — the
+//! same parameters, velocities, beta/vbeta, and metrics after every step —
+//! for any worker count that divides the reduction grid, at any
+//! `WAVEQ_THREADS` setting, and across worker drop/rejoin. Three design
+//! choices carry that guarantee:
+//!
+//! 1. **The chunk grid, not the worker count, is the reduction unit.**
+//!    The global batch is cut into `kernels::GRAD_CHUNKS` fixed row chunks
+//!    (the same grid the fused single-process train step reduces over);
+//!    `data::shard_for` deals whole chunks to workers. Concatenating every
+//!    worker's shard in chunk order reconstructs the 1-worker batch.
+//! 2. **Fixed-order all-reduce.** Per-chunk gradients are combined by
+//!    `kernels::allreduce_fixed_order` in ascending chunk order — a left
+//!    fold per element, bitwise independent of which worker produced which
+//!    chunk or when it arrived.
+//! 3. **One shared optimizer step.** The coordinator broadcasts the
+//!    reduced gradients and every replica (workers and the coordinator's
+//!    own) applies the identical `apply_*` program, so replicas never
+//!    drift: any replica's state *is* the global state.
+//!
+//! ## Ticks, drops, rejoins
+//!
+//! Training advances in rounds of `round_len` steps (see
+//! [`state::RoundMachine`]). Each step is a tick: fan out `Step`
+//! directives, barrier on gradients, reduce, fan out `Apply`, barrier on
+//! acks. A worker that dies (send failure, `Fatal` reply, or its thread
+//! finishing while the barrier waits) is dropped at the tick barrier; the
+//! round is then **replayed** from the round-boundary snapshot with the
+//! surviving membership re-sharded — the cached round batches are re-fed,
+//! so the replayed arithmetic consumes the same bytes and the run's bits
+//! match an uninterrupted run with the final membership. A worker rejoins
+//! at a round boundary by loading the coordinator's state snapshot.
+
+pub mod state;
+pub mod worker;
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use self::state::{RoundMachine, RoundState};
+use self::worker::{ChunkGrads, FromWorker, Member, ToWorker};
+use super::bitwidth::BitAssignment;
+use super::trainer::{eval_session, session_cfg, step_knobs};
+use crate::config::{Algo, RunConfig};
+use crate::data::{shard_for, spec_for_model, Batch, Batcher, Dataset, Prefetcher};
+use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::native::kernels as kn;
+use crate::runtime::{Buffer, ModelMeta, Runtime, Session, SessionCfg, StepKnobs, StepMetrics};
+use crate::schedule::PhaseController;
+
+/// How each step's knobs are produced.
+#[derive(Debug, Clone)]
+pub enum KnobPlan {
+    /// The same knobs every step (bit-identity tests drive this).
+    Fixed(StepKnobs),
+    /// The trainer's schedule policy (`trainer::step_knobs`), including
+    /// freeze detection on the coordinator's replica.
+    Auto,
+}
+
+/// Deterministic fault injection for the drop/rejoin machinery. Real
+/// faults (worker panics) are detected the same way; chaos events exist so
+/// tests can pin *when* a drop lands and assert bit-identical replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosEvent {
+    /// Drop worker slot `worker` at the tick barrier before global step
+    /// `at_step` is dispatched.
+    Kill { worker: usize, at_step: usize },
+    /// Re-admit worker slot `worker` at the boundary entering round
+    /// `at_round` (it loads the coordinator's state snapshot).
+    Rejoin { worker: usize, at_round: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct DistCfg {
+    /// Worker replica count; must divide both the reduction grid
+    /// (`kernels::GRAD_CHUNKS`) and the model's batch size.
+    pub workers: usize,
+    /// Steps per round (the replay/checkpoint/rejoin granularity).
+    pub round_len: usize,
+    pub knobs: KnobPlan,
+    pub chaos: Vec<ChaosEvent>,
+    /// Save the coordinator's state here at every round boundary, stamped
+    /// with the number of completed rounds.
+    pub checkpoint: Option<PathBuf>,
+    pub quiet: bool,
+}
+
+impl DistCfg {
+    pub fn new(workers: usize) -> DistCfg {
+        DistCfg {
+            workers,
+            round_len: 20,
+            knobs: KnobPlan::Auto,
+            chaos: Vec::new(),
+            checkpoint: None,
+            quiet: false,
+        }
+    }
+}
+
+/// What a distributed run hands back (the dist analogue of
+/// `trainer::TrainOutcome`).
+pub struct DistOutcome {
+    /// Final global state (any replica's — they are bitwise equal; this is
+    /// the coordinator's).
+    pub state: crate::runtime::SessionState,
+    pub test_loss: f32,
+    pub test_acc: f32,
+    /// Per-step training loss/accuracy (post-replay: exactly one entry per
+    /// global step, replayed steps overwrite their first attempt).
+    pub loss: Vec<f32>,
+    pub acc: Vec<f32>,
+    pub freeze_step: Option<usize>,
+    pub steps: usize,
+    pub rounds: usize,
+    /// Workers lost / rounds replayed / workers re-admitted.
+    pub drops: usize,
+    pub replays: usize,
+    pub rejoins: usize,
+    pub train_secs: f64,
+    /// Wall-clock spent inside the fixed-order reduction.
+    pub allreduce_secs: f64,
+}
+
+/// Outcome of one barrier: either every live worker answered, or some
+/// died (by uid) and the round must replay.
+enum Tick<T> {
+    Complete(T),
+    Lost(Vec<usize>),
+}
+
+/// Run a full distributed training job. `rt` backs the coordinator's own
+/// replica (used for eval, checkpoints, freeze detection, and rejoin
+/// snapshots); each worker owns a private `Runtime`.
+pub fn run_distributed(rt: &Runtime, cfg: &RunConfig, dcfg: &DistCfg) -> Result<DistOutcome> {
+    if dcfg.workers == 0 {
+        return Err(anyhow!("--workers must be >= 1"));
+    }
+    if dcfg.round_len == 0 {
+        return Err(anyhow!("round length must be >= 1"));
+    }
+    if !rt.grad_stage() {
+        return Err(anyhow!(
+            "backend '{}' has no split grads/apply train stages; distributed training needs them",
+            rt.platform()
+        ));
+    }
+    if dcfg.workers > kn::GRAD_CHUNKS || !kn::GRAD_CHUNKS.is_multiple_of(dcfg.workers) {
+        return Err(anyhow!(
+            "--workers {} must divide the {}-chunk reduction grid (use 1, 2, or 4)",
+            dcfg.workers,
+            kn::GRAD_CHUNKS
+        ));
+    }
+    let model_key = cfg.algo.model_key(&cfg.model);
+    let model = rt.manifest.model(&model_key)?.clone();
+    if !model.batch.is_multiple_of(dcfg.workers) {
+        return Err(anyhow!(
+            "batch {} is not divisible by --workers {} (shards would be ragged)",
+            model.batch,
+            dcfg.workers
+        ));
+    }
+
+    let scfg = session_cfg(cfg, model.num_qlayers);
+    let mut own = Session::open(rt, &scfg)?;
+    own.enable_grad_stage(rt)?;
+
+    let dspec = spec_for_model(&model);
+    let train_ds = Dataset::generate(dspec, cfg.train_examples, cfg.seed, 0);
+    let batcher = Batcher::new(train_ds, model.batch, cfg.seed).map_err(|e| {
+        anyhow!("train stream for '{}': {e} (--train-examples too small?)", model.name)
+    })?;
+    let prefetch = Prefetcher::spawn(batcher, 4, cfg.steps);
+
+    let (from_tx, from_rx) = channel::<FromWorker>();
+    let mut coord = Coordinator {
+        cfg,
+        dcfg,
+        model,
+        scfg,
+        own,
+        members: Vec::new(),
+        from_tx,
+        from_rx,
+        next_uid: 0,
+        gen: 0,
+        controller: PhaseController::new(cfg.schedule.clone()),
+        freeze_step: None,
+        losses: Vec::with_capacity(cfg.steps),
+        accs: Vec::with_capacity(cfg.steps),
+        drops: 0,
+        replays: 0,
+        rejoins: 0,
+        allreduce: Duration::ZERO,
+    };
+    let result = coord.run(prefetch);
+    coord.shutdown();
+    result
+}
+
+struct Coordinator<'rt, 'c> {
+    cfg: &'c RunConfig,
+    dcfg: &'c DistCfg,
+    model: ModelMeta,
+    scfg: SessionCfg,
+    own: Session<'rt>,
+    /// Live workers, always sorted by slot; a worker's shard position is
+    /// its index here.
+    members: Vec<Member>,
+    from_tx: Sender<FromWorker>,
+    from_rx: Receiver<FromWorker>,
+    next_uid: usize,
+    /// Barrier generation: bumped on every membership change so replies
+    /// from before a replay are discarded.
+    gen: u64,
+    controller: PhaseController,
+    freeze_step: Option<usize>,
+    losses: Vec<f32>,
+    accs: Vec<f32>,
+    drops: usize,
+    replays: usize,
+    rejoins: usize,
+    allreduce: Duration,
+}
+
+impl Coordinator<'_, '_> {
+    fn run(&mut self, mut prefetch: Prefetcher) -> Result<DistOutcome> {
+        let t0 = Instant::now();
+
+        // ---- launch membership -------------------------------------------
+        for slot in 0..self.dcfg.workers {
+            self.admit(slot)?;
+        }
+        let uids: BTreeSet<usize> = self.members.iter().map(|m| m.uid).collect();
+        self.wait_ready(&uids)?;
+
+        let mut machine = RoundMachine::new(self.cfg.steps, self.dcfg.round_len);
+        machine.members_ready();
+        if !self.dcfg.quiet {
+            crate::info!(
+                "dist: {} workers over {} steps (rounds of {}, {} reduction chunks)",
+                self.members.len(),
+                self.cfg.steps,
+                self.dcfg.round_len,
+                kn::GRAD_CHUNKS
+            );
+        }
+
+        // ---- the round loop ----------------------------------------------
+        while !machine.is_done() {
+            match machine.state {
+                RoundState::Warmup | RoundState::RoundTrain => {
+                    self.run_round(&mut machine, &mut prefetch)?;
+                }
+                RoundState::Checkpoint => self.round_boundary(&mut machine)?,
+                s => return Err(anyhow!("coordinator in unexpected state {s:?}")),
+            }
+        }
+        let train_secs = t0.elapsed().as_secs_f64();
+
+        // ---- final eval on the coordinator's replica ----------------------
+        let (test_loss, test_acc) = eval_session(self.cfg, &mut self.own)?;
+        if !self.dcfg.quiet {
+            crate::info!(
+                "dist: done {} steps in {train_secs:.1}s ({:.1} steps/s) test_acc={test_acc:.4} \
+                 [drops {} replays {} rejoins {}]",
+                self.cfg.steps,
+                self.cfg.steps as f64 / train_secs,
+                self.drops,
+                self.replays,
+                self.rejoins
+            );
+        }
+        Ok(DistOutcome {
+            state: self.own.state().clone(),
+            test_loss,
+            test_acc,
+            loss: std::mem::take(&mut self.losses),
+            acc: std::mem::take(&mut self.accs),
+            freeze_step: self.freeze_step,
+            steps: self.cfg.steps,
+            rounds: machine.round,
+            drops: self.drops,
+            replays: self.replays,
+            rejoins: self.rejoins,
+            train_secs,
+            allreduce_secs: self.allreduce.as_secs_f64(),
+        })
+    }
+
+    /// Train one full round, replaying from the round-start snapshot on
+    /// every membership loss until the round completes.
+    fn run_round(&mut self, machine: &mut RoundMachine, prefetch: &mut Prefetcher) -> Result<()> {
+        let round = machine.round;
+        let round_start = machine.round_start();
+        let round_end = machine.round_end();
+
+        // Cache the round's batches once: a replay must re-feed the same
+        // bytes, and the prefetcher cannot rewind.
+        let mut batches = Vec::with_capacity(round_end - round_start);
+        for s in round_start..round_end {
+            batches.push(Arc::new(
+                prefetch
+                    .next()?
+                    .ok_or_else(|| anyhow!("data pipeline ended early at step {s}"))?,
+            ));
+        }
+        // Round-boundary snapshot: everything a replay must restore.
+        let snap_state = self.own.state().clone();
+        let snap_controller = self.controller.clone();
+        let snap_freeze = self.freeze_step;
+
+        'attempt: loop {
+            for (i, batch) in batches.iter().enumerate() {
+                let step = round_start + i;
+                // Injected drops land at the tick barrier, before dispatch.
+                let killed = self.chaos_kills_at(step);
+                if !killed.is_empty() {
+                    self.kill_members(&killed);
+                    self.restore(&snap_state, &snap_controller, snap_freeze, round_start)?;
+                    machine.replay();
+                    continue 'attempt;
+                }
+                let knobs = match &self.dcfg.knobs {
+                    KnobPlan::Fixed(k) => k.clone(),
+                    KnobPlan::Auto => step_knobs(self.cfg, &self.controller, None, step),
+                };
+                match self.run_step(round, step, batch, &knobs)? {
+                    Tick::Complete(m) => {
+                        if !m.loss.is_finite() {
+                            return Err(anyhow!("dist: loss diverged (NaN/inf) at step {step}"));
+                        }
+                        self.losses.push(m.loss);
+                        self.accs.push(m.acc);
+                        self.observe_freeze(step);
+                        machine.step_done();
+                    }
+                    Tick::Lost(dead) => {
+                        self.reap(&dead);
+                        self.restore(&snap_state, &snap_controller, snap_freeze, round_start)?;
+                        machine.replay();
+                        continue 'attempt;
+                    }
+                }
+            }
+            return Ok(()); // round completed (machine is now in Checkpoint)
+        }
+    }
+
+    /// One tick: fan out the grad stage by shard, barrier + reduce in
+    /// fixed chunk order, broadcast the apply, barrier on acks.
+    fn run_step(
+        &mut self,
+        round: usize,
+        step: usize,
+        batch: &Arc<Batch>,
+        knobs: &StepKnobs,
+    ) -> Result<Tick<StepMetrics>> {
+        let denom = self.model.batch as f32;
+        let n_live = self.members.len();
+        let mut dead = Vec::new();
+        for (pos, m) in self.members.iter().enumerate() {
+            let chunks = shard_for(round, pos, n_live, kn::GRAD_CHUNKS);
+            let msg = ToWorker::Step {
+                gen: self.gen,
+                step,
+                denom,
+                chunks,
+                batch: Arc::clone(batch),
+                knobs: knobs.clone(),
+            };
+            if m.tx.send(msg).is_err() {
+                dead.push(m.uid);
+            }
+        }
+        if !dead.is_empty() {
+            return Ok(Tick::Lost(dead));
+        }
+
+        // ---- gradient barrier --------------------------------------------
+        let mut by_chunk: Vec<Option<ChunkGrads>> = vec![None; kn::GRAD_CHUNKS];
+        let mut pending: BTreeSet<usize> = self.members.iter().map(|m| m.uid).collect();
+        while !pending.is_empty() {
+            match self.recv(&pending)? {
+                Tick::Complete(FromWorker::Grads { worker, gen, step: s, parts })
+                    if gen == self.gen && s == step =>
+                {
+                    pending.remove(&worker);
+                    for p in parts {
+                        if p.chunk >= by_chunk.len() {
+                            return Err(anyhow!("worker returned chunk {} out of grid", p.chunk));
+                        }
+                        by_chunk[p.chunk] = Some(p);
+                    }
+                }
+                Tick::Complete(_) => {} // stale generation/step: discard
+                Tick::Lost(d) => return Ok(Tick::Lost(d)),
+            }
+        }
+
+        // ---- fixed-order all-reduce --------------------------------------
+        let t0 = Instant::now();
+        let (grads, ce_sum, acc_cnt) = self.reduce(&by_chunk)?;
+        self.allreduce += t0.elapsed();
+
+        // ---- shared apply -------------------------------------------------
+        let grads = Arc::new(grads);
+        for m in &self.members {
+            let msg = ToWorker::Apply {
+                gen: self.gen,
+                grads: Arc::clone(&grads),
+                ce_sum,
+                acc_cnt,
+                denom,
+                knobs: knobs.clone(),
+            };
+            if m.tx.send(msg).is_err() {
+                dead.push(m.uid);
+            }
+        }
+        if !dead.is_empty() {
+            return Ok(Tick::Lost(dead));
+        }
+        let metrics = self.own.apply_update(&grads, ce_sum, acc_cnt, denom, knobs)?;
+        let mut pending: BTreeSet<usize> = self.members.iter().map(|m| m.uid).collect();
+        while !pending.is_empty() {
+            match self.recv(&pending)? {
+                Tick::Complete(FromWorker::Applied { worker, gen }) if gen == self.gen => {
+                    pending.remove(&worker);
+                }
+                Tick::Complete(_) => {}
+                Tick::Lost(d) => return Ok(Tick::Lost(d)),
+            }
+        }
+        Ok(Tick::Complete(metrics))
+    }
+
+    /// Combine the collected per-chunk gradients in ascending chunk order
+    /// through the named fixed-order helper — the arithmetic twin of the
+    /// fused train step's internal reduction.
+    fn reduce(&self, by_chunk: &[Option<ChunkGrads>]) -> Result<(Vec<Buffer>, f32, f32)> {
+        for (c, slot) in by_chunk.iter().enumerate() {
+            let (lo, hi) = kn::chunk_rows(c, self.model.batch);
+            if lo != hi && slot.is_none() {
+                return Err(anyhow!("reduction chunk {c} missing after the gradient barrier"));
+            }
+        }
+        // Indexed by chunk, so iteration order IS ascending chunk order.
+        let present: Vec<&ChunkGrads> = by_chunk.iter().flatten().collect();
+        let mut grads = Vec::with_capacity(self.model.params.len());
+        for (j, p) in self.model.params.iter().enumerate() {
+            let n: usize = p.shape.iter().product();
+            let mut dst = vec![0.0f32; n];
+            let parts: Vec<&[f32]> = present.iter().map(|g| g.grads[j].as_slice()).collect();
+            kn::allreduce_fixed_order(&mut dst, &parts);
+            grads.push(Buffer::new(p.shape.clone(), dst)?);
+        }
+        let ces: Vec<[f32; 1]> = present.iter().map(|g| [g.ce_sum]).collect();
+        let accs: Vec<[f32; 1]> = present.iter().map(|g| [g.acc_cnt]).collect();
+        let mut ce_sum = 0.0f32;
+        let mut acc_cnt = 0.0f32;
+        kn::allreduce_fixed_order(
+            std::slice::from_mut(&mut ce_sum),
+            &ces.iter().map(|a| &a[..]).collect::<Vec<_>>(),
+        );
+        kn::allreduce_fixed_order(
+            std::slice::from_mut(&mut acc_cnt),
+            &accs.iter().map(|a| &a[..]).collect::<Vec<_>>(),
+        );
+        Ok((grads, ce_sum, acc_cnt))
+    }
+
+    /// Learned-mode freeze detection on the coordinator's replica, then
+    /// broadcast the snapped beta so every worker replica snaps the same
+    /// bits (matches `Trainer::run`'s post-step observation).
+    fn observe_freeze(&mut self, step: usize) {
+        if !matches!(self.dcfg.knobs, KnobPlan::Auto)
+            || self.cfg.algo != Algo::WaveqLearned
+            || self.freeze_step.is_some()
+        {
+            return;
+        }
+        if !self.controller.observe_beta(step, &self.own.state().beta) {
+            return;
+        }
+        self.freeze_step = Some(step);
+        let assign = BitAssignment::from_beta(&self.own.state().beta);
+        let snapped = assign.snapped_beta();
+        let st = self.own.state_mut();
+        st.beta = snapped.clone();
+        st.vbeta = vec![0.0; st.vbeta.len()];
+        for m in &self.members {
+            // A failed send means the worker died; the next tick barrier
+            // detects it and the round replays past this point anyway.
+            let _ = m.tx.send(ToWorker::SnapBeta { beta: snapped.clone() });
+        }
+        if !self.dcfg.quiet {
+            crate::info!(
+                "dist: beta frozen at step {step} -> bits {:?} (avg {:.2})",
+                assign.bits,
+                assign.average_bits()
+            );
+        }
+    }
+
+    /// Round boundary: persist the coordinator's state, admit scheduled
+    /// rejoins, advance the machine.
+    fn round_boundary(&mut self, machine: &mut RoundMachine) -> Result<()> {
+        let completed_rounds = machine.round + 1;
+        if let Some(path) = &self.dcfg.checkpoint {
+            Checkpoint::from_state(&self.model, self.own.state())?
+                .with_round(completed_rounds)
+                .save(path)?;
+        }
+        let joining: Vec<usize> = self
+            .dcfg
+            .chaos
+            .iter()
+            .filter_map(|e| match e {
+                ChaosEvent::Rejoin { worker, at_round } if *at_round == completed_rounds => {
+                    Some(*worker)
+                }
+                _ => None,
+            })
+            .collect();
+        for slot in joining {
+            if self.members.iter().any(|m| m.slot == slot) {
+                continue; // already live
+            }
+            let uid = self.admit(slot)?;
+            self.wait_ready(&BTreeSet::from([uid]))?;
+            self.gen += 1;
+            let snapshot = Arc::new(self.own.state().clone());
+            let m = self
+                .members
+                .iter()
+                .find(|m| m.uid == uid)
+                .ok_or_else(|| anyhow!("rejoined worker {slot} vanished"))?;
+            m.tx.send(ToWorker::Load { gen: self.gen, state: snapshot })
+                .map_err(|_| anyhow!("rejoined worker {slot} died before loading state"))?;
+            self.wait_loaded(uid)?;
+            self.rejoins += 1;
+            if !self.dcfg.quiet {
+                crate::info!("dist: worker {slot} rejoined at round {completed_rounds}");
+            }
+        }
+        machine.checkpoint_done();
+        Ok(())
+    }
+
+    // ---- membership ------------------------------------------------------
+
+    /// Spawn a worker into `slot`, keeping `members` sorted by slot.
+    /// Returns its uid.
+    fn admit(&mut self, slot: usize) -> Result<usize> {
+        let uid = self.next_uid;
+        self.next_uid += 1;
+        let member = Member::spawn(slot, uid, self.scfg.clone(), self.from_tx.clone())?;
+        let at = self.members.partition_point(|m| m.slot < slot);
+        self.members.insert(at, member);
+        Ok(uid)
+    }
+
+    fn chaos_kills_at(&self, step: usize) -> Vec<usize> {
+        self.dcfg
+            .chaos
+            .iter()
+            .filter_map(|e| match e {
+                ChaosEvent::Kill { worker, at_step } if *at_step == step => Some(*worker),
+                _ => None,
+            })
+            .filter(|slot| self.members.iter().any(|m| m.slot == *slot))
+            .collect()
+    }
+
+    /// Cleanly stop chaos-killed members (by slot) and reap them.
+    fn kill_members(&mut self, slots: &[usize]) {
+        let uids: Vec<usize> = self
+            .members
+            .iter()
+            .filter(|m| slots.contains(&m.slot))
+            .map(|m| m.uid)
+            .collect();
+        for m in self.members.iter().filter(|m| uids.contains(&m.uid)) {
+            let _ = m.tx.send(ToWorker::Exit);
+        }
+        self.reap(&uids);
+        if !self.dcfg.quiet {
+            crate::warnlog!("dist: dropped worker slots {slots:?}; replaying the round");
+        }
+    }
+
+    /// Remove dead members (by uid) from the membership and join their
+    /// threads.
+    fn reap(&mut self, uids: &[usize]) {
+        let mut kept = Vec::with_capacity(self.members.len());
+        for m in self.members.drain(..) {
+            if uids.contains(&m.uid) {
+                self.drops += 1;
+                if let Err(payload) = m.handle.join() {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .map(String::as_str)
+                        .or_else(|| payload.downcast_ref::<&'static str>().copied())
+                        .unwrap_or("(non-string panic payload)");
+                    if !self.dcfg.quiet {
+                        crate::warnlog!("dist: worker slot {} panicked: {msg}", m.slot);
+                    }
+                }
+            } else {
+                kept.push(m);
+            }
+        }
+        self.members = kept;
+    }
+
+    /// Restore the round-start snapshot everywhere after a membership
+    /// loss: roll back the coordinator's replica, schedule controller, and
+    /// metric series, then barrier every surviving worker on a state load.
+    fn restore(
+        &mut self,
+        snap_state: &crate::runtime::SessionState,
+        snap_controller: &PhaseController,
+        snap_freeze: Option<usize>,
+        round_start: usize,
+    ) -> Result<()> {
+        self.replays += 1;
+        *self.own.state_mut() = snap_state.clone();
+        self.controller = snap_controller.clone();
+        self.freeze_step = snap_freeze;
+        self.losses.truncate(round_start);
+        self.accs.truncate(round_start);
+        loop {
+            if self.members.is_empty() {
+                return Err(anyhow!("dist: every worker died; cannot continue the round"));
+            }
+            self.gen += 1;
+            let snapshot = Arc::new(snap_state.clone());
+            let mut dead = Vec::new();
+            for m in &self.members {
+                if m.tx
+                    .send(ToWorker::Load { gen: self.gen, state: Arc::clone(&snapshot) })
+                    .is_err()
+                {
+                    dead.push(m.uid);
+                }
+            }
+            if dead.is_empty() {
+                let mut pending: BTreeSet<usize> = self.members.iter().map(|m| m.uid).collect();
+                let mut lost = Vec::new();
+                while !pending.is_empty() && lost.is_empty() {
+                    match self.recv(&pending)? {
+                        Tick::Complete(FromWorker::Loaded { worker, gen }) if gen == self.gen => {
+                            pending.remove(&worker);
+                        }
+                        Tick::Complete(_) => {}
+                        Tick::Lost(d) => lost = d,
+                    }
+                }
+                if lost.is_empty() {
+                    return Ok(());
+                }
+                dead = lost;
+            }
+            self.reap(&dead);
+        }
+    }
+
+    // ---- barriers --------------------------------------------------------
+
+    /// Receive one message from a *current* member, translating worker
+    /// death (Fatal, disconnect, or a thread in `pending` discovered
+    /// finished on timeout) into `Tick::Lost`. Stragglers from reaped
+    /// incarnations are dropped here; deciding whether a returned message
+    /// satisfies the barrier (right generation/step/kind) is the caller's
+    /// job — `recv` never touches `pending`.
+    fn recv(&self, pending: &BTreeSet<usize>) -> Result<Tick<FromWorker>> {
+        loop {
+            match self.from_rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(FromWorker::Fatal { worker, msg }) => {
+                    if self.members.iter().any(|m| m.uid == worker) {
+                        if !self.dcfg.quiet {
+                            crate::warnlog!("dist: worker uid {worker} failed: {msg}");
+                        }
+                        return Ok(Tick::Lost(vec![worker]));
+                    }
+                }
+                Ok(m) => {
+                    let uid = match &m {
+                        FromWorker::Ready { worker }
+                        | FromWorker::Grads { worker, .. }
+                        | FromWorker::Applied { worker, .. }
+                        | FromWorker::Loaded { worker, .. }
+                        | FromWorker::Fatal { worker, .. } => *worker,
+                    };
+                    if !self.members.iter().any(|m| m.uid == uid) {
+                        continue; // straggler from a reaped incarnation
+                    }
+                    return Ok(Tick::Complete(m));
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    let dead: Vec<usize> = self
+                        .members
+                        .iter()
+                        .filter(|m| pending.contains(&m.uid) && m.handle.is_finished())
+                        .map(|m| m.uid)
+                        .collect();
+                    if !dead.is_empty() {
+                        return Ok(Tick::Lost(dead));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("dist: every worker channel disconnected"));
+                }
+            }
+        }
+    }
+
+    /// Barrier on `Ready` from each uid in `expect` (launch / rejoin).
+    fn wait_ready(&self, expect: &BTreeSet<usize>) -> Result<()> {
+        let mut pending = expect.clone();
+        while !pending.is_empty() {
+            match self.recv(&pending)? {
+                Tick::Complete(FromWorker::Ready { worker }) => {
+                    pending.remove(&worker);
+                }
+                Tick::Complete(_) => {}
+                Tick::Lost(dead) => {
+                    return Err(anyhow!("dist: worker(s) {dead:?} died before becoming ready"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn wait_loaded(&self, uid: usize) -> Result<()> {
+        let mut pending = BTreeSet::from([uid]);
+        while !pending.is_empty() {
+            match self.recv(&pending)? {
+                Tick::Complete(FromWorker::Loaded { worker, gen })
+                    if gen == self.gen && worker == uid =>
+                {
+                    pending.remove(&worker);
+                }
+                Tick::Complete(_) => {}
+                Tick::Lost(dead) => {
+                    return Err(anyhow!("dist: worker(s) {dead:?} died while loading state"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop every remaining worker (end of run or error unwind).
+    fn shutdown(&mut self) {
+        for m in &self.members {
+            let _ = m.tx.send(ToWorker::Exit);
+        }
+        for m in self.members.drain(..) {
+            let _ = m.handle.join();
+        }
+    }
+}

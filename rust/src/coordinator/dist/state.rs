@@ -1,0 +1,207 @@
+//! The coordinator's round state machine, kept pure (no channels, no
+//! sessions) so every transition is unit-testable and the run loop in
+//! `dist::run_distributed` only *reads* decisions off it.
+//!
+//! States:
+//!   WaitingForMembers --members_ready--> Warmup (LR-ramp steps)
+//!   Warmup --step_done (past warmup)--> RoundTrain
+//!   RoundTrain --step_done (round boundary)--> Checkpoint
+//!   Checkpoint --checkpoint_done--> RoundTrain | Warmup | Done
+//!
+//! A worker drop mid-round calls [`RoundMachine::replay`], which rewinds
+//! the step cursor to the current round's first step without leaving the
+//! training states — re-sharding and state restoration are the run loop's
+//! job; the machine only guarantees the cursor lands exactly on the round
+//! boundary the snapshots were taken at.
+
+/// Linear LR warmup horizon (steps), matching `trainer::step_knobs`.
+pub const WARMUP_STEPS: usize = 30;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundState {
+    /// Blocked until every launch worker reports Ready.
+    WaitingForMembers,
+    /// Training inside the LR-warmup horizon (steps < `warmup_steps`).
+    Warmup,
+    /// Steady-state training inside a round.
+    RoundTrain,
+    /// At a round boundary: persist state, admit rejoins, re-shard.
+    Checkpoint,
+    /// All steps trained and the final boundary handled.
+    Done,
+}
+
+#[derive(Debug, Clone)]
+pub struct RoundMachine {
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    pub round_len: usize,
+    pub state: RoundState,
+    /// Next step to train (global step index).
+    pub step: usize,
+    /// Current round index; round r covers steps
+    /// `[r * round_len, min((r+1) * round_len, total_steps))`.
+    pub round: usize,
+}
+
+impl RoundMachine {
+    pub fn new(total_steps: usize, round_len: usize) -> RoundMachine {
+        assert!(round_len >= 1, "round_len must be >= 1");
+        RoundMachine {
+            total_steps,
+            warmup_steps: WARMUP_STEPS,
+            round_len,
+            state: RoundState::WaitingForMembers,
+            step: 0,
+            round: 0,
+        }
+    }
+
+    fn train_state(&self) -> RoundState {
+        if self.step < self.warmup_steps {
+            RoundState::Warmup
+        } else {
+            RoundState::RoundTrain
+        }
+    }
+
+    pub fn round_start(&self) -> usize {
+        self.round * self.round_len
+    }
+
+    pub fn round_end(&self) -> usize {
+        ((self.round + 1) * self.round_len).min(self.total_steps)
+    }
+
+    /// All launch members reported Ready: enter training.
+    pub fn members_ready(&mut self) {
+        assert_eq!(self.state, RoundState::WaitingForMembers, "members_ready from {:?}", self.state);
+        self.state = if self.total_steps == 0 { RoundState::Done } else { self.train_state() };
+    }
+
+    /// One global step trained and applied everywhere.
+    pub fn step_done(&mut self) {
+        assert!(
+            matches!(self.state, RoundState::Warmup | RoundState::RoundTrain),
+            "step_done from {:?}",
+            self.state
+        );
+        self.step += 1;
+        self.state =
+            if self.step >= self.round_end() { RoundState::Checkpoint } else { self.train_state() };
+    }
+
+    /// Round boundary handled (checkpoint written, rejoins admitted).
+    pub fn checkpoint_done(&mut self) {
+        assert_eq!(self.state, RoundState::Checkpoint, "checkpoint_done from {:?}", self.state);
+        self.round += 1;
+        self.state =
+            if self.step >= self.total_steps { RoundState::Done } else { self.train_state() };
+    }
+
+    /// A member dropped mid-round: rewind the cursor to the round's first
+    /// step (where the replay snapshots were taken).
+    pub fn replay(&mut self) {
+        assert!(
+            matches!(self.state, RoundState::Warmup | RoundState::RoundTrain),
+            "replay from {:?}",
+            self.state
+        );
+        self.step = self.round_start();
+        self.state = self.train_state();
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == RoundState::Done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walks_waiting_warmup_roundtrain_checkpoint_done() {
+        // 5 steps, rounds of 2, warmup shrunk to 3 for the test.
+        let mut m = RoundMachine::new(5, 2);
+        m.warmup_steps = 3;
+        assert_eq!(m.state, RoundState::WaitingForMembers);
+        m.members_ready();
+        let mut seen = vec![m.state];
+        while !m.is_done() {
+            match m.state {
+                RoundState::Warmup | RoundState::RoundTrain => m.step_done(),
+                RoundState::Checkpoint => m.checkpoint_done(),
+                s => panic!("unexpected state {s:?}"),
+            }
+            seen.push(m.state);
+        }
+        use RoundState::*;
+        assert_eq!(
+            seen,
+            vec![
+                Warmup,     // step 0
+                Warmup,     // step 1
+                Checkpoint, // round 0 boundary (steps 0..2)
+                Warmup,     // step 2
+                RoundTrain, // step 3 (past warmup)
+                Checkpoint, // round 1 boundary (steps 2..4)
+                RoundTrain, // step 4
+                Checkpoint, // round 2 boundary (ragged: step 4 only)
+                Done,
+            ]
+        );
+        assert_eq!((m.step, m.round), (5, 3));
+    }
+
+    #[test]
+    fn round_boundaries_cover_the_step_range_exactly() {
+        let mut m = RoundMachine::new(13, 5);
+        m.members_ready();
+        let mut covered = Vec::new();
+        while !m.is_done() {
+            assert_eq!(m.step, m.round_start().max(covered.len()));
+            let (lo, hi) = (m.round_start(), m.round_end());
+            assert!(lo < hi && hi <= 13);
+            for s in lo..hi {
+                covered.push(s);
+                m.step_done();
+            }
+            assert_eq!(m.state, RoundState::Checkpoint);
+            m.checkpoint_done();
+        }
+        assert_eq!(covered, (0..13).collect::<Vec<_>>());
+        assert_eq!(m.round, 3, "13 steps at round_len 5 = rounds of 5/5/3");
+    }
+
+    #[test]
+    fn replay_rewinds_to_the_round_start_only() {
+        let mut m = RoundMachine::new(20, 4);
+        m.warmup_steps = 0;
+        m.members_ready();
+        // Finish round 0, then walk 3 steps into round 1.
+        for _ in 0..4 {
+            m.step_done();
+        }
+        m.checkpoint_done();
+        for _ in 0..3 {
+            m.step_done();
+        }
+        assert_eq!((m.round, m.step), (1, 7));
+        m.replay();
+        assert_eq!((m.round, m.step), (1, 4), "cursor lands on round 1's first step");
+        assert_eq!(m.state, RoundState::RoundTrain);
+        // The replayed round then completes normally.
+        for _ in 0..4 {
+            m.step_done();
+        }
+        assert_eq!(m.state, RoundState::Checkpoint);
+    }
+
+    #[test]
+    fn zero_steps_finishes_at_members_ready() {
+        let mut m = RoundMachine::new(0, 4);
+        m.members_ready();
+        assert!(m.is_done());
+    }
+}

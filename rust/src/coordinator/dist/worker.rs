@@ -1,0 +1,199 @@
+//! One in-process data-parallel worker: a dedicated thread owning its own
+//! `Runtime` + grad-stage [`Session`] replica, driven tick-by-tick over
+//! mpsc channels by the coordinator in `dist`.
+//!
+//! A worker never touches the data pipeline or the schedule: the
+//! coordinator ships it the shared global batch (an `Arc`), the chunk
+//! range it owns this round, and the already-resolved step knobs. The
+//! worker's only arithmetic is the grad stage over its chunks and the
+//! shared apply — both routed through the same native-backend programs the
+//! single-process path runs, which is what makes every replica's state
+//! bitwise equal to the fused 1-worker run.
+
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Batch;
+use crate::runtime::native::kernels as kn;
+use crate::runtime::native::pool;
+use crate::runtime::{Buffer, Runtime, Session, SessionCfg, SessionState, StepKnobs};
+
+/// The gradients one worker produced for one reduction chunk of the
+/// global batch (data vectors in manifest parameter order), plus the
+/// unnormalized CE parts of its rows.
+#[derive(Debug, Clone)]
+pub struct ChunkGrads {
+    pub chunk: usize,
+    pub grads: Vec<Vec<f32>>,
+    pub ce_sum: f32,
+    pub acc_cnt: f32,
+}
+
+/// Coordinator -> worker directives. Channel order is the tick order: a
+/// worker handles each directive to completion before the next, so the
+/// coordinator's FIFO *is* the barrier structure.
+pub enum ToWorker {
+    /// Run the grad stage over the owned `chunks` of `batch`.
+    Step {
+        gen: u64,
+        step: usize,
+        denom: f32,
+        chunks: Range<usize>,
+        batch: Arc<Batch>,
+        knobs: StepKnobs,
+    },
+    /// Apply the chunk-reduced update shared by every replica.
+    Apply {
+        gen: u64,
+        grads: Arc<Vec<Buffer>>,
+        ce_sum: f32,
+        acc_cnt: f32,
+        denom: f32,
+        knobs: StepKnobs,
+    },
+    /// Overwrite the replica state (round replay / rejoin admission).
+    Load { gen: u64, state: Arc<SessionState> },
+    /// Beta froze on the coordinator: snap it here too (learned mode).
+    SnapBeta { beta: Vec<f32> },
+    Exit,
+}
+
+/// Worker -> coordinator replies. `gen` echoes the directive's generation
+/// so replies from before a replay/membership change are discarded.
+pub enum FromWorker {
+    Ready { worker: usize },
+    Grads { worker: usize, gen: u64, step: usize, parts: Vec<ChunkGrads> },
+    Applied { worker: usize, gen: u64 },
+    Loaded { worker: usize, gen: u64 },
+    Fatal { worker: usize, msg: String },
+}
+
+/// A live worker as the coordinator sees it. `slot` is the stable worker
+/// identity (what chaos events and logs name, reused across rejoins);
+/// `uid` is unique per incarnation, so stragglers from a dead worker's
+/// first life can never be mistaken for its rejoined successor.
+pub struct Member {
+    pub slot: usize,
+    pub uid: usize,
+    pub tx: Sender<ToWorker>,
+    pub handle: JoinHandle<()>,
+}
+
+impl Member {
+    /// Spawn a worker thread with its own runtime + session replica. The
+    /// worker sends `Ready` once its session is open (or `Fatal` if the
+    /// open fails) and then serves directives until `Exit` or channel
+    /// close.
+    pub fn spawn(
+        slot: usize,
+        uid: usize,
+        scfg: SessionCfg,
+        to_coord: Sender<FromWorker>,
+    ) -> Result<Member> {
+        let (tx, rx) = channel::<ToWorker>();
+        let handle = pool::spawn_worker(&format!("waveq-dist-{slot}"), move || {
+            worker_main(uid, scfg, &rx, &to_coord);
+        })
+        .map_err(|e| anyhow!("spawning dist worker {slot}: {e}"))?;
+        Ok(Member { slot, uid, tx, handle })
+    }
+}
+
+fn worker_main(uid: usize, scfg: SessionCfg, rx: &Receiver<ToWorker>, tx: &Sender<FromWorker>) {
+    let id = uid; // messages identify this incarnation by uid
+    // Each worker owns a full Runtime: the native backend's interior state
+    // is single-threaded by design, and program "compilation" is a
+    // manifest lookup, so replicas are cheap and fully isolated.
+    let rt = Runtime::native();
+    let mut session = match open_replica(&rt, &scfg) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = tx.send(FromWorker::Fatal { worker: id, msg: e.to_string() });
+            return;
+        }
+    };
+    let mut outs = session.grad_outputs();
+    if tx.send(FromWorker::Ready { worker: id }).is_err() {
+        return;
+    }
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return, // coordinator gone
+        };
+        let reply = match msg {
+            ToWorker::Step { gen, step, denom, chunks, batch, knobs } => {
+                match step_grads(&session, &mut outs, &chunks, &batch, &knobs, denom) {
+                    Ok(parts) => FromWorker::Grads { worker: id, gen, step, parts },
+                    Err(e) => FromWorker::Fatal { worker: id, msg: e.to_string() },
+                }
+            }
+            ToWorker::Apply { gen, grads, ce_sum, acc_cnt, denom, knobs } => {
+                match session.apply_update(&grads, ce_sum, acc_cnt, denom, &knobs) {
+                    Ok(_) => FromWorker::Applied { worker: id, gen },
+                    Err(e) => FromWorker::Fatal { worker: id, msg: e.to_string() },
+                }
+            }
+            ToWorker::Load { gen, state } => {
+                *session.state_mut() = (*state).clone();
+                FromWorker::Loaded { worker: id, gen }
+            }
+            ToWorker::SnapBeta { beta } => {
+                let st = session.state_mut();
+                st.beta = beta;
+                st.vbeta = vec![0.0; st.vbeta.len()];
+                continue; // no reply: FIFO order covers it
+            }
+            ToWorker::Exit => return,
+        };
+        let fatal = matches!(reply, FromWorker::Fatal { .. });
+        if tx.send(reply).is_err() || fatal {
+            return;
+        }
+    }
+}
+
+fn open_replica<'rt>(rt: &'rt Runtime, scfg: &SessionCfg) -> Result<Session<'rt>> {
+    let mut session = Session::open(rt, scfg)?;
+    session.enable_grad_stage(rt)?;
+    Ok(session)
+}
+
+/// Run the grad stage over each owned chunk of the global batch. One
+/// program call per chunk — the chunk grid (not the worker count) is the
+/// reduction unit, so the per-chunk gradients are bitwise the ones the
+/// fused single-process step computes internally.
+fn step_grads(
+    session: &Session<'_>,
+    outs: &mut [Buffer],
+    chunks: &Range<usize>,
+    batch: &Batch,
+    knobs: &StepKnobs,
+    denom: f32,
+) -> Result<Vec<ChunkGrads>> {
+    let model = session.model();
+    let pix: usize = model.input_shape.iter().product();
+    let ncls = model.num_classes;
+    let rows = model.batch;
+    let np = outs.len() - 2;
+    let mut parts = Vec::with_capacity(chunks.len());
+    for chunk in chunks.clone() {
+        let (lo, hi) = kn::chunk_rows(chunk, rows);
+        if lo == hi {
+            continue;
+        }
+        let (xr, yr) = batch.rows(lo, hi, pix, ncls);
+        session.step_grads_into(xr, yr, knobs, denom, outs)?;
+        parts.push(ChunkGrads {
+            chunk,
+            grads: outs[..np].iter().map(|b| b.data.clone()).collect(),
+            ce_sum: outs[np].data[0],
+            acc_cnt: outs[np + 1].data[0],
+        });
+    }
+    Ok(parts)
+}

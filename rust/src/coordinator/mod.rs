@@ -1,6 +1,7 @@
 //! L3 coordinator: training orchestration on top of the AOT runtime.
 //!
 //! * `trainer`    — the per-run event loop (schedule, freeze, metrics)
+//! * `dist`       — data-parallel training: tick coordinator + worker replicas
 //! * `evaluator`  — batched held-out evaluation (shared with pareto/fig5)
 //! * `state`      — device-interchange train state
 //! * `bitwidth`   — Eq. 2.4 beta -> (b, alpha) management
@@ -9,6 +10,7 @@
 
 pub mod bitwidth;
 pub mod checkpoint;
+pub mod dist;
 pub mod evaluator;
 pub mod metrics;
 pub mod state;
@@ -16,9 +18,10 @@ pub mod trainer;
 
 pub use bitwidth::{ceil_bits, BitAssignment};
 pub use checkpoint::Checkpoint;
+pub use dist::{run_distributed, ChaosEvent, DistCfg, DistOutcome, KnobPlan};
 pub use evaluator::{eval_batches, evaluate, test_batcher, test_batcher_with_batch};
 pub use metrics::MetricsRecorder;
 pub use state::TrainState;
 pub use trainer::{
-    session_cfg, Snapshot, TrackKind, TrackRequest, TrainOptions, TrainOutcome, Trainer,
+    session_cfg, step_knobs, Snapshot, TrackKind, TrackRequest, TrainOptions, TrainOutcome, Trainer,
 };

@@ -91,6 +91,65 @@ pub fn session_cfg(cfg: &RunConfig, num_qlayers: usize) -> SessionCfg {
     }
 }
 
+/// The per-step knob policy — schedule lookup, algorithm gating, ablation
+/// override, LR warmup — as one pure function of `(cfg, controller, step)`.
+/// Shared by [`Trainer::run`] and the distributed coordinator so an
+/// N-worker run feeds its sessions the *same f32 knob values* the
+/// single-process loop would at every step (bit-identity depends on it).
+pub fn step_knobs(
+    cfg: &RunConfig,
+    controller: &PhaseController,
+    constant_lambda_w: Option<f32>,
+    step: usize,
+) -> StepKnobs {
+    let (mut lam_w, mut lam_b, mut flag) = controller.knobs(step);
+    match cfg.algo {
+        Algo::WaveqPreset => {
+            lam_b = 0.0;
+            flag = 0.0;
+        }
+        Algo::WaveqLearned => {}
+        _ => {
+            lam_w = 0.0;
+            lam_b = 0.0;
+            flag = 0.0;
+        }
+    }
+    if let Some(cw) = constant_lambda_w {
+        lam_w = cw;
+    }
+    // Linear LR warmup over the first steps: with affine-only
+    // normalization the residual nets see large early gradients; warmup
+    // (plus the train-step's global-norm clip) keeps every model/bitwidth
+    // cell stable at one shared base lr.
+    let warmup = 30.0_f32;
+    let lr_t = cfg.lr * ((step as f32 + 1.0) / warmup).min(1.0);
+    StepKnobs {
+        lr: lr_t,
+        momentum: cfg.momentum,
+        lr_beta: cfg.lr_beta,
+        ka: cfg.ka(),
+        lambda_w: lam_w,
+        lambda_beta: lam_b,
+        beta_train: flag,
+    }
+}
+
+/// Evaluate a session's current state on the held-out stream: pick the
+/// quantizer levels by algorithm, then average the session's eval over all
+/// test batches. Shared by [`Trainer::run`]'s cadenced evals and the
+/// distributed coordinator's round-boundary evals.
+pub fn eval_session(cfg: &RunConfig, session: &mut Session<'_>) -> Result<(f32, f32)> {
+    let kw = match cfg.algo {
+        Algo::Fp32 => None,
+        Algo::WaveqLearned => Some(BitAssignment::from_beta(&session.state().beta).kw()),
+        _ => Some(vec![levels(cfg.weight_bits); session.model().num_qlayers]),
+    };
+    let test = test_batcher(session.model(), cfg.test_examples, cfg.seed)?;
+    let tail = session.batch_polymorphic();
+    eval_batches(&test, tail, |b| session.eval(&b.x, &b.y, kw.as_deref(), cfg.ka()))
+}
+
 pub struct Trainer<'a> {
     rt: &'a Runtime,
     pub cfg: RunConfig,
@@ -143,7 +202,6 @@ impl<'a> Trainer<'a> {
         let mut metrics = MetricsRecorder::new();
         let mut snapshots = Vec::new();
         let mut freeze_step: Option<usize> = None;
-        let ka = cfg.ka();
 
         let t0 = Instant::now();
 
@@ -154,50 +212,17 @@ impl<'a> Trainer<'a> {
                 .ok_or_else(|| anyhow!("data pipeline ended early at step {step}"))?;
 
             // Schedule knobs (rust-side coordination contribution).
-            let (mut lam_w, mut lam_b, mut flag) = controller.knobs(step);
-            match cfg.algo {
-                Algo::WaveqPreset => {
-                    lam_b = 0.0;
-                    flag = 0.0;
-                }
-                Algo::WaveqLearned => {}
-                _ => {
-                    lam_w = 0.0;
-                    lam_b = 0.0;
-                    flag = 0.0;
-                }
-            }
-            if let Some(cw) = self.opts.constant_lambda_w {
-                lam_w = cw;
-            }
-            // Linear LR warmup over the first steps: with affine-only
-            // normalization the residual nets see large early gradients;
-            // warmup (plus the train-step's global-norm clip) keeps every
-            // model/bitwidth cell stable at one shared base lr.
-            let warmup = 30.0_f32;
-            let lr_t = cfg.lr * ((step as f32 + 1.0) / warmup).min(1.0);
+            let knobs = step_knobs(&cfg, &controller, self.opts.constant_lambda_w, step);
 
-            let m = session.step(
-                &batch_data.x,
-                &batch_data.y,
-                &StepKnobs {
-                    lr: lr_t,
-                    momentum: cfg.momentum,
-                    lr_beta: cfg.lr_beta,
-                    ka,
-                    lambda_w: lam_w,
-                    lambda_beta: lam_b,
-                    beta_train: flag,
-                },
-            )?;
+            let m = session.step(&batch_data.x, &batch_data.y, &knobs)?;
             if !m.loss.is_finite() {
                 return Err(anyhow!("{train_prog}: loss diverged (NaN/inf) at step {step}"));
             }
 
             metrics.add_f32(step, "loss", m.loss);
             metrics.add_f32(step, "acc", m.acc);
-            metrics.add_f32(step, "lambda_w", lam_w);
-            metrics.add_f32(step, "lambda_beta", lam_b);
+            metrics.add_f32(step, "lambda_w", knobs.lambda_w);
+            metrics.add_f32(step, "lambda_beta", knobs.lambda_beta);
             if let Some(ce) = m.ce {
                 metrics.add_f32(step, "ce", ce);
             }
@@ -295,18 +320,9 @@ impl<'a> Trainer<'a> {
         })
     }
 
-    /// Evaluate the session's current state on the held-out stream: pick
-    /// the quantizer levels by algorithm, then average the session's eval
-    /// over all full test batches.
+    /// Evaluate the session's current state on the held-out stream (see
+    /// [`eval_session`]).
     fn eval_now(&self, session: &mut Session<'_>) -> Result<(f32, f32)> {
-        let cfg = &self.cfg;
-        let kw = match cfg.algo {
-            Algo::Fp32 => None,
-            Algo::WaveqLearned => Some(BitAssignment::from_beta(&session.state().beta).kw()),
-            _ => Some(vec![levels(cfg.weight_bits); session.model().num_qlayers]),
-        };
-        let test = test_batcher(session.model(), cfg.test_examples, cfg.seed)?;
-        let tail = session.batch_polymorphic();
-        eval_batches(&test, tail, |b| session.eval(&b.x, &b.y, kw.as_deref(), cfg.ka()))
+        eval_session(&self.cfg, session)
     }
 }

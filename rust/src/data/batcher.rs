@@ -23,6 +23,47 @@ pub struct Batch {
     pub epoch: usize,
 }
 
+impl Batch {
+    /// Borrow rows `lo..hi` of the batch as `(x, y)` row slices, given the
+    /// per-row element counts. The distributed coordinator hands each
+    /// worker such a view of the shared global batch; concatenating every
+    /// worker's view in shard order reconstructs `(self.x, self.y)`
+    /// exactly, which is what makes the N-worker run consume the same
+    /// bytes as the 1-worker run.
+    pub fn rows(&self, lo: usize, hi: usize, pix: usize, n_classes: usize) -> (&[f32], &[f32]) {
+        (&self.x[lo * pix..hi * pix], &self.y[lo * n_classes..hi * n_classes])
+    }
+}
+
+/// The deterministic shard map shared by the distributed coordinator and
+/// its tests: which reduction chunks (of the fixed `n_chunks`-chunk batch
+/// grid) the live worker at `position` owns in `round`.
+///
+/// Properties the coordinator relies on:
+/// - For a fixed `(round, n_live)`, the ranges over `position = 0..n_live`
+///   partition `0..n_chunks` exactly — every chunk is computed once.
+/// - The assignment *rotates* with `round`, so over `n_live` consecutive
+///   rounds each worker visits every slot (exercising all data shards).
+/// - It is a pure function of its arguments: the coordinator and a test
+///   (or a rejoining worker) always agree on who owns what without any
+///   negotiation.
+///
+/// Chunks — not raw rows — are the sharding unit so that the per-chunk
+/// gradients a worker produces are bitwise the ones the single-process
+/// fused path computes for the same global batch (see
+/// `runtime::native::kernels::chunk_rows`); `n_chunks` is passed in rather
+/// than imported to keep this crate layer free of runtime dependencies.
+pub fn shard_for(
+    round: usize,
+    position: usize,
+    n_live: usize,
+    n_chunks: usize,
+) -> std::ops::Range<usize> {
+    assert!(position < n_live, "worker position {position} out of {n_live}");
+    let slot = (position + round) % n_live;
+    slot * n_chunks / n_live..(slot + 1) * n_chunks / n_live
+}
+
 /// Synchronous batcher: deterministic epoch shuffles over a fixed dataset.
 pub struct Batcher {
     ds: Dataset,
@@ -351,6 +392,54 @@ mod tests {
         // An exact multiple produces no tail.
         let b = Batcher::new(small_ds(), 16, 0).unwrap();
         assert_eq!(b.sequential_batches_all().count(), 4);
+    }
+
+    #[test]
+    fn shard_map_partitions_chunks_and_rotates_with_round() {
+        for n_chunks in [4usize, 8, 16] {
+            for n_live in [1usize, 2, 4] {
+                if !n_chunks.is_multiple_of(n_live) {
+                    continue;
+                }
+                for round in 0..7 {
+                    // Partition: concatenating every position's range in
+                    // *slot* order covers 0..n_chunks contiguously.
+                    let mut owned = vec![0usize; n_chunks];
+                    for pos in 0..n_live {
+                        for c in shard_for(round, pos, n_live, n_chunks) {
+                            owned[c] += 1;
+                        }
+                    }
+                    assert!(
+                        owned.iter().all(|&c| c == 1),
+                        "round {round} n_live {n_live}: chunks not partitioned: {owned:?}"
+                    );
+                }
+                // Rotation: over n_live consecutive rounds, position 0
+                // visits every slot exactly once.
+                let mut starts: Vec<usize> =
+                    (0..n_live).map(|r| shard_for(r, 0, n_live, n_chunks).start).collect();
+                starts.sort_unstable();
+                let expect: Vec<usize> = (0..n_live).map(|s| s * n_chunks / n_live).collect();
+                assert_eq!(starts, expect, "n_live {n_live} rotation misses slots");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rows_views_concatenate_back_to_the_batch() {
+        let mut b = Batcher::new(small_ds(), 16, 0).unwrap();
+        let batch = b.next_batch();
+        let (pix, ncls) = (8 * 8 * 3, 10);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for (lo, hi) in [(0, 5), (5, 11), (11, 16)] {
+            let (xr, yr) = batch.rows(lo, hi, pix, ncls);
+            x.extend_from_slice(xr);
+            y.extend_from_slice(yr);
+        }
+        assert_eq!(x, batch.x);
+        assert_eq!(y, batch.y);
     }
 
     #[test]

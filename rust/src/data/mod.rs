@@ -4,5 +4,5 @@
 pub mod batcher;
 pub mod synth;
 
-pub use batcher::{Batch, Batcher, Prefetcher, SequentialBatches};
+pub use batcher::{shard_for, Batch, Batcher, Prefetcher, SequentialBatches};
 pub use synth::{spec, spec_for_input, spec_for_model, try_spec, Dataset, DatasetSpec, Generator};

@@ -14,6 +14,8 @@
 //! Common flags: --artifacts DIR --config FILE --seed N --scale smoke|full
 //! Train flags:  --model M --algo A --bits B --act-bits A --steps N --lr F
 //!               --lr-beta F --eval-every N --save CKPT
+//!               --workers N --round-len N (data-parallel; bitwise equal to
+//!               --workers 1 for any N that divides the reduction grid)
 //! Freeze flags: --init CKPT --out ART --model M --algo A --bits B --act-bits A
 //! Infer flags:  --artifact ART --batch N --max-batch N --test-examples N
 //!               --precision exact|int8
@@ -32,7 +34,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use waveq::config::{Algo, RunConfig};
-use waveq::coordinator::{eval_batches, session_cfg, test_batcher_with_batch, Checkpoint, Trainer};
+use waveq::coordinator::{
+    eval_batches, run_distributed, session_cfg, test_batcher_with_batch, BitAssignment,
+    Checkpoint, DistCfg, Trainer,
+};
 use waveq::data::{spec_for_model, Dataset};
 use waveq::energy::Stripes;
 use waveq::experiments::{self, ExpContext, Scale};
@@ -47,7 +52,7 @@ const VALUE_FLAGS: &[&str] = &[
     "artifacts", "config", "seed", "scale", "model", "algo", "bits", "act-bits",
     "steps", "lr", "momentum", "lr-beta", "eval-every", "save", "train-examples",
     "test-examples", "beta-init", "out", "init", "artifact", "batch", "max-batch",
-    "workers", "deadline-us", "listen", "clients", "requests", "precision",
+    "workers", "round-len", "deadline-us", "listen", "clients", "requests", "precision",
 ];
 const SWITCH_FLAGS: &[&str] = &["quiet", "help", "loopback"];
 
@@ -111,6 +116,46 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => {
             let rt = Runtime::open(&artifacts)?;
             let cfg = RunConfig::load(args.get("config"), &args)?;
+            let workers = args.get_usize("workers", 1)?;
+            if workers > 1 {
+                if args.get("init").is_some() {
+                    return Err(anyhow!("--init is not supported with --workers > 1 yet"));
+                }
+                if args.get("out").is_some() {
+                    return Err(anyhow!("--out metrics CSV is not supported with --workers > 1"));
+                }
+                let mut dcfg = DistCfg::new(workers);
+                dcfg.round_len = args.get_usize("round-len", dcfg.round_len)?;
+                dcfg.quiet = args.has("quiet");
+                // The coordinator re-saves this at every round boundary, so
+                // the file on disk always holds the latest round's state.
+                dcfg.checkpoint = args.get("save").map(PathBuf::from);
+                let outcome = run_distributed(&rt, &cfg, &dcfg)?;
+                let assignment = BitAssignment::from_beta(&outcome.state.beta);
+                println!(
+                    "model={} algo={} steps={} workers={workers} -> test_acc={:.4} \
+                     test_loss={:.4} bits={:?} (avg {:.2})",
+                    cfg.model,
+                    cfg.algo.name(),
+                    cfg.steps,
+                    outcome.test_acc,
+                    outcome.test_loss,
+                    assignment.bits,
+                    assignment.average_bits()
+                );
+                println!(
+                    "rounds={} drops={} replays={} rejoins={} allreduce={:.1}ms total",
+                    outcome.rounds,
+                    outcome.drops,
+                    outcome.replays,
+                    outcome.rejoins,
+                    outcome.allreduce_secs * 1e3
+                );
+                if let Some(path) = args.get("save") {
+                    println!("saved checkpoint to {path} (step {})", outcome.state.step);
+                }
+                return Ok(());
+            }
             let mut trainer = Trainer::new(&rt, cfg);
             trainer.opts.quiet = args.has("quiet");
             if let Some(ckpt) = args.get("init") {
@@ -356,6 +401,8 @@ SUBCOMMANDS:
   train                 one run: --model M --algo fp32|dorefa|wrpn|waveq-preset|waveq
                         --bits B --act-bits A --steps N --lr F --lr-beta F
                         [--config FILE] [--save ckpt.bin] [--out metrics.csv]
+                        [--workers N] [--round-len N] data-parallel training,
+                        bitwise equal to --workers 1 (N must divide the grid)
   freeze                pack a trained checkpoint into a bit-packed low-bit
                         artifact: --init ckpt.bin --out model.wqm
                         --model M --algo A [--bits B] [--act-bits A]

@@ -94,6 +94,21 @@ pub trait Backend {
         false
     }
 
+    /// Whether the split train stages (`grads_*` / `apply_*` program pairs)
+    /// exist for this backend's train programs. The distributed coordinator
+    /// requires them; backends without the split keep the default `false`
+    /// and only serve fused single-process training.
+    fn grad_stage(&self) -> bool {
+        false
+    }
+
+    /// Backend-specific per-thread warmup for a program (idempotent). The
+    /// native backend pre-sizes the *calling thread's* buffer arena for
+    /// train-path programs; others keep the no-op default.
+    fn warm(&self, _sig: &ProgramSig) -> Result<()> {
+        Ok(())
+    }
+
     /// Execute a program on host buffers; one buffer per named output, in
     /// the manifest's output order.
     fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>>;
@@ -157,6 +172,11 @@ impl Program<'_> {
     /// The resolved positional signature (inputs and output names).
     pub fn sig(&self) -> &ProgramSig {
         &self.sig
+    }
+
+    /// Per-thread backend warmup for this program (see [`Backend::warm`]).
+    pub fn warm(&self) -> Result<()> {
+        self.backend.warm(&self.sig)
     }
 
     fn check_arity(&self, n: usize) -> Result<()> {
@@ -248,6 +268,13 @@ impl Runtime {
     /// [`Backend::batch_polymorphic`]).
     pub fn batch_polymorphic(&self) -> bool {
         self.backend.batch_polymorphic()
+    }
+
+    /// Whether the split `grads_*`/`apply_*` train stages exist (see
+    /// [`Backend::grad_stage`]). The distributed coordinator checks this
+    /// before fanning a step out.
+    pub fn grad_stage(&self) -> bool {
+        self.backend.grad_stage()
     }
 
     pub fn sig(&self, program: &str) -> Result<&ProgramSig> {

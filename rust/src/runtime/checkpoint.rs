@@ -1,15 +1,18 @@
 //! Binary checkpointing of train state (own format; no serde offline).
 //!
-//! v2 layout (little-endian), magic `WVQCKPT2`:
+//! v3 layout (little-endian), magic `WVQCKPT3`:
 //!   magic | u32 n_tensors | per tensor:
 //!     u32 name_len | name bytes | u32 rank | u64 dims[rank] | f32 data[]
 //!   | u32 q | f32 beta[q] | f32 vbeta[q]
-//!   | u64 step | u32 model_len | model bytes
+//!   | u64 step | u64 round | u32 model_len | model bytes
 //!
-//! The trailer (step counter + model name) is what v1 (`WVQCKPT1`) lacked:
-//! a restored run could not resume its schedule position, and nothing
-//! stopped a vgg checkpoint from being loaded into a resnet session. v1
-//! files still load (step = 0, empty model name); `save` always writes v2.
+//! v3 adds the distributed coordinator's round counter after `step`, so a
+//! rejoining worker (or a resumed run) lands on the exact round boundary
+//! the file was written at. The v2 trailer (step counter + model name) is
+//! what v1 (`WVQCKPT1`) lacked: a restored run could not resume its
+//! schedule position, and nothing stopped a vgg checkpoint from being
+//! loaded into a resnet session. v1 and v2 files still load (missing
+//! fields default to 0 / empty); `save` always writes v3.
 //!
 //! Lives in the runtime layer so [`super::session::Session`] can offer
 //! `save_checkpoint` / `load_checkpoint` without reaching up into the
@@ -28,6 +31,7 @@ use crate::tensor::Tensor;
 
 const MAGIC_V1: &[u8; 8] = b"WVQCKPT1";
 const MAGIC_V2: &[u8; 8] = b"WVQCKPT2";
+const MAGIC_V3: &[u8; 8] = b"WVQCKPT3";
 
 pub struct Checkpoint {
     pub tensors: Vec<(String, Tensor)>,
@@ -35,6 +39,9 @@ pub struct Checkpoint {
     pub vbeta: Vec<f32>,
     /// Step counter at save time (0 for v1 files, which did not record it).
     pub step: usize,
+    /// Distributed-training round at save time (0 for pre-v3 files and
+    /// single-process runs).
+    pub round: usize,
     /// Model the state belongs to (empty for v1 files).
     pub model: String,
 }
@@ -54,8 +61,15 @@ impl Checkpoint {
             beta: state.beta.clone(),
             vbeta: state.vbeta.clone(),
             step: state.step,
+            round: 0,
             model: model.name.clone(),
         })
+    }
+
+    /// Stamp the distributed coordinator's round counter (defaults to 0).
+    pub fn with_round(mut self, round: usize) -> Checkpoint {
+        self.round = round;
+        self
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -65,7 +79,7 @@ impl Checkpoint {
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
         );
-        f.write_all(MAGIC_V2)?;
+        f.write_all(MAGIC_V3)?;
         f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
         for (name, t) in &self.tensors {
             f.write_all(&(name.len() as u32).to_le_bytes())?;
@@ -83,6 +97,7 @@ impl Checkpoint {
             f.write_all(&v.to_le_bytes())?;
         }
         f.write_all(&(self.step as u64).to_le_bytes())?;
+        f.write_all(&(self.round as u64).to_le_bytes())?;
         f.write_all(&(self.model.len() as u32).to_le_bytes())?;
         f.write_all(self.model.as_bytes())?;
         Ok(())
@@ -94,9 +109,10 @@ impl Checkpoint {
         );
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        let v2 = match &magic {
-            m if m == MAGIC_V2 => true,
-            m if m == MAGIC_V1 => false,
+        let version = match &magic {
+            m if m == MAGIC_V3 => 3,
+            m if m == MAGIC_V2 => 2,
+            m if m == MAGIC_V1 => 1,
             _ => return Err(anyhow!("{} is not a waveq checkpoint", path.display())),
         };
         let n = read_count(&mut f, "tensor")?;
@@ -113,12 +129,16 @@ impl Checkpoint {
         let mut vbeta = vec![0f32; q];
         read_f32s(&mut f, &mut beta)?;
         read_f32s(&mut f, &mut vbeta)?;
-        let (step, model) = if v2 {
-            (read_u64(&mut f)? as usize, read_string(&mut f)?)
-        } else {
-            (0, String::new())
+        let (step, round, model) = match version {
+            3 => {
+                let step = read_u64(&mut f)? as usize;
+                let round = read_u64(&mut f)? as usize;
+                (step, round, read_string(&mut f)?)
+            }
+            2 => (read_u64(&mut f)? as usize, 0, read_string(&mut f)?),
+            _ => (0, 0, String::new()),
         };
-        Ok(Checkpoint { tensors, beta, vbeta, step, model })
+        Ok(Checkpoint { tensors, beta, vbeta, step, round, model })
     }
 }
 
@@ -139,6 +159,7 @@ mod tests {
             beta: vec![3.3, 4.7],
             vbeta: vec![0.01, -0.02],
             step: 412,
+            round: 17,
             model: "simplenet5".into(),
         }
     }
@@ -157,7 +178,35 @@ mod tests {
         assert_eq!(back.beta, ck.beta);
         assert_eq!(back.vbeta, ck.vbeta);
         assert_eq!(back.step, 412);
+        assert_eq!(back.round, 17);
         assert_eq!(back.model, "simplenet5");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_checkpoints_still_load_with_round_zero() {
+        // The exact bytes the v2 writer emitted: one (1,)-tensor, q = 1,
+        // then `u64 step | u32 model_len | model` with no round field.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"WVQCKPT2");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_tensors
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.extend_from_slice(b"w");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rank
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // dim
+        bytes.extend_from_slice(&2.5f32.to_le_bytes()); // data
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // q
+        bytes.extend_from_slice(&4.0f32.to_le_bytes()); // beta
+        bytes.extend_from_slice(&0.5f32.to_le_bytes()); // vbeta
+        bytes.extend_from_slice(&99u64.to_le_bytes()); // step
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // model_len
+        bytes.extend_from_slice(b"mlp");
+        let path = std::env::temp_dir().join("waveq_ckpt_v2_test.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 99);
+        assert_eq!(ck.round, 0);
+        assert_eq!(ck.model, "mlp");
         std::fs::remove_file(&path).ok();
     }
 

@@ -1098,9 +1098,15 @@ pub fn matmul_quant_into(
 /// out(r, o) = x(r, i) @ w(i, o)   (no bias; conv-via-im2col path)
 pub fn matmul(x: &[f32], w: &[f32], rows: usize, din: usize, dout: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; rows * dout];
-    let packed = pack_b(w, din, dout);
-    gemm_packed(x, din, 1, rows, din, dout, &packed, None, GEMM_MIN_ROWS, &mut out);
+    matmul_into(x, w, rows, din, dout, &mut out);
     out
+}
+
+/// [`matmul`] into a caller-owned (pre-zeroed) slice — the train arena path.
+pub fn matmul_into(x: &[f32], w: &[f32], rows: usize, din: usize, dout: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), rows * dout);
+    let packed = pack_b(w, din, dout);
+    gemm_packed(x, din, 1, rows, din, dout, &packed, None, GEMM_MIN_ROWS, out);
 }
 
 /// out(b, o) = x(b, i) @ w(i, o) + bias(o)
@@ -1113,9 +1119,23 @@ pub fn matmul_bias(
     dout: usize,
 ) -> Vec<f32> {
     let mut out = vec![0.0f32; b * dout];
-    let packed = pack_b(w, di, dout);
-    gemm_packed(x, di, 1, b, di, dout, &packed, Some(bias), GEMM_MIN_ROWS, &mut out);
+    matmul_bias_into(x, w, bias, b, di, dout, &mut out);
     out
+}
+
+/// [`matmul_bias`] into a caller-owned (pre-zeroed) slice.
+pub fn matmul_bias_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    di: usize,
+    dout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), b * dout);
+    let packed = pack_b(w, di, dout);
+    gemm_packed(x, di, 1, b, di, dout, &packed, Some(bias), GEMM_MIN_ROWS, out);
 }
 
 /// dW(i, o) = sum_b h(b, i) * dz(b, o)   (h^T @ dz)
@@ -1272,6 +1292,91 @@ pub fn softmax_ce(logits: &[f32], y: &[f32], b: usize, c: usize) -> (f32, f32, V
         }
     }
     ((loss / b as f64) as f32, correct as f32 / b as f32, dlogits)
+}
+
+/// Softmax cross-entropy over a row span of a larger global batch:
+/// unnormalized loss sum + correct-prediction count + dL/dlogits scaled by
+/// an explicit `denom` (the *global* batch size, not `rows`).
+///
+/// This is the per-chunk building block of the chunked train path: the
+/// global batch is cut into [`GRAD_CHUNKS`] fixed row spans, each span runs
+/// this kernel independently, and the chunk sums are reduced in chunk-index
+/// order ([`allreduce_fixed_order`]). With `rows == denom` the dlogits are
+/// bit-identical to [`softmax_ce`]'s; the loss/acc come back unreduced
+/// (f64-accumulated within the span, truncated to f32 at the boundary) so
+/// every reduction crosses chunks the same way no matter which worker
+/// computed the span.
+pub fn softmax_ce_parts(
+    logits: &[f32],
+    y: &[f32],
+    rows: usize,
+    c: usize,
+    denom: f32,
+) -> (f32, f32, Vec<f32>) {
+    let mut dlogits = vec![0.0f32; rows * c];
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for r in 0..rows {
+        let row = &logits[r * c..(r + 1) * c];
+        let yrow = &y[r * c..(r + 1) * c];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0f64;
+        for &v in row {
+            z += ((v - mx) as f64).exp();
+        }
+        let logz = z.ln();
+        let mut pred = 0usize;
+        let mut label = 0usize;
+        for j in 0..c {
+            let logp = (row[j] - mx) as f64 - logz;
+            let p = logp.exp();
+            dlogits[r * c + j] = (p as f32 - yrow[j]) / denom;
+            loss -= yrow[j] as f64 * logp;
+            if row[j] > row[pred] {
+                pred = j;
+            }
+            if yrow[j] > yrow[label] {
+                label = j;
+            }
+        }
+        if pred == label {
+            correct += 1;
+        }
+    }
+    (loss as f32, correct as f32, dlogits)
+}
+
+// ---- chunked gradient reduction --------------------------------------------
+
+/// Number of fixed gradient chunks every global train batch is split into.
+/// The chunk grid depends only on the batch — never on the worker count —
+/// so an N-worker run reduces the exact same chunk sequence as the fused
+/// 1-worker step. A distributed worker count must divide this evenly at
+/// configuration time; a *degraded* membership (after a drop) may be any
+/// size, because whole chunks are reassigned and the reduction below stays
+/// indexed by chunk, not by worker.
+pub const GRAD_CHUNKS: usize = 4;
+
+/// Row span `[lo, hi)` of chunk `chunk` within a `batch`-row global batch
+/// (floor partition; spans concatenate to exactly `0..batch`).
+pub fn chunk_rows(chunk: usize, batch: usize) -> (usize, usize) {
+    (chunk * batch / GRAD_CHUNKS, (chunk + 1) * batch / GRAD_CHUNKS)
+}
+
+/// Fixed-order all-reduce: element-wise left fold of `parts` onto `dst` in
+/// part-index order — `dst[i] = ((dst[i] + parts[0][i]) + parts[1][i]) + …`.
+/// The *only* cross-chunk (and cross-worker) gradient reduction in the
+/// repo: callers order `parts` by global chunk index, so the float
+/// association is a fixed function of the batch alone and the N-worker
+/// all-reduce is bit-identical to the 1-worker chunk loop. Audit rule D3
+/// recognizes this as a named fixed-order reduction helper.
+pub fn allreduce_fixed_order(dst: &mut [f32], parts: &[&[f32]]) {
+    for p in parts {
+        assert_eq!(p.len(), dst.len(), "allreduce_fixed_order: ragged part");
+    }
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d = parts.iter().fold(*d, |acc, p| acc + p[i]);
+    }
 }
 
 // ---- optimizer -------------------------------------------------------------
@@ -2086,5 +2191,87 @@ mod tests {
             }
         }
         std::env::remove_var("WAVEQ_THREADS");
+    }
+
+    #[test]
+    fn chunk_rows_partitions_every_batch_exactly() {
+        for batch in [0usize, 1, 2, 3, 4, 5, 7, 8, 17, 64, 100] {
+            let mut cursor = 0usize;
+            for chunk in 0..GRAD_CHUNKS {
+                let (lo, hi) = chunk_rows(chunk, batch);
+                assert_eq!(lo, cursor, "batch {batch} chunk {chunk} not contiguous");
+                assert!(hi >= lo, "batch {batch} chunk {chunk} inverted");
+                cursor = hi;
+            }
+            assert_eq!(cursor, batch, "batch {batch} chunks do not cover it");
+        }
+    }
+
+    #[test]
+    fn allreduce_fixed_order_is_a_left_fold_and_accumulation_matches_one_call() {
+        let a = prand(33, 71);
+        let b = prand(33, 72);
+        let c = prand(33, 73);
+        // One call with all parts...
+        let mut once = vec![0.0f32; 33];
+        allreduce_fixed_order(&mut once, &[&a, &b, &c]);
+        // ...equals per-part accumulation in the same order (the fused
+        // chunk loop) ...
+        let mut acc = vec![0.0f32; 33];
+        for p in [&a, &b, &c] {
+            allreduce_fixed_order(&mut acc, &[p]);
+        }
+        // ...equals the hand-written left fold.
+        for i in 0..33 {
+            let want = ((0.0 + a[i]) + b[i]) + c[i];
+            assert_eq!(once[i].to_bits(), want.to_bits(), "elem {i}");
+            assert_eq!(acc[i].to_bits(), want.to_bits(), "elem {i} accumulated");
+        }
+    }
+
+    #[test]
+    fn softmax_ce_parts_whole_batch_matches_softmax_ce_dlogits() {
+        let (b, c) = (12usize, 7usize);
+        let logits = prand(b * c, 81);
+        let mut y = vec![0.0f32; b * c];
+        for r in 0..b {
+            y[r * c + r % c] = 1.0;
+        }
+        let (_loss, _acc, want) = softmax_ce(&logits, &y, b, c);
+        let (ce_sum, acc_cnt, got) = softmax_ce_parts(&logits, &y, b, c, b as f32);
+        assert_eq!(
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "whole-batch dlogits must be bit-identical"
+        );
+        assert!(ce_sum.is_finite() && acc_cnt >= 0.0 && acc_cnt <= b as f32);
+    }
+
+    #[test]
+    fn softmax_ce_parts_chunked_dlogits_concatenate_to_the_whole_batch() {
+        let (b, c) = (16usize, 5usize);
+        let logits = prand(b * c, 91);
+        let mut y = vec![0.0f32; b * c];
+        for r in 0..b {
+            y[r * c + (r * 3) % c] = 1.0;
+        }
+        let denom = b as f32;
+        let (_l, _a, whole) = softmax_ce_parts(&logits, &y, b, c, denom);
+        let mut cat: Vec<f32> = Vec::new();
+        let mut cnt = 0.0f32;
+        for chunk in 0..GRAD_CHUNKS {
+            let (lo, hi) = chunk_rows(chunk, b);
+            let (_cl, ca, d) =
+                softmax_ce_parts(&logits[lo * c..hi * c], &y[lo * c..hi * c], hi - lo, c, denom);
+            cat.extend_from_slice(&d);
+            cnt += ca;
+        }
+        assert_eq!(
+            whole.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            cat.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "chunked dlogits must concatenate to the whole-batch result"
+        );
+        let (_l2, whole_cnt, _d2) = softmax_ce_parts(&logits, &y, b, c, denom);
+        assert_eq!(cnt, whole_cnt, "chunked correct-counts must sum to the whole batch's");
     }
 }

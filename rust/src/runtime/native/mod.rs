@@ -15,6 +15,30 @@
 //!   eval_wrpn_<m>_w2  : [w*P, x, y, kw(Q,), ka]                   -> [loss, acc]
 //!   reg_profile       : [wgrid, bgrid]                            -> 9 x (n_w, n_b) surfaces
 //!
+//! The fused `train_*` step is internally *chunked*: the batch is cut into
+//! [`kernels::GRAD_CHUNKS`] fixed row spans, each span runs an independent
+//! forward/backward, and the span sums reduce in chunk-index order through
+//! [`kernels::allreduce_fixed_order`]. The same spans are exposed as
+//! standalone stages for the distributed coordinator (one chunk per
+//! dispatch; `denom` is the *global* batch size the loss normalizes by):
+//!
+//!   grads_fp32_<m>    : [w*P, x, y, denom]                        -> [g*P, ce_sum, acc_cnt]
+//!   grads_dorefa_<m>  : [w*P, x, y, denom, kw(Q,), ka]            -> [g*P, ce_sum, acc_cnt]
+//!   grads_wrpn_<m>_w2 : same as dorefa, on the width-doubled model
+//!   grads_waveq_<m>   : [w*P, beta, x, y, denom, ka]              -> [g*P, ce_sum, acc_cnt]
+//!   apply_fp32_<m>    : [w*P, v*P, g*P, ce_sum, acc_cnt, denom,
+//!                        lr, mom]                                 -> [w', v', loss, acc]
+//!   apply_dorefa_<m>  / apply_wrpn_<m>_w2 : same layout as apply_fp32
+//!   apply_waveq_<m>   : [w*P, v*P, beta, vbeta, g*P, ce_sum,
+//!                        acc_cnt, denom, lr, mom, lr_beta, lam_w,
+//!                        lam_beta, beta_train]                    -> [w', v', beta', vbeta',
+//!                                                                     loss, acc, ce, reg_w]
+//!
+//! Because the fused path and the split stages share the exact same chunk
+//! grid, per-chunk kernels, reduction order, and apply code, an N-worker
+//! run that reduces whole chunks in index order is bit-identical to the
+//! 1-worker fused step — the property `tests/dist.rs` pins down.
+//!
 //! Models are op graphs (`models::OpNode`): conv2d via im2col + the shared
 //! blocked, multi-threaded matmul kernels (`kernels`/`pool`; worker count
 //! from `WAVEQ_THREADS`, bitwise deterministic for any value), depthwise
@@ -59,6 +83,12 @@ enum QuantFamily {
 #[derive(Debug, Clone)]
 enum ProgramKind {
     Train { model: String, quant: QuantFamily },
+    /// Grad-producing half of the split train step: forward + STE backward
+    /// over one chunk's rows, no regularizer, no optimizer.
+    TrainGrads { model: String, quant: QuantFamily },
+    /// Optimizer-applying half: regularizer terms + clip + SGD/momentum +
+    /// beta update on already-reduced gradients.
+    ApplyUpdate { model: String, quant: QuantFamily },
     Eval { model: String, quant: QuantFamily },
     RegProfile,
 }
@@ -98,6 +128,29 @@ impl NativeBackend {
             programs.insert(
                 format!("train_wrpn_{base}_w{WRPN_WIDTH}"),
                 ProgramKind::Train { model: wide_key.clone(), quant: QuantFamily::Wrpn },
+            );
+            // Split train stages: every train program has a grads_/apply_ pair.
+            for (fam, quant) in [
+                ("fp32", QuantFamily::Fp32),
+                ("dorefa", QuantFamily::Dorefa),
+                ("waveq", QuantFamily::Waveq),
+            ] {
+                programs.insert(
+                    format!("grads_{fam}_{base}"),
+                    ProgramKind::TrainGrads { model: base.to_string(), quant },
+                );
+                programs.insert(
+                    format!("apply_{fam}_{base}"),
+                    ProgramKind::ApplyUpdate { model: base.to_string(), quant },
+                );
+            }
+            programs.insert(
+                format!("grads_wrpn_{base}_w{WRPN_WIDTH}"),
+                ProgramKind::TrainGrads { model: wide_key.clone(), quant: QuantFamily::Wrpn },
+            );
+            programs.insert(
+                format!("apply_wrpn_{base}_w{WRPN_WIDTH}"),
+                ProgramKind::ApplyUpdate { model: wide_key.clone(), quant: QuantFamily::Wrpn },
             );
             programs.insert(
                 format!("eval_fp32_{base}"),
@@ -208,6 +261,79 @@ impl NativeBackend {
                     outputs,
                 }
             }
+            ProgramKind::TrainGrads { model, quant } => {
+                let m = &self.models[model];
+                let q = m.num_qlayers();
+                let x = ArgSpec {
+                    name: "x".into(),
+                    shape: vec![m.batch, m.input_shape[0], m.input_shape[1], m.input_shape[2]],
+                    dtype: "float32".into(),
+                };
+                let y = ArgSpec {
+                    name: "y".into(),
+                    shape: vec![m.batch, m.num_classes],
+                    dtype: "float32".into(),
+                };
+                let mut inputs = m.param_specs("w");
+                match quant {
+                    QuantFamily::Fp32 => inputs.extend([x, y, scalar("denom")]),
+                    QuantFamily::Dorefa | QuantFamily::Wrpn => {
+                        inputs.extend([x, y, scalar("denom"), vec_q("kw", q), scalar("ka")]);
+                    }
+                    QuantFamily::Waveq => {
+                        inputs.push(vec_q("beta", q));
+                        inputs.extend([x, y, scalar("denom"), scalar("ka")]);
+                    }
+                }
+                let mut outputs = m.param_names("g");
+                outputs.extend(["ce_sum".into(), "acc_cnt".into()]);
+                ProgramSig {
+                    name: name.to_string(),
+                    file: format!("{name}.native"),
+                    model: Some(model.clone()),
+                    inputs,
+                    outputs,
+                }
+            }
+            ProgramKind::ApplyUpdate { model, quant } => {
+                let m = &self.models[model];
+                let q = m.num_qlayers();
+                let mut inputs = m.param_specs("w");
+                inputs.extend(m.param_specs("v"));
+                if *quant == QuantFamily::Waveq {
+                    inputs.extend([vec_q("beta", q), vec_q("vbeta", q)]);
+                }
+                inputs.extend(m.param_specs("g"));
+                inputs.extend([
+                    scalar("ce_sum"),
+                    scalar("acc_cnt"),
+                    scalar("denom"),
+                    scalar("lr"),
+                    scalar("mom"),
+                ]);
+                let mut outputs = m.param_names("w");
+                outputs.extend(m.param_names("v"));
+                if *quant == QuantFamily::Waveq {
+                    inputs.extend([
+                        scalar("lr_beta"),
+                        scalar("lambda_w"),
+                        scalar("lambda_beta"),
+                        scalar("beta_train"),
+                    ]);
+                    outputs.extend(["beta".into(), "vbeta".into()]);
+                }
+                outputs.extend(["loss".into(), "acc".into()]);
+                if *quant == QuantFamily::Waveq {
+                    outputs.extend(["ce".into(), "reg_w".into()]);
+                }
+                ProgramSig {
+                    name: name.to_string(),
+                    file: format!("{name}.native"),
+                    model: Some(model.clone()),
+                    inputs,
+                    outputs,
+                }
+            }
             ProgramKind::Eval { model, quant } => {
                 let m = &self.models[model];
                 let q = m.num_qlayers();
@@ -265,7 +391,7 @@ impl NativeBackend {
                 let (nw, nb) = (args[0].elem_count(), args[1].elem_count());
                 (0..9).map(|_| Buffer::zeros(vec![nw, nb])).collect()
             }
-            ProgramKind::Train { model, quant } => {
+            ProgramKind::Train { model, quant } | ProgramKind::ApplyUpdate { model, quant } => {
                 let m = self.model(model)?;
                 let nq = m.num_qlayers();
                 let mut outs: Vec<Buffer> = Vec::with_capacity(2 * m.num_params() + 8);
@@ -282,6 +408,14 @@ impl NativeBackend {
                     outs.push(Buffer::scalar(0.0));
                     outs.push(Buffer::scalar(0.0));
                 }
+                outs
+            }
+            ProgramKind::TrainGrads { model, .. } => {
+                let m = self.model(model)?;
+                let mut outs: Vec<Buffer> =
+                    m.params.iter().map(|p| Buffer::zeros(p.shape.clone())).collect();
+                outs.push(Buffer::scalar(0.0));
+                outs.push(Buffer::scalar(0.0));
                 outs
             }
             ProgramKind::Eval { .. } => vec![Buffer::scalar(0.0), Buffer::scalar(0.0)],
@@ -301,6 +435,12 @@ impl NativeBackend {
             ProgramKind::RegProfile => run_reg_profile_into(args, outs),
             ProgramKind::Train { model, quant } => {
                 run_train_into(&sig.name, self.model(model)?, *quant, args, outs)
+            }
+            ProgramKind::TrainGrads { model, quant } => {
+                run_grads_into(&sig.name, self.model(model)?, *quant, args, outs)
+            }
+            ProgramKind::ApplyUpdate { model, quant } => {
+                run_apply_into(&sig.name, self.model(model)?, *quant, args, outs)
             }
             ProgramKind::Eval { model, quant } => {
                 run_eval_into(&sig.name, self.model(model)?, *quant, args, outs)
@@ -340,6 +480,26 @@ impl Backend for NativeBackend {
         true
     }
 
+    /// The split `grads_*`/`apply_*` train stages exist for every train
+    /// program — the distributed coordinator keys off this.
+    fn grad_stage(&self) -> bool {
+        true
+    }
+
+    /// Pre-size the *calling thread's* buffer arena for a train-path
+    /// program, so steady-state stepping leases its forward/backward
+    /// intermediates without growing the pool. `Session::open` calls this
+    /// once; worker threads each warm their own arena.
+    fn warm(&self, sig: &ProgramSig) -> Result<()> {
+        if let Ok(
+            ProgramKind::Train { model, .. } | ProgramKind::TrainGrads { model, .. },
+        ) = self.kind_of(&sig.name)
+        {
+            warm_arena(self.model(&model)?);
+        }
+        Ok(())
+    }
+
     fn execute(&self, sig: &ProgramSig, args: &[&Buffer]) -> Result<Vec<Buffer>> {
         let kind = self.kind_of(&sig.name)?;
         let mut outs = self.output_template(&kind, args)?;
@@ -361,6 +521,116 @@ impl Backend for NativeBackend {
 }
 
 // ---- program implementations ------------------------------------------------
+
+// ---- per-thread buffer arena ------------------------------------------------
+//
+// The train path's transient buffers (im2col cols, layer outputs, quantized
+// weights, STE masks, gradients) were the last steady-state allocations.
+// They now cycle through a thread-local free list: `lease` hands out a
+// zeroed best-fit buffer, `reclaim` returns it. `warm_arena` pre-sizes the
+// list once at `Session::open` (per thread — each distributed worker warms
+// its own), so N replicas never multiply transient allocs, and values are
+// untouched: a leased buffer is fully zeroed/overwritten before use, so
+// which allocation backs it cannot affect any result bit.
+
+std::thread_local! {
+    static ARENA: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Upper bound on pooled buffers per thread — enough for the deepest zoo
+/// model's traces plus gradients, small enough to bound idle memory.
+const ARENA_MAX_BUFS: usize = 128;
+
+/// A zeroed length-`n` buffer, reusing the smallest pooled allocation that
+/// fits (or growing one if none does).
+fn lease(n: usize) -> Vec<f32> {
+    let mut v = ARENA.with(|a| {
+        let mut pool = a.borrow_mut();
+        let mut best: Option<usize> = None;
+        for (i, b) in pool.iter().enumerate() {
+            if b.capacity() >= n
+                && best.is_none_or(|j: usize| b.capacity() < pool[j].capacity())
+            {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => pool.swap_remove(i),
+            None => pool.pop().unwrap_or_default(),
+        }
+    });
+    v.clear();
+    v.resize(n, 0.0);
+    v
+}
+
+/// Return a buffer's allocation to the calling thread's pool.
+fn reclaim(v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    ARENA.with(|a| {
+        let mut pool = a.borrow_mut();
+        if pool.len() < ARENA_MAX_BUFS {
+            pool.push(v);
+        }
+    });
+}
+
+/// Return every buffer a recorded forward pass holds (cols, saved inputs,
+/// masks, quantizer state, logits) once its backward has consumed it.
+fn recycle(fwd: GraphForward) {
+    fn reclaim_lq(lq: LayerQuant) {
+        reclaim(lq.wq);
+        if let Some(s) = lq.ste {
+            reclaim(s);
+        }
+        if let Some((v, _m, _b)) = lq.waveq {
+            reclaim(v);
+        }
+    }
+    for tr in fwd.traces {
+        match tr {
+            Trace::Conv { cols, lq } | Trace::SkipProj { cols, lq } => {
+                reclaim(cols);
+                reclaim_lq(lq);
+            }
+            Trace::DwConv { input, lq } | Trace::Fc { input, lq } => {
+                reclaim(input);
+                reclaim_lq(lq);
+            }
+            Trace::Affine { input } => reclaim(input),
+            Trace::Relu { mask } | Trace::SkipAdd { mask } => reclaim(mask),
+            Trace::None | Trace::MaxPool { .. } | Trace::Gap => {}
+        }
+    }
+    reclaim(fwd.logits);
+}
+
+/// Pre-size the calling thread's arena for one model's train-path
+/// transients at its nominal batch (cols + layer outputs + the input
+/// copy). Leases everything first, then reclaims, so the pool ends up
+/// holding distinct allocations rather than one buffer resized repeatedly.
+fn warm_arena(model: &NativeModel) {
+    let batch = model.batch;
+    let mut sizes: Vec<usize> = vec![batch * model.pixels()];
+    for op in &model.ops {
+        match op {
+            OpNode::Conv { geom, .. } | OpNode::SkipProj { geom, .. } => {
+                if !geom.depthwise {
+                    sizes.push(geom.rows(batch) * geom.kdim());
+                }
+                sizes.push(geom.rows(batch) * geom.cout);
+            }
+            OpNode::Fc { dout, .. } => sizes.push(batch * dout),
+            _ => {}
+        }
+    }
+    let bufs: Vec<Vec<f32>> = sizes.iter().map(|&n| lease(n)).collect();
+    for b in bufs {
+        reclaim(b);
+    }
+}
 
 /// Per-parameter quantization state captured during the forward pass.
 struct LayerQuant {
@@ -505,7 +775,7 @@ struct GraphForward {
 /// `pub(crate)` so `runtime::infer`'s forward-only path runs the *same*
 /// code (bitwise, including -0.0 handling) as this backend's eval pass.
 pub(crate) fn relu_quant(h: &mut [f32], act_ka: Option<f32>, record: bool) -> Vec<f32> {
-    let mut mask = if record { vec![0.0f32; h.len()] } else { Vec::new() };
+    let mut mask = if record { lease(h.len()) } else { Vec::new() };
     if record {
         for (zi, mi) in h.iter_mut().zip(mask.iter_mut()) {
             if *zi > 0.0 {
@@ -542,7 +812,13 @@ fn forward(
     act_ka: Option<f32>,
     record: bool,
 ) -> GraphForward {
-    let mut h = x.to_vec();
+    // Every transient below cycles through the thread-local arena: `lease`
+    // hands out zeroed storage (same precondition as a fresh `vec![0.0;…]`,
+    // so the bits never depend on the reuse), and whatever an op drops is
+    // reclaimed immediately; recorded traces are reclaimed by [`recycle`]
+    // once the backward has consumed them.
+    let mut h = lease(x.len());
+    h.copy_from_slice(x);
     let mut traces: Vec<Trace> = Vec::with_capacity(model.ops.len());
     // Saved activations of open residual blocks (innermost last).
     let mut skips: Vec<Vec<f32>> = Vec::new();
@@ -553,25 +829,52 @@ fn forward(
             OpNode::Conv { geom, pidx } => {
                 let lq = quantize_param(model.params[*pidx].qidx, params[*pidx], quant, kw, beta);
                 if geom.depthwise {
-                    let out = kn::dwconv_fwd(&h, &lq.wq, batch, geom);
+                    let mut out = lease(geom.rows(batch) * geom.cout);
+                    kn::dwconv_fwd_into(&h, &lq.wq, batch, geom, &mut out);
                     let input = std::mem::replace(&mut h, out);
-                    traces.push(if record { Trace::DwConv { input, lq } } else { Trace::None });
+                    if record {
+                        traces.push(Trace::DwConv { input, lq });
+                    } else {
+                        reclaim(input);
+                        traces.push(Trace::None);
+                    }
                 } else {
-                    let cols = kn::im2col(&h, batch, geom);
-                    h = kn::matmul(&cols, &lq.wq, geom.rows(batch), geom.kdim(), geom.cout);
-                    traces.push(if record { Trace::Conv { cols, lq } } else { Trace::None });
+                    let (rows, kdim) = (geom.rows(batch), geom.kdim());
+                    let mut cols = lease(rows * kdim);
+                    kn::im2col_into(&h, batch, geom, &mut cols);
+                    let mut out = lease(rows * geom.cout);
+                    kn::matmul_into(&cols, &lq.wq, rows, kdim, geom.cout, &mut out);
+                    reclaim(std::mem::replace(&mut h, out));
+                    if record {
+                        traces.push(Trace::Conv { cols, lq });
+                    } else {
+                        reclaim(cols);
+                        traces.push(Trace::None);
+                    }
                 }
             }
             OpNode::Fc { din, dout, widx, bidx } => {
                 let lq = quantize_param(model.params[*widx].qidx, params[*widx], quant, kw, beta);
-                let out = kn::matmul_bias(&h, &lq.wq, params[*bidx], batch, *din, *dout);
+                let mut out = lease(batch * dout);
+                kn::matmul_bias_into(&h, &lq.wq, params[*bidx], batch, *din, *dout, &mut out);
                 let input = std::mem::replace(&mut h, out);
-                traces.push(if record { Trace::Fc { input, lq } } else { Trace::None });
+                if record {
+                    traces.push(Trace::Fc { input, lq });
+                } else {
+                    reclaim(input);
+                    traces.push(Trace::None);
+                }
             }
             OpNode::Affine { c, hw, sidx, bidx } => {
-                let out = kn::affine_fwd(&h, params[*sidx], params[*bidx], batch * hw, *c);
+                let mut out = lease(h.len());
+                kn::affine_fwd_into(&h, params[*sidx], params[*bidx], batch * hw, *c, &mut out);
                 let input = std::mem::replace(&mut h, out);
-                traces.push(if record { Trace::Affine { input } } else { Trace::None });
+                if record {
+                    traces.push(Trace::Affine { input });
+                } else {
+                    reclaim(input);
+                    traces.push(Trace::None);
+                }
             }
             OpNode::Relu => {
                 let mask = relu_quant(&mut h, act_ka, record);
@@ -580,33 +883,52 @@ fn forward(
             OpNode::MaxPool { h: ph, w: pw, c, size } => {
                 let in_len = h.len();
                 let (out, argmax) = kn::maxpool_fwd(&h, batch, *ph, *pw, *c, *size);
-                h = out;
+                reclaim(std::mem::replace(&mut h, out));
                 traces.push(if record { Trace::MaxPool { argmax, in_len } } else { Trace::None });
             }
             OpNode::GlobalAvgPool { h: ph, w: pw, c } => {
-                h = kn::gap_fwd(&h, batch, *ph, *pw, *c);
+                let mut out = lease(batch * c);
+                kn::gap_fwd_into(&h, batch, *ph, *pw, *c, &mut out);
+                reclaim(std::mem::replace(&mut h, out));
                 traces.push(Trace::Gap);
             }
             OpNode::Flatten => traces.push(Trace::None),
             OpNode::SkipSave => {
-                skips.push(h.clone());
+                let mut saved = lease(h.len());
+                saved.copy_from_slice(&h);
+                skips.push(saved);
                 traces.push(Trace::None);
             }
             OpNode::SkipProj { geom, pidx } => {
                 let saved = skips.last().expect("SkipProj without SkipSave");
                 let lq = quantize_param(model.params[*pidx].qidx, params[*pidx], quant, kw, beta);
-                let cols = kn::im2col(saved, batch, geom);
-                shortcut =
-                    Some(kn::matmul(&cols, &lq.wq, geom.rows(batch), geom.kdim(), geom.cout));
-                traces.push(if record { Trace::SkipProj { cols, lq } } else { Trace::None });
+                let (rows, kdim) = (geom.rows(batch), geom.kdim());
+                let mut cols = lease(rows * kdim);
+                kn::im2col_into(saved, batch, geom, &mut cols);
+                let mut proj = lease(rows * geom.cout);
+                kn::matmul_into(&cols, &lq.wq, rows, kdim, geom.cout, &mut proj);
+                shortcut = Some(proj);
+                if record {
+                    traces.push(Trace::SkipProj { cols, lq });
+                } else {
+                    reclaim(cols);
+                    traces.push(Trace::None);
+                }
             }
             OpNode::SkipAdd => {
                 let saved = skips.pop().expect("SkipAdd without SkipSave");
-                let sc = shortcut.take().unwrap_or(saved);
+                let sc = match shortcut.take() {
+                    Some(proj) => {
+                        reclaim(saved);
+                        proj
+                    }
+                    None => saved,
+                };
                 debug_assert_eq!(h.len(), sc.len());
                 for (hv, &sv) in h.iter_mut().zip(sc.iter()) {
                     *hv += sv;
                 }
+                reclaim(sc);
                 let mask = relu_quant(&mut h, act_ka, record);
                 traces.push(if record { Trace::SkipAdd { mask } } else { Trace::None });
             }
@@ -770,6 +1092,7 @@ fn run_eval_into(
     };
     let fwd = forward(model, &params, &x.data, batch, quant, &kw, &[], act_ka, false);
     let (loss, acc, _dl) = kn::softmax_ce(&fwd.logits, &y.data, batch, model.num_classes);
+    reclaim(fwd.logits);
     outs[0].data[0] = loss;
     outs[1].data[0] = acc;
     Ok(())
@@ -793,26 +1116,7 @@ fn run_train_into(
     if args.len() != expected {
         return Err(anyhow!("{prog}: native dispatch got {} args, wants {expected}", args.len()));
     }
-    let n_scalars = if quant == QuantFamily::Waveq { 4 } else { 2 };
-    let n_beta = if quant == QuantFamily::Waveq { 2 } else { 0 };
-    let expected_outs = 2 * np + n_beta + n_scalars;
-    if outs.len() != expected_outs {
-        return Err(anyhow!(
-            "{prog}: got {} output buffers, program writes {expected_outs}",
-            outs.len()
-        ));
-    }
-    for (i, p) in model.params.iter().enumerate() {
-        check_out(prog, &p.name, &outs[i], &p.shape)?;
-        check_out(prog, &p.name, &outs[np + i], &p.shape)?;
-    }
-    if quant == QuantFamily::Waveq {
-        check_out(prog, "beta", &outs[2 * np], &[nq])?;
-        check_out(prog, "vbeta", &outs[2 * np + 1], &[nq])?;
-    }
-    for i in 0..n_scalars {
-        check_out(prog, "scalar", &outs[2 * np + n_beta + i], &[])?;
-    }
+    check_train_outs(prog, model, quant, outs)?;
     let params = param_slices(prog, model, args, 0)?;
     let vels = param_slices(prog, model, args, np)?;
 
@@ -878,55 +1182,189 @@ fn run_train_into(
     };
     let batch = batch_of(prog, model, x, y)?;
 
-    // ---- forward ---------------------------------------------------------
-    let fwd = forward(model, &params, &x.data, batch, quant, &kw, &beta_in, ka, true);
-    let (ce, acc, dlogits) = kn::softmax_ce(&fwd.logits, &y.data, batch, model.num_classes);
-
-    // ---- regularizer (waveq only) ---------------------------------------
-    let mut reg_w = 0.0f64;
-    let mut dreg_dbeta = vec![0.0f64; nq];
-    if quant == QuantFamily::Waveq {
-        for tr in &fwd.traces {
-            if let Some(lq) = tr.quant() {
-                if let Some((v, _m, b)) = &lq.waveq {
-                    reg_w += kn::waveq_reg(v, *b);
-                }
-            }
+    // ---- chunked forward/backward over the fixed reduction grid ----------
+    // Same unit of work (chunk_grads) and same reduction
+    // (allreduce_fixed_order, chunk-index order) as the distributed
+    // coordinator, so N workers reproduce this path's bits by construction.
+    let denom = batch as f32;
+    let pix = model.pixels();
+    let nc = model.num_classes;
+    let mut grads: Vec<Vec<f32>> = model
+        .params
+        .iter()
+        .map(|p| lease(p.shape.iter().product()))
+        .collect();
+    let mut ce_sum = 0.0f32;
+    let mut acc_cnt = 0.0f32;
+    for chunk in 0..kn::GRAD_CHUNKS {
+        let (lo, hi) = kn::chunk_rows(chunk, batch);
+        if lo == hi {
+            continue;
         }
-        for (op, tr) in model.ops.iter().zip(fwd.traces.iter()) {
-            let pidx = match op {
-                OpNode::Conv { pidx, .. } | OpNode::SkipProj { pidx, .. } => *pidx,
-                OpNode::Fc { widx, .. } => *widx,
-                _ => continue,
-            };
-            if let (Some(q), Some(lq)) = (model.params[pidx].qidx, tr.quant()) {
-                if let Some((v, _m, b)) = &lq.waveq {
-                    dreg_dbeta[q] = kn::waveq_reg_grad_beta(v, *b);
-                }
-            }
+        let (cgrads, c_ce, c_acc) = chunk_grads(
+            model,
+            &params,
+            quant,
+            &kw,
+            &beta_in,
+            ka,
+            &x.data[lo * pix..hi * pix],
+            &y.data[lo * nc..hi * nc],
+            hi - lo,
+            denom,
+        );
+        for (dst, cg) in grads.iter_mut().zip(cgrads.iter()) {
+            kn::allreduce_fixed_order(dst, &[cg.as_slice()]);
+        }
+        kn::allreduce_fixed_order(
+            std::slice::from_mut(&mut ce_sum),
+            &[std::slice::from_ref(&c_ce)],
+        );
+        kn::allreduce_fixed_order(
+            std::slice::from_mut(&mut acc_cnt),
+            &[std::slice::from_ref(&c_acc)],
+        );
+        for cg in cgrads {
+            reclaim(cg);
         }
     }
-    let loss = ce + lam_w * reg_w as f32 + lam_beta * beta_in.iter().sum::<f32>();
 
-    // ---- backward --------------------------------------------------------
-    let mut grads = backward(model, &fwd, dlogits, batch, &params, lam_w);
+    // ---- regularizer + optimizer (the shared apply stage) ----------------
+    let knobs = ApplyKnobs {
+        ce_sum,
+        acc_cnt,
+        denom,
+        lr,
+        mom,
+        lr_beta,
+        lam_w,
+        lam_beta,
+        beta_train,
+    };
+    apply_update_into(model, quant, &params, &vels, &beta_in, &vbeta_in, grads, &knobs, outs)
+}
 
-    // ---- updates (into the caller-owned output buffers) ------------------
+/// One chunk's gradient contribution: forward + CE parts + STE backward
+/// over `rows` rows, with the loss gradient denominated by the *global*
+/// batch (`denom`). No regularizer (the apply stage owns it, once) and no
+/// optimizer — this is the unit both the fused train path and every
+/// distributed worker compute, so their bits agree by construction.
+#[allow(clippy::too_many_arguments)]
+fn chunk_grads(
+    model: &NativeModel,
+    params: &[&[f32]],
+    quant: QuantFamily,
+    kw: &[f32],
+    beta: &[f32],
+    act_ka: Option<f32>,
+    x_rows: &[f32],
+    y_rows: &[f32],
+    rows: usize,
+    denom: f32,
+) -> (Vec<Vec<f32>>, f32, f32) {
+    let fwd = forward(model, params, x_rows, rows, quant, kw, beta, act_ka, true);
+    let (ce_sum, acc_cnt, dlogits) =
+        kn::softmax_ce_parts(&fwd.logits, y_rows, rows, model.num_classes, denom);
+    let grads = backward(model, &fwd, dlogits, rows, params, 0.0);
+    recycle(fwd);
+    (grads, ce_sum, acc_cnt)
+}
+
+/// WaveQ regularizer contributions for the apply stage: re-quantizes each
+/// quantized layer once (quantization depends only on params/beta, never on
+/// the batch, so these match the per-chunk forward's bits), accumulates the
+/// f64 regularizer sum and analytic dR/dbeta in op order, and — when the
+/// weight regularizer is active — adds its w-gradient to the reduced data
+/// gradients, pre-clip, exactly once per step.
+fn reg_terms(
+    model: &NativeModel,
+    params: &[&[f32]],
+    beta: &[f32],
+    lam_w: f32,
+    grads: &mut [Vec<f32>],
+) -> (f64, Vec<f64>) {
+    let mut reg_w = 0.0f64;
+    let mut dreg = vec![0.0f64; model.num_qlayers()];
+    for op in &model.ops {
+        let pidx = match op {
+            OpNode::Conv { pidx, .. } | OpNode::SkipProj { pidx, .. } => *pidx,
+            OpNode::Fc { widx, .. } => *widx,
+            _ => continue,
+        };
+        let Some(q) = model.params[pidx].qidx else { continue };
+        let LayerQuant { wq, ste, waveq } =
+            quantize_param(Some(q), params[pidx], QuantFamily::Waveq, &[], beta);
+        let (v, m, b) = waveq.expect("waveq quantization carries (v, m, beta)");
+        let ste = ste.expect("waveq layers carry an STE");
+        reg_w += kn::waveq_reg(&v, b);
+        dreg[q] = kn::waveq_reg_grad_beta(&v, b);
+        if lam_w != 0.0 {
+            let gv = kn::waveq_reg_grad_v(&v, b);
+            for ((g, &gvj), &s) in grads[pidx].iter_mut().zip(gv.iter()).zip(ste.iter()) {
+                *g += lam_w * gvj * s / (2.0 * m);
+            }
+        }
+        reclaim(wq);
+        reclaim(ste);
+        reclaim(v);
+    }
+    (reg_w, dreg)
+}
+
+/// Apply-stage knobs: the reduced CE parts plus every optimizer scalar.
+struct ApplyKnobs {
+    ce_sum: f32,
+    acc_cnt: f32,
+    denom: f32,
+    lr: f32,
+    mom: f32,
+    lr_beta: f32,
+    lam_w: f32,
+    lam_beta: f32,
+    beta_train: f32,
+}
+
+/// The optimizer-applying half of the step, shared by the fused train path
+/// and the `apply_*` programs: regularizer terms, global-norm clip,
+/// SGD/momentum into the caller-owned outputs, beta/vbeta update, and the
+/// step scalars. Runs exactly once per step on already-reduced gradients —
+/// identical bits whether one process or the coordinator produced the sum.
+#[allow(clippy::too_many_arguments)]
+fn apply_update_into(
+    model: &NativeModel,
+    quant: QuantFamily,
+    params: &[&[f32]],
+    vels: &[&[f32]],
+    beta_in: &[f32],
+    vbeta_in: &[f32],
+    mut grads: Vec<Vec<f32>>,
+    k: &ApplyKnobs,
+    outs: &mut [Buffer],
+) -> Result<()> {
+    let np = model.num_params();
+    let nq = model.num_qlayers();
+    let (mut reg_w, mut dreg) = (0.0f64, vec![0.0f64; nq]);
+    if quant == QuantFamily::Waveq {
+        (reg_w, dreg) = reg_terms(model, params, beta_in, k.lam_w, &mut grads);
+    }
+    let ce = k.ce_sum / k.denom;
+    let acc = k.acc_cnt / k.denom;
+    let loss = ce + k.lam_w * reg_w as f32 + k.lam_beta * beta_in.iter().sum::<f32>();
+
     kn::clip_by_global_norm(&mut grads, kn::GRAD_CLIP_NORM);
     let (pouts, rest) = outs.split_at_mut(np);
     let (vouts, tail_outs) = rest.split_at_mut(np);
     for i in 0..np {
         pouts[i].data.copy_from_slice(params[i]);
         vouts[i].data.copy_from_slice(vels[i]);
-        kn::sgd_momentum_step(&mut pouts[i].data, &mut vouts[i].data, &grads[i], lr, mom);
+        kn::sgd_momentum_step(&mut pouts[i].data, &mut vouts[i].data, &grads[i], k.lr, k.mom);
     }
-
     if quant == QuantFamily::Waveq {
         for q in 0..nq {
-            let gb = (lam_w as f64 * dreg_dbeta[q] + lam_beta as f64) as f32 * beta_train;
-            let nv = mom * vbeta_in[q] + gb;
+            let gb = (k.lam_w as f64 * dreg[q] + k.lam_beta as f64) as f32 * k.beta_train;
+            let nv = k.mom * vbeta_in[q] + gb;
             tail_outs[1].data[q] = nv;
-            tail_outs[0].data[q] = kn::clip_beta(beta_in[q] - lr_beta * nv);
+            tail_outs[0].data[q] = kn::clip_beta(beta_in[q] - k.lr_beta * nv);
         }
     }
     let si = if quant == QuantFamily::Waveq { 2 } else { 0 };
@@ -936,7 +1374,187 @@ fn run_train_into(
         tail_outs[si + 2].data[0] = ce;
         tail_outs[si + 3].data[0] = reg_w as f32;
     }
+    for g in grads {
+        reclaim(g);
+    }
     Ok(())
+}
+
+/// Validate caller-owned outputs of the fused-train / apply-stage layout:
+/// `[w*, v*, (beta, vbeta), loss, acc, (ce, reg_w)]`.
+fn check_train_outs(
+    prog: &str,
+    model: &NativeModel,
+    quant: QuantFamily,
+    outs: &[Buffer],
+) -> Result<()> {
+    let np = model.num_params();
+    let nq = model.num_qlayers();
+    let n_scalars = if quant == QuantFamily::Waveq { 4 } else { 2 };
+    let n_beta = if quant == QuantFamily::Waveq { 2 } else { 0 };
+    let expected_outs = 2 * np + n_beta + n_scalars;
+    if outs.len() != expected_outs {
+        return Err(anyhow!(
+            "{prog}: got {} output buffers, program writes {expected_outs}",
+            outs.len()
+        ));
+    }
+    for (i, p) in model.params.iter().enumerate() {
+        check_out(prog, &p.name, &outs[i], &p.shape)?;
+        check_out(prog, &p.name, &outs[np + i], &p.shape)?;
+    }
+    if quant == QuantFamily::Waveq {
+        check_out(prog, "beta", &outs[2 * np], &[nq])?;
+        check_out(prog, "vbeta", &outs[2 * np + 1], &[nq])?;
+    }
+    for i in 0..n_scalars {
+        check_out(prog, "scalar", &outs[2 * np + n_beta + i], &[])?;
+    }
+    Ok(())
+}
+
+/// The grad-producing half of the split train step: STE data gradients plus
+/// CE parts over exactly the rows the caller passed (one reduction chunk),
+/// loss denominated by the global batch (`denom`). Bit-equality with the
+/// fused path holds when callers shard rows on the `chunk_rows` grid and
+/// reduce parts in chunk-index order.
+fn run_grads_into(
+    prog: &str,
+    model: &NativeModel,
+    quant: QuantFamily,
+    args: &[&Buffer],
+    outs: &mut [Buffer],
+) -> Result<()> {
+    let np = model.num_params();
+    let nq = model.num_qlayers();
+    let expected = np
+        + match quant {
+            QuantFamily::Fp32 => 3,                       // x, y, denom
+            QuantFamily::Dorefa | QuantFamily::Wrpn => 5, // + kw, ka
+            QuantFamily::Waveq => 5,                      // beta + x, y, denom, ka
+        };
+    if args.len() != expected {
+        return Err(anyhow!("{prog}: native dispatch got {} args, wants {expected}", args.len()));
+    }
+    if outs.len() != np + 2 {
+        return Err(anyhow!(
+            "{prog}: got {} output buffers, program writes {}",
+            outs.len(),
+            np + 2
+        ));
+    }
+    for (i, p) in model.params.iter().enumerate() {
+        check_out(prog, &p.name, &outs[i], &p.shape)?;
+    }
+    check_out(prog, "ce_sum", &outs[np], &[])?;
+    check_out(prog, "acc_cnt", &outs[np + 1], &[])?;
+    let params = param_slices(prog, model, args, 0)?;
+    let tail = &args[np..];
+    let (beta_in, x, y, denom_b, kw, ka) = match quant {
+        QuantFamily::Fp32 => (Vec::new(), tail[0], tail[1], tail[2], Vec::new(), None),
+        QuantFamily::Dorefa | QuantFamily::Wrpn => (
+            Vec::new(),
+            tail[0],
+            tail[1],
+            tail[2],
+            kw_arg(prog, model, tail[3])?,
+            Some(scalar_arg(prog, "ka", tail[4])?),
+        ),
+        QuantFamily::Waveq => {
+            if tail[0].elem_count() != nq {
+                return Err(anyhow!(
+                    "{prog}: beta has {} entries, model wants {nq}",
+                    tail[0].elem_count()
+                ));
+            }
+            (
+                tail[0].data.clone(),
+                tail[1],
+                tail[2],
+                tail[3],
+                Vec::new(),
+                Some(scalar_arg(prog, "ka", tail[4])?),
+            )
+        }
+    };
+    let denom = scalar_arg(prog, "denom", denom_b)?;
+    if !(denom > 0.0) {
+        return Err(anyhow!("{prog}: denom must be positive, got {denom}"));
+    }
+    let batch = batch_of(prog, model, x, y)?;
+    let (grads, ce_sum, acc_cnt) =
+        chunk_grads(model, &params, quant, &kw, &beta_in, ka, &x.data, &y.data, batch, denom);
+    for (i, g) in grads.into_iter().enumerate() {
+        outs[i].data.copy_from_slice(&g);
+        reclaim(g);
+    }
+    outs[np].data[0] = ce_sum;
+    outs[np + 1].data[0] = acc_cnt;
+    Ok(())
+}
+
+/// The optimizer-applying half as a dispatchable program (`apply_*`):
+/// parses `[w*, v*, (beta, vbeta), g*, ce_sum, acc_cnt, denom, lr, mom,
+/// (lr_beta, lambda_w, lambda_beta, beta_train)]` and delegates to
+/// [`apply_update_into`], writing the fused-train output layout.
+fn run_apply_into(
+    prog: &str,
+    model: &NativeModel,
+    quant: QuantFamily,
+    args: &[&Buffer],
+    outs: &mut [Buffer],
+) -> Result<()> {
+    let np = model.num_params();
+    let nq = model.num_qlayers();
+    let n_beta = if quant == QuantFamily::Waveq { 2 } else { 0 };
+    let n_knobs = if quant == QuantFamily::Waveq { 9 } else { 5 };
+    let expected = 3 * np + n_beta + n_knobs;
+    if args.len() != expected {
+        return Err(anyhow!("{prog}: native dispatch got {} args, wants {expected}", args.len()));
+    }
+    check_train_outs(prog, model, quant, outs)?;
+    let params = param_slices(prog, model, args, 0)?;
+    let vels = param_slices(prog, model, args, np)?;
+    let (beta_in, vbeta_in) = if quant == QuantFamily::Waveq {
+        let (b, vb) = (args[2 * np], args[2 * np + 1]);
+        if b.elem_count() != nq || vb.elem_count() != nq {
+            return Err(anyhow!(
+                "{prog}: beta/vbeta have {}/{} entries, model wants {nq}",
+                b.elem_count(),
+                vb.elem_count()
+            ));
+        }
+        (b.data.clone(), vb.data.clone())
+    } else {
+        (Vec::new(), Vec::new())
+    };
+    let gs = param_slices(prog, model, args, 2 * np + n_beta)?;
+    let grads: Vec<Vec<f32>> = gs
+        .iter()
+        .map(|s| {
+            let mut g = lease(s.len());
+            g.copy_from_slice(s);
+            g
+        })
+        .collect();
+    let sc = &args[3 * np + n_beta..];
+    let denom = scalar_arg(prog, "denom", sc[2])?;
+    if !(denom > 0.0) {
+        return Err(anyhow!("{prog}: denom must be positive, got {denom}"));
+    }
+    let waveq = quant == QuantFamily::Waveq;
+    let knobs = ApplyKnobs {
+        ce_sum: scalar_arg(prog, "ce_sum", sc[0])?,
+        acc_cnt: scalar_arg(prog, "acc_cnt", sc[1])?,
+        denom,
+        lr: scalar_arg(prog, "lr", sc[3])?,
+        mom: scalar_arg(prog, "mom", sc[4])?,
+        lr_beta: if waveq { scalar_arg(prog, "lr_beta", sc[5])? } else { 0.0 },
+        lam_w: if waveq { scalar_arg(prog, "lambda_w", sc[6])? } else { 0.0 },
+        lam_beta: if waveq { scalar_arg(prog, "lambda_beta", sc[7])? } else { 0.0 },
+        beta_train: if waveq { scalar_arg(prog, "beta_train", sc[8])? } else { 0.0 },
+    };
+    apply_update_into(model, quant, &params, &vels, &beta_in, &vbeta_in, grads, &knobs, outs)
 }
 
 fn run_reg_profile_into(args: &[&Buffer], outs: &mut [Buffer]) -> Result<()> {
@@ -993,6 +1611,7 @@ mod tests {
                         "lambda_w" => 0.1,
                         "lambda_beta" => 0.01,
                         "beta_train" => 1.0,
+                        "denom" => 64.0,
                         _ => 0.5,
                     });
                 }
@@ -1258,5 +1877,122 @@ mod tests {
         };
         let err = backend.execute(&sig, &[]).unwrap_err();
         assert!(format!("{err}").contains("no program"), "{err}");
+    }
+
+    #[test]
+    fn arena_lease_reuses_reclaimed_allocations_and_zeroes_them() {
+        let mut a = lease(1000);
+        a[0] = 42.0;
+        let ptr = a.as_ptr();
+        reclaim(a);
+        // Best-fit: a same-size lease must reuse the pooled allocation,
+        // fully zeroed regardless of what the previous user wrote.
+        let b = lease(1000);
+        assert_eq!(b.as_ptr(), ptr, "lease did not reuse the reclaimed allocation");
+        assert!(b.iter().all(|&v| v == 0.0), "leased buffer not zeroed");
+        // A smaller request also fits in the same allocation.
+        reclaim(b);
+        let c = lease(10);
+        assert_eq!(c.as_ptr(), ptr, "smaller lease did not best-fit the pooled buffer");
+        assert_eq!(c.len(), 10);
+        reclaim(c);
+    }
+
+    #[test]
+    fn split_grads_apply_stages_reproduce_the_fused_train_step() {
+        // The tentpole contract, stated smallest: running grads_* once per
+        // chunk, reducing in chunk order, then apply_* once, must give the
+        // exact bits of the fused train_* step — for every quant family.
+        let backend = NativeBackend::new();
+        let manifest = backend.manifest();
+        for (train, grads_p, apply_p) in [
+            ("train_fp32_mlp", "grads_fp32_mlp", "apply_fp32_mlp"),
+            ("train_dorefa_mlp", "grads_dorefa_mlp", "apply_dorefa_mlp"),
+            ("train_waveq_mlp", "grads_waveq_mlp", "apply_waveq_mlp"),
+        ] {
+            let tsig = manifest.program(train).unwrap();
+            let gsig = manifest.program(grads_p).unwrap();
+            let asig = manifest.program(apply_p).unwrap();
+            let targs = dummy_train_args(&backend, train);
+            let trefs: Vec<&Buffer> = targs.iter().collect();
+            let fused = backend.execute(tsig, &trefs).unwrap();
+
+            // Stage 1: one grads_* call per chunk, reduced in chunk order.
+            let x = &targs[tsig.input_index("x").unwrap()];
+            let y = &targs[tsig.input_index("y").unwrap()];
+            let batch = x.shape[0];
+            let pix: usize = x.shape[1..].iter().product();
+            let nc = y.shape[1];
+            let np = backend.model(&tsig.model.clone().unwrap()).unwrap().num_params();
+            let mut reduced: Vec<Buffer> = (0..np)
+                .map(|i| Buffer::zeros(tsig.inputs[i].shape.clone()))
+                .collect();
+            let (mut ce_sum, mut acc_cnt) = (0.0f32, 0.0f32);
+            for chunk in 0..kn::GRAD_CHUNKS {
+                let (lo, hi) = kn::chunk_rows(chunk, batch);
+                if lo == hi {
+                    continue;
+                }
+                let gargs: Vec<Buffer> = gsig
+                    .inputs
+                    .iter()
+                    .map(|a| match a.name.as_str() {
+                        "x" => buffer_f32(
+                            &x.data[lo * pix..hi * pix],
+                            &[hi - lo, x.shape[1], x.shape[2], x.shape[3]],
+                        )
+                        .unwrap(),
+                        "y" => {
+                            buffer_f32(&y.data[lo * nc..hi * nc], &[hi - lo, nc]).unwrap()
+                        }
+                        "denom" => scalar_f32(batch as f32),
+                        name => {
+                            let i = tsig.input_index(name).unwrap();
+                            targs[i].clone()
+                        }
+                    })
+                    .collect();
+                let grefs: Vec<&Buffer> = gargs.iter().collect();
+                let part = backend.execute(gsig, &grefs).unwrap();
+                for i in 0..np {
+                    kn::allreduce_fixed_order(&mut reduced[i].data, &[&part[i].data]);
+                }
+                ce_sum += part[np].data[0];
+                acc_cnt += part[np + 1].data[0];
+            }
+
+            // Stage 2: one apply_* call on the reduced gradients.
+            let aargs: Vec<Buffer> = asig
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, a)| match a.name.as_str() {
+                    "ce_sum" => scalar_f32(ce_sum),
+                    "acc_cnt" => scalar_f32(acc_cnt),
+                    "denom" => scalar_f32(batch as f32),
+                    name if name.starts_with("g:") => {
+                        let first_g = asig
+                            .inputs
+                            .iter()
+                            .position(|s| s.name.starts_with("g:"))
+                            .unwrap();
+                        reduced[i - first_g].clone()
+                    }
+                    name => {
+                        let i = tsig.input_index(name).unwrap();
+                        targs[i].clone()
+                    }
+                })
+                .collect();
+            let arefs: Vec<&Buffer> = aargs.iter().collect();
+            let applied = backend.execute(asig, &arefs).unwrap();
+
+            assert_eq!(fused.len(), applied.len(), "{train}: output arity mismatch");
+            for (i, (f, a)) in fused.iter().zip(applied.iter()).enumerate() {
+                let fb: Vec<u32> = f.data.iter().map(|v| v.to_bits()).collect();
+                let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(fb, ab, "{train}: output {i} ({}) bits differ", tsig.outputs[i]);
+            }
+        }
     }
 }

@@ -300,6 +300,18 @@ where
     }
 }
 
+/// Spawn one named long-lived worker thread. This is the crate's single
+/// thread-creation chokepoint outside the pool itself: modules that need a
+/// dedicated thread (the distributed coordinator's replicas, the data
+/// prefetcher's source) route through here so the audit's parallelism
+/// roots stay confined to the files that already own threading.
+pub fn spawn_worker(
+    name: &str,
+    f: impl FnOnce() + Send + 'static,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new().name(name.to_string()).spawn(f)
+}
+
 /// Serializes tests that mutate `WAVEQ_THREADS`: unit tests in this crate
 /// run concurrently and the env var is process-global. Determinism makes
 /// racing *values* harmless, but tests asserting a specific thread count

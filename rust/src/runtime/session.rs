@@ -83,7 +83,9 @@ use crate::util::rng::Rng;
 /// runtime buffers in the manifest's `ParamMeta` order, plus the small
 /// host-side mirrors the coordinator actually inspects (beta, scalars).
 /// Owned by a [`Session`] during training; extracted via
-/// [`Session::into_state`] for checkpointing and analysis.
+/// [`Session::into_state`] for checkpointing and analysis. `Clone` so the
+/// distributed coordinator can snapshot round boundaries for replay.
+#[derive(Clone)]
 pub struct SessionState {
     pub params: Vec<Buffer>,
     pub vels: Vec<Buffer>,
@@ -236,11 +238,19 @@ pub struct SessionCfg {
     pub preset_kw: Option<Vec<f32>>,
 }
 
+/// The prepared split-stage handles (see [`Session::enable_grad_stage`]).
+struct GradStage<'rt> {
+    grads: Program<'rt>,
+    apply: Program<'rt>,
+}
+
 /// A stateful training session: prepared train/eval handles + the training
 /// state they advance + every preallocated I/O buffer of the hot loop.
 pub struct Session<'rt> {
     train: Program<'rt>,
     eval: Program<'rt>,
+    /// Split grads/apply handles, resolved by [`Session::enable_grad_stage`].
+    grad_stage: Option<GradStage<'rt>>,
     model: ModelMeta,
     slots: Vec<Slot>,
     n_params: usize,
@@ -273,6 +283,10 @@ impl<'rt> Session<'rt> {
     /// initialize the backend-resident state (He init at `cfg.seed`).
     pub fn open(rt: &'rt Runtime, cfg: &SessionCfg) -> Result<Session<'rt>> {
         let train = rt.prepare(&cfg.train_program)?;
+        // Pre-size this thread's backend arena for the train path, so the
+        // steady-state loop leases every forward/backward transient instead
+        // of allocating (each distributed worker thread warms its own).
+        train.warm()?;
         let eval = rt.prepare(&cfg.eval_program)?;
         let model_key = train
             .sig()
@@ -410,6 +424,7 @@ impl<'rt> Session<'rt> {
         Ok(Session {
             train,
             eval,
+            grad_stage: None,
             model,
             slots,
             n_params,
@@ -533,6 +548,225 @@ impl<'rt> Session<'rt> {
         train.call_into(&args, outs)?;
         // Flip: the freshly-written outputs become the state; the old state
         // buffers become the next step's output storage.
+        for i in 0..np {
+            std::mem::swap(&mut state.params[i], &mut outs[i]);
+            std::mem::swap(&mut state.vels[i], &mut outs[np + i]);
+        }
+        if let Some(bi) = out_beta {
+            state.beta.copy_from_slice(&outs[bi].data);
+            state.vbeta.copy_from_slice(&outs[bi + 1].data);
+        }
+        state.step += 1;
+        Ok(StepMetrics {
+            loss: outs[out_loss].data[0],
+            acc: outs[out_acc].data[0],
+            ce: out_ce.map(|i| outs[i].data[0]),
+            reg_w: out_regw.map(|i| outs[i].data[0]),
+        })
+    }
+
+    /// Resolve the split `grads_*`/`apply_*` stage handles matching this
+    /// session's train program (distributed training). Errors cleanly when
+    /// the backend has no split stages ([`Runtime::grad_stage`]).
+    pub fn enable_grad_stage(&mut self, rt: &'rt Runtime) -> Result<()> {
+        if !rt.grad_stage() {
+            return Err(anyhow!(
+                "{}: backend '{}' has no split grads/apply train stages",
+                self.train.name(),
+                rt.platform()
+            ));
+        }
+        let base = self
+            .train
+            .name()
+            .strip_prefix("train_")
+            .ok_or_else(|| anyhow!("{}: not a train_* program", self.train.name()))?
+            .to_string();
+        let grads = rt.prepare(&format!("grads_{base}"))?;
+        grads.warm()?;
+        let apply = rt.prepare(&format!("apply_{base}"))?;
+        self.grad_stage = Some(GradStage { grads, apply });
+        Ok(())
+    }
+
+    /// Whether [`Session::enable_grad_stage`] has been called.
+    pub fn grad_stage_enabled(&self) -> bool {
+        self.grad_stage.is_some()
+    }
+
+    /// Correctly-shaped zero buffers for one grads-stage dispatch: one per
+    /// parameter gradient, then the ce_sum / acc_cnt scalars.
+    pub fn grad_outputs(&self) -> Vec<Buffer> {
+        let mut outs: Vec<Buffer> = self
+            .model
+            .params
+            .iter()
+            .map(|p| Buffer::zeros(p.shape.clone()))
+            .collect();
+        outs.push(Buffer::scalar(0.0));
+        outs.push(Buffer::scalar(0.0));
+        outs
+    }
+
+    /// Run the grad-producing stage over the given rows (one reduction
+    /// chunk of the global batch) with the loss denominated by the *global*
+    /// batch size `denom`, writing into `outs` (the shape of
+    /// [`Session::grad_outputs`]). Touches no state: parameters stay put
+    /// and the step counter does not advance — [`Session::apply_update`]
+    /// completes the step.
+    pub fn step_grads_into(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        knobs: &StepKnobs,
+        denom: f32,
+        outs: &mut [Buffer],
+    ) -> Result<()> {
+        let stage = self
+            .grad_stage
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: call enable_grad_stage first", self.train.name()))?;
+        let pix: usize = self.model.input_shape.iter().product();
+        if x.is_empty() || !x.len().is_multiple_of(pix) {
+            return Err(anyhow!(
+                "{}: x has {} elems, not a multiple of {pix}",
+                stage.grads.name(),
+                x.len()
+            ));
+        }
+        let rows = x.len() / pix;
+        let (xb, yb) = self.model.batch_buffers(rows, x, y)?;
+        let (mut xb, mut yb) = (Some(xb), Some(yb));
+        enum Src {
+            Param(usize),
+            Scratch(usize),
+        }
+        let sig = stage.grads.sig();
+        let mut plan: Vec<Src> = Vec::with_capacity(sig.inputs.len());
+        let mut scratch: Vec<Buffer> = Vec::new();
+        let mut pi = 0usize;
+        for a in &sig.inputs {
+            let owned = match a.name.as_str() {
+                n if n.starts_with("w:") => {
+                    plan.push(Src::Param(pi));
+                    pi += 1;
+                    continue;
+                }
+                "beta" => buffer_f32(&self.state.beta, &[self.state.beta.len()])?,
+                "x" => xb.take().ok_or_else(|| anyhow!("duplicate x input"))?,
+                "y" => yb.take().ok_or_else(|| anyhow!("duplicate y input"))?,
+                "denom" => Buffer::scalar(denom),
+                "ka" => Buffer::scalar(knobs.ka),
+                "kw" => self
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .find_map(|(i, s)| match s {
+                        Slot::KwVec => Some(self.bufs[i].clone()),
+                        _ => None,
+                    })
+                    .ok_or_else(|| {
+                        anyhow!("{}: train program has no kw to feed the grads stage", sig.name)
+                    })?,
+                other => return Err(anyhow!("{}: unknown grads input '{other}'", sig.name)),
+            };
+            scratch.push(owned);
+            plan.push(Src::Scratch(scratch.len() - 1));
+        }
+        let args: Vec<&Buffer> = plan
+            .iter()
+            .map(|s| match s {
+                Src::Param(i) => &self.state.params[*i],
+                Src::Scratch(i) => &scratch[*i],
+            })
+            .collect();
+        stage.grads.call_into(&args, outs)
+    }
+
+    /// Complete one step from already-reduced gradients: dispatch the apply
+    /// stage (regularizer, clip, SGD/momentum, beta update) into the
+    /// session's double-buffered outputs and flip state exactly like
+    /// [`Session::step`]. `grads` is one buffer per parameter in manifest
+    /// order; `ce_sum`/`acc_cnt` are the chunk-reduced CE parts and `denom`
+    /// the global batch size they are normalized by.
+    pub fn apply_update(
+        &mut self,
+        grads: &[Buffer],
+        ce_sum: f32,
+        acc_cnt: f32,
+        denom: f32,
+        knobs: &StepKnobs,
+    ) -> Result<StepMetrics> {
+        let (out_beta, out_loss, out_acc) = (self.out_beta, self.out_loss, self.out_acc);
+        let (out_ce, out_regw) = (self.out_ce, self.out_regw);
+        let Session { grad_stage, state, outs, n_params, .. } = self;
+        let np = *n_params;
+        let stage = grad_stage
+            .as_ref()
+            .ok_or_else(|| anyhow!("apply_update: call enable_grad_stage first"))?;
+        if grads.len() != np {
+            return Err(anyhow!(
+                "{}: got {} gradient buffers, model has {np} params",
+                stage.apply.name(),
+                grads.len()
+            ));
+        }
+        enum Src {
+            Param(usize),
+            Vel(usize),
+            Grad(usize),
+            Scratch(usize),
+        }
+        let sig = stage.apply.sig();
+        let mut plan: Vec<Src> = Vec::with_capacity(sig.inputs.len());
+        let mut scratch: Vec<Buffer> = Vec::new();
+        let (mut pi, mut vi, mut gi) = (0usize, 0usize, 0usize);
+        for a in &sig.inputs {
+            let owned = match a.name.as_str() {
+                n if n.starts_with("w:") => {
+                    plan.push(Src::Param(pi));
+                    pi += 1;
+                    continue;
+                }
+                n if n.starts_with("v:") => {
+                    plan.push(Src::Vel(vi));
+                    vi += 1;
+                    continue;
+                }
+                n if n.starts_with("g:") => {
+                    plan.push(Src::Grad(gi));
+                    gi += 1;
+                    continue;
+                }
+                "beta" => buffer_f32(&state.beta, &[state.beta.len()])?,
+                "vbeta" => buffer_f32(&state.vbeta, &[state.vbeta.len()])?,
+                "ce_sum" => Buffer::scalar(ce_sum),
+                "acc_cnt" => Buffer::scalar(acc_cnt),
+                "denom" => Buffer::scalar(denom),
+                "lr" => Buffer::scalar(knobs.lr),
+                "mom" => Buffer::scalar(knobs.momentum),
+                "lr_beta" => Buffer::scalar(knobs.lr_beta),
+                "lambda_w" => Buffer::scalar(knobs.lambda_w),
+                "lambda_beta" => Buffer::scalar(knobs.lambda_beta),
+                "beta_train" => Buffer::scalar(knobs.beta_train),
+                other => return Err(anyhow!("{}: unknown apply input '{other}'", sig.name)),
+            };
+            scratch.push(owned);
+            plan.push(Src::Scratch(scratch.len() - 1));
+        }
+        let args: Vec<&Buffer> = plan
+            .iter()
+            .map(|s| match s {
+                Src::Param(i) => &state.params[*i],
+                Src::Vel(i) => &state.vels[*i],
+                Src::Grad(i) => &grads[*i],
+                Src::Scratch(i) => &scratch[*i],
+            })
+            .collect();
+        // The apply stage writes the fused-train output layout, so the
+        // session's double-buffered outputs and flip discipline are reused
+        // verbatim.
+        stage.apply.call_into(&args, outs)?;
         for i in 0..np {
             std::mem::swap(&mut state.params[i], &mut outs[i]);
             std::mem::swap(&mut state.vels[i], &mut outs[np + i]);

@@ -82,17 +82,35 @@ fn d1_flags_spawn_scope_and_builder_outside_the_pool() {
     assert!(f.violations.is_empty(), "pool.rs must be D1-exempt");
 }
 
+/// D2 distinguishes iteration (order-unsafe) from membership (order-safe):
+/// only sites that *observe bucket order* need a BTree swap or an
+/// allowlist line, so the rule tightens without allowlist growth.
 #[test]
-fn d2_flags_hash_collections_only_in_order_sensitive_files() {
-    let src = "fn ser() { let m = std::collections::HashMap::<u32, u32>::new(); drop(m); }\n";
+fn d2_flags_hash_iteration_but_not_membership_tests() {
+    // Planted violation: serializer iterates a HashMap → flagged at the site.
+    let src = "fn ser() {\n    let m = std::collections::HashMap::<u32, u32>::new();\n    \
+               for (k, v) in &m { emit(k, v); }\n    \
+               for k in m.keys() { emit_key(k); }\n}\n";
     let f = scan_source("src/util/json.rs", src);
-    assert_eq!(f.violations.len(), 1, "{:#?}", f.violations);
+    assert_eq!(f.violations.len(), 2, "{:#?}", f.violations);
     assert_eq!(f.violations[0].rule, Rule::D2);
-    assert_eq!(f.violations[0].line, 1);
-    assert_eq!(f.violations[0].pattern, "HashMap");
+    assert_eq!(f.violations[0].line, 3);
+    assert_eq!(f.violations[0].pattern, "for-in");
     assert_eq!(f.violations[0].in_fn.as_deref(), Some("ser"));
+    assert_eq!(f.violations[1].line, 4);
+    assert_eq!(f.violations[1].pattern, ".keys(");
 
-    // Outside the serialization/kernel file set a HashMap is fine.
+    // Planted clean side: membership traffic on the same map passes — no
+    // result depends on bucket order, so no allowlist entry is needed.
+    let src = "fn dedup() {\n    let mut seen = std::collections::HashSet::new();\n    \
+               seen.insert(7u32);\n    if seen.contains(&7) { hit(); }\n    \
+               let _ = seen.get(&7);\n    let _n = seen.len();\n    seen.remove(&7);\n}\n";
+    let f = scan_source("src/util/json.rs", src);
+    assert!(f.violations.is_empty(), "{:#?}", f.violations);
+
+    // Outside the serialization/kernel file set even iteration is fine.
+    let src = "fn f() { let m = std::collections::HashMap::<u32, u32>::new(); \
+               for k in m.keys() { go(k); } }\n";
     let f = scan_source("src/config.rs", src);
     assert!(f.violations.is_empty(), "{:#?}", f.violations);
 }

@@ -1,0 +1,197 @@
+//! Distributed data-parallel training, end to end: the tick coordinator
+//! must be a *bitwise no-op* relative to single-process training. The
+//! fused `Session::step` path, `--workers 1`, `--workers 2`, and
+//! `--workers 4` must all leave the model in bit-identical state —
+//! params, velocities, beta/vbeta, per-step losses, and eval metrics —
+//! at any `WAVEQ_THREADS` setting, and a worker dropped mid-round and
+//! rejoined at a boundary must not change a single bit either.
+
+use waveq::config::{Algo, RunConfig};
+use waveq::coordinator::trainer::eval_session;
+use waveq::coordinator::{
+    run_distributed, session_cfg, ChaosEvent, DistCfg, DistOutcome, KnobPlan,
+};
+use waveq::data::{spec_for_model, Batcher, Dataset, Prefetcher};
+use waveq::runtime::{Runtime, Session, SessionState, StepKnobs};
+
+/// Serializes the tests in this binary: several mutate the process-global
+/// `WAVEQ_THREADS`, and each spawns worker threads that should not fight
+/// the others for cores while bits are being compared.
+fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn waveq_cfg(model: &str, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        model: model.into(),
+        algo: Algo::WaveqLearned,
+        weight_bits: 4,
+        act_bits: 32,
+        steps,
+        train_examples: 512,
+        test_examples: 128,
+        lr: 0.05,
+        lr_beta: 0.05,
+        seed: 11,
+        ..Default::default()
+    };
+    cfg.schedule.total_steps = steps;
+    cfg
+}
+
+fn fixed_knobs() -> StepKnobs {
+    StepKnobs {
+        lr: 0.05,
+        momentum: 0.9,
+        lr_beta: 0.01,
+        ka: 255.0,
+        lambda_w: 0.1,
+        lambda_beta: 0.01,
+        beta_train: 1.0,
+    }
+}
+
+/// Full train state as raw bit patterns (f32 equality would hide the
+/// point: the contract is identical *bits*, not close values).
+fn state_bits(st: &SessionState) -> Vec<Vec<u32>> {
+    let mut out: Vec<Vec<u32>> = st
+        .params
+        .iter()
+        .chain(&st.vels)
+        .map(|b| b.data.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    out.push(st.beta.iter().map(|v| v.to_bits()).collect());
+    out.push(st.vbeta.iter().map(|v| v.to_bits()).collect());
+    out
+}
+
+fn loss_bits(losses: &[f32]) -> Vec<u32> {
+    losses.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The single-process reference: the fused train program stepped over the
+/// identical data stream, with the identical fixed knobs.
+fn fused_baseline(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    knobs: &StepKnobs,
+) -> (SessionState, Vec<f32>, (f32, f32)) {
+    let model_key = cfg.algo.model_key(&cfg.model);
+    let model = rt.manifest.model(&model_key).unwrap().clone();
+    let mut session = Session::open(rt, &session_cfg(cfg, model.num_qlayers)).unwrap();
+    let ds = Dataset::generate(spec_for_model(&model), cfg.train_examples, cfg.seed, 0);
+    let batcher = Batcher::new(ds, model.batch, cfg.seed).unwrap();
+    let mut prefetch = Prefetcher::spawn(batcher, 4, cfg.steps);
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for _ in 0..cfg.steps {
+        let batch = prefetch.next().unwrap().unwrap();
+        losses.push(session.step(&batch.x, &batch.y, knobs).unwrap().loss);
+    }
+    let (test_loss, test_acc) = eval_session(cfg, &mut session).unwrap();
+    (session.state().clone(), losses, (test_loss, test_acc))
+}
+
+fn dist_run(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    workers: usize,
+    knobs: KnobPlan,
+    chaos: Vec<ChaosEvent>,
+) -> DistOutcome {
+    let mut dcfg = DistCfg::new(workers);
+    dcfg.round_len = 10;
+    dcfg.knobs = knobs;
+    dcfg.chaos = chaos;
+    dcfg.quiet = true;
+    run_distributed(rt, cfg, &dcfg).unwrap()
+}
+
+#[test]
+fn one_worker_dist_matches_the_fused_session_bitwise() {
+    let _guard = env_lock();
+    let rt = Runtime::native();
+    let cfg = waveq_cfg("simplenet5", 50);
+    let knobs = fixed_knobs();
+    let (ref_state, ref_losses, ref_eval) = fused_baseline(&rt, &cfg, &knobs);
+    let out = dist_run(&rt, &cfg, 1, KnobPlan::Fixed(knobs), vec![]);
+    assert_eq!(state_bits(&ref_state), state_bits(&out.state));
+    assert_eq!(loss_bits(&ref_losses), loss_bits(&out.loss), "per-step losses differ");
+    assert_eq!(
+        (ref_eval.0.to_bits(), ref_eval.1.to_bits()),
+        (out.test_loss.to_bits(), out.test_acc.to_bits()),
+        "eval metrics differ"
+    );
+    assert_eq!((out.drops, out.replays, out.rejoins), (0, 0, 0));
+}
+
+#[test]
+fn two_and_four_workers_match_one_worker_bitwise_at_every_thread_count() {
+    let _guard = env_lock();
+    let rt = Runtime::native();
+    let cfg = waveq_cfg("simplenet5", 50);
+    std::env::set_var("WAVEQ_THREADS", "1");
+    let reference = dist_run(&rt, &cfg, 1, KnobPlan::Auto, vec![]);
+    let ref_bits = state_bits(&reference.state);
+    let ref_losses = loss_bits(&reference.loss);
+    for (threads, workers) in [("1", 2), ("1", 4), ("2", 2), ("4", 4)] {
+        std::env::set_var("WAVEQ_THREADS", threads);
+        let got = dist_run(&rt, &cfg, workers, KnobPlan::Auto, vec![]);
+        assert_eq!(
+            ref_bits,
+            state_bits(&got.state),
+            "state differs: {workers} workers at {threads} threads"
+        );
+        assert_eq!(
+            ref_losses,
+            loss_bits(&got.loss),
+            "losses differ: {workers} workers at {threads} threads"
+        );
+        assert_eq!(reference.freeze_step, got.freeze_step, "freeze step moved");
+        assert_eq!(
+            (reference.test_loss.to_bits(), reference.test_acc.to_bits()),
+            (got.test_loss.to_bits(), got.test_acc.to_bits())
+        );
+    }
+    std::env::remove_var("WAVEQ_THREADS");
+}
+
+#[test]
+fn killed_and_rejoined_worker_replays_to_the_uninterrupted_bits() {
+    let _guard = env_lock();
+    let rt = Runtime::native();
+    let cfg = waveq_cfg("mlp", 60);
+    let knobs = fixed_knobs();
+    let clean = dist_run(&rt, &cfg, 4, KnobPlan::Fixed(knobs.clone()), vec![]);
+    // Drop worker 2 mid-round-2, readmit it at the boundary entering
+    // round 4: steps 20..25 run with 4 workers, round 2 then replays with
+    // 3, and rounds 4+ run with 4 again — re-sharded chunks throughout.
+    let chaos = vec![
+        ChaosEvent::Kill { worker: 2, at_step: 25 },
+        ChaosEvent::Rejoin { worker: 2, at_round: 4 },
+    ];
+    let chaotic = dist_run(&rt, &cfg, 4, KnobPlan::Fixed(knobs), chaos);
+    assert_eq!((chaotic.drops, chaotic.replays, chaotic.rejoins), (1, 1, 1));
+    assert_eq!(state_bits(&clean.state), state_bits(&chaotic.state), "state differs after replay");
+    assert_eq!(loss_bits(&clean.loss), loss_bits(&chaotic.loss), "loss series differs");
+    assert_eq!(
+        (clean.test_loss.to_bits(), clean.test_acc.to_bits()),
+        (chaotic.test_loss.to_bits(), chaotic.test_acc.to_bits())
+    );
+}
+
+#[test]
+fn worker_counts_off_the_chunk_grid_are_rejected_with_a_clear_error() {
+    let _guard = env_lock();
+    let rt = Runtime::native();
+    let cfg = waveq_cfg("simplenet5", 10);
+    for workers in [3, 8] {
+        let err = run_distributed(&rt, &cfg, &DistCfg::new(workers)).unwrap_err().to_string();
+        assert!(
+            err.contains("reduction grid") && err.contains("1, 2, or 4"),
+            "workers={workers}: unhelpful error: {err}"
+        );
+    }
+    let err = run_distributed(&rt, &cfg, &DistCfg::new(0)).unwrap_err().to_string();
+    assert!(err.contains("--workers"), "workers=0: unhelpful error: {err}");
+}

@@ -4,10 +4,12 @@
 //! (so comments and string literals can never match) plus a little derived
 //! context — the innermost enclosing `fn` name and whether the token sits
 //! inside a `#[cfg(test)] mod …` block. The rules deliberately
-//! over-approximate (e.g. D2 flags any `HashMap` *use* in serialization
-//! files, not only iteration): a false positive costs one documented
-//! allowlist line, while a false negative silently breaks the bitwise
-//! determinism contract the whole repo is built on.
+//! over-approximate where order can leak (a false positive costs one
+//! documented allowlist line, a false negative silently breaks the bitwise
+//! determinism contract), but they are precise where safety is decidable
+//! lexically: D2 tracks which names are bound to `HashMap`/`HashSet` and
+//! flags only *iteration* over them — membership tests (`contains`, `get`,
+//! `insert`, `len`, …) never observe bucket order and pass clean.
 
 use crate::lex::{Scan, Token};
 
@@ -21,8 +23,11 @@ pub enum Rule {
     /// crossbeam outside `runtime/native/pool.rs` (intrinsic) and
     /// explicitly allowlisted sites.
     D1,
-    /// No `HashMap`/`HashSet` in serialization/kernel/reduction files —
-    /// iteration order is nondeterministic; use `BTreeMap`/`BTreeSet`.
+    /// No *iteration* over `HashMap`/`HashSet` in serialization/kernel/
+    /// reduction files — bucket order is nondeterministic; use
+    /// `BTreeMap`/`BTreeSet` or a sorted snapshot. Membership tests
+    /// (`contains`/`get`/`insert`/`remove`/`len`/`entry`) are order-safe
+    /// and pass without an allowlist entry.
     D2,
     /// No `.sum()` / `.product()` / `.fold()` in kernel files outside the
     /// named fixed-order reduction helpers — float reductions for
@@ -122,6 +127,58 @@ const ORDER_SENSITIVE_FILES: &[&str] = &[
 const KERNEL_FILES: &[&str] =
     &["src/runtime/native/kernels.rs", "src/runtime/native/models.rs"];
 
+/// Methods whose results observe hash bucket order (D2 iteration sites).
+const HASH_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Pass 1 of D2: every name lexically bound to a `HashMap`/`HashSet` in
+/// this file (`let m = HashMap::new()`, `m: HashMap<…>` fields and params).
+/// From each `HashMap`/`HashSet` token the scan walks back over type/path
+/// punctuation (`:` `=` `<` `&` `mut` `std` `collections`) to the first
+/// identifier and records it. The walk stops at `,`, so a hash collection
+/// nested as the *value* of an ordered container
+/// (`BTreeMap<String, HashSet<u32>>`) never binds the outer map's name,
+/// and stops at declaration keywords so `use` imports bind nothing.
+fn hash_bound_names(tokens: &[Token]) -> std::collections::BTreeSet<String> {
+    let mut bound = std::collections::BTreeSet::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if t.text != "HashMap" && t.text != "HashSet" {
+            continue;
+        }
+        let mut j = i;
+        let mut budget = 12;
+        while j > 0 && budget > 0 {
+            j -= 1;
+            budget -= 1;
+            let w = tokens[j].text.as_str();
+            if matches!(w, ":" | "=" | "<" | "&" | "mut" | "std" | "collections") {
+                continue;
+            }
+            let ident = w.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_');
+            let keyword = matches!(
+                w,
+                "let" | "pub" | "use" | "fn" | "in" | "for" | "return" | "type" | "const"
+                    | "static" | "where" | "impl" | "struct" | "enum" | "as" | "crate" | "super"
+            );
+            if ident && !keyword {
+                bound.insert(w.to_string());
+            }
+            break;
+        }
+    }
+    bound
+}
+
 fn in_file_set(file: &str, set: &[&str]) -> bool {
     set.iter().any(|s| file == *s || file.ends_with(s))
 }
@@ -212,6 +269,11 @@ pub fn check_file(file: &str, scan: &Scan) -> FileFindings {
     let is_pool = file == PARALLELISM_ROOT || file.ends_with(PARALLELISM_ROOT);
     let order_sensitive = in_file_set(file, ORDER_SENSITIVE_FILES);
     let kernel_file = in_file_set(file, KERNEL_FILES);
+    let hash_bound = if order_sensitive {
+        hash_bound_names(tokens)
+    } else {
+        std::collections::BTreeSet::new()
+    };
 
     let mut push = |rule: Rule, line: u32, pattern: &str, in_fn: Option<String>, msg: String| {
         violations.push(Violation {
@@ -257,18 +319,50 @@ pub fn check_file(file: &str, scan: &Scan) -> FileFindings {
             }
         }
 
-        // ---- D2: hash-order nondeterminism -------------------------------
-        if order_sensitive && (text == "HashMap" || text == "HashSet") {
-            push(
-                Rule::D2,
-                line,
-                text,
-                ctx[i].fn_name.clone(),
-                format!(
-                    "`{text}` in an order-sensitive file — iteration order varies per \
-                     process; use BTreeMap/BTreeSet or add a justified allowlist entry"
-                ),
-            );
+        // ---- D2: hash-order nondeterminism (iteration sites only) --------
+        if order_sensitive {
+            // `name.iter()` / `.keys()` / … on a hash-bound name.
+            if hash_bound.contains(text)
+                && tokens.get(i + 1).is_some_and(|t| t.text == ".")
+                && tokens.get(i + 2).is_some_and(|t| HASH_ITER_METHODS.contains(&t.text.as_str()))
+                && tokens.get(i + 3).is_some_and(|t| t.text == "(")
+            {
+                let method = tokens[i + 2].text.clone();
+                push(
+                    Rule::D2,
+                    line,
+                    &format!(".{method}("),
+                    ctx[i].fn_name.clone(),
+                    format!(
+                        "iteration over hash-ordered `{text}` via `.{method}()` — bucket \
+                         order varies per process; use BTreeMap/BTreeSet or a sorted \
+                         snapshot (membership tests like `.get`/`.contains` are fine)"
+                    ),
+                );
+            }
+            // `for x in [&[mut]] name {` on a hash-bound name.
+            if text == "in" {
+                let mut j = i + 1;
+                while tokens.get(j).is_some_and(|t| t.text == "&" || t.text == "mut") {
+                    j += 1;
+                }
+                if tokens.get(j).is_some_and(|t| hash_bound.contains(&t.text))
+                    && tokens.get(j + 1).is_some_and(|t| t.text == "{")
+                {
+                    let name = tokens[j].text.clone();
+                    push(
+                        Rule::D2,
+                        line,
+                        "for-in",
+                        ctx[i].fn_name.clone(),
+                        format!(
+                            "`for … in {name}` iterates a hash-ordered collection — bucket \
+                             order varies per process; use BTreeMap/BTreeSet or a sorted \
+                             snapshot"
+                        ),
+                    );
+                }
+            }
         }
 
         // ---- D3: fixed-order reductions (float AND integer accumulators) -
@@ -427,6 +521,45 @@ mod tests {
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].rule, Rule::D1);
         assert_eq!(hits[0].pattern, "thread::spawn");
+    }
+
+    #[test]
+    fn d2_flags_iteration_not_membership() {
+        // Membership-only traffic on a hash map is order-safe → clean.
+        let src = "fn f() { let mut m = std::collections::HashMap::new(); m.insert(1, 2); \
+                   if m.contains_key(&1) { hit(); } let _ = m.get(&1); let _n = m.len(); }";
+        assert!(violations("src/runtime/io.rs", src).is_empty());
+        // A bare declaration with no iteration is clean too.
+        let src = "fn f() { let m = std::collections::HashMap::<u32, u32>::new(); drop(m); }";
+        assert!(violations("src/runtime/io.rs", src).is_empty());
+        // Method-style iteration is flagged.
+        let src = "fn f() { let m = std::collections::HashMap::<u32, u32>::new(); \
+                   for k in m.keys() { go(k); } }";
+        let hits = violations("src/runtime/io.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, Rule::D2);
+        assert_eq!(hits[0].pattern, ".keys(");
+        // `for … in &map { … }` is flagged, through a reference and a param.
+        let src = "fn f(m: &std::collections::HashMap<u32, u32>) { \
+                   for (k, v) in m { use_(k, v); } for x in &m { go(x); } }";
+        let hits = violations("src/runtime/io.rs", src);
+        assert_eq!(hits.len(), 2);
+        assert!(hits.iter().all(|h| h.pattern == "for-in"));
+        // Out-of-scope files are untouched either way.
+        let src = "fn f() { let s = std::collections::HashSet::from([1]); \
+                   let v: Vec<u32> = s.iter().copied().collect(); drop(v); }";
+        assert_eq!(violations("src/runtime/io.rs", src).len(), 1);
+        assert!(violations("src/config.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_nested_hash_value_type_does_not_bind_the_ordered_outer_name() {
+        // `m` is a BTreeMap (ordered): iterating it is fine even though its
+        // value type is a HashSet — only `s.iter()`-style iteration on the
+        // hash side would be flagged, and membership there is clean.
+        let src = "fn f(m: &std::collections::BTreeMap<String, std::collections::HashSet<u32>>) \
+                   { for (k, s) in m { if s.contains(&1) { hit(k); } } }";
+        assert!(violations("src/runtime/io.rs", src).is_empty());
     }
 
     #[test]
