@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Render the BENCH_*.json / AUDIT_report.json reports as step-summary markdown.
+"""Render BENCH_*/AUDIT/CHECK json reports as step-summary markdown.
 
 Usage: bench_summary.py <dir-with-reports>
 
@@ -11,8 +11,10 @@ serving throughput), BENCH_serve.json (concurrent `waveq serve`
 latency/throughput vs batch-1 serial) and BENCH_dist.json (distributed
 training: worker scaling + all-reduce cost), plus AUDIT_report.json from
 `cargo run -p waveq-audit` (determinism/safety rules D1-D6 and the
-unsafe inventory). Prints markdown to stdout; the perf-smoke and lint
-CI jobs append it to $GITHUB_STEP_SUMMARY.
+unsafe inventory) and CHECK_report.json from `cargo run -p waveq-check`
+(exhaustive interleaving model checking of the pool Latch and dist
+tick-barrier protocols). Prints markdown to stdout; the perf-smoke,
+lint and model-check CI jobs append it to $GITHUB_STEP_SUMMARY.
 """
 
 import json
@@ -184,12 +186,57 @@ def audit_table(report: dict) -> None:
     print()
 
 
+def check_table(report: dict) -> None:
+    clean = report.get("clean", False)
+    verdict = "clean" if clean else "FAILED"
+    summary = report.get("summary", {})
+    print(f"## waveq-check (interleaving model checker, "
+          f"{report.get('mode', '?')} mode): {verdict}")
+    print()
+    print(f"{int(summary.get('states', 0))} states / "
+          f"{int(summary.get('transitions', 0))} transitions explored across "
+          f"{int(summary.get('runs', 0))} protocol runs and "
+          f"{int(summary.get('fixtures', 0))} planted-bug fixtures")
+    print()
+    print("| run | model | states | transitions | depth | verdict |")
+    print("|---|---|---|---|---|---|")
+    for kind, runs in [("real", report.get("runs", [])),
+                       ("fixture", report.get("fixtures", []))]:
+        for r in runs:
+            v = r.get("violation")
+            if r.get("passed"):
+                verdict = (f"caught `{v['property']}`" if kind == "fixture"
+                           else "exhausted clean")
+            elif v is None:
+                verdict = ("**truncated**" if r.get("truncated")
+                           else "**planted bug missed**")
+            else:
+                verdict = f"**{v['property']}**: {v.get('message', '')}"
+            print(f"| {r['name']} | {r['model']} | {int(r['states'])} | "
+                  f"{int(r['transitions'])} | {int(r['max_depth'])} | {verdict} |")
+    # Show the offending interleaving for any real-protocol violation —
+    # the trace is the whole point of a model checker.
+    for r in report.get("runs", []):
+        v = r.get("violation")
+        if v and not r.get("passed"):
+            print()
+            print(f"### {r['name']}: {v['property']} interleaving")
+            print()
+            for step in v.get("trace", []):
+                print(f"1. {step}")
+    print()
+
+
 def main() -> int:
     outdir = Path(sys.argv[1] if len(sys.argv) > 1 else ".")
     found = False
     audit = outdir / "AUDIT_report.json"
     if audit.exists():
         audit_table(json.loads(audit.read_text()))
+        found = True
+    check = outdir / "CHECK_report.json"
+    if check.exists():
+        check_table(json.loads(check.read_text()))
         found = True
     kernels = outdir / "BENCH_kernels.json"
     if kernels.exists():
@@ -212,7 +259,7 @@ def main() -> int:
         dist_table(json.loads(dist.read_text()))
         found = True
     if not found:
-        print(f"no BENCH_*.json / AUDIT_report.json reports under {outdir}",
+        print(f"no BENCH_/AUDIT_/CHECK_ json reports under {outdir}",
               file=sys.stderr)
         return 1
     return 0

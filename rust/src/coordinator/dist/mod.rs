@@ -36,6 +36,7 @@
 //! match an uninterrupted run with the final membership. A worker rejoins
 //! at a round boundary by loading the coordinator's state snapshot.
 
+pub mod protocol;
 pub mod state;
 pub mod worker;
 
@@ -47,6 +48,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use self::protocol::{probe_ms, BarrierCore, Roster, PROBE_ENV};
 use self::state::{RoundMachine, RoundState};
 use self::worker::{ChunkGrads, FromWorker, Member, ToWorker};
 use super::bitwidth::BitAssignment;
@@ -191,10 +193,10 @@ pub fn run_distributed(rt: &Runtime, cfg: &RunConfig, dcfg: &DistCfg) -> Result<
         model,
         scfg,
         own,
-        members: Vec::new(),
+        members: Roster::new(),
         from_tx,
         from_rx,
-        next_uid: 0,
+        probe: Duration::from_millis(probe_ms(std::env::var(PROBE_ENV).ok().as_deref())),
         gen: 0,
         controller: PhaseController::new(cfg.schedule.clone()),
         freeze_step: None,
@@ -217,11 +219,15 @@ struct Coordinator<'rt, 'c> {
     scfg: SessionCfg,
     own: Session<'rt>,
     /// Live workers, always sorted by slot; a worker's shard position is
-    /// its index here.
-    members: Vec<Member>,
+    /// its index here. Uid allocation and slot ordering live in the pure
+    /// [`protocol::Roster`] core that `waveq-check` model-checks.
+    members: Roster<Member>,
     from_tx: Sender<FromWorker>,
     from_rx: Receiver<FromWorker>,
-    next_uid: usize,
+    /// Barrier liveness-probe cadence (`protocol::DEFAULT_PROBE_MS`,
+    /// overridable through `WAVEQ_DIST_PROBE_MS`), resolved once at
+    /// construction.
+    probe: Duration,
     /// Barrier generation: bumped on every membership change so replies
     /// from before a replay are discarded.
     gen: u64,
@@ -243,7 +249,7 @@ impl Coordinator<'_, '_> {
         for slot in 0..self.dcfg.workers {
             self.admit(slot)?;
         }
-        let uids: BTreeSet<usize> = self.members.iter().map(|m| m.uid).collect();
+        let uids = self.members.uids();
         self.wait_ready(&uids)?;
 
         let mut machine = RoundMachine::new(self.cfg.steps, self.dcfg.round_len);
@@ -391,21 +397,25 @@ impl Coordinator<'_, '_> {
 
         // ---- gradient barrier --------------------------------------------
         let mut by_chunk: Vec<Option<ChunkGrads>> = vec![None; kn::GRAD_CHUNKS];
-        let mut pending: BTreeSet<usize> = self.members.iter().map(|m| m.uid).collect();
-        while !pending.is_empty() {
-            match self.recv(&pending)? {
-                Tick::Complete(FromWorker::Grads { worker, gen, step: s, parts })
-                    if gen == self.gen && s == step =>
-                {
-                    pending.remove(&worker);
-                    for p in parts {
-                        if p.chunk >= by_chunk.len() {
-                            return Err(anyhow!("worker returned chunk {} out of grid", p.chunk));
+        let mut barrier = BarrierCore::new(self.gen, self.members.uids());
+        while !barrier.is_satisfied() {
+            match self.recv(&barrier)? {
+                Tick::Complete(FromWorker::Grads { worker, gen, step: s, parts }) if s == step => {
+                    // `arrive` rejects stale generations and non-pending
+                    // uids; chunks are only collected off accepted replies.
+                    if barrier.arrive(worker, Some(gen)) {
+                        for p in parts {
+                            if p.chunk >= by_chunk.len() {
+                                return Err(anyhow!(
+                                    "worker returned chunk {} out of grid",
+                                    p.chunk
+                                ));
+                            }
+                            by_chunk[p.chunk] = Some(p);
                         }
-                        by_chunk[p.chunk] = Some(p);
                     }
                 }
-                Tick::Complete(_) => {} // stale generation/step: discard
+                Tick::Complete(_) => {} // wrong kind/step: discard
                 Tick::Lost(d) => return Ok(Tick::Lost(d)),
             }
         }
@@ -417,7 +427,7 @@ impl Coordinator<'_, '_> {
 
         // ---- shared apply -------------------------------------------------
         let grads = Arc::new(grads);
-        for m in &self.members {
+        for m in self.members.iter() {
             let msg = ToWorker::Apply {
                 gen: self.gen,
                 grads: Arc::clone(&grads),
@@ -434,11 +444,11 @@ impl Coordinator<'_, '_> {
             return Ok(Tick::Lost(dead));
         }
         let metrics = self.own.apply_update(&grads, ce_sum, acc_cnt, denom, knobs)?;
-        let mut pending: BTreeSet<usize> = self.members.iter().map(|m| m.uid).collect();
-        while !pending.is_empty() {
-            match self.recv(&pending)? {
-                Tick::Complete(FromWorker::Applied { worker, gen }) if gen == self.gen => {
-                    pending.remove(&worker);
+        let mut barrier = BarrierCore::new(self.gen, self.members.uids());
+        while !barrier.is_satisfied() {
+            match self.recv(&barrier)? {
+                Tick::Complete(FromWorker::Applied { worker, gen }) => {
+                    barrier.arrive(worker, Some(gen));
                 }
                 Tick::Complete(_) => {}
                 Tick::Lost(d) => return Ok(Tick::Lost(d)),
@@ -501,7 +511,7 @@ impl Coordinator<'_, '_> {
         let st = self.own.state_mut();
         st.beta = snapped.clone();
         st.vbeta = vec![0.0; st.vbeta.len()];
-        for m in &self.members {
+        for m in self.members.iter() {
             // A failed send means the worker died; the next tick barrier
             // detects it and the round replays past this point anyway.
             let _ = m.tx.send(ToWorker::SnapBeta { beta: snapped.clone() });
@@ -536,7 +546,7 @@ impl Coordinator<'_, '_> {
             })
             .collect();
         for slot in joining {
-            if self.members.iter().any(|m| m.slot == slot) {
+            if self.members.contains_slot(slot) {
                 continue; // already live
             }
             let uid = self.admit(slot)?;
@@ -545,8 +555,7 @@ impl Coordinator<'_, '_> {
             let snapshot = Arc::new(self.own.state().clone());
             let m = self
                 .members
-                .iter()
-                .find(|m| m.uid == uid)
+                .find_uid(uid)
                 .ok_or_else(|| anyhow!("rejoined worker {slot} vanished"))?;
             m.tx.send(ToWorker::Load { gen: self.gen, state: snapshot })
                 .map_err(|_| anyhow!("rejoined worker {slot} died before loading state"))?;
@@ -562,15 +571,12 @@ impl Coordinator<'_, '_> {
 
     // ---- membership ------------------------------------------------------
 
-    /// Spawn a worker into `slot`, keeping `members` sorted by slot.
-    /// Returns its uid.
+    /// Spawn a worker into `slot`; the roster allocates its incarnation
+    /// uid and keeps the membership sorted by slot. Returns the uid.
     fn admit(&mut self, slot: usize) -> Result<usize> {
-        let uid = self.next_uid;
-        self.next_uid += 1;
-        let member = Member::spawn(slot, uid, self.scfg.clone(), self.from_tx.clone())?;
-        let at = self.members.partition_point(|m| m.slot < slot);
-        self.members.insert(at, member);
-        Ok(uid)
+        let scfg = self.scfg.clone();
+        let from_tx = self.from_tx.clone();
+        self.members.admit_with(slot, |uid| Member::spawn(slot, uid, scfg, from_tx))
     }
 
     fn chaos_kills_at(&self, step: usize) -> Vec<usize> {
@@ -581,7 +587,7 @@ impl Coordinator<'_, '_> {
                 ChaosEvent::Kill { worker, at_step } if *at_step == step => Some(*worker),
                 _ => None,
             })
-            .filter(|slot| self.members.iter().any(|m| m.slot == *slot))
+            .filter(|slot| self.members.contains_slot(*slot))
             .collect()
     }
 
@@ -605,25 +611,19 @@ impl Coordinator<'_, '_> {
     /// Remove dead members (by uid) from the membership and join their
     /// threads.
     fn reap(&mut self, uids: &[usize]) {
-        let mut kept = Vec::with_capacity(self.members.len());
-        for m in self.members.drain(..) {
-            if uids.contains(&m.uid) {
-                self.drops += 1;
-                if let Err(payload) = m.handle.join() {
-                    let msg = payload
-                        .downcast_ref::<String>()
-                        .map(String::as_str)
-                        .or_else(|| payload.downcast_ref::<&'static str>().copied())
-                        .unwrap_or("(non-string panic payload)");
-                    if !self.dcfg.quiet {
-                        crate::warnlog!("dist: worker slot {} panicked: {msg}", m.slot);
-                    }
+        for m in self.members.remove(uids) {
+            self.drops += 1;
+            if let Err(payload) = m.handle.join() {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .map(String::as_str)
+                    .or_else(|| payload.downcast_ref::<&'static str>().copied())
+                    .unwrap_or("(non-string panic payload)");
+                if !self.dcfg.quiet {
+                    crate::warnlog!("dist: worker slot {} panicked: {msg}", m.slot);
                 }
-            } else {
-                kept.push(m);
             }
         }
-        self.members = kept;
     }
 
     /// Restore the round-start snapshot everywhere after a membership
@@ -649,7 +649,7 @@ impl Coordinator<'_, '_> {
             self.gen += 1;
             let snapshot = Arc::new(snap_state.clone());
             let mut dead = Vec::new();
-            for m in &self.members {
+            for m in self.members.iter() {
                 if m.tx
                     .send(ToWorker::Load { gen: self.gen, state: Arc::clone(&snapshot) })
                     .is_err()
@@ -658,12 +658,12 @@ impl Coordinator<'_, '_> {
                 }
             }
             if dead.is_empty() {
-                let mut pending: BTreeSet<usize> = self.members.iter().map(|m| m.uid).collect();
+                let mut barrier = BarrierCore::new(self.gen, self.members.uids());
                 let mut lost = Vec::new();
-                while !pending.is_empty() && lost.is_empty() {
-                    match self.recv(&pending)? {
-                        Tick::Complete(FromWorker::Loaded { worker, gen }) if gen == self.gen => {
-                            pending.remove(&worker);
+                while !barrier.is_satisfied() && lost.is_empty() {
+                    match self.recv(&barrier)? {
+                        Tick::Complete(FromWorker::Loaded { worker, gen }) => {
+                            barrier.arrive(worker, Some(gen));
                         }
                         Tick::Complete(_) => {}
                         Tick::Lost(d) => lost = d,
@@ -681,16 +681,16 @@ impl Coordinator<'_, '_> {
     // ---- barriers --------------------------------------------------------
 
     /// Receive one message from a *current* member, translating worker
-    /// death (Fatal, disconnect, or a thread in `pending` discovered
-    /// finished on timeout) into `Tick::Lost`. Stragglers from reaped
+    /// death (Fatal, disconnect, or a pending thread discovered finished
+    /// on the probe timeout) into `Tick::Lost`. Stragglers from reaped
     /// incarnations are dropped here; deciding whether a returned message
     /// satisfies the barrier (right generation/step/kind) is the caller's
-    /// job — `recv` never touches `pending`.
-    fn recv(&self, pending: &BTreeSet<usize>) -> Result<Tick<FromWorker>> {
+    /// job — `recv` only reads `barrier` for the probe's pending scan.
+    fn recv(&self, barrier: &BarrierCore) -> Result<Tick<FromWorker>> {
         loop {
-            match self.from_rx.recv_timeout(Duration::from_millis(100)) {
+            match self.from_rx.recv_timeout(self.probe) {
                 Ok(FromWorker::Fatal { worker, msg }) => {
-                    if self.members.iter().any(|m| m.uid == worker) {
+                    if self.members.contains_uid(worker) {
                         if !self.dcfg.quiet {
                             crate::warnlog!("dist: worker uid {worker} failed: {msg}");
                         }
@@ -705,18 +705,15 @@ impl Coordinator<'_, '_> {
                         | FromWorker::Loaded { worker, .. }
                         | FromWorker::Fatal { worker, .. } => *worker,
                     };
-                    if !self.members.iter().any(|m| m.uid == uid) {
+                    if !self.members.contains_uid(uid) {
                         continue; // straggler from a reaped incarnation
                     }
                     return Ok(Tick::Complete(m));
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    let dead: Vec<usize> = self
-                        .members
-                        .iter()
-                        .filter(|m| pending.contains(&m.uid) && m.handle.is_finished())
-                        .map(|m| m.uid)
-                        .collect();
+                    let dead = barrier.finished_pending(|uid| {
+                        self.members.find_uid(uid).is_some_and(|m| m.handle.is_finished())
+                    });
                     if !dead.is_empty() {
                         return Ok(Tick::Lost(dead));
                     }
@@ -730,11 +727,11 @@ impl Coordinator<'_, '_> {
 
     /// Barrier on `Ready` from each uid in `expect` (launch / rejoin).
     fn wait_ready(&self, expect: &BTreeSet<usize>) -> Result<()> {
-        let mut pending = expect.clone();
-        while !pending.is_empty() {
-            match self.recv(&pending)? {
+        let mut barrier = BarrierCore::new(self.gen, expect.iter().copied());
+        while !barrier.is_satisfied() {
+            match self.recv(&barrier)? {
                 Tick::Complete(FromWorker::Ready { worker }) => {
-                    pending.remove(&worker);
+                    barrier.arrive(worker, None); // Ready predates generations
                 }
                 Tick::Complete(_) => {}
                 Tick::Lost(dead) => {
@@ -746,13 +743,11 @@ impl Coordinator<'_, '_> {
     }
 
     fn wait_loaded(&self, uid: usize) -> Result<()> {
-        let mut pending = BTreeSet::from([uid]);
-        while !pending.is_empty() {
-            match self.recv(&pending)? {
-                Tick::Complete(FromWorker::Loaded { worker, gen })
-                    if gen == self.gen && worker == uid =>
-                {
-                    pending.remove(&worker);
+        let mut barrier = BarrierCore::new(self.gen, [uid]);
+        while !barrier.is_satisfied() {
+            match self.recv(&barrier)? {
+                Tick::Complete(FromWorker::Loaded { worker, gen }) => {
+                    barrier.arrive(worker, Some(gen));
                 }
                 Tick::Complete(_) => {}
                 Tick::Lost(dead) => {
@@ -765,10 +760,10 @@ impl Coordinator<'_, '_> {
 
     /// Stop every remaining worker (end of run or error unwind).
     fn shutdown(&mut self) {
-        for m in &self.members {
+        for m in self.members.iter() {
             let _ = m.tx.send(ToWorker::Exit);
         }
-        for m in self.members.drain(..) {
+        for m in self.members.drain_all() {
             let _ = m.handle.join();
         }
     }

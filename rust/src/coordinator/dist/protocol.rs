@@ -1,0 +1,286 @@
+//! Pure decision cores of the dist tick-barrier/membership protocol:
+//! the roster (per-incarnation uids over stable slots) and the barrier
+//! (generation-gated reply accounting), with every channel and thread
+//! stripped away.
+//!
+//! Production (`dist::Coordinator`) wraps these cores in the real sync
+//! layer — mpsc channels, `JoinHandle` liveness probes — while
+//! `waveq-check` drives the *same* cores from a virtual scheduler and
+//! exhaustively explores every interleaving of coordinator and worker
+//! steps. The accept/reject decisions verified there are the ones
+//! executing here; the sync layers only differ in how a decision's
+//! inputs arrive.
+
+use std::collections::BTreeSet;
+
+/// Default cadence of the barrier liveness probe, in milliseconds.
+///
+/// While a barrier waits, the coordinator wakes at this cadence whenever
+/// the reply queue is empty and scans the pending uids for threads that
+/// finished without replying (a panic unwound `worker_main`, so neither a
+/// `Fatal` nor a disconnect error is coming — the channel's sender half
+/// is cloned into every member). 100 ms is invisible next to a training
+/// tick but bounds how long a dead worker can stall a round; tests and
+/// latency-sensitive deployments lower it through [`PROBE_ENV`].
+pub const DEFAULT_PROBE_MS: u64 = 100;
+
+/// Env var overriding [`DEFAULT_PROBE_MS`] (positive integer, in ms).
+pub const PROBE_ENV: &str = "WAVEQ_DIST_PROBE_MS";
+
+/// Resolve the probe cadence from a raw [`PROBE_ENV`] value. Unset,
+/// non-numeric, and zero values fall back to [`DEFAULT_PROBE_MS`] — the
+/// probe is a liveness mechanism, so there is no "disabled" setting.
+pub fn probe_ms(raw: Option<&str>) -> u64 {
+    raw.and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&ms| ms >= 1)
+        .unwrap_or(DEFAULT_PROBE_MS)
+}
+
+/// What the roster needs to know about a member. Production implements
+/// this on `worker::Member` (slot + uid next to the channel and join
+/// handle); the model checker implements it on a plain struct.
+pub trait RosterEntry {
+    /// Stable worker identity: shard position, chaos-event target, log
+    /// name. Reused across rejoins.
+    fn slot(&self) -> usize;
+    /// Per-incarnation identity: unique across the run, so stragglers
+    /// from a dead worker's first life can never be mistaken for its
+    /// rejoined successor.
+    fn uid(&self) -> usize;
+}
+
+/// Live membership: entries sorted by slot (a member's shard position is
+/// its index), uids allocated once and never reused.
+///
+/// The comparison/hash derives only bite when `M` implements them —
+/// production's `Member` (channel + join handle) does not, while the
+/// model checker's plain member struct does, letting `waveq-check` embed
+/// the real roster in its hashed protocol states.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Roster<M> {
+    next_uid: usize,
+    members: Vec<M>,
+}
+
+impl<M: RosterEntry> Roster<M> {
+    pub fn new() -> Roster<M> {
+        Roster { next_uid: 0, members: Vec::new() }
+    }
+
+    /// Admit a member into `slot`: allocate the next uid, build the entry
+    /// through `make` (production spawns the worker thread there), insert
+    /// sorted by slot. Returns the new uid.
+    pub fn admit_with<E>(
+        &mut self,
+        slot: usize,
+        make: impl FnOnce(usize) -> Result<M, E>,
+    ) -> Result<usize, E> {
+        let uid = self.next_uid;
+        let member = make(uid)?;
+        debug_assert_eq!(member.slot(), slot, "admitted member must carry its slot");
+        debug_assert_eq!(member.uid(), uid, "admitted member must carry its uid");
+        self.next_uid += 1;
+        let at = self.members.partition_point(|m| m.slot() < slot);
+        self.members.insert(at, member);
+        Ok(uid)
+    }
+
+    /// Remove the named uids from the membership, returning them (sorted
+    /// by slot, as they were stored) so the caller can join/log them.
+    pub fn remove(&mut self, uids: &[usize]) -> Vec<M> {
+        let mut removed = Vec::new();
+        let mut kept = Vec::with_capacity(self.members.len());
+        for m in self.members.drain(..) {
+            if uids.contains(&m.uid()) {
+                removed.push(m);
+            } else {
+                kept.push(m);
+            }
+        }
+        self.members = kept;
+        removed
+    }
+
+    /// Drain every member (shutdown).
+    pub fn drain_all(&mut self) -> Vec<M> {
+        std::mem::take(&mut self.members)
+    }
+
+    pub fn contains_uid(&self, uid: usize) -> bool {
+        self.members.iter().any(|m| m.uid() == uid)
+    }
+
+    pub fn contains_slot(&self, slot: usize) -> bool {
+        self.members.iter().any(|m| m.slot() == slot)
+    }
+
+    pub fn find_uid(&self, uid: usize) -> Option<&M> {
+        self.members.iter().find(|m| m.uid() == uid)
+    }
+
+    /// The live uids, ordered by slot (ascending, like iteration).
+    pub fn uids(&self) -> BTreeSet<usize> {
+        self.members.iter().map(|m| m.uid()).collect()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, M> {
+        self.members.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+impl<M: RosterEntry> Default for Roster<M> {
+    fn default() -> Roster<M> {
+        Roster::new()
+    }
+}
+
+/// One barrier's reply accounting: the uids still owed a reply, gated on
+/// the generation the barrier was opened at.
+///
+/// The coordinator bumps its generation on every membership change; a
+/// reply echoing an older generation was computed against a membership
+/// that no longer exists, so [`BarrierCore::arrive`] rejects it even when
+/// its uid is pending. Replies from non-pending uids (reaped incarnations
+/// whose messages were already drained, duplicates) are rejected by the
+/// set membership itself. The model checker proves no interleaving of
+/// drops, replays, and stale queue contents lets a rejected reply satisfy
+/// a barrier.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BarrierCore {
+    gen: u64,
+    pending: BTreeSet<usize>,
+}
+
+impl BarrierCore {
+    pub fn new(gen: u64, expect: impl IntoIterator<Item = usize>) -> BarrierCore {
+        BarrierCore { gen, pending: expect.into_iter().collect() }
+    }
+
+    /// Feed one reply. Returns `true` iff it satisfies part of this
+    /// barrier: the uid is still pending and the echoed generation (when
+    /// the reply kind carries one — launch `Ready` predates generations)
+    /// matches the barrier's. The caller must not act on a reply's
+    /// payload when this returns `false`.
+    pub fn arrive(&mut self, uid: usize, echoed_gen: Option<u64>) -> bool {
+        if let Some(g) = echoed_gen {
+            if g != self.gen {
+                return false;
+            }
+        }
+        self.pending.remove(&uid)
+    }
+
+    pub fn is_satisfied(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    pub fn pending(&self) -> &BTreeSet<usize> {
+        &self.pending
+    }
+
+    /// The liveness-probe scan: pending uids whose thread `is_finished`.
+    /// A finished thread can never reply, so the barrier would otherwise
+    /// wait forever; the caller reaps these and replays the round.
+    pub fn finished_pending(&self, is_finished: impl Fn(usize) -> bool) -> Vec<usize> {
+        self.pending.iter().copied().filter(|&uid| is_finished(uid)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Entry {
+        slot: usize,
+        uid: usize,
+    }
+
+    impl RosterEntry for Entry {
+        fn slot(&self) -> usize {
+            self.slot
+        }
+        fn uid(&self) -> usize {
+            self.uid
+        }
+    }
+
+    fn admit(r: &mut Roster<Entry>, slot: usize) -> usize {
+        r.admit_with(slot, |uid| Ok::<_, ()>(Entry { slot, uid })).unwrap()
+    }
+
+    #[test]
+    fn probe_ms_parses_overrides_and_falls_back() {
+        assert_eq!(probe_ms(None), DEFAULT_PROBE_MS);
+        assert_eq!(probe_ms(Some("25")), 25);
+        assert_eq!(probe_ms(Some(" 7 ")), 7, "whitespace is trimmed");
+        assert_eq!(probe_ms(Some("0")), DEFAULT_PROBE_MS, "the probe cannot be disabled");
+        assert_eq!(probe_ms(Some("-3")), DEFAULT_PROBE_MS);
+        assert_eq!(probe_ms(Some("fast")), DEFAULT_PROBE_MS);
+        assert_eq!(probe_ms(Some("")), DEFAULT_PROBE_MS);
+    }
+
+    #[test]
+    fn roster_allocates_fresh_uids_and_keeps_slot_order() {
+        let mut r: Roster<Entry> = Roster::new();
+        let u2 = admit(&mut r, 2);
+        let u0 = admit(&mut r, 0);
+        let u1 = admit(&mut r, 1);
+        assert_eq!((u2, u0, u1), (0, 1, 2), "uids are allocation-ordered");
+        let slots: Vec<usize> = r.iter().map(|m| m.slot).collect();
+        assert_eq!(slots, vec![0, 1, 2], "members stay sorted by slot");
+
+        // Drop slot 1, rejoin it: the new incarnation gets a fresh uid.
+        let removed = r.remove(&[u1]);
+        assert_eq!(removed.len(), 1);
+        assert!(!r.contains_uid(u1));
+        assert!(!r.contains_slot(1));
+        let u1b = admit(&mut r, 1);
+        assert_eq!(u1b, 3, "uids are never reused across incarnations");
+        assert!(r.contains_slot(1));
+        let slots: Vec<usize> = r.iter().map(|m| m.slot).collect();
+        assert_eq!(slots, vec![0, 1, 2], "rejoin lands back in slot order");
+        assert_eq!(r.uids(), BTreeSet::from([0, 2, 3]));
+    }
+
+    #[test]
+    fn roster_admit_failure_allocates_nothing() {
+        let mut r: Roster<Entry> = Roster::new();
+        let err = r.admit_with(0, |_| Err::<Entry, &str>("spawn failed"));
+        assert_eq!(err.unwrap_err(), "spawn failed");
+        assert!(r.is_empty());
+        assert_eq!(admit(&mut r, 0), 0, "a failed admission does not burn a uid");
+    }
+
+    #[test]
+    fn barrier_rejects_stale_generation_and_unknown_uids() {
+        let mut b = BarrierCore::new(7, [10, 11]);
+        assert!(!b.is_satisfied());
+        assert!(!b.arrive(10, Some(6)), "a stale-generation echo never satisfies");
+        assert!(!b.arrive(12, Some(7)), "an unknown uid never satisfies");
+        assert!(b.arrive(10, Some(7)));
+        assert!(!b.arrive(10, Some(7)), "a duplicate reply never satisfies");
+        assert!(b.arrive(11, None), "Ready-style replies carry no generation");
+        assert!(b.is_satisfied());
+    }
+
+    #[test]
+    fn barrier_probe_scan_names_only_finished_pending_uids() {
+        let b = BarrierCore::new(0, [3, 4, 5]);
+        let dead = b.finished_pending(|uid| uid == 4 || uid == 9);
+        assert_eq!(dead, vec![4], "only pending uids are scanned");
+        assert!(b.finished_pending(|_| false).is_empty());
+    }
+}

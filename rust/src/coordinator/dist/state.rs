@@ -17,7 +17,7 @@
 /// Linear LR warmup horizon (steps), matching `trainer::step_knobs`.
 pub const WARMUP_STEPS: usize = 30;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RoundState {
     /// Blocked until every launch worker reports Ready.
     WaitingForMembers,
@@ -31,7 +31,10 @@ pub enum RoundState {
     Done,
 }
 
-#[derive(Debug, Clone)]
+// `PartialEq`/`Eq`/`Hash` let `waveq-check` embed the machine verbatim in
+// its hashed protocol states, so the checker replays the *real* round
+// cursor/replay arithmetic instead of a reimplementation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct RoundMachine {
     pub total_steps: usize,
     pub warmup_steps: usize,

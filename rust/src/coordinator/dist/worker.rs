@@ -83,6 +83,15 @@ pub struct Member {
     pub handle: JoinHandle<()>,
 }
 
+impl super::protocol::RosterEntry for Member {
+    fn slot(&self) -> usize {
+        self.slot
+    }
+    fn uid(&self) -> usize {
+        self.uid
+    }
+}
+
 impl Member {
     /// Spawn a worker thread with its own runtime + session replica. The
     /// worker sends `Ready` once its session is open (or `Fatal` if the

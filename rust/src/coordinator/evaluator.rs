@@ -81,6 +81,7 @@ where
 ///
 /// `kw = None` selects the fp32 eval signature; otherwise the per-layer
 /// quantizer levels are fed to the quantized eval program.
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate(
     rt: &Runtime,
     eval_prog: &str,

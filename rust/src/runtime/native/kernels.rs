@@ -282,6 +282,7 @@ impl ConvGeom {
 }
 
 /// Resolve SAME-padding conv geometry: h_out = ceil(h / stride).
+#[allow(clippy::too_many_arguments)]
 pub fn conv_geom(
     h: usize,
     w: usize,
@@ -597,6 +598,7 @@ pub fn maxpool_fwd(
 /// element-visit order and comparisons as [`maxpool_fwd`] without the
 /// argmax bookkeeping (inference runs no backward scatter), so the pooled
 /// values are bitwise identical to the training path.
+#[allow(clippy::too_many_arguments)]
 pub fn maxpool_infer_into(
     x: &[f32],
     batch: usize,
@@ -1124,6 +1126,7 @@ pub fn matmul_bias(
 }
 
 /// [`matmul_bias`] into a caller-owned (pre-zeroed) slice.
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_bias_into(
     x: &[f32],
     w: &[f32],

@@ -801,6 +801,7 @@ pub(crate) fn relu_quant(h: &mut [f32], act_ka: Option<f32>, record: bool) -> Ve
 /// is kept for [`backward`]; eval-only callers pass `false` so the cols /
 /// mask / input buffers are dropped as soon as each op completes (peak
 /// memory stays at the live activation, not the sum over layers).
+#[allow(clippy::too_many_arguments)]
 fn forward(
     model: &NativeModel,
     params: &[&[f32]],

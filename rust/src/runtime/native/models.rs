@@ -428,6 +428,7 @@ impl Builder {
         *e
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn push_param(
         &mut self,
         name: String,

@@ -97,40 +97,88 @@ unsafe impl Send for Task {}
 /// original message/location survive (as `thread::scope` joins did).
 type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
 
+/// The pure decision core of [`Latch`]: the countdown/payload state
+/// machine with every `std` primitive stripped away. Production wraps it
+/// in a `Mutex` + `Condvar` (the real sync layer); `waveq-check` drives
+/// the same core from a virtual scheduler and exhaustively explores every
+/// interleaving, so the notify/wait decisions verified there are the ones
+/// executing here.
+///
+/// Protocol: constructed with the number of outstanding worker shards;
+/// each shard calls [`LatchCore::arrive`] exactly once (the call that
+/// returns `true` must wake every waiter); the dispatcher blocks while
+/// [`LatchCore::is_complete`] is false, then takes the first panic
+/// payload.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LatchCore<P> {
+    remaining: usize,
+    payload: Option<P>,
+}
+
+impl<P> LatchCore<P> {
+    pub fn new(n: usize) -> LatchCore<P> {
+        LatchCore { remaining: n, payload: None }
+    }
+
+    /// Record one shard arrival, keeping the *first* panic payload.
+    /// Returns `true` when this arrival was the last one — the sync layer
+    /// must then wake every waiter (a dropped wakeup here is a dispatcher
+    /// deadlock; the model checker's lost-wakeup property pins it).
+    pub fn arrive(&mut self, panic: Option<P>) -> bool {
+        self.remaining -= 1;
+        if self.payload.is_none() {
+            self.payload = panic;
+        }
+        self.remaining == 0
+    }
+
+    /// The dispatcher's wait predicate (checked under the lock).
+    pub fn is_complete(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// Shards that have not arrived yet.
+    pub fn outstanding(&self) -> usize {
+        self.remaining
+    }
+
+    /// Take the first panic payload (dispatcher, after completion).
+    pub fn take_payload(&mut self) -> Option<P> {
+        self.payload.take()
+    }
+}
+
 /// Counts a dispatch's outstanding worker shards; the dispatching thread
-/// blocks in [`Latch::wait`] until all of them have arrived.
+/// blocks in [`Latch::wait`] until all of them have arrived. The
+/// counter/payload logic lives in [`LatchCore`]; this wrapper supplies
+/// the real sync layer (poison-tolerant `Mutex` + `Condvar`).
 struct Latch {
-    /// (remaining shards, first shard panic payload)
-    state: Mutex<(usize, Option<PanicPayload>)>,
+    core: Mutex<LatchCore<PanicPayload>>,
     cv: Condvar,
 }
 
 impl Latch {
     fn new(n: usize) -> Latch {
-        Latch { state: Mutex::new((n, None)), cv: Condvar::new() }
+        Latch { core: Mutex::new(LatchCore::new(n)), cv: Condvar::new() }
     }
 
     fn arrive(&self, panic: Option<PanicPayload>) {
         // Poison-tolerant: the counter/payload pair stays consistent under
         // a panicking peer, and an `arrive` that cannot complete would
         // deadlock the dispatcher in `wait` forever.
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        st.0 -= 1;
-        if st.1.is_none() {
-            st.1 = panic;
-        }
-        if st.0 == 0 {
+        let mut core = self.core.lock().unwrap_or_else(|e| e.into_inner());
+        if core.arrive(panic) {
             self.cv.notify_all();
         }
     }
 
     /// Block until every shard arrived; returns the first panic payload.
     fn wait(&self) -> Option<PanicPayload> {
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        while st.0 > 0 {
-            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        let mut core = self.core.lock().unwrap_or_else(|e| e.into_inner());
+        while !core.is_complete() {
+            core = self.cv.wait(core).unwrap_or_else(|e| e.into_inner());
         }
-        st.1.take()
+        core.take_payload()
     }
 }
 
@@ -337,6 +385,27 @@ mod tests {
         assert!(num_threads() >= 1);
         std::env::remove_var("WAVEQ_THREADS");
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn latch_core_counts_down_and_keeps_first_payload() {
+        let mut core: LatchCore<&'static str> = LatchCore::new(3);
+        assert!(!core.is_complete());
+        assert_eq!(core.outstanding(), 3);
+        assert!(!core.arrive(None), "arrival 1 of 3 must not signal completion");
+        assert!(!core.arrive(Some("first")), "arrival 2 of 3 must not signal completion");
+        assert!(core.arrive(Some("second")), "the last arrival must signal completion");
+        assert!(core.is_complete());
+        assert_eq!(core.outstanding(), 0);
+        assert_eq!(core.take_payload(), Some("first"), "the first panic payload wins");
+        assert_eq!(core.take_payload(), None, "the payload is taken exactly once");
+    }
+
+    #[test]
+    fn latch_core_with_zero_shards_is_born_complete() {
+        let mut core: LatchCore<()> = LatchCore::new(0);
+        assert!(core.is_complete());
+        assert_eq!(core.take_payload(), None);
     }
 
     #[test]

@@ -1,14 +1,16 @@
 //! CLI for the WaveQ determinism/safety audit.
 //!
 //! ```text
-//! waveq-audit [--root DIR] [--allow FILE] [--json FILE] [--no-json]
+//! waveq-audit [--root DIR] [--allow FILE] [--json FILE] [--no-json] [--strict]
 //! ```
 //!
 //! Defaults: `--root` auto-detects (`.` when it holds a `src/` dir, else
 //! `rust/` — so the tool runs from either the workspace root or `rust/`);
 //! `--allow` is `<root>/tools/audit/allow.toml`; the JSON report lands in
 //! `AUDIT_report.json` in the current directory. Exits 1 on any
-//! non-allowlisted violation, 2 on usage/config errors.
+//! non-allowlisted violation, 2 on usage/config errors. With `--strict`
+//! (the lint CI lane's mode) stale allowlist entries — lines that matched
+//! nothing this run — also exit 1 instead of just warning.
 
 #![forbid(unsafe_code)]
 
@@ -16,7 +18,9 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 fn usage() -> ! {
-    eprintln!("usage: waveq-audit [--root DIR] [--allow FILE] [--json FILE] [--no-json]");
+    eprintln!(
+        "usage: waveq-audit [--root DIR] [--allow FILE] [--json FILE] [--no-json] [--strict]"
+    );
     std::process::exit(2);
 }
 
@@ -24,6 +28,7 @@ fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
     let mut allow_path: Option<PathBuf> = None;
     let mut json_path: Option<PathBuf> = Some(PathBuf::from("AUDIT_report.json"));
+    let mut strict = false;
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -35,6 +40,7 @@ fn main() -> ExitCode {
                 json_path = Some(PathBuf::from(args.next().unwrap_or_else(|| usage())));
             }
             "--no-json" => json_path = None,
+            "--strict" => strict = true,
             _ => usage(),
         }
     }
@@ -73,7 +79,15 @@ fn main() -> ExitCode {
         }
         println!("report: {}", path.display());
     }
-    if outcome.clean() {
+    let verdict = if strict { outcome.strict_clean() } else { outcome.clean() };
+    if strict && !outcome.unused_allow.is_empty() {
+        eprintln!(
+            "waveq-audit: --strict: {} stale allowlist entr{} (see warnings above)",
+            outcome.unused_allow.len(),
+            if outcome.unused_allow.len() == 1 { "y" } else { "ies" }
+        );
+    }
+    if verdict {
         ExitCode::SUCCESS
     } else {
         ExitCode::from(1)

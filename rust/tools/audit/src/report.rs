@@ -28,6 +28,13 @@ impl Outcome {
     pub fn clean(&self) -> bool {
         self.violations.is_empty()
     }
+
+    /// Strict verdict (`--strict`): stale allowlist entries fail too.
+    /// An entry that matches nothing is a suppression waiting to hide the
+    /// next real violation at that path, so CI runs in this mode.
+    pub fn strict_clean(&self) -> bool {
+        self.clean() && self.unused_allow.is_empty()
+    }
 }
 
 fn esc(s: &str) -> String {
@@ -199,5 +206,27 @@ mod tests {
         assert!(js.contains("line1\\nline2"));
         assert_eq!(js.matches('{').count(), js.matches('}').count());
         assert!(js.contains("\"clean\": false"));
+    }
+
+    #[test]
+    fn strict_fails_on_stale_allow_entries_where_default_only_warns() {
+        let out = Outcome {
+            root: "rust".to_string(),
+            files_scanned: 1,
+            violations: Vec::new(),
+            allowed: Vec::new(),
+            unused_allow: vec![AllowEntry {
+                rule: Rule::D5,
+                file: "src/gone.rs".to_string(),
+                line: None,
+                func: None,
+                pattern: None,
+                reason: "stale".to_string(),
+                source_line: 7,
+            }],
+            unsafe_inventory: Vec::new(),
+        };
+        assert!(out.clean(), "default verdict keeps stale entries a warning");
+        assert!(!out.strict_clean(), "--strict must fail on them");
     }
 }

@@ -1,0 +1,819 @@
+//! Transition-system model of the dist tick-barrier/membership protocol
+//! (`waveq::coordinator::dist`): a coordinator fans out `Step` directives
+//! to worker replicas, barriers on gradients, applies, barriers on acks,
+//! and survives worker drops by replaying the round from its boundary
+//! snapshot with a bumped generation.
+//!
+//! The decision cores are the production ones — `BarrierCore`, `Roster`,
+//! and `RoundMachine` are imported from the waveq crate, and shards come
+//! from the real `data::shard_for` — so the accept/reject/replay logic
+//! the checker explores is the logic `run_distributed` executes. The
+//! model supplies the virtual sync layer replacing mpsc channels and
+//! thread handles:
+//!
+//! - each worker's directive channel is an explicit per-worker FIFO, and
+//!   the shared reply channel is one FIFO the workers race to append to
+//!   (the racing append order is the interleaving being explored);
+//! - a worker processes one directive to completion and must flush its
+//!   reply before reading the next, mirroring `worker_main`'s loop;
+//! - `recv_timeout` + `JoinHandle::is_finished` becomes a probe step
+//!   enabled exactly when the reply queue is empty and a pending uid's
+//!   worker finished — the condition under which production's probe is
+//!   the only thing that can fire;
+//! - replica state is abstracted to a version counter (applied steps):
+//!   two replicas converged iff their versions match, which is what the
+//!   bitwise tests establish for the real arithmetic.
+//!
+//! Faults are planted deterministically: `SilentDeath` models a panic
+//! unwinding `worker_main` (no reply, channel gone), `ErrorReply` models
+//! a `Fatal` reply. Properties: `no_deadlock`, `chunk_coverage` (every
+//! reduction chunk gathered exactly once per completed step),
+//! `stale_filtering` (a stale-uid/stale-generation/wrong-kind reply
+//! never satisfies a barrier), and `replay_convergence` (drop-then-replay
+//! ends with every replica at the coordinator's version, with the
+//! expected drop/replay/rejoin counts).
+
+use std::collections::VecDeque;
+
+use waveq::coordinator::dist::protocol::{BarrierCore, Roster, RosterEntry};
+use waveq::coordinator::dist::state::{RoundMachine, RoundState};
+use waveq::data::shard_for;
+
+use crate::explore::{Model, Violation};
+
+/// Which barrier accounting the coordinator runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarrierVariant {
+    /// The production `BarrierCore` gating on kind, generation, and uid.
+    Real,
+    /// Planted bug: a kind/gen/uid-blind counting barrier — any reply
+    /// "satisfies" the next pending slot, the way a naive
+    /// `for _ in 0..n { recv() }` barrier would. Expected catch:
+    /// `stale_filtering` (or `chunk_coverage`/`no_deadlock` downstream).
+    AcceptsStaleReplies,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker thread panics while handling the `Step`: no reply ever
+    /// comes, its channel is gone, queued directives are never read.
+    SilentDeath,
+    /// The worker sends `Fatal` instead of gradients, then exits.
+    ErrorReply,
+}
+
+/// Deterministic fault: worker `slot` fails while handling global step
+/// `step` (first attempt only — the replayed step succeeds).
+#[derive(Debug, Clone, Copy)]
+pub struct Fault {
+    pub slot: usize,
+    pub step: usize,
+    pub kind: FaultKind,
+}
+
+/// Re-admit `slot` at the boundary entering round `at_round`, mirroring
+/// `ChaosEvent::Rejoin` (counted from 1 = after the first round).
+#[derive(Debug, Clone, Copy)]
+pub struct Rejoin {
+    pub slot: usize,
+    pub at_round: usize,
+}
+
+/// One tick-barrier protocol configuration to explore.
+#[derive(Debug, Clone)]
+pub struct BarrierConfig {
+    pub name: &'static str,
+    pub workers: usize,
+    pub steps: usize,
+    pub round_len: usize,
+    /// Reduction chunks dealt over the live membership by `shard_for`.
+    pub chunks: usize,
+    pub fault: Option<Fault>,
+    pub rejoin: Option<Rejoin>,
+    pub variant: BarrierVariant,
+}
+
+impl BarrierConfig {
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "{} worker(s), {} steps in rounds of {}, {} chunks",
+            self.workers, self.steps, self.round_len, self.chunks
+        );
+        if let Some(f) = self.fault {
+            s.push_str(&format!(", {:?} at slot {} step {}", f.kind, f.slot, f.step));
+        }
+        if let Some(r) = self.rejoin {
+            s.push_str(&format!(", rejoin slot {} at round {}", r.slot, r.at_round));
+        }
+        s
+    }
+}
+
+/// A roster entry the checker can hash: just the identity pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelMember {
+    pub slot: usize,
+    pub uid: usize,
+}
+
+impl RosterEntry for ModelMember {
+    fn slot(&self) -> usize {
+        self.slot
+    }
+    fn uid(&self) -> usize {
+        self.uid
+    }
+}
+
+/// Coordinator -> worker directives (`ToWorker` with the payloads
+/// abstracted: a shard is its chunk range, a state snapshot its version).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Directive {
+    Step { gen: u64, step: usize, lo: usize, hi: usize },
+    Apply { gen: u64 },
+    Load { gen: u64, version: usize },
+}
+
+/// Worker -> coordinator replies (`FromWorker`), identified by uid.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Reply {
+    Ready { uid: usize },
+    Grads { uid: usize, gen: u64, step: usize, lo: usize, hi: usize },
+    Applied { uid: usize, gen: u64 },
+    Loaded { uid: usize, gen: u64 },
+    Fatal { uid: usize },
+}
+
+impl Reply {
+    fn uid(&self) -> usize {
+        match *self {
+            Reply::Ready { uid }
+            | Reply::Grads { uid, .. }
+            | Reply::Applied { uid, .. }
+            | Reply::Loaded { uid, .. }
+            | Reply::Fatal { uid } => uid,
+        }
+    }
+}
+
+/// One worker slot as the scheduler sees it. A dead incarnation's husk
+/// stays in the slot (its uid no longer in the roster) until a rejoin
+/// replaces it.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct WorkerSt {
+    uid: usize,
+    alive: bool,
+    /// Applied-steps counter abstracting the replica state.
+    version: usize,
+    /// The un-flushed reply: `worker_main` finishes its send before the
+    /// next recv, so at most one is ever in flight.
+    outbox: Option<Reply>,
+    inbox: VecDeque<Directive>,
+}
+
+impl WorkerSt {
+    fn fresh(uid: usize) -> WorkerSt {
+        WorkerSt {
+            uid,
+            alive: true,
+            version: 0,
+            outbox: Some(Reply::Ready { uid }),
+            inbox: VecDeque::new(),
+        }
+    }
+
+    fn unspawned() -> WorkerSt {
+        WorkerSt { uid: usize::MAX, alive: false, version: 0, outbox: None, inbox: VecDeque::new() }
+    }
+}
+
+/// The coordinator's control point, one per blocking region or fan-out
+/// cursor of `run_distributed`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Coord {
+    Launch,
+    ReadyBarrier,
+    /// Fan out `Step` to roster position `k`.
+    SendStep { k: usize },
+    GradBarrier,
+    SendApply { k: usize },
+    /// Apply the reduced update to the coordinator's own replica.
+    ApplyOwn,
+    ApplyBarrier,
+    /// Reap `dead_pending`, rewind the machine, enter the restore path.
+    ReapLost,
+    SendLoad { k: usize },
+    LoadBarrier,
+    /// Round boundary: admit scheduled rejoins, advance the machine.
+    Boundary,
+    RejoinReady,
+    RejoinLoad,
+    RejoinLoadBarrier,
+    Done,
+}
+
+impl Coord {
+    fn at_barrier(&self) -> bool {
+        matches!(
+            self,
+            Coord::ReadyBarrier
+                | Coord::GradBarrier
+                | Coord::ApplyBarrier
+                | Coord::LoadBarrier
+                | Coord::RejoinReady
+                | Coord::RejoinLoadBarrier
+        )
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BarrierSt {
+    coord: Coord,
+    machine: RoundMachine,
+    roster: Roster<ModelMember>,
+    gen: u64,
+    /// The shared reply channel (workers race to append).
+    from_queue: VecDeque<Reply>,
+    /// Indexed by slot.
+    workers: Vec<WorkerSt>,
+    barrier: Option<BarrierCore>,
+    /// Times each reduction chunk was gathered for the current step.
+    covered: Vec<u8>,
+    own_version: usize,
+    /// Uids discovered dead (probe, Fatal, failed send), awaiting reap.
+    dead_pending: Vec<usize>,
+    in_restore: bool,
+    fault_armed: bool,
+    rejoin_done: bool,
+    drops: usize,
+    replays: usize,
+    rejoins: usize,
+}
+
+pub struct BarrierModel {
+    pub cfg: BarrierConfig,
+}
+
+impl BarrierModel {
+    fn fault_at(&self, slot: usize, step: usize, armed: bool) -> Option<FaultKind> {
+        match self.cfg.fault {
+            Some(f) if armed && f.slot == slot && f.step == step => Some(f.kind),
+            _ => None,
+        }
+    }
+
+    /// Production's `JoinHandle::is_finished`: the thread is gone (not
+    /// alive) and its last send, if any, completed (outbox flushed).
+    fn finished(st: &BarrierSt, uid: usize) -> bool {
+        st.roster.find_uid(uid).is_some_and(|m| {
+            let w = &st.workers[m.slot];
+            w.uid == uid && !w.alive && w.outbox.is_none()
+        })
+    }
+
+    /// Send a directive to a member; a dead worker's channel is gone, so
+    /// the send fails and the uid is queued for reaping (production's
+    /// `tx.send(..).is_err()` path).
+    fn send(st: &mut BarrierSt, m: ModelMember, d: Directive) {
+        let w = &mut st.workers[m.slot];
+        debug_assert_eq!(w.uid, m.uid, "sends only target current incarnations");
+        if w.alive {
+            w.inbox.push_back(d);
+        } else {
+            st.dead_pending.push(m.uid);
+        }
+    }
+
+    fn member_at(st: &BarrierSt, pos: usize) -> ModelMember {
+        *st.roster.iter().nth(pos).expect("fan-out position inside the roster")
+    }
+
+    /// One coordinator step (thread 0).
+    fn coord_step(&self, st: &mut BarrierSt) -> Result<(), Violation> {
+        match st.coord.clone() {
+            Coord::Launch => {
+                for slot in 0..self.cfg.workers {
+                    let uid = st
+                        .roster
+                        .admit_with(slot, |uid| Ok::<_, ()>(ModelMember { slot, uid }))
+                        .expect("model admission is infallible");
+                    st.workers[slot] = WorkerSt::fresh(uid);
+                }
+                st.barrier = Some(BarrierCore::new(st.gen, st.roster.uids()));
+                st.coord = Coord::ReadyBarrier;
+            }
+            Coord::ReadyBarrier
+            | Coord::GradBarrier
+            | Coord::ApplyBarrier
+            | Coord::LoadBarrier
+            | Coord::RejoinReady
+            | Coord::RejoinLoadBarrier => {
+                if let Some(reply) = st.from_queue.pop_front() {
+                    self.consume(st, reply)?;
+                } else {
+                    // The probe: the queue is empty and a pending uid's
+                    // thread finished — nothing else can unblock this
+                    // barrier (enabledness guarantees the scan is hot).
+                    let barrier = st.barrier.as_ref().expect("barrier state without a barrier");
+                    let dead = barrier.finished_pending(|uid| Self::finished(st, uid));
+                    debug_assert!(!dead.is_empty(), "probe stepped with no finished pending uid");
+                    st.dead_pending = dead;
+                    st.barrier = None;
+                    st.coord = Coord::ReapLost;
+                }
+            }
+            Coord::SendStep { k } => {
+                let n_live = st.roster.len();
+                if k < n_live {
+                    let m = Self::member_at(st, k);
+                    let shard = shard_for(st.machine.round, k, n_live, self.cfg.chunks);
+                    let d = Directive::Step {
+                        gen: st.gen,
+                        step: st.machine.step,
+                        lo: shard.start,
+                        hi: shard.end,
+                    };
+                    Self::send(st, m, d);
+                    st.coord = Coord::SendStep { k: k + 1 };
+                } else if !st.dead_pending.is_empty() {
+                    st.coord = Coord::ReapLost;
+                } else {
+                    st.covered = vec![0; self.cfg.chunks];
+                    st.barrier = Some(BarrierCore::new(st.gen, st.roster.uids()));
+                    st.coord = Coord::GradBarrier;
+                }
+            }
+            Coord::SendApply { k } => {
+                if k < st.roster.len() {
+                    let m = Self::member_at(st, k);
+                    Self::send(st, m, Directive::Apply { gen: st.gen });
+                    st.coord = Coord::SendApply { k: k + 1 };
+                } else if !st.dead_pending.is_empty() {
+                    st.coord = Coord::ReapLost;
+                } else {
+                    st.coord = Coord::ApplyOwn;
+                }
+            }
+            Coord::ApplyOwn => {
+                st.own_version += 1;
+                st.barrier = Some(BarrierCore::new(st.gen, st.roster.uids()));
+                st.coord = Coord::ApplyBarrier;
+            }
+            Coord::ReapLost => {
+                let dead = std::mem::take(&mut st.dead_pending);
+                let removed = st.roster.remove(&dead);
+                st.drops += removed.len();
+                st.barrier = None;
+                if st.roster.is_empty() {
+                    return Err(Violation::new(
+                        "no_deadlock",
+                        "every worker died; the run cannot make progress",
+                    ));
+                }
+                if !st.in_restore {
+                    // First loss this round: rewind the cursor and the
+                    // coordinator's own replica to the round-start
+                    // snapshot (production's `restore` + `machine.replay`).
+                    st.machine.replay();
+                    st.replays += 1;
+                    st.own_version = st.machine.round_start();
+                    st.in_restore = true;
+                }
+                st.gen += 1;
+                st.coord = Coord::SendLoad { k: 0 };
+            }
+            Coord::SendLoad { k } => {
+                if k < st.roster.len() {
+                    let m = Self::member_at(st, k);
+                    let d = Directive::Load { gen: st.gen, version: st.own_version };
+                    Self::send(st, m, d);
+                    st.coord = Coord::SendLoad { k: k + 1 };
+                } else if !st.dead_pending.is_empty() {
+                    st.coord = Coord::ReapLost;
+                } else {
+                    st.barrier = Some(BarrierCore::new(st.gen, st.roster.uids()));
+                    st.coord = Coord::LoadBarrier;
+                }
+            }
+            Coord::Boundary => {
+                let completed_rounds = st.machine.round + 1;
+                let rejoin = self.cfg.rejoin.filter(|r| {
+                    !st.rejoin_done
+                        && r.at_round == completed_rounds
+                        && !st.roster.contains_slot(r.slot)
+                });
+                if let Some(r) = rejoin {
+                    let uid = st
+                        .roster
+                        .admit_with(r.slot, |uid| Ok::<_, ()>(ModelMember { slot: r.slot, uid }))
+                        .expect("model admission is infallible");
+                    st.workers[r.slot] = WorkerSt::fresh(uid);
+                    st.rejoin_done = true;
+                    st.barrier = Some(BarrierCore::new(st.gen, [uid]));
+                    st.coord = Coord::RejoinReady;
+                } else {
+                    st.machine.checkpoint_done();
+                    st.coord =
+                        if st.machine.is_done() { Coord::Done } else { Coord::SendStep { k: 0 } };
+                }
+            }
+            Coord::RejoinLoad => {
+                st.gen += 1;
+                let r = self.cfg.rejoin.expect("rejoin load without a rejoin config");
+                let m = ModelMember { slot: r.slot, uid: st.workers[r.slot].uid };
+                Self::send(st, m, Directive::Load { gen: st.gen, version: st.own_version });
+                st.barrier = Some(BarrierCore::new(st.gen, [m.uid]));
+                st.coord = Coord::RejoinLoadBarrier;
+            }
+            Coord::Done => unreachable!("done coordinator stepped"),
+        }
+        Ok(())
+    }
+
+    /// Handle one reply popped off the shared channel while a barrier is
+    /// open — production's `recv` + the barrier loop's match arms.
+    fn consume(&self, st: &mut BarrierSt, reply: Reply) -> Result<(), Violation> {
+        let uid = reply.uid();
+        if !st.roster.contains_uid(uid) {
+            return Ok(()); // straggler from a reaped incarnation: recv drops it
+        }
+        if matches!(reply, Reply::Fatal { .. }) {
+            st.dead_pending = vec![uid];
+            st.barrier = None;
+            st.coord = Coord::ReapLost;
+            return Ok(());
+        }
+        let phase = st.coord.clone();
+        let mut barrier = st.barrier.take().expect("barrier state without a barrier");
+        // Would this reply genuinely satisfy the open barrier? Right
+        // kind, current step (grads), current generation, pending uid —
+        // the conjunction the production match arms + `BarrierCore`
+        // enforce. The monitor below checks accepted replies against it.
+        let (kind_ok, echoed_gen) = match (&phase, &reply) {
+            (Coord::ReadyBarrier | Coord::RejoinReady, Reply::Ready { .. }) => (true, None),
+            (Coord::GradBarrier, Reply::Grads { gen, step, .. }) => {
+                (*step == st.machine.step, Some(*gen))
+            }
+            (Coord::ApplyBarrier, Reply::Applied { gen, .. }) => (true, Some(*gen)),
+            (Coord::LoadBarrier | Coord::RejoinLoadBarrier, Reply::Loaded { gen, .. }) => {
+                (true, Some(*gen))
+            }
+            _ => (false, None),
+        };
+        let gen_ok = match echoed_gen {
+            Some(g) => g == barrier.gen(),
+            None => true, // Ready predates generations
+        };
+        let genuine = kind_ok && gen_ok && barrier.pending().contains(&uid);
+        let accepted = match self.cfg.variant {
+            BarrierVariant::Real => {
+                if genuine {
+                    let hit = barrier.arrive(uid, echoed_gen);
+                    debug_assert!(hit, "a genuine reply always lands");
+                }
+                genuine // otherwise: the wrong-kind/stale discard arm
+            }
+            BarrierVariant::AcceptsStaleReplies => {
+                // Planted bug: count the reply against the next pending
+                // slot, blind to kind, generation, and uid.
+                let counted = *barrier.pending().iter().next().expect("open barrier has pending");
+                barrier.arrive(counted, None);
+                if !genuine {
+                    return Err(Violation::new(
+                        "stale_filtering",
+                        format!(
+                            "{reply:?} satisfied the {phase:?} barrier (gen {}, step {}) \
+                             despite being stale or of the wrong kind",
+                            barrier.gen(),
+                            st.machine.step
+                        ),
+                    ));
+                }
+                true
+            }
+        };
+        if accepted {
+            if let Reply::Grads { lo, hi, .. } = reply {
+                for c in lo..hi {
+                    st.covered[c] += 1;
+                    if st.covered[c] > 1 {
+                        return Err(Violation::new(
+                            "chunk_coverage",
+                            format!(
+                                "reduction chunk {c} gathered {} times for step {}",
+                                st.covered[c], st.machine.step
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        let satisfied = barrier.is_satisfied();
+        st.barrier = Some(barrier);
+        if satisfied {
+            self.barrier_complete(st)?;
+        }
+        Ok(())
+    }
+
+    /// The open barrier was satisfied: run the phase's completion.
+    fn barrier_complete(&self, st: &mut BarrierSt) -> Result<(), Violation> {
+        st.barrier = None;
+        match st.coord {
+            Coord::ReadyBarrier => {
+                st.machine.members_ready();
+                st.coord =
+                    if st.machine.is_done() { Coord::Done } else { Coord::SendStep { k: 0 } };
+            }
+            Coord::GradBarrier => {
+                // Production's `reduce` refuses missing chunks; the model
+                // demands the exact-once cover the fixed-order all-reduce
+                // assumes.
+                for (c, &n) in st.covered.iter().enumerate() {
+                    if n != 1 {
+                        return Err(Violation::new(
+                            "chunk_coverage",
+                            format!(
+                                "gradient barrier for step {} closed with chunk {c} gathered \
+                                 {n} times (want exactly once)",
+                                st.machine.step
+                            ),
+                        ));
+                    }
+                }
+                st.coord = Coord::SendApply { k: 0 };
+            }
+            Coord::ApplyBarrier => {
+                st.machine.step_done();
+                st.coord = if st.machine.state == RoundState::Checkpoint {
+                    Coord::Boundary
+                } else {
+                    Coord::SendStep { k: 0 }
+                };
+            }
+            Coord::LoadBarrier => {
+                st.in_restore = false;
+                st.coord = Coord::SendStep { k: 0 };
+            }
+            Coord::RejoinReady => st.coord = Coord::RejoinLoad,
+            Coord::RejoinLoadBarrier => {
+                st.rejoins += 1;
+                st.coord = Coord::Boundary;
+            }
+            _ => unreachable!("barrier completion outside a barrier state"),
+        }
+        Ok(())
+    }
+
+    /// One step of the worker in `slot` (thread `1 + slot`).
+    fn worker_step(&self, st: &mut BarrierSt, slot: usize) -> Result<(), Violation> {
+        if let Some(reply) = st.workers[slot].outbox.take() {
+            if matches!(reply, Reply::Fatal { .. }) {
+                // `worker_main` returns right after sending Fatal.
+                st.workers[slot].alive = false;
+            }
+            st.from_queue.push_back(reply);
+            return Ok(());
+        }
+        let armed = st.fault_armed;
+        let w = &mut st.workers[slot];
+        let uid = w.uid;
+        let d = w.inbox.pop_front().expect("worker stepped with nothing to do");
+        match d {
+            Directive::Step { gen, step, lo, hi } => match self.fault_at(slot, step, armed) {
+                Some(FaultKind::SilentDeath) => {
+                    // A panic unwinds the worker thread: no reply, the
+                    // channel receiver drops, queued directives vanish.
+                    w.alive = false;
+                    w.inbox.clear();
+                    st.fault_armed = false;
+                }
+                Some(FaultKind::ErrorReply) => {
+                    w.outbox = Some(Reply::Fatal { uid });
+                    st.fault_armed = false;
+                }
+                None => w.outbox = Some(Reply::Grads { uid, gen, step, lo, hi }),
+            },
+            Directive::Apply { gen } => {
+                w.version += 1;
+                w.outbox = Some(Reply::Applied { uid, gen });
+            }
+            Directive::Load { gen, version } => {
+                w.version = version;
+                w.outbox = Some(Reply::Loaded { uid, gen });
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Model for BarrierModel {
+    type State = BarrierSt;
+
+    fn initial(&self) -> BarrierSt {
+        BarrierSt {
+            coord: Coord::Launch,
+            machine: RoundMachine::new(self.cfg.steps, self.cfg.round_len),
+            roster: Roster::new(),
+            gen: 0,
+            from_queue: VecDeque::new(),
+            workers: vec![WorkerSt::unspawned(); self.cfg.workers],
+            barrier: None,
+            covered: vec![0; self.cfg.chunks],
+            own_version: 0,
+            dead_pending: Vec::new(),
+            in_restore: false,
+            fault_armed: self.cfg.fault.is_some(),
+            rejoin_done: false,
+            drops: 0,
+            replays: 0,
+            rejoins: 0,
+        }
+    }
+
+    fn enabled(&self, st: &BarrierSt) -> Vec<usize> {
+        let mut out = Vec::new();
+        if st.coord.at_barrier() {
+            if !st.from_queue.is_empty() {
+                out.push(0);
+            } else if let Some(b) = &st.barrier {
+                // `recv_timeout` can only make progress via the probe.
+                if !b.finished_pending(|uid| Self::finished(st, uid)).is_empty() {
+                    out.push(0);
+                }
+            }
+        } else if st.coord != Coord::Done {
+            out.push(0);
+        }
+        for (slot, w) in st.workers.iter().enumerate() {
+            if w.alive && (w.outbox.is_some() || !w.inbox.is_empty()) {
+                out.push(1 + slot);
+            }
+        }
+        out
+    }
+
+    /// Partial-order reduction. Safe-to-explore-alone steps:
+    ///
+    /// - Every non-barrier coordinator step. Fan-out sends push onto a
+    ///   single worker's private FIFO (push/pop on a FIFO commute, and a
+    ///   send to a worker with an unprocessed lethal directive is
+    ///   unreachable — the coordinator is barrier-blocked until the loss
+    ///   is reaped); the rest touch only coordinator-owned state.
+    /// - A worker processing a non-lethal directive: it reads/writes only
+    ///   its own inbox/outbox/version. Flushes (shared reply queue, probe
+    ///   enabledness) and `SilentDeath` (flips the liveness the probe
+    ///   scans) stay fully interleaved.
+    fn local(&self, st: &BarrierSt, thread: usize) -> bool {
+        if thread == 0 {
+            return !st.coord.at_barrier() && st.coord != Coord::Done;
+        }
+        let slot = thread - 1;
+        let w = &st.workers[slot];
+        if w.outbox.is_some() {
+            return false;
+        }
+        match w.inbox.front() {
+            Some(Directive::Step { step, .. }) => !matches!(
+                self.fault_at(slot, *step, st.fault_armed),
+                Some(FaultKind::SilentDeath)
+            ),
+            Some(_) => true,
+            None => false,
+        }
+    }
+
+    fn step(&self, state: &BarrierSt, thread: usize) -> Result<BarrierSt, Violation> {
+        let mut st = state.clone();
+        if thread == 0 {
+            self.coord_step(&mut st)?;
+        } else {
+            self.worker_step(&mut st, thread - 1)?;
+        }
+        Ok(st)
+    }
+
+    fn quiescent(&self, st: &BarrierSt) -> Result<(), Violation> {
+        if st.coord != Coord::Done {
+            let pending = st.barrier.as_ref().map(|b| b.pending().clone()).unwrap_or_default();
+            return Err(Violation::new(
+                "no_deadlock",
+                format!(
+                    "the run is stuck in {:?} with {} queued replies and pending uids {:?}",
+                    st.coord,
+                    st.from_queue.len(),
+                    pending
+                ),
+            ));
+        }
+        if st.own_version != self.cfg.steps {
+            return Err(Violation::new(
+                "replay_convergence",
+                format!(
+                    "coordinator replica ended at version {} after {} steps",
+                    st.own_version, self.cfg.steps
+                ),
+            ));
+        }
+        for m in st.roster.iter() {
+            let v = st.workers[m.slot].version;
+            if v != st.own_version {
+                return Err(Violation::new(
+                    "replay_convergence",
+                    format!(
+                        "slot {} replica ended at version {v}, coordinator at {} — \
+                         drop/replay did not converge",
+                        m.slot, st.own_version
+                    ),
+                ));
+            }
+        }
+        let want_drops = usize::from(self.cfg.fault.is_some());
+        let want_rejoins = usize::from(self.cfg.rejoin.is_some());
+        if (st.drops, st.replays, st.rejoins) != (want_drops, want_drops, want_rejoins) {
+            return Err(Violation::new(
+                "replay_convergence",
+                format!(
+                    "drops/replays/rejoins = {}/{}/{}, expected {want_drops}/{want_drops}/\
+                     {want_rejoins}",
+                    st.drops, st.replays, st.rejoins
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    fn describe(&self, st: &BarrierSt, thread: usize) -> String {
+        if thread == 0 {
+            match &st.coord {
+                c if c.at_barrier() => match st.from_queue.front() {
+                    Some(r) => format!("coord: consume {r:?} at {c:?}"),
+                    None => format!("coord: probe finds dead worker at {c:?}"),
+                },
+                c => format!("coord: {c:?} (gen {}, step {})", st.gen, st.machine.step),
+            }
+        } else {
+            let slot = thread - 1;
+            let w = &st.workers[slot];
+            match (&w.outbox, w.inbox.front()) {
+                (Some(r), _) => format!("worker {slot}: flush {r:?}"),
+                (None, Some(d)) => format!("worker {slot}: handle {d:?}"),
+                (None, None) => format!("worker {slot}: idle"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{explore, Limits};
+
+    fn base(name: &'static str) -> BarrierConfig {
+        BarrierConfig {
+            name,
+            workers: 2,
+            steps: 2,
+            round_len: 2,
+            chunks: 2,
+            fault: None,
+            rejoin: None,
+            variant: BarrierVariant::Real,
+        }
+    }
+
+    #[test]
+    fn fault_free_ticks_explore_clean() {
+        let ex = explore(&BarrierModel { cfg: base("unit-clean") }, Limits::SMOKE);
+        assert!(ex.violation.is_none(), "violation: {:?}", ex.violation);
+        assert!(!ex.truncated, "smoke config must be exhaustible");
+        assert!(ex.states > 50, "two full ticks explore a real space, got {}", ex.states);
+    }
+
+    #[test]
+    fn silent_death_replays_and_converges_in_every_interleaving() {
+        let mut cfg = base("unit-drop");
+        cfg.steps = 3; // ragged final round exercises the cursor math
+        cfg.fault = Some(Fault { slot: 1, step: 0, kind: FaultKind::SilentDeath });
+        let ex = explore(&BarrierModel { cfg }, Limits::SMOKE);
+        assert!(ex.violation.is_none(), "violation: {:?}", ex.violation);
+        assert!(!ex.truncated);
+    }
+
+    #[test]
+    fn stale_counting_barrier_is_caught() {
+        let mut cfg = base("unit-stale");
+        cfg.steps = 3;
+        cfg.fault = Some(Fault { slot: 1, step: 0, kind: FaultKind::SilentDeath });
+        cfg.variant = BarrierVariant::AcceptsStaleReplies;
+        let ex = explore(&BarrierModel { cfg }, Limits::SMOKE);
+        let found = ex.violation.expect("the blind barrier must be caught");
+        assert!(
+            ["stale_filtering", "chunk_coverage", "no_deadlock", "replay_convergence"]
+                .contains(&found.violation.property.as_str()),
+            "unexpected property {:?}",
+            found.violation.property
+        );
+        assert!(!found.trace.is_empty(), "the violation carries its interleaving");
+    }
+}

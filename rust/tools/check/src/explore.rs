@@ -1,0 +1,292 @@
+//! The exploration engine: exhaustive depth-first search over the states
+//! of a transition system, with state hashing (every reachable state is
+//! expanded exactly once) and a simple persistent-set partial-order
+//! reduction for steps a model declares local.
+//!
+//! Models are *virtual-scheduler* renderings of the production
+//! protocols: every blocking primitive (condvar wait, channel recv,
+//! probe timeout) becomes an explicit enabled/disabled condition, so the
+//! scheduler — this engine — can run the threads in every order the real
+//! OS scheduler could. Properties are checked in two places: a step
+//! itself may report a violation (an assertion on a transition), and
+//! every quiescent state (no thread enabled) is judged as either an
+//! accepted final state or a deadlock/wrong-outcome.
+
+use std::collections::HashSet;
+use std::hash::Hash;
+
+/// A protocol model: a finite transition system over cloneable,
+/// hashable states, stepped one numbered thread at a time.
+pub trait Model {
+    type State: Clone + Eq + Hash;
+
+    fn initial(&self) -> Self::State;
+
+    /// Thread ids with an enabled step in `state`, in deterministic
+    /// order. Empty means the system is quiescent.
+    fn enabled(&self, state: &Self::State) -> Vec<usize>;
+
+    /// Execute one atomic step of `thread` (which must be enabled).
+    /// Returns the successor state, or a violation when the step itself
+    /// breaks a property.
+    fn step(&self, state: &Self::State, thread: usize) -> Result<Self::State, Violation>;
+
+    /// Judge a quiescent state: `Ok` for an accepted final state, a
+    /// violation for a deadlock or a wrong outcome.
+    fn quiescent(&self, state: &Self::State) -> Result<(), Violation>;
+
+    /// True when `thread`'s next step commutes with every other enabled
+    /// thread's step and cannot change any other thread's enabledness.
+    /// The engine then explores only that step from this state — the
+    /// pruned interleavings provably reach the same states.
+    fn local(&self, _state: &Self::State, _thread: usize) -> bool {
+        false
+    }
+
+    /// Label for a step, used in violation traces.
+    fn describe(&self, _state: &Self::State, thread: usize) -> String {
+        format!("thread {thread}")
+    }
+}
+
+/// A property violation: which property broke, and how.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Property slug (`no_deadlock`, `shard_coverage`, ...).
+    pub property: String,
+    pub message: String,
+}
+
+impl Violation {
+    pub fn new(property: &str, message: impl Into<String>) -> Violation {
+        Violation { property: property.to_string(), message: message.into() }
+    }
+}
+
+/// Exploration bounds. The state cap is a memory guard, not a depth
+/// bound: hitting it marks the run `truncated` (a truncated clean run
+/// proves nothing and fails the suite).
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    pub max_states: usize,
+}
+
+impl Limits {
+    /// CI `model-check` lane: exhaust the configured protocol spaces.
+    pub const FULL: Limits = Limits { max_states: 4_000_000 };
+    /// Tier-1 smoke (`tests/check.rs`): small configs, tight cap.
+    pub const SMOKE: Limits = Limits { max_states: 300_000 };
+}
+
+/// A violation plus the interleaving that produced it.
+#[derive(Debug, Clone)]
+pub struct FoundViolation {
+    pub violation: Violation,
+    /// Step labels from the initial state to the violating step.
+    pub trace: Vec<String>,
+}
+
+/// What one exploration saw.
+#[derive(Debug, Clone)]
+pub struct Exploration {
+    /// Distinct states reached (each expanded exactly once).
+    pub states: usize,
+    /// Transitions executed.
+    pub transitions: usize,
+    /// Longest interleaving prefix explored (steps from the initial
+    /// state).
+    pub max_depth: usize,
+    /// Hit `Limits::max_states` before exhausting the space.
+    pub truncated: bool,
+    /// First violation found (the search stops there); `None` means
+    /// every explored state satisfied every property.
+    pub violation: Option<FoundViolation>,
+}
+
+struct Frame<S> {
+    state: S,
+    threads: Vec<usize>,
+    next: usize,
+    /// Label of the step that produced `state` (`None` for the root).
+    label: Option<String>,
+}
+
+enum Expanded<S> {
+    Frame(Frame<S>),
+    QuiescentOk,
+    Violation(Violation),
+}
+
+fn expand<M: Model>(model: &M, state: M::State) -> Expanded<M::State> {
+    let mut threads = model.enabled(&state);
+    // Partial-order reduction: a local step is explored alone.
+    if let Some(&t) = threads.iter().find(|&&t| model.local(&state, t)) {
+        threads = vec![t];
+    }
+    if threads.is_empty() {
+        return match model.quiescent(&state) {
+            Ok(()) => Expanded::QuiescentOk,
+            Err(v) => Expanded::Violation(v),
+        };
+    }
+    Expanded::Frame(Frame { state, threads, next: 0, label: None })
+}
+
+fn trace_of<S>(stack: &[Frame<S>], last: String) -> Vec<String> {
+    let mut trace: Vec<String> = stack.iter().filter_map(|f| f.label.clone()).collect();
+    trace.push(last);
+    trace
+}
+
+/// Explore every interleaving of `model` from its initial state, up to
+/// `limits`. Stops at the first violation.
+pub fn explore<M: Model>(model: &M, limits: Limits) -> Exploration {
+    let mut out = Exploration {
+        states: 1,
+        transitions: 0,
+        max_depth: 0,
+        truncated: false,
+        violation: None,
+    };
+    let mut seen: HashSet<M::State> = HashSet::new();
+    let init = model.initial();
+    seen.insert(init.clone());
+    let mut stack: Vec<Frame<M::State>> = Vec::new();
+    match expand(model, init) {
+        Expanded::Frame(f) => stack.push(f),
+        Expanded::QuiescentOk => {}
+        Expanded::Violation(v) => {
+            out.violation = Some(FoundViolation { violation: v, trace: Vec::new() });
+        }
+    }
+    while out.violation.is_none() && !out.truncated {
+        let Some(top) = stack.len().checked_sub(1) else { break };
+        if stack[top].next >= stack[top].threads.len() {
+            stack.pop();
+            continue;
+        }
+        let thread = stack[top].threads[stack[top].next];
+        stack[top].next += 1;
+        let label = model.describe(&stack[top].state, thread);
+        let succ = match model.step(&stack[top].state, thread) {
+            Ok(s) => s,
+            Err(v) => {
+                out.violation =
+                    Some(FoundViolation { violation: v, trace: trace_of(&stack, label) });
+                break;
+            }
+        };
+        out.transitions += 1;
+        out.max_depth = out.max_depth.max(stack.len());
+        if !seen.insert(succ.clone()) {
+            continue; // state already expanded via another interleaving
+        }
+        out.states += 1;
+        if out.states >= limits.max_states {
+            out.truncated = true;
+            break;
+        }
+        match expand(model, succ) {
+            Expanded::Frame(mut f) => {
+                f.label = Some(label);
+                stack.push(f);
+            }
+            Expanded::QuiescentOk => {}
+            Expanded::Violation(v) => {
+                out.violation =
+                    Some(FoundViolation { violation: v, trace: trace_of(&stack, label) });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads each increment a shared counter `n` times; quiescence
+    /// requires the exact total — a sanity model with no races.
+    struct Counter {
+        n: usize,
+        threads: usize,
+    }
+
+    impl Model for Counter {
+        type State = Vec<usize>;
+
+        fn initial(&self) -> Vec<usize> {
+            vec![0; self.threads]
+        }
+
+        fn enabled(&self, s: &Vec<usize>) -> Vec<usize> {
+            (0..self.threads).filter(|&t| s[t] < self.n).collect()
+        }
+
+        fn step(&self, s: &Vec<usize>, t: usize) -> Result<Vec<usize>, Violation> {
+            let mut next = s.clone();
+            next[t] += 1;
+            Ok(next)
+        }
+
+        fn quiescent(&self, s: &Vec<usize>) -> Result<(), Violation> {
+            if s.iter().sum::<usize>() == self.n * self.threads {
+                Ok(())
+            } else {
+                Err(Violation::new("total", "wrong final count"))
+            }
+        }
+    }
+
+    #[test]
+    fn counter_space_is_the_full_grid() {
+        let ex = explore(&Counter { n: 3, threads: 2 }, Limits::SMOKE);
+        assert!(ex.violation.is_none());
+        assert!(!ex.truncated);
+        assert_eq!(ex.states, 16, "(n+1)^threads distinct states");
+        assert_eq!(ex.transitions, 24, "every edge of the 4x4 grid");
+        assert_eq!(ex.max_depth, 6, "longest interleaving = all 6 increments");
+    }
+
+    /// A model whose only run deadlocks after one step.
+    struct Stuck;
+
+    impl Model for Stuck {
+        type State = bool;
+
+        fn initial(&self) -> bool {
+            false
+        }
+
+        fn enabled(&self, s: &bool) -> Vec<usize> {
+            if *s {
+                Vec::new()
+            } else {
+                vec![0]
+            }
+        }
+
+        fn step(&self, _s: &bool, _t: usize) -> Result<bool, Violation> {
+            Ok(true)
+        }
+
+        fn quiescent(&self, _s: &bool) -> Result<(), Violation> {
+            Err(Violation::new("no_deadlock", "thread parked forever"))
+        }
+    }
+
+    #[test]
+    fn quiescent_violations_carry_the_trace() {
+        let ex = explore(&Stuck, Limits::SMOKE);
+        let found = ex.violation.expect("deadlock must be found");
+        assert_eq!(found.violation.property, "no_deadlock");
+        assert_eq!(found.trace, vec!["thread 0".to_string()]);
+    }
+
+    #[test]
+    fn truncation_is_reported() {
+        let ex = explore(&Counter { n: 50, threads: 2 }, Limits { max_states: 10 });
+        assert!(ex.truncated);
+        assert!(ex.violation.is_none());
+    }
+}

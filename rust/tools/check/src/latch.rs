@@ -1,0 +1,477 @@
+//! Transition-system model of the pool's dispatch protocol
+//! (`waveq::runtime::native::pool`): dispatchers queue lifetime-erased
+//! shard tasks on one shared channel, parked workers drain it, and each
+//! dispatch blocks on a private countdown latch until its shards arrive.
+//!
+//! The countdown/payload logic is the production [`LatchCore`] itself —
+//! imported, not reimplemented — so the accept/complete decisions the
+//! checker explores are the ones `run_rows` executes. The model supplies
+//! the virtual sync layer replacing `Mutex`/`Condvar`/mpsc:
+//!
+//! - the shared task queue is an explicit FIFO (workers compete to pop);
+//! - each latch's lock-protected section (`arrive`, or the wait
+//!   predicate check) is one atomic step, exactly the mutual exclusion
+//!   the real `Mutex` provides;
+//! - a condvar park is an explicit `Parked` thread state, entered
+//!   atomically with a failed predicate check (the real
+//!   `Condvar::wait(guard)` release-and-sleep), and left only via a
+//!   notify — **no spurious wakeups**, so a dropped notify is observable
+//!   as a deadlock instead of being papered over;
+//! - a panicking shard delivers its payload through `arrive`, as the
+//!   real `catch_unwind` + payload channel does.
+//!
+//! Out of scope (compile-time-visible serial fallbacks, not protocols):
+//! the `IN_POOL_TASK` nested-dispatch path and the budget=1 path, which
+//! never touch the queue or a latch.
+//!
+//! Properties: `no_deadlock` (quiescence only with every dispatch
+//! completed), `shard_coverage` (every shard of a completed dispatch ran
+//! exactly once), `panic_propagation` (a planted shard panic reaches its
+//! dispatcher's latch payload), `latch_lifetime` (no arrival after the
+//! latch completed — the use-after-free hazard), `pool_survives` (no
+//! dispatcher or worker dies; later dispatches still complete).
+
+use std::collections::VecDeque;
+
+use waveq::runtime::native::pool::LatchCore;
+
+use crate::explore::{Model, Violation};
+
+/// Which latch implementation the model drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatchVariant {
+    /// The production `LatchCore` behind a faithful lock/condvar model.
+    Real,
+    /// Planted bug: the completing `arrive` never notifies the condvar
+    /// (a lost wakeup). Expected catch: `no_deadlock`.
+    DroppedNotify,
+    /// Planted bug: the latch is constructed expecting one arrival fewer
+    /// than the shards actually queued, so the dispatcher can return
+    /// while a task still holds pointers into its frame. Expected catch:
+    /// `shard_coverage` or `latch_lifetime`.
+    OffByOneCountdown,
+    /// Planted bug: a panicking shard poisons the latch lock and every
+    /// later lock touch propagates the poison instead of recovering the
+    /// guard (no `unwrap_or_else(|e| e.into_inner())`). Expected catch:
+    /// `no_deadlock` or `pool_survives`.
+    NonPoisonTolerantLock,
+}
+
+/// One pool-protocol configuration to explore.
+#[derive(Debug, Clone)]
+pub struct LatchConfig {
+    pub name: &'static str,
+    pub workers: usize,
+    pub dispatchers: usize,
+    /// Sequential dispatches per dispatcher.
+    pub dispatches_per: usize,
+    /// Shards per dispatch; shard 0 runs on the dispatching thread, the
+    /// rest are queued (so the latch counts `shards - 1`).
+    pub shards: usize,
+    /// Plant a panic in (global dispatch id, shard).
+    pub panic_at: Option<(usize, usize)>,
+    pub variant: LatchVariant,
+}
+
+impl LatchConfig {
+    fn n_dispatches(&self) -> usize {
+        self.dispatchers * self.dispatches_per
+    }
+
+    /// Arrivals the latch for one dispatch is constructed to expect.
+    fn latch_expect(&self) -> usize {
+        let queued = self.shards - 1;
+        match self.variant {
+            LatchVariant::OffByOneCountdown => queued.saturating_sub(1),
+            _ => queued,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} worker(s), {} dispatcher(s) x {} dispatch(es), {} shards each{}",
+            self.workers,
+            self.dispatchers,
+            self.dispatches_per,
+            self.shards,
+            match self.panic_at {
+                Some((d, s)) => format!(", panic planted at dispatch {d} shard {s}"),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+/// A dispatch's latch plus its virtual condvar waitset and lock state.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct LatchSlot {
+    core: LatchCore<usize>,
+    /// Dispatcher ids parked on this latch's condvar.
+    waiters: Vec<usize>,
+    /// `NonPoisonTolerantLock` only: a panic unwound while holding the
+    /// lock; every later lock touch kills its thread.
+    poisoned: bool,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Dispatcher {
+    /// Queueing shard `next_shard` of `dispatch` (one send per step).
+    Send { dispatch: usize, next_shard: usize },
+    /// Running its own shard 0 of `dispatch`.
+    RunOwn { dispatch: usize },
+    /// Will take the latch lock and check the wait predicate.
+    Wait { dispatch: usize, own_panic: bool },
+    /// Parked on the latch condvar; enabled again only after a notify.
+    Parked { dispatch: usize, own_panic: bool },
+    Done,
+    /// Killed by a poisoned latch lock (buggy variant only).
+    Dead,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum Worker {
+    Idle,
+    /// Holds a dequeued task; will run it and arrive at its latch.
+    Run { dispatch: usize, shard: usize },
+    /// Killed by a poisoned latch lock (buggy variant only).
+    Dead,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LatchState {
+    /// The shared task queue: (dispatch id, shard).
+    queue: VecDeque<(usize, usize)>,
+    latches: Vec<LatchSlot>,
+    dispatchers: Vec<Dispatcher>,
+    workers: Vec<Worker>,
+    /// `executed[d][s]` = times dispatch `d`'s shard `s` ran.
+    executed: Vec<Vec<usize>>,
+    /// Panic payload each completed dispatch's wait returned.
+    observed: Vec<Option<usize>>,
+    completed: Vec<bool>,
+}
+
+pub struct LatchModel {
+    pub cfg: LatchConfig,
+}
+
+impl LatchModel {
+    /// The panic payload shard (dispatch, shard) delivers, if any.
+    fn payload_for(&self, dispatch: usize, shard: usize) -> Option<usize> {
+        match self.cfg.panic_at {
+            Some((d, s)) if d == dispatch && s == shard => Some(shard),
+            _ => None,
+        }
+    }
+
+    /// Wake every dispatcher parked on `latch` (condvar notify_all).
+    fn notify_all(state: &mut LatchState, dispatch: usize) {
+        let waiters = std::mem::take(&mut state.latches[dispatch].waiters);
+        for d in waiters {
+            if let Dispatcher::Parked { dispatch: pd, own_panic } = state.dispatchers[d] {
+                debug_assert_eq!(pd, dispatch);
+                state.dispatchers[d] = Dispatcher::Wait { dispatch: pd, own_panic };
+            }
+        }
+    }
+
+    /// A dispatcher's wait returned: bookkeeping + property checks.
+    fn complete_dispatch(
+        &self,
+        state: &mut LatchState,
+        d: usize,
+        dispatch: usize,
+        own_panic: bool,
+    ) -> Result<(), Violation> {
+        let payload = state.latches[dispatch].core.take_payload();
+        state.completed[dispatch] = true;
+        state.observed[dispatch] = payload;
+        for (s, &count) in state.executed[dispatch].iter().enumerate() {
+            if count != 1 {
+                return Err(Violation::new(
+                    "shard_coverage",
+                    format!(
+                        "dispatch {dispatch} completed with shard {s} executed {count} times \
+                         (expected exactly once)"
+                    ),
+                ));
+            }
+        }
+        match self.cfg.panic_at {
+            Some((pd, ps)) if pd == dispatch && ps > 0 && payload != Some(ps) => {
+                return Err(Violation::new(
+                    "panic_propagation",
+                    format!(
+                        "dispatch {dispatch}: worker shard {ps} panicked but the dispatcher \
+                         observed payload {payload:?}"
+                    ),
+                ));
+            }
+            _ => {}
+        }
+        if self.cfg.panic_at.is_none() && payload.is_some() {
+            return Err(Violation::new(
+                "panic_propagation",
+                format!("dispatch {dispatch} observed a phantom panic payload {payload:?}"),
+            ));
+        }
+        // The real run_rows re-raises the payload; the harness (like the
+        // pool-survival test) catches it, so the dispatcher always moves
+        // on to its next dispatch.
+        let _ = own_panic;
+        let next = dispatch + 1;
+        let last_for_d = (d + 1) * self.cfg.dispatches_per - 1;
+        state.dispatchers[d] = if dispatch >= last_for_d {
+            Dispatcher::Done
+        } else {
+            Dispatcher::Send { dispatch: next, next_shard: 1 }
+        };
+        Ok(())
+    }
+}
+
+impl Model for LatchModel {
+    type State = LatchState;
+
+    fn initial(&self) -> LatchState {
+        let n = self.cfg.n_dispatches();
+        LatchState {
+            queue: VecDeque::new(),
+            latches: (0..n)
+                .map(|_| LatchSlot {
+                    core: LatchCore::new(self.cfg.latch_expect()),
+                    waiters: Vec::new(),
+                    poisoned: false,
+                })
+                .collect(),
+            dispatchers: (0..self.cfg.dispatchers)
+                .map(|d| Dispatcher::Send { dispatch: d * self.cfg.dispatches_per, next_shard: 1 })
+                .collect(),
+            workers: vec![Worker::Idle; self.cfg.workers],
+            executed: vec![vec![0; self.cfg.shards]; n],
+            observed: vec![None; n],
+            completed: vec![false; n],
+        }
+    }
+
+    fn enabled(&self, state: &LatchState) -> Vec<usize> {
+        let nd = self.cfg.dispatchers;
+        let mut out = Vec::new();
+        for (d, disp) in state.dispatchers.iter().enumerate() {
+            match disp {
+                Dispatcher::Send { .. } | Dispatcher::RunOwn { .. } | Dispatcher::Wait { .. } => {
+                    out.push(d);
+                }
+                Dispatcher::Parked { .. } | Dispatcher::Done | Dispatcher::Dead => {}
+            }
+        }
+        for (w, worker) in state.workers.iter().enumerate() {
+            match worker {
+                Worker::Idle => {
+                    if !state.queue.is_empty() {
+                        out.push(nd + w);
+                    }
+                }
+                Worker::Run { .. } => out.push(nd + w),
+                Worker::Dead => {}
+            }
+        }
+        out
+    }
+
+    fn local(&self, state: &LatchState, thread: usize) -> bool {
+        // Running the dispatcher's own shard touches only its dispatch's
+        // executed row (disjoint from every queued shard) and no sync
+        // object: it commutes with every concurrently enabled step.
+        thread < self.cfg.dispatchers
+            && matches!(state.dispatchers[thread], Dispatcher::RunOwn { .. })
+    }
+
+    fn step(&self, state: &LatchState, thread: usize) -> Result<LatchState, Violation> {
+        let mut st = state.clone();
+        let nd = self.cfg.dispatchers;
+        if thread < nd {
+            let d = thread;
+            match st.dispatchers[d].clone() {
+                Dispatcher::Send { dispatch, next_shard } => {
+                    st.queue.push_back((dispatch, next_shard));
+                    st.dispatchers[d] = if next_shard + 1 < self.cfg.shards {
+                        Dispatcher::Send { dispatch, next_shard: next_shard + 1 }
+                    } else {
+                        Dispatcher::RunOwn { dispatch }
+                    };
+                }
+                Dispatcher::RunOwn { dispatch } => {
+                    st.executed[dispatch][0] += 1;
+                    let own_panic = self.payload_for(dispatch, 0).is_some();
+                    st.dispatchers[d] = Dispatcher::Wait { dispatch, own_panic };
+                }
+                Dispatcher::Wait { dispatch, own_panic } => {
+                    // Atomic lock-protected section: take the lock, check
+                    // the predicate, and either return or park.
+                    if st.latches[dispatch].poisoned {
+                        // .lock().unwrap() panics: the dispatcher dies.
+                        st.dispatchers[d] = Dispatcher::Dead;
+                    } else if st.latches[dispatch].core.is_complete() {
+                        self.complete_dispatch(&mut st, d, dispatch, own_panic)?;
+                    } else {
+                        st.latches[dispatch].waiters.push(d);
+                        st.dispatchers[d] = Dispatcher::Parked { dispatch, own_panic };
+                    }
+                }
+                Dispatcher::Parked { .. } | Dispatcher::Done | Dispatcher::Dead => {
+                    unreachable!("disabled dispatcher stepped")
+                }
+            }
+        } else {
+            let w = thread - nd;
+            match st.workers[w].clone() {
+                Worker::Idle => {
+                    let (dispatch, shard) =
+                        st.queue.pop_front().expect("idle worker stepped with empty queue");
+                    st.workers[w] = Worker::Run { dispatch, shard };
+                }
+                Worker::Run { dispatch, shard } => {
+                    st.executed[dispatch][shard] += 1;
+                    let payload = self.payload_for(dispatch, shard);
+                    let slot = &mut st.latches[dispatch];
+                    if self.cfg.variant == LatchVariant::NonPoisonTolerantLock {
+                        if slot.poisoned {
+                            // .lock().unwrap() panics: the worker dies
+                            // without arriving.
+                            st.workers[w] = Worker::Dead;
+                            return Ok(st);
+                        }
+                        if payload.is_some() {
+                            // The panic unwinds inside the critical
+                            // section: lock poisoned, no arrival, worker
+                            // dead.
+                            slot.poisoned = true;
+                            st.workers[w] = Worker::Dead;
+                            return Ok(st);
+                        }
+                    }
+                    if slot.core.is_complete() {
+                        return Err(Violation::new(
+                            "latch_lifetime",
+                            format!(
+                                "dispatch {dispatch} shard {shard} arrived after the latch \
+                                 completed: the task outlived the dispatcher frame it points \
+                                 into (use-after-free hazard)"
+                            ),
+                        ));
+                    }
+                    let completed = slot.core.arrive(payload);
+                    if completed && self.cfg.variant != LatchVariant::DroppedNotify {
+                        Self::notify_all(&mut st, dispatch);
+                    }
+                    st.workers[w] = Worker::Idle;
+                }
+                Worker::Dead => unreachable!("dead worker stepped"),
+            }
+        }
+        Ok(st)
+    }
+
+    fn quiescent(&self, state: &LatchState) -> Result<(), Violation> {
+        for (d, disp) in state.dispatchers.iter().enumerate() {
+            match disp {
+                Dispatcher::Done => {}
+                Dispatcher::Parked { dispatch, .. } => {
+                    return Err(Violation::new(
+                        "no_deadlock",
+                        format!(
+                            "dispatcher {d} is parked forever on dispatch {dispatch}'s latch \
+                             (lost wakeup or missing arrivals)"
+                        ),
+                    ));
+                }
+                Dispatcher::Dead => {
+                    return Err(Violation::new(
+                        "pool_survives",
+                        format!("dispatcher {d} was killed by a poisoned latch lock"),
+                    ));
+                }
+                other => {
+                    return Err(Violation::new(
+                        "no_deadlock",
+                        format!("dispatcher {d} is quiescent mid-dispatch in {other:?}"),
+                    ));
+                }
+            }
+        }
+        if !state.queue.is_empty() {
+            let n = state.queue.len();
+            return Err(Violation::new(
+                "no_deadlock",
+                format!("{n} task(s) left on the queue with no worker to serve them"),
+            ));
+        }
+        for (w, worker) in state.workers.iter().enumerate() {
+            if matches!(worker, Worker::Dead) {
+                return Err(Violation::new(
+                    "pool_survives",
+                    format!("worker {w} was killed by a poisoned latch lock"),
+                ));
+            }
+        }
+        for (dispatch, row) in state.executed.iter().enumerate() {
+            if !state.completed[dispatch] {
+                return Err(Violation::new(
+                    "no_deadlock",
+                    format!("dispatch {dispatch} never completed"),
+                ));
+            }
+            for (s, &count) in row.iter().enumerate() {
+                if count != 1 {
+                    return Err(Violation::new(
+                        "shard_coverage",
+                        format!("dispatch {dispatch} shard {s} executed {count} times"),
+                    ));
+                }
+            }
+        }
+        for (dispatch, &observed) in state.observed.iter().enumerate() {
+            let expected = match self.cfg.panic_at {
+                Some((pd, ps)) if pd == dispatch && ps > 0 => Some(ps),
+                _ => None,
+            };
+            if observed != expected {
+                return Err(Violation::new(
+                    "panic_propagation",
+                    format!(
+                        "dispatch {dispatch} final payload {observed:?}, expected {expected:?}"
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn describe(&self, state: &LatchState, thread: usize) -> String {
+        let nd = self.cfg.dispatchers;
+        if thread < nd {
+            match &state.dispatchers[thread] {
+                Dispatcher::Send { dispatch, next_shard } => {
+                    format!("disp{thread}: queue shard {next_shard} of dispatch {dispatch}")
+                }
+                Dispatcher::RunOwn { dispatch } => {
+                    format!("disp{thread}: run own shard 0 of dispatch {dispatch}")
+                }
+                Dispatcher::Wait { dispatch, .. } => {
+                    format!("disp{thread}: lock latch {dispatch} and check completion")
+                }
+                other => format!("disp{thread}: {other:?}"),
+            }
+        } else {
+            let w = thread - nd;
+            match &state.workers[w] {
+                Worker::Idle => format!("worker{w}: pop a task"),
+                Worker::Run { dispatch, shard } => {
+                    format!("worker{w}: run shard {shard} of dispatch {dispatch} and arrive")
+                }
+                Worker::Dead => format!("worker{w}: dead"),
+            }
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! waveq-check: an exhaustive interleaving model checker for the WaveQ
+//! concurrency protocols.
+//!
+//! The repo's headline guarantee — bit-identical training at any
+//! `WAVEQ_THREADS` and any worker count — rests on two hand-written
+//! protocols: the pool's `Latch` dispatch protocol and the dist
+//! coordinator's uid/generation tick barrier. Their decision logic lives
+//! in pure cores inside the waveq crate (`pool::LatchCore`,
+//! `dist::protocol::{BarrierCore, Roster}`, `dist::state::RoundMachine`);
+//! production wraps those cores in real `Mutex`/`Condvar`/mpsc sync,
+//! while this crate wraps the *same* cores in a virtual scheduler and
+//! runs a depth-first search over every thread interleaving of small
+//! configurations, with state hashing and a persistent-set partial-order
+//! reduction (`explore`).
+//!
+//! Two kinds of runs:
+//!
+//! - **Real protocols** ([`latch_runs`], [`barrier_runs`]): the shipping
+//!   logic, explored to exhaustion. Any violation is a real protocol bug;
+//!   a truncated search fails too, because an unexhausted space proves
+//!   nothing.
+//! - **Planted-bug fixtures** ([`latch_fixtures`], [`barrier_fixtures`]):
+//!   mutated variants — a dropped notify, an off-by-one countdown, a
+//!   poison-intolerant lock, a stale-reply-counting barrier. Each run
+//!   passes only if the checker *catches* the bug, pinning the checker's
+//!   own sensitivity the way `tests/audit.rs` pins waveq-audit's.
+//!
+//! The binary (`waveq-check`) runs both suites and writes
+//! `CHECK_report.json`; `tests/check.rs` runs the smoke subset in tier-1.
+
+pub mod barrier;
+pub mod explore;
+pub mod latch;
+pub mod report;
+
+use barrier::{BarrierConfig, BarrierModel, BarrierVariant, Fault, FaultKind, Rejoin};
+use explore::{explore, Limits};
+use latch::{LatchConfig, LatchModel, LatchVariant};
+use report::{CheckOutcome, RunReport};
+
+/// Properties every latch run asserts.
+pub const LATCH_PROPERTIES: [&str; 5] =
+    ["no_deadlock", "shard_coverage", "panic_propagation", "latch_lifetime", "pool_survives"];
+
+/// Properties every barrier run asserts.
+pub const BARRIER_PROPERTIES: [&str; 4] =
+    ["no_deadlock", "chunk_coverage", "stale_filtering", "replay_convergence"];
+
+fn latch_cfg(
+    name: &'static str,
+    workers: usize,
+    dispatchers: usize,
+    dispatches_per: usize,
+    shards: usize,
+    panic_at: Option<(usize, usize)>,
+) -> LatchConfig {
+    LatchConfig {
+        name,
+        workers,
+        dispatchers,
+        dispatches_per,
+        shards,
+        panic_at,
+        variant: LatchVariant::Real,
+    }
+}
+
+/// The real pool-protocol configurations. `smoke` keeps the subset small
+/// enough for tier-1; the full set runs in the CI model-check lane.
+pub fn latch_configs(smoke: bool) -> Vec<LatchConfig> {
+    let mut cfgs = vec![
+        // Two workers racing over two sequential dispatches of 3 shards.
+        latch_cfg("latch-2w-2x3", 2, 1, 2, 3, None),
+        // A worker panic in a queued shard must reach the dispatcher.
+        latch_cfg("latch-panic-shard", 2, 1, 2, 3, Some((0, 2))),
+    ];
+    if !smoke {
+        cfgs.extend([
+            // Wider pool, wider dispatch.
+            latch_cfg("latch-3w-2x4", 3, 1, 2, 4, None),
+            // Two dispatchers sharing the pool concurrently.
+            latch_cfg("latch-2-dispatchers", 2, 2, 2, 2, None),
+            // Panic in the dispatcher's own shard (re-raised, not latched).
+            latch_cfg("latch-panic-own", 2, 1, 2, 3, Some((0, 0))),
+        ]);
+    }
+    cfgs
+}
+
+/// Planted pool bugs and the properties that must catch them.
+pub fn latch_fixture_configs() -> Vec<(LatchConfig, Vec<&'static str>)> {
+    let mutate = |name, variant, panic_at| LatchConfig {
+        variant,
+        panic_at,
+        ..latch_cfg(name, 2, 1, 2, 3, None)
+    };
+    vec![
+        (
+            mutate("fixture-dropped-notify", LatchVariant::DroppedNotify, None),
+            vec!["no_deadlock"],
+        ),
+        (
+            mutate("fixture-off-by-one", LatchVariant::OffByOneCountdown, None),
+            vec!["shard_coverage", "latch_lifetime"],
+        ),
+        (
+            mutate(
+                "fixture-poison-lock",
+                LatchVariant::NonPoisonTolerantLock,
+                Some((0, 1)),
+            ),
+            vec!["no_deadlock", "pool_survives"],
+        ),
+    ]
+}
+
+fn barrier_cfg(
+    name: &'static str,
+    workers: usize,
+    steps: usize,
+    round_len: usize,
+    chunks: usize,
+) -> BarrierConfig {
+    BarrierConfig {
+        name,
+        workers,
+        steps,
+        round_len,
+        chunks,
+        fault: None,
+        rejoin: None,
+        variant: BarrierVariant::Real,
+    }
+}
+
+/// The real tick-barrier configurations (acceptance floor: >= 2 workers,
+/// >= 2 ticks, including one drop/replay).
+pub fn barrier_configs(smoke: bool) -> Vec<BarrierConfig> {
+    let mut cfgs = vec![
+        // Two fault-free ticks over two workers.
+        barrier_cfg("barrier-2w-2steps", 2, 2, 2, 2),
+        // A silent mid-round death: probe, reap, replay, converge. The
+        // ragged third step exercises the round-cursor arithmetic.
+        BarrierConfig {
+            fault: Some(Fault { slot: 1, step: 0, kind: FaultKind::SilentDeath }),
+            ..barrier_cfg("barrier-drop-replay", 2, 3, 2, 2)
+        },
+    ];
+    if !smoke {
+        cfgs.extend([
+            // Three workers, a full 3-step round, 3 reduction chunks.
+            barrier_cfg("barrier-3w-3steps", 3, 3, 3, 3),
+            // A worker that replies Fatal instead of gradients.
+            BarrierConfig {
+                fault: Some(Fault { slot: 0, step: 1, kind: FaultKind::ErrorReply }),
+                ..barrier_cfg("barrier-fatal-reply", 2, 2, 2, 2)
+            },
+            // Drop mid-round, then rejoin at the next boundary.
+            BarrierConfig {
+                fault: Some(Fault { slot: 1, step: 1, kind: FaultKind::SilentDeath }),
+                rejoin: Some(Rejoin { slot: 1, at_round: 1 }),
+                ..barrier_cfg("barrier-drop-rejoin", 2, 4, 2, 2)
+            },
+        ]);
+    }
+    cfgs
+}
+
+/// Planted barrier bugs and the properties that must catch them.
+pub fn barrier_fixture_configs() -> Vec<(BarrierConfig, Vec<&'static str>)> {
+    vec![(
+        BarrierConfig {
+            fault: Some(Fault { slot: 1, step: 0, kind: FaultKind::SilentDeath }),
+            variant: BarrierVariant::AcceptsStaleReplies,
+            ..barrier_cfg("fixture-stale-barrier", 2, 3, 2, 2)
+        },
+        // The blind barrier can surface several ways depending on which
+        // interleaving the search hits first; all of them are the bug.
+        vec!["stale_filtering", "chunk_coverage", "no_deadlock", "replay_convergence"],
+    )]
+}
+
+fn latch_run(cfg: LatchConfig, expect: Option<Vec<&'static str>>, limits: Limits) -> RunReport {
+    let name = cfg.name.to_string();
+    let config = cfg.describe();
+    let exploration = explore(&LatchModel { cfg }, limits);
+    RunReport {
+        name,
+        model: "latch",
+        config,
+        properties: LATCH_PROPERTIES.to_vec(),
+        expect,
+        exploration,
+    }
+}
+
+fn barrier_run(cfg: BarrierConfig, expect: Option<Vec<&'static str>>, limits: Limits) -> RunReport {
+    let name = cfg.name.to_string();
+    let config = cfg.describe();
+    let exploration = explore(&BarrierModel { cfg }, limits);
+    RunReport {
+        name,
+        model: "barrier",
+        config,
+        properties: BARRIER_PROPERTIES.to_vec(),
+        expect,
+        exploration,
+    }
+}
+
+/// Explore the real-protocol suite.
+pub fn latch_runs(smoke: bool, limits: Limits) -> Vec<RunReport> {
+    latch_configs(smoke).into_iter().map(|c| latch_run(c, None, limits)).collect()
+}
+
+pub fn barrier_runs(smoke: bool, limits: Limits) -> Vec<RunReport> {
+    barrier_configs(smoke).into_iter().map(|c| barrier_run(c, None, limits)).collect()
+}
+
+/// Explore the planted-bug fixtures.
+pub fn latch_fixtures(limits: Limits) -> Vec<RunReport> {
+    latch_fixture_configs()
+        .into_iter()
+        .map(|(c, expect)| latch_run(c, Some(expect), limits))
+        .collect()
+}
+
+pub fn barrier_fixtures(limits: Limits) -> Vec<RunReport> {
+    barrier_fixture_configs()
+        .into_iter()
+        .map(|(c, expect)| barrier_run(c, Some(expect), limits))
+        .collect()
+}
+
+/// Run everything: the real suite and the fixtures, one outcome.
+pub fn run_all(smoke: bool, limits: Limits) -> CheckOutcome {
+    let mut runs = latch_runs(smoke, limits);
+    runs.extend(barrier_runs(smoke, limits));
+    let mut fixtures = latch_fixtures(limits);
+    fixtures.extend(barrier_fixtures(limits));
+    CheckOutcome { mode: if smoke { "smoke" } else { "full" }, runs, fixtures }
+}

@@ -1,0 +1,70 @@
+//! waveq-check CLI: run the real-protocol suite and the planted-bug
+//! fixtures, print the table, write `CHECK_report.json`.
+//!
+//! Exit codes: 0 clean, 1 violations (a real protocol broke, a space was
+//! truncated, or a planted bug went uncaught), 2 usage error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use waveq_check::explore::Limits;
+use waveq_check::run_all;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: waveq-check [--smoke] [--max-states N] [--json FILE] [--no-json]\n\
+         \n\
+         Exhaustively model-check the pool Latch and dist tick-barrier\n\
+         protocols, then verify the planted-bug fixtures are caught.\n\
+         \n\
+         --smoke         run the tier-1 subset of configurations\n\
+         --max-states N  cap on distinct states per run (default {} full,\n\
+                         {} smoke); a truncated real run counts as a failure\n\
+         --json FILE     write the JSON report here (default CHECK_report.json)\n\
+         --no-json       skip the JSON report",
+        Limits::FULL.max_states,
+        Limits::SMOKE.max_states
+    );
+    std::process::exit(2);
+}
+
+fn main() -> ExitCode {
+    let mut smoke = false;
+    let mut max_states: Option<usize> = None;
+    let mut json: Option<PathBuf> = Some(PathBuf::from("CHECK_report.json"));
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--smoke" => smoke = true,
+            "--max-states" => match args.next().map(|v| v.parse::<usize>()) {
+                Some(Ok(n)) if n > 0 => max_states = Some(n),
+                _ => usage(),
+            },
+            "--json" => match args.next() {
+                Some(p) => json = Some(PathBuf::from(p)),
+                None => usage(),
+            },
+            "--no-json" => json = None,
+            _ => usage(),
+        }
+    }
+
+    let mut limits = if smoke { Limits::SMOKE } else { Limits::FULL };
+    if let Some(n) = max_states {
+        limits.max_states = n;
+    }
+    let outcome = run_all(smoke, limits);
+    print!("{}", outcome.to_table());
+    if let Some(path) = json {
+        if let Err(e) = std::fs::write(&path, outcome.to_json()) {
+            eprintln!("waveq-check: writing {}: {e}", path.display());
+            return ExitCode::from(1);
+        }
+        println!("report written to {}", path.display());
+    }
+    if outcome.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

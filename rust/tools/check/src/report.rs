@@ -1,0 +1,261 @@
+//! Reporting: per-run verdicts, the `CHECK_report.json` artifact
+//! (hand-serialized, keeping the tool dependency-free like waveq-audit),
+//! and a human table for CI logs.
+
+use crate::explore::Exploration;
+
+/// One explored configuration and its verdict.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub name: String,
+    /// Which protocol model ran (`latch` or `barrier`).
+    pub model: &'static str,
+    /// Human description of the configuration.
+    pub config: String,
+    /// Properties the model asserts over every interleaving.
+    pub properties: Vec<&'static str>,
+    /// `None` for a real-protocol run (must be clean). For a planted-bug
+    /// fixture: the properties whose violation counts as *caught* — the
+    /// run fails if the checker misses the bug.
+    pub expect: Option<Vec<&'static str>>,
+    pub exploration: Exploration,
+}
+
+impl RunReport {
+    pub fn passed(&self) -> bool {
+        match (&self.expect, &self.exploration.violation) {
+            // A real protocol proves itself only by exhausting the space.
+            (None, None) => !self.exploration.truncated,
+            (None, Some(_)) => false,
+            // A fixture proves the checker by being caught.
+            (Some(props), Some(found)) => {
+                props.iter().any(|p| *p == found.violation.property)
+            }
+            (Some(_), None) => false,
+        }
+    }
+
+    /// One-line verdict for the table.
+    fn verdict(&self) -> String {
+        let ex = &self.exploration;
+        match (&self.expect, &ex.violation) {
+            (None, None) if ex.truncated => "FAIL (truncated: space not exhausted)".to_string(),
+            (None, None) => "ok (exhausted, no violation)".to_string(),
+            (None, Some(f)) => format!("FAIL ({}: {})", f.violation.property, f.violation.message),
+            (Some(_), Some(f)) if self.passed() => format!("caught ({})", f.violation.property),
+            (Some(_), Some(f)) => {
+                format!("FAIL (caught wrong property {})", f.violation.property)
+            }
+            (Some(_), None) => "FAIL (planted bug was missed)".to_string(),
+        }
+    }
+}
+
+/// Everything one `waveq-check` invocation saw.
+#[derive(Debug, Clone)]
+pub struct CheckOutcome {
+    /// `full` (CI model-check lane) or `smoke` (tier-1).
+    pub mode: &'static str,
+    /// Real-protocol runs: every one must exhaust its space cleanly.
+    pub runs: Vec<RunReport>,
+    /// Planted-bug fixtures: every one must be caught.
+    pub fixtures: Vec<RunReport>,
+}
+
+impl CheckOutcome {
+    pub fn clean(&self) -> bool {
+        self.runs.iter().chain(&self.fixtures).all(RunReport::passed)
+    }
+
+    fn states(&self) -> usize {
+        self.runs.iter().chain(&self.fixtures).map(|r| r.exploration.states).sum()
+    }
+
+    fn transitions(&self) -> usize {
+        self.runs.iter().chain(&self.fixtures).map(|r| r.exploration.transitions).sum()
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"tool\": \"waveq-check\",\n");
+        s.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
+        s.push_str(&format!("  \"clean\": {},\n", self.clean()));
+        s.push_str(&format!(
+            "  \"summary\": {{\"runs\": {}, \"fixtures\": {}, \"states\": {}, \
+             \"transitions\": {}}},\n",
+            self.runs.len(),
+            self.fixtures.len(),
+            self.states(),
+            self.transitions()
+        ));
+        s.push_str("  \"runs\": [\n");
+        push_reports(&mut s, &self.runs);
+        s.push_str("  ],\n");
+        s.push_str("  \"fixtures\": [\n");
+        push_reports(&mut s, &self.fixtures);
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    pub fn to_table(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("waveq-check ({} mode)\n", self.mode));
+        s.push_str("\nreal protocols (must exhaust cleanly):\n");
+        for r in &self.runs {
+            push_row(&mut s, r);
+        }
+        s.push_str("\nplanted-bug fixtures (must be caught):\n");
+        for r in &self.fixtures {
+            push_row(&mut s, r);
+        }
+        s.push_str(&format!(
+            "\n{} states / {} transitions explored across {} runs -> {}\n",
+            self.states(),
+            self.transitions(),
+            self.runs.len() + self.fixtures.len(),
+            if self.clean() { "clean" } else { "FAILED" }
+        ));
+        s
+    }
+}
+
+fn push_row(s: &mut String, r: &RunReport) {
+    let ex = &r.exploration;
+    s.push_str(&format!(
+        "  {:<22} {:<8} {:>9} states {:>9} trans  depth {:>4}  {}\n",
+        r.name, r.model, ex.states, ex.transitions, ex.max_depth, r.verdict()
+    ));
+    if !r.passed() {
+        if let Some(f) = &ex.violation {
+            s.push_str("    interleaving:\n");
+            for step in &f.trace {
+                s.push_str(&format!("      - {step}\n"));
+            }
+        }
+    }
+}
+
+fn push_reports(s: &mut String, reports: &[RunReport]) {
+    for (i, r) in reports.iter().enumerate() {
+        let ex = &r.exploration;
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"name\": \"{}\",\n", esc(&r.name)));
+        s.push_str(&format!("      \"model\": \"{}\",\n", r.model));
+        s.push_str(&format!("      \"config\": \"{}\",\n", esc(&r.config)));
+        s.push_str(&format!(
+            "      \"properties\": [{}],\n",
+            r.properties.iter().map(|p| format!("\"{p}\"")).collect::<Vec<_>>().join(", ")
+        ));
+        if let Some(expect) = &r.expect {
+            s.push_str(&format!(
+                "      \"expect\": [{}],\n",
+                expect.iter().map(|p| format!("\"{p}\"")).collect::<Vec<_>>().join(", ")
+            ));
+        }
+        s.push_str(&format!("      \"states\": {},\n", ex.states));
+        s.push_str(&format!("      \"transitions\": {},\n", ex.transitions));
+        s.push_str(&format!("      \"max_depth\": {},\n", ex.max_depth));
+        s.push_str(&format!("      \"truncated\": {},\n", ex.truncated));
+        match &ex.violation {
+            None => s.push_str("      \"violation\": null,\n"),
+            Some(f) => {
+                s.push_str("      \"violation\": {\n");
+                s.push_str(&format!(
+                    "        \"property\": \"{}\",\n",
+                    esc(&f.violation.property)
+                ));
+                s.push_str(&format!(
+                    "        \"message\": \"{}\",\n",
+                    esc(&f.violation.message)
+                ));
+                s.push_str("        \"trace\": [\n");
+                for (j, step) in f.trace.iter().enumerate() {
+                    let comma = if j + 1 < f.trace.len() { "," } else { "" };
+                    s.push_str(&format!("          \"{}\"{comma}\n", esc(step)));
+                }
+                s.push_str("        ]\n");
+                s.push_str("      },\n");
+            }
+        }
+        s.push_str(&format!("      \"passed\": {}\n", r.passed()));
+        let comma = if i + 1 < reports.len() { "," } else { "" };
+        s.push_str(&format!("    }}{comma}\n"));
+    }
+}
+
+/// Minimal JSON string escaping (same contract as waveq-audit's).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{Exploration, FoundViolation, Violation};
+
+    fn ex(violation: Option<FoundViolation>, truncated: bool) -> Exploration {
+        Exploration { states: 10, transitions: 20, max_depth: 5, truncated, violation }
+    }
+
+    fn caught(property: &str) -> Option<FoundViolation> {
+        Some(FoundViolation {
+            violation: Violation::new(property, "it broke"),
+            trace: vec!["thread 0".to_string()],
+        })
+    }
+
+    fn run(expect: Option<Vec<&'static str>>, e: Exploration) -> RunReport {
+        RunReport {
+            name: "r".to_string(),
+            model: "latch",
+            config: "cfg".to_string(),
+            properties: vec!["no_deadlock"],
+            expect,
+            exploration: e,
+        }
+    }
+
+    #[test]
+    fn verdicts_cover_the_quadrants() {
+        assert!(run(None, ex(None, false)).passed(), "clean real run passes");
+        assert!(!run(None, ex(None, true)).passed(), "truncated real run proves nothing");
+        assert!(!run(None, ex(caught("no_deadlock"), false)).passed());
+        assert!(run(Some(vec!["no_deadlock"]), ex(caught("no_deadlock"), false)).passed());
+        assert!(
+            !run(Some(vec!["no_deadlock"]), ex(caught("shard_coverage"), false)).passed(),
+            "a fixture caught for the wrong reason fails"
+        );
+        assert!(!run(Some(vec!["no_deadlock"]), ex(None, false)).passed(), "missed bug fails");
+    }
+
+    #[test]
+    fn json_is_parseable_shape() {
+        let outcome = CheckOutcome {
+            mode: "smoke",
+            runs: vec![run(None, ex(None, false))],
+            fixtures: vec![run(Some(vec!["no_deadlock"]), ex(caught("no_deadlock"), false))],
+        };
+        let j = outcome.to_json();
+        assert!(j.contains("\"tool\": \"waveq-check\""));
+        assert!(j.contains("\"clean\": true"));
+        assert!(j.contains("\"violation\": null"));
+        assert!(j.contains("\"property\": \"no_deadlock\""));
+        assert_eq!(j.matches('{').count(), j.matches('}').count(), "balanced braces");
+        let quoted = esc("say \"hi\"\npath\\x");
+        assert_eq!(quoted, "say \\\"hi\\\"\\npath\\\\x");
+    }
+}
